@@ -1,0 +1,98 @@
+//! End-to-end driver: the full three-layer stack on a real small workload.
+//!
+//! Replays an FB-like trace through the **live coordinator service** — one
+//! OS thread per local agent, the coordinator scoring coflows through the
+//! **AOT-compiled JAX/Pallas artifacts via PJRT** (when `artifacts/` exists;
+//! build with `make artifacts`) — and reports the paper's headline metric
+//! (avg/P50/P90 CCT speedup over Aalo) plus the measured coordinator
+//! per-interval phase times of Tables 3/4.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_fbtrace
+//! ```
+
+use philae::coordinator::{SchedulerConfig, SchedulerKind};
+use philae::metrics::SpeedupRow;
+use philae::service::{run_service, ServiceConfig, ServiceReport};
+use philae::trace::TraceSpec;
+use std::time::Duration;
+
+fn report(name: &str, r: &ServiceReport) {
+    println!(
+        "{name} (engine={}): avg CCT {:.3}s | rate msgs {} | updates {} | wall {:.1}s",
+        r.used_engine,
+        r.avg_cct(),
+        r.rate_msgs,
+        r.update_msgs,
+        r.wall_seconds
+    );
+    println!(
+        "  per-interval ms: calc {:.3} ({:.3}) | send {:.3} ({:.3}) | recv {:.3} ({:.3})",
+        r.rate_calc.mean() * 1e3,
+        r.rate_calc.stddev() * 1e3,
+        r.rate_send.mean() * 1e3,
+        r.rate_send.stddev() * 1e3,
+        r.update_recv.mean() * 1e3,
+        r.update_recv.stddev() * 1e3,
+    );
+    println!(
+        "  intervals > δ: {:.1}% | intervals with no rate flush: {:.1}%",
+        100.0 * r.missed_fraction,
+        100.0 * r.idle_rate_fraction
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    // A 45-coflow, 40-port slice of the FB-like workload, replayed 60×
+    // faster than real time so the run takes ~20 s of wall clock.
+    let trace = TraceSpec::fb_like(40, 45)
+        .with_load_factor(4.0)
+        .seed(9)
+        .generate();
+    println!(
+        "workload: {} coflows / {} flows / {:.2} GB on {} ports\n",
+        trace.coflows.len(),
+        trace.flows.len(),
+        trace.total_bytes() / 1e9,
+        trace.num_ports
+    );
+
+    let artifacts = std::path::Path::new("artifacts/manifest.json")
+        .exists()
+        .then(|| std::path::PathBuf::from("artifacts"));
+    if artifacts.is_none() {
+        eprintln!("NOTE: artifacts/ missing — run `make artifacts` to exercise the PJRT path;");
+        eprintln!("      falling back to the native scorer.\n");
+    }
+
+    let base = ServiceConfig {
+        kind: SchedulerKind::Philae,
+        sched: SchedulerConfig::default(),
+        time_scale: 60.0,
+        delta_wall: Duration::from_millis(8),
+        engine_dir: artifacts,
+        port_rate: philae::GBPS,
+    };
+
+    let philae_run = run_service(&trace, &base)?;
+    report("philae", &philae_run);
+    println!();
+
+    let aalo_cfg = ServiceConfig {
+        kind: SchedulerKind::Aalo,
+        engine_dir: None,
+        ..base.clone()
+    };
+    let aalo_run = run_service(&trace, &aalo_cfg)?;
+    report("aalo", &aalo_run);
+
+    let row = SpeedupRow::from_ccts(&aalo_run.ccts, &philae_run.ccts);
+    println!("\n== headline (live service, measured) ==");
+    println!("philae vs aalo: {row}");
+    println!(
+        "coordinator work: philae {:.1} ms/interval vs aalo {:.1} ms/interval",
+        philae_run.intervals.total_ms_mean(),
+        aalo_run.intervals.total_ms_mean()
+    );
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! Load-sweep ablation: how the Philae-vs-Aalo gap depends on offered
+//! load (the paper's “coflow scheduling is of high relevance in a busy
+//! cluster” claim, §2.1). Also an ablation for DESIGN.md §5's calibration
+//! of the FB-like operating point.
+//!
+//! ```bash
+//! cargo run --release --example load_sweep
+//! ```
+use philae::coordinator::{SchedulerConfig, SchedulerKind};
+use philae::metrics::SpeedupRow;
+use philae::sim::Simulation;
+use philae::trace::TraceSpec;
+
+fn main() {
+    for load in [1.0, 2.0, 4.0, 8.0] {
+        let trace = TraceSpec::fb_like(150, 526).with_load_factor(load).seed(42).generate();
+        let cfg = SchedulerConfig::default();
+        let aalo = Simulation::run(&trace, SchedulerKind::Aalo, &cfg);
+        let ph = Simulation::run(&trace, SchedulerKind::Philae, &cfg);
+        let scf = Simulation::run(&trace, SchedulerKind::Sebf, &cfg);
+        let fifo = Simulation::run(&trace, SchedulerKind::Fifo, &cfg);
+        let row = SpeedupRow::from_ccts(&aalo.ccts, &ph.ccts);
+        println!(
+            "load {load}: philae/aalo {row} | avg: sebf {:.1} philae {:.1} aalo {:.1} fifo {:.1}",
+            scf.avg_cct(), ph.avg_cct(), aalo.avg_cct(), fifo.avg_cct()
+        );
+    }
+}

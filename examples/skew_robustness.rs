@@ -1,0 +1,68 @@
+//! §2.2 robustness study: is sampling-based learning robust to intra-coflow
+//! flow-size skew? Sweeps the generator's lognormal σ (skew = max/min flow
+//! length grows with σ) and the pilot count, and checks the measured CCT
+//! gap against the Hoeffding bound of Eq. (1).
+//!
+//! ```bash
+//! cargo run --release --example skew_robustness
+//! ```
+
+use philae::analysis::{skew_distribution, TwoCoflowSetting};
+use philae::coordinator::{SchedulerConfig, SchedulerKind};
+use philae::metrics::percentile;
+use philae::sim::Simulation;
+use philae::trace::TraceSpec;
+
+fn main() {
+    println!("== Eq. (1): analytic Hoeffding bound on the sampling CCT gap ==");
+    println!("{:>8} {:>8} {:>12}", "skew h", "pilots", "bound");
+    for h in [0.1, 0.5, 0.9] {
+        for m in [1.0, 4.0, 10.0] {
+            let s = TwoCoflowSetting::symmetric(200.0, 10.0, h, 1.2, m);
+            println!("{h:>8.1} {m:>8.0} {:>12.4}", s.hoeffding_bound());
+        }
+    }
+
+    println!("\n== Simulated: CCT vs clairvoyant SCF across skew ==");
+    println!(
+        "{:>6} {:>12} {:>14} {:>14} {:>12}",
+        "σ", "median skew", "philae/sebf", "aalo/sebf", "phi vs aalo"
+    );
+    let cfg = SchedulerConfig::default();
+    for sigma in [0.2, 0.8, 1.2, 2.0] {
+        let trace = TraceSpec::fb_like(100, 300)
+            .with_skew_sigma(sigma)
+            .with_load_factor(4.0)
+            .seed(11)
+            .generate();
+        let sk = skew_distribution(&trace);
+        let philae = Simulation::run(&trace, SchedulerKind::Philae, &cfg);
+        let aalo = Simulation::run(&trace, SchedulerKind::Aalo, &cfg);
+        let sebf = Simulation::run(&trace, SchedulerKind::Sebf, &cfg);
+        println!(
+            "{sigma:>6.1} {:>12.1} {:>14.3} {:>14.3} {:>12.2}x",
+            percentile(&sk, 50.0),
+            philae.avg_cct() / sebf.avg_cct(),
+            aalo.avg_cct() / sebf.avg_cct(),
+            aalo.avg_cct() / philae.avg_cct(),
+        );
+    }
+    println!("\n(sampling stays within a bounded factor of the oracle even as");
+    println!(" skew grows — the paper's robustness claim; see EXPERIMENTS.md)");
+
+    println!("\n== Pilot-count ablation (σ=1.2, load 4x) ==");
+    let trace = TraceSpec::fb_like(100, 300).with_load_factor(4.0).seed(11).generate();
+    let sebf = Simulation::run(&trace, SchedulerKind::Sebf, &cfg);
+    for pilots in [1usize, 2, 5, 10, 16] {
+        let mut c = cfg.clone();
+        c.pilot_min = 1;
+        c.pilot_max = pilots;
+        c.pilot_frac = pilots as f64 / 100.0;
+        let r = Simulation::run(&trace, SchedulerKind::Philae, &c);
+        println!(
+            "  pilot_max {pilots:>3}: philae/sebf {:.3}  (avg CCT {:.2}s)",
+            r.avg_cct() / sebf.avg_cct(),
+            r.avg_cct()
+        );
+    }
+}

@@ -1,0 +1,76 @@
+//! Workload analysis: verifies the FB-like generator reproduces the trace
+//! marginals the paper's results depend on (DESIGN.md §3) and prints the
+//! distributions — coflow widths, bytes concentration, intra-coflow skew.
+//!
+//! ```bash
+//! cargo run --release --example trace_analysis [trace-file]
+//! ```
+
+use philae::analysis::skew_distribution;
+use philae::metrics::percentile;
+use philae::trace::{Trace, TraceSpec};
+
+fn main() -> anyhow::Result<()> {
+    let trace = match std::env::args().nth(1) {
+        Some(path) => Trace::load(path)?,
+        None => TraceSpec::fb_like(150, 526).seed(42).generate(),
+    };
+    println!(
+        "{} coflows, {} flows, {:.1} GB, {} ports, span {:.0}s",
+        trace.coflows.len(),
+        trace.flows.len(),
+        trace.total_bytes() / 1e9,
+        trace.num_ports,
+        trace.makespan_lower_bound()
+    );
+
+    // Width distribution.
+    let widths: Vec<f64> = trace.coflows.iter().map(|c| c.width() as f64).collect();
+    println!("\nwidths: P10 {:.0}  P50 {:.0}  P90 {:.0}  max {:.0}",
+        percentile(&widths, 10.0), percentile(&widths, 50.0),
+        percentile(&widths, 90.0), percentile(&widths, 100.0));
+    let narrow = trace.coflows.iter().filter(|c| c.width() <= 10).count();
+    println!(
+        "narrow (width ≤ 10): {:.0}% of coflows  (FB property: majority narrow)",
+        100.0 * narrow as f64 / trace.coflows.len() as f64
+    );
+
+    // Bytes concentration: Lorenz-style.
+    let oracles = trace.oracles();
+    let mut sizes: Vec<f64> = oracles.iter().map(|o| o.total_bytes).collect();
+    sizes.sort_by(f64::total_cmp);
+    let total: f64 = sizes.iter().sum();
+    let top10: f64 = sizes[sizes.len().saturating_sub(sizes.len() / 10)..].iter().sum();
+    println!(
+        "bytes held by largest 10% of coflows: {:.0}%  (FB property: bytes ≫ count)",
+        100.0 * top10 / total
+    );
+
+    // Intra-coflow skew (§2.2's max/min metric).
+    let sk = skew_distribution(&trace);
+    println!(
+        "\nintra-coflow skew (max/min): P50 {:.1}  P90 {:.1}  P99 {:.1}",
+        percentile(&sk, 50.0),
+        percentile(&sk, 90.0),
+        percentile(&sk, 99.0)
+    );
+
+    // Coflow-size spread across coflows (drives SJF's benefit).
+    println!(
+        "coflow sizes: P10 {:.1} MB  P50 {:.1} MB  P90 {:.1} MB  max {:.1} GB",
+        percentile(&sizes, 10.0) / 1e6,
+        percentile(&sizes, 50.0) / 1e6,
+        percentile(&sizes, 90.0) / 1e6,
+        percentile(&sizes, 100.0) / 1e9
+    );
+
+    // Wide-only subset (Table 2 row 2).
+    let wide = trace.wide_only();
+    println!(
+        "\nwide-only subset: {} coflows ({:.0}%), {:.0}% of bytes",
+        wide.coflows.len(),
+        100.0 * wide.coflows.len() as f64 / trace.coflows.len() as f64,
+        100.0 * wide.total_bytes() / trace.total_bytes()
+    );
+    Ok(())
+}

@@ -1,0 +1,106 @@
+"""AOT lowering: jax → HLO **text** artifacts for the rust PJRT runtime.
+
+Interchange is HLO text, NOT ``lowered.compile().serialize()`` — jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the ``xla`` crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text
+parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/gen_hlo.py and README gotchas).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits ``scorer.hlo.txt``, ``estimator.hlo.txt``, ``contention.hlo.txt`` and
+``manifest.json`` (the fixed shapes the rust side must pad to).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import B, C, LCB_SIGMAS, M, P
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for uniform
+    unpacking on the rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+ARTIFACTS = {
+    "scorer": (
+        model.scorer,
+        [
+            _spec((C, M)),  # sizes
+            _spec((C, M)),  # mask
+            _spec((C,)),  # nflows
+            _spec((C, B, M)),  # w
+            _spec((C,)),  # done
+            _spec((C, P)),  # occ
+            _spec(()),  # weight
+        ],
+    ),
+    "estimator": (
+        model.estimator_only,
+        [_spec((C, M)), _spec((C, M)), _spec((C,)), _spec((C, B, M))],
+    ),
+    "contention": (model.contention_only, [_spec((C, P))]),
+}
+
+
+def build(out_dir: str, only=None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "C": C,
+        "M": M,
+        "B": B,
+        "P": P,
+        "lcb_sigmas": LCB_SIGMAS,
+        "artifacts": {},
+        "format": "hlo-text",
+    }
+    for name, (fn, specs) in ARTIFACTS.items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [list(s.shape) for s in specs],
+            "chars": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    # kept for the original Makefile interface (single-file output)
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    build(out_dir or ".", args.only)
+
+
+if __name__ == "__main__":
+    main()

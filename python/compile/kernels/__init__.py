@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels for the Philae coordinator's scoring math.
+
+Fixed AOT shapes (must match ``rust/src/runtime``):
+
+* ``C``  — coflow batch (padded)
+* ``M``  — max pilot flows per coflow (SchedulerConfig::pilot_max upper bound)
+* ``B``  — bootstrap resamples
+* ``P``  — max ports
+"""
+
+C = 128
+M = 16
+B = 100
+P = 2048  # port-direction axis: uplinks [0, P/2), downlinks [P/2, P)
+LCB_SIGMAS = 3.0
+
+from .estimator import estimator_pallas  # noqa: E402,F401
+from .contention import contention_pallas  # noqa: E402,F401

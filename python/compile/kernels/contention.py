@@ -1,0 +1,51 @@
+"""Coflow-contention kernel.
+
+Input: the coflow×port occupancy matrix ``occ`` (``occ[c,p] = 1`` iff
+coflow ``c`` has unfinished flows at port ``p``; uplinks and downlinks are
+two halves of the padded port axis). Output per coflow: the average number
+of *other* active coflows sharing each of its occupied ports —
+
+    contention[c] = (Σ_{c'≠c} Σ_p occ[c,p]·occ[c',p]) / Σ_p occ[c,p]
+
+The numerator is a row-sum of ``occ·occᵀ`` minus the diagonal, i.e. one
+``[BC,P]×[P,C]`` matmul per block — the MXU-shaped formulation the paper's
+coordinator math reduces to (DESIGN.md §Hardware-Adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import C, P
+
+BC = 32  # coflow block
+
+
+def _contention_kernel(occ_blk_ref, occ_all_ref, out_ref):
+    occ = occ_blk_ref[...]  # [BC, P] — this block's coflows
+    occ_all = occ_all_ref[...]  # [C, P] — everyone (for the co-occupancy matmul)
+
+    co = jnp.dot(occ, occ_all.T)  # [BC, C] co-occupancy counts
+    total = co.sum(axis=-1)  # includes self-overlap
+    self_overlap = (occ * occ).sum(axis=-1)
+    width = occ.sum(axis=-1)
+    out_ref[...] = jnp.where(
+        width > 0.0, (total - self_overlap) / jnp.maximum(width, 1.0), 0.0
+    )
+
+
+def contention_pallas(occ):
+    """Per-coflow contention from a padded ``[C, P]`` occupancy matrix."""
+    assert occ.shape == (C, P)
+    grid = (C // BC,)
+    return pl.pallas_call(
+        _contention_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BC, P), lambda i: (i, 0)),
+            pl.BlockSpec((C, P), lambda i: (0, 0)),  # broadcast full matrix
+        ],
+        out_specs=pl.BlockSpec((BC,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((C,), jnp.float32),
+        interpret=True,
+    )(occ, occ)

@@ -1,0 +1,80 @@
+"""Batched sampling estimator + bootstrap lower-confidence-bound kernel.
+
+For each coflow ``c`` in a padded batch of ``C``:
+
+* ``mean_c``  = masked mean of its completed pilot-flow sizes
+* ``est_c``   = ``mean_c × num_flows_c``  (Philae's size estimate, §2)
+* ``boot_cb`` = ``Σ_m W[c,b,m]·sizes[c,m]`` — the b-th bootstrap resample
+  mean, where the host pre-normalizes the resample-count matrix ``W``
+  (counts/m, zero for invalid slots). Keeping the RNG on the host keeps the
+  kernel deterministic and lets the rust coordinator reproduce the exact
+  stream (SmallRng) used by the native fallback path.
+* ``lcb_c``   = ``max((mean_c − 3σ_boot)·num_flows_c, 1)`` — the §2.2
+  error-correction variants' estimate.
+
+TPU mapping: the batch dimension is tiled into ``BC``-coflow blocks (VMEM
+residency: sizes/mask ``BC×M`` + W ``BC×B×M`` ≈ 6400·BC floats); the
+bootstrap contraction is a ``[B,M]×[M]`` batched matmul feeding the MXU.
+``interpret=True`` everywhere on this CPU-only image (see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import C, M, B, LCB_SIGMAS
+
+BC = 32  # coflow block
+
+
+def _estimator_kernel(sizes_ref, mask_ref, nflows_ref, w_ref, est_ref, lcb_ref):
+    sizes = sizes_ref[...]  # [BC, M]
+    mask = mask_ref[...]  # [BC, M]
+    nflows = nflows_ref[...]  # [BC]
+    w = w_ref[...]  # [BC, B, M]
+
+    masked = sizes * mask
+    cnt = jnp.maximum(mask.sum(axis=-1), 1.0)
+    mean = masked.sum(axis=-1) / cnt  # [BC]
+    est = mean * nflows
+
+    # bootstrap resample means: W is pre-normalized so this is a plain
+    # batched contraction (MXU-friendly).
+    boot = jnp.einsum("cbm,cm->cb", w, masked)  # [BC, B]
+    boot_mean = boot.mean(axis=-1)
+    boot_var = jnp.maximum((boot * boot).mean(axis=-1) - boot_mean * boot_mean, 0.0)
+    sigma = jnp.sqrt(boot_var)
+    lcb = jnp.maximum((mean - LCB_SIGMAS * sigma) * nflows, 1.0)
+
+    est_ref[...] = est
+    lcb_ref[...] = lcb
+
+
+def estimator_pallas(sizes, mask, nflows, w):
+    """Pallas-tiled estimator over a padded [C, M] batch.
+
+    Returns ``(est, lcb)``, each ``[C]`` float32.
+    """
+    assert sizes.shape == (C, M) and mask.shape == (C, M)
+    assert nflows.shape == (C,) and w.shape == (C, B, M)
+    grid = (C // BC,)
+    return pl.pallas_call(
+        _estimator_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BC, M), lambda i: (i, 0)),
+            pl.BlockSpec((BC, M), lambda i: (i, 0)),
+            pl.BlockSpec((BC,), lambda i: (i,)),
+            pl.BlockSpec((BC, B, M), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BC,), lambda i: (i,)),
+            pl.BlockSpec((BC,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C,), jnp.float32),
+            jax.ShapeDtypeStruct((C,), jnp.float32),
+        ],
+        interpret=True,
+    )(sizes, mask, nflows, w)

@@ -1,0 +1,48 @@
+"""Pure-jnp correctness oracles for the L1 kernels.
+
+These are the definitions the pytest/hypothesis suites check the Pallas
+kernels against, and the math the rust-native fallback scorer mirrors
+(``rust/src/coordinator/{philae,errcorr}.rs``).
+"""
+
+import jax.numpy as jnp
+
+from . import LCB_SIGMAS
+
+
+def estimator_ref(sizes, mask, nflows, w):
+    """Masked-mean size estimate + bootstrap LCB. Shapes: sizes/mask [C,M],
+    nflows [C], w [C,B,M] (pre-normalized resample weights)."""
+    sizes = jnp.asarray(sizes, jnp.float32)
+    mask = jnp.asarray(mask, jnp.float32)
+    nflows = jnp.asarray(nflows, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+
+    masked = sizes * mask
+    cnt = jnp.maximum(mask.sum(-1), 1.0)
+    mean = masked.sum(-1) / cnt
+    est = mean * nflows
+
+    boot = jnp.einsum("cbm,cm->cb", w, masked)
+    boot_mean = boot.mean(-1)
+    boot_var = jnp.maximum((boot * boot).mean(-1) - boot_mean**2, 0.0)
+    lcb = jnp.maximum((mean - LCB_SIGMAS * jnp.sqrt(boot_var)) * nflows, 1.0)
+    return est, lcb
+
+
+def contention_ref(occ):
+    """Average extra sharers per occupied port. occ: [C,P] in {0,1}."""
+    occ = jnp.asarray(occ, jnp.float32)
+    co = occ @ occ.T
+    total = co.sum(-1)
+    self_overlap = (occ * occ).sum(-1)
+    width = occ.sum(-1)
+    return jnp.where(width > 0.0, (total - self_overlap) / jnp.maximum(width, 1.0), 0.0)
+
+
+def score_ref(est, done, contention, weight):
+    """Philae priority score: contention-adjusted estimated remaining."""
+    est = jnp.asarray(est, jnp.float32)
+    done = jnp.asarray(done, jnp.float32)
+    contention = jnp.asarray(contention, jnp.float32)
+    return jnp.maximum(est - done, 0.0) * (1.0 + weight * contention)

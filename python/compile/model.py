@@ -1,0 +1,43 @@
+"""Layer-2 JAX model: the composed coflow scorer.
+
+``scorer`` is the compute graph the rust coordinator executes per scoring
+batch: size estimation (L1 estimator kernel), contention (L1 contention
+kernel), and the final contention-adjusted shortest-first priority score.
+Lowered once by ``aot.py``; never run from python at serving time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import contention_pallas, estimator_pallas
+
+
+def scorer(sizes, mask, nflows, w, done, occ, weight):
+    """Full scoring pipeline over a padded coflow batch.
+
+    Args:
+      sizes:  [C, M]  completed pilot-flow sizes (bytes), zero-padded.
+      mask:   [C, M]  1.0 for valid pilot slots.
+      nflows: [C]     number of flows per coflow.
+      w:      [C,B,M] pre-normalized bootstrap resample weights.
+      done:   [C]     bytes of completed flows per coflow.
+      occ:    [C, P]  port-occupancy matrix (up/down halves).
+      weight: []      contention weight (SchedulerConfig::contention_weight).
+
+    Returns:
+      (score, est, lcb, contention) — each [C] float32. Lower score = higher
+      priority (shortest contention-adjusted remaining size first).
+    """
+    est, lcb = estimator_pallas(sizes, mask, nflows, w)
+    cont = contention_pallas(occ)
+    score = jnp.maximum(est - done, 0.0) * (1.0 + weight * cont)
+    return score, est, lcb, cont
+
+
+def estimator_only(sizes, mask, nflows, w):
+    """Estimator artifact entry point."""
+    return estimator_pallas(sizes, mask, nflows, w)
+
+
+def contention_only(occ):
+    """Contention artifact entry point (1-tuple for uniform unpacking)."""
+    return (contention_pallas(occ),)

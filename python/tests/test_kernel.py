@@ -1,0 +1,216 @@
+"""Pallas kernels vs pure-jnp oracle — the core correctness signal,
+including hypothesis sweeps over pilot counts, masks, skew, and occupancy
+patterns (the shapes themselves are AOT-fixed; the sweeps cover contents
+and degenerate fill patterns)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import B, C, LCB_SIGMAS, M, P, contention_pallas, estimator_pallas
+from compile.kernels.ref import contention_ref, estimator_ref, score_ref
+from compile import model
+
+
+def make_w(rng, counts):
+    """Host-side bootstrap weight matrix: W[c,b,m] = (#times slot m drawn)/m_c
+    over m_c valid slots, zero when the coflow has no pilots."""
+    w = np.zeros((C, B, M), np.float32)
+    for c, mc in enumerate(counts):
+        if mc == 0:
+            continue
+        idx = rng.integers(0, mc, size=(B, mc))
+        for b in range(B):
+            cnt = np.bincount(idx[b], minlength=M).astype(np.float32)
+            w[c, b] = cnt / mc
+    return w
+
+
+def random_batch(seed, max_pilots=M):
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, max_pilots + 1, size=C)
+    sizes = np.zeros((C, M), np.float32)
+    mask = np.zeros((C, M), np.float32)
+    for c, mc in enumerate(counts):
+        sizes[c, :mc] = rng.lognormal(3.0, 1.5, mc).astype(np.float32)
+        mask[c, :mc] = 1.0
+    nflows = rng.integers(1, 5000, size=C).astype(np.float32)
+    w = make_w(rng, counts)
+    return sizes, mask, nflows, w, counts
+
+
+class TestEstimator:
+    def test_matches_ref_random(self):
+        sizes, mask, nflows, w, _ = random_batch(0)
+        est_k, lcb_k = estimator_pallas(sizes, mask, nflows, w)
+        est_r, lcb_r = estimator_ref(sizes, mask, nflows, w)
+        np.testing.assert_allclose(est_k, est_r, rtol=1e-5)
+        # the f32 E[x²]−μ² variance is cancellation-prone; kernel and ref
+        # reduce in different orders, so the LCB tolerance is looser
+        np.testing.assert_allclose(lcb_k, lcb_r, rtol=1e-3)
+
+    def test_mean_times_nflows(self):
+        sizes = np.zeros((C, M), np.float32)
+        mask = np.zeros((C, M), np.float32)
+        sizes[0, :4] = [10, 20, 30, 40]
+        mask[0, :4] = 1
+        nflows = np.ones(C, np.float32)
+        nflows[0] = 100
+        w = np.zeros((C, B, M), np.float32)
+        est, _ = estimator_pallas(sizes, mask, nflows, w)
+        assert est[0] == pytest.approx(25.0 * 100)
+
+    def test_zero_pilots_padded_rows(self):
+        sizes = np.zeros((C, M), np.float32)
+        mask = np.zeros((C, M), np.float32)
+        nflows = np.ones(C, np.float32)
+        w = np.zeros((C, B, M), np.float32)
+        est, lcb = estimator_pallas(sizes, mask, nflows, w)
+        np.testing.assert_allclose(est, 0.0)
+        np.testing.assert_allclose(lcb, 1.0)  # floored
+
+    def test_identical_samples_zero_sigma(self):
+        rng = np.random.default_rng(1)
+        sizes = np.zeros((C, M), np.float32)
+        mask = np.zeros((C, M), np.float32)
+        sizes[:, :5] = 7.0
+        mask[:, :5] = 1.0
+        nflows = np.full(C, 10.0, np.float32)
+        w = make_w(rng, np.full(C, 5))
+        est, lcb = estimator_pallas(sizes, mask, nflows, w)
+        np.testing.assert_allclose(est, 70.0, rtol=1e-6)
+        # zero variance → LCB == mean estimate
+        np.testing.assert_allclose(lcb, 70.0, rtol=1e-5)
+
+    def test_lcb_below_estimate_with_skew(self):
+        rng = np.random.default_rng(2)
+        counts = np.full(C, 8)
+        sizes = np.zeros((C, M), np.float32)
+        mask = np.zeros((C, M), np.float32)
+        sizes[:, :8] = rng.lognormal(2.0, 2.0, (C, 8)).astype(np.float32)
+        mask[:, :8] = 1.0
+        nflows = np.full(C, 50.0, np.float32)
+        w = make_w(rng, counts)
+        est, lcb = estimator_pallas(sizes, mask, nflows, w)
+        assert (lcb <= est + 1e-3).all()
+        assert (lcb < est).sum() > C // 2  # skewed sample ⇒ real σ
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_hypothesis_matches_ref(self, seed):
+        sizes, mask, nflows, w, _ = random_batch(seed)
+        est_k, lcb_k = estimator_pallas(sizes, mask, nflows, w)
+        est_r, lcb_r = estimator_ref(sizes, mask, nflows, w)
+        np.testing.assert_allclose(est_k, est_r, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(lcb_k, lcb_r, rtol=1e-3, atol=1e-3)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=st.integers(0, 1000),
+        scale=st.floats(1e-3, 1e6),
+    )
+    def test_scale_equivariance(self, seed, scale):
+        """est and lcb scale linearly with flow sizes."""
+        sizes, mask, nflows, w, _ = random_batch(seed, max_pilots=6)
+        est1, lcb1 = estimator_ref(sizes, mask, nflows, w)
+        est2, lcb2 = estimator_ref(sizes * scale, mask, nflows, w)
+        np.testing.assert_allclose(est2, np.asarray(est1) * scale, rtol=1e-3)
+        # lcb floors at 1.0 and its f32 variance is cancellation-prone, so
+        # only compare comfortably un-floored entries, loosely
+        unfloored = (np.asarray(lcb1) > 2.0) & (np.asarray(lcb2) > 2.0)
+        np.testing.assert_allclose(
+            np.asarray(lcb2)[unfloored],
+            (np.asarray(lcb1) * scale)[unfloored],
+            rtol=1e-2,
+        )
+
+
+class TestContention:
+    def test_matches_ref_random(self):
+        rng = np.random.default_rng(0)
+        occ = (rng.random((C, P)) < 0.05).astype(np.float32)
+        np.testing.assert_allclose(
+            contention_pallas(occ), contention_ref(occ), rtol=1e-5, atol=1e-5
+        )
+
+    def test_disjoint_coflows_zero_contention(self):
+        occ = np.zeros((C, P), np.float32)
+        for c in range(8):
+            occ[c, c * 4 : c * 4 + 4] = 1.0
+        cont = np.asarray(contention_pallas(occ))
+        np.testing.assert_allclose(cont[:8], 0.0)
+
+    def test_fully_overlapping_pair(self):
+        occ = np.zeros((C, P), np.float32)
+        occ[0, :10] = 1.0
+        occ[1, :10] = 1.0
+        cont = np.asarray(contention_pallas(occ))
+        assert cont[0] == pytest.approx(1.0)
+        assert cont[1] == pytest.approx(1.0)
+
+    def test_partial_overlap(self):
+        occ = np.zeros((C, P), np.float32)
+        occ[0, :4] = 1.0  # ports 0-3
+        occ[1, 2:6] = 1.0  # ports 2-5: shares 2 of its 4 ports
+        cont = np.asarray(contention_pallas(occ))
+        assert cont[0] == pytest.approx(0.5)
+        assert cont[1] == pytest.approx(0.5)
+
+    def test_empty_rows_zero(self):
+        occ = np.zeros((C, P), np.float32)
+        cont = np.asarray(contention_pallas(occ))
+        np.testing.assert_allclose(cont, 0.0)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000), density=st.floats(0.0, 0.3))
+    def test_hypothesis_matches_ref(self, seed, density):
+        rng = np.random.default_rng(seed)
+        occ = (rng.random((C, P)) < density).astype(np.float32)
+        np.testing.assert_allclose(
+            contention_pallas(occ), contention_ref(occ), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestScorerModel:
+    def test_composed_scorer_matches_refs(self):
+        rng = np.random.default_rng(3)
+        sizes, mask, nflows, w, _ = random_batch(3)
+        done = rng.random(C).astype(np.float32) * 100
+        occ = (rng.random((C, P)) < 0.03).astype(np.float32)
+        weight = np.float32(0.5)
+        score, est, lcb, cont = model.scorer(sizes, mask, nflows, w, done, occ, weight)
+        est_r, lcb_r = estimator_ref(sizes, mask, nflows, w)
+        cont_r = contention_ref(occ)
+        score_r = score_ref(est_r, done, cont_r, weight)
+        np.testing.assert_allclose(est, est_r, rtol=1e-5)
+        np.testing.assert_allclose(lcb, lcb_r, rtol=1e-3)
+        np.testing.assert_allclose(cont, cont_r, rtol=1e-5)
+        np.testing.assert_allclose(score, score_r, rtol=1e-5)
+
+    def test_score_monotone_in_remaining(self):
+        est = np.linspace(0, 1000, C).astype(np.float32)
+        done = np.zeros(C, np.float32)
+        cont = np.zeros(C, np.float32)
+        s = np.asarray(score_ref(est, done, cont, 0.5))
+        assert (np.diff(s) >= 0).all()
+
+    def test_score_increases_with_contention(self):
+        est = np.full(C, 100.0, np.float32)
+        done = np.zeros(C, np.float32)
+        lo = np.asarray(score_ref(est, done, np.zeros(C, np.float32), 0.5))
+        hi = np.asarray(score_ref(est, done, np.full(C, 4.0, np.float32), 0.5))
+        assert (hi > lo).all()
+
+    def test_done_bytes_clamp(self):
+        est = np.full(C, 10.0, np.float32)
+        done = np.full(C, 100.0, np.float32)  # overshoot
+        s = np.asarray(score_ref(est, done, np.zeros(C, np.float32), 0.5))
+        np.testing.assert_allclose(s, 0.0)
+
+
+class TestAotShapes:
+    def test_manifest_constants_consistent(self):
+        assert C % 32 == 0  # block size divides batch
+        assert LCB_SIGMAS == 3.0
+        assert M >= 10  # must hold SchedulerConfig::pilot_max
+        assert P >= 2 * 900  # up+down directions of the 900-port run

@@ -1,0 +1,57 @@
+//! Bench for the **§2.2 error-correction experiment**: default Philae vs
+//! the three bootstrap-LCB variants, all against Aalo on the same trace.
+//!
+//! `cargo bench --bench bench_errcorr`
+
+mod common;
+
+use philae::coordinator::{SchedulerConfig, SchedulerKind};
+use philae::metrics::{percentile, speedups};
+use philae::sim::Simulation;
+use philae::trace::TraceSpec;
+
+fn main() {
+    common::banner("errcorr", "§2.2 error-correction variants vs Aalo");
+    let cfg = SchedulerConfig::default();
+    let trace = TraceSpec::fb_like(150, 526)
+        .with_load_factor(4.0)
+        .seed(42)
+        .generate();
+    let aalo = Simulation::run(&trace, SchedulerKind::Aalo, &cfg);
+
+    println!("paper: default 1.51x | LCB 1.33x | one-round 1.27x | multi-round 0.95x (avg)");
+    println!(
+        "{:>14} {:>10} {:>8} {:>8}",
+        "variant", "avg-CCT", "P50", "P90"
+    );
+    for (label, kind) in [
+        ("default", SchedulerKind::Philae),
+        ("lcb", SchedulerKind::PhilaeLcb),
+        ("one-round", SchedulerKind::PhilaeEc1),
+        ("multi-round", SchedulerKind::PhilaeEcMulti),
+    ] {
+        let r = Simulation::run(&trace, kind, &cfg);
+        let sp = speedups(&aalo.ccts, &r.ccts);
+        println!(
+            "{label:>14} {:>9.2}x {:>7.2}x {:>7.2}x",
+            aalo.avg_cct() / r.avg_cct(),
+            percentile(&sp, 50.0),
+            percentile(&sp, 90.0)
+        );
+    }
+
+    // Bootstrap micro-bench (the L1 kernel's native mirror).
+    let samples: Vec<f64> = (0..10).map(|i| 1e6 * (i + 1) as f64).collect();
+    let (min_s, _) = common::time_it(5, || {
+        let mut acc = 0.0;
+        for cid in 0..1000u64 {
+            let (m, s) = philae::coordinator::errcorr::bootstrap(&samples, 100, cid);
+            acc += m + s;
+        }
+        acc
+    });
+    println!(
+        "\nnative bootstrap (100 resamples × 10 pilots): {:.1} µs/coflow",
+        min_s / 1000.0 * 1e6
+    );
+}

@@ -1,0 +1,79 @@
+//! §Perf micro-benchmarks of the coordinator hot path: priority-order
+//! construction, rate allocation, and (when artifacts are built) the PJRT
+//! scorer — the three components every scheduling decision pays for.
+//!
+//! `cargo bench --bench bench_hotpath`
+
+mod common;
+
+use philae::coordinator::philae::PhilaeCore;
+use philae::coordinator::{rate, SchedulerConfig, SchedulerKind};
+use philae::runtime::{BatchFeatures, Engine};
+use philae::sim::world_from_trace;
+use philae::trace::TraceSpec;
+
+fn main() {
+    common::banner("hotpath", "order + allocate + PJRT scorer");
+    let cfg = SchedulerConfig::default();
+
+    for (ports, coflows) in [(150usize, 200usize), (900, 600)] {
+        let trace = TraceSpec::fb_like(ports, coflows).seed(5).generate();
+        let mut world = world_from_trace(&trace);
+        // activate everything at once — worst-case order/allocate input
+        world.active = (0..trace.coflows.len()).collect();
+        let mut core = PhilaeCore::new(cfg.clone());
+        for cid in 0..trace.coflows.len() {
+            core.handle_arrival(cid, &mut world);
+            world.coflows[cid].phase = philae::coflow::CoflowPhase::Running;
+            world.coflows[cid].est_size = Some(world.coflows[cid].total_bytes);
+        }
+
+        let (min_order, _) = common::time_it(20, || core.order(&world));
+        let plan = core.order(&world);
+        let (min_alloc, _) = common::time_it(20, || {
+            rate::allocate(&world.fabric, &world.flows, &world.coflows, &plan)
+        });
+        let alloc = rate::allocate(&world.fabric, &world.flows, &world.coflows, &plan);
+        println!(
+            "{ports} ports / {coflows} active coflows: order {:.0} µs | allocate {:.0} µs ({} grants, {} visited)",
+            min_order * 1e6,
+            min_alloc * 1e6,
+            alloc.grants.len(),
+            alloc.visited
+        );
+
+        // Aalo's per-tick pipeline on the same world (Table 3's "calc").
+        let mut aalo = SchedulerKind::Aalo.build(&trace, &cfg);
+        let (min_aalo, _) = common::time_it(20, || {
+            let p = aalo.order(&world);
+            rate::allocate(&world.fabric, &world.flows, &world.coflows, &p)
+        });
+        println!("  aalo order+allocate: {:.0} µs", min_aalo * 1e6);
+    }
+
+    // PJRT scorer (L2 graph of L1 kernels) — the AOT hot path.
+    match Engine::load("artifacts") {
+        Ok(engine) => {
+            let mut batch = BatchFeatures::new(&engine.manifest);
+            for row in 0..engine.manifest.c {
+                let sizes: Vec<f64> = (0..10).map(|i| 1e6 * (i + row + 1) as f64).collect();
+                batch.set_row(row, &sizes, 1000 + row, 5e6, &[row % 512, 1024 + row % 512], row as u64);
+            }
+            let (min_s, mean_s) = common::time_it(30, || engine.score(&batch, 0.5).unwrap());
+            println!(
+                "\nPJRT scorer ({}×{} batch, B={}): min {:.2} ms mean {:.2} ms ({:.1} µs/coflow)",
+                engine.manifest.c,
+                engine.manifest.m,
+                engine.manifest.b,
+                min_s * 1e3,
+                mean_s * 1e3,
+                min_s / engine.manifest.c as f64 * 1e6
+            );
+            let (min_e, _) = common::time_it(30, || engine.estimate(&batch).unwrap());
+            println!("PJRT estimator only: min {:.2} ms", min_e * 1e3);
+            let (min_c, _) = common::time_it(30, || engine.contention(&batch).unwrap());
+            println!("PJRT contention only: min {:.2} ms", min_c * 1e3);
+        }
+        Err(e) => println!("\n(PJRT scorer skipped: {e:#})"),
+    }
+}

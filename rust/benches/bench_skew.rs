@@ -1,0 +1,44 @@
+//! Bench for the **§2.2 skew-robustness** result (Eq. 1): sampling accuracy
+//! and CCT as intra-coflow skew grows, vs the clairvoyant oracle.
+//!
+//! `cargo bench --bench bench_skew`
+
+mod common;
+
+use philae::analysis::{skew_distribution, TwoCoflowSetting};
+use philae::coordinator::{SchedulerConfig, SchedulerKind};
+use philae::metrics::percentile;
+use philae::sim::Simulation;
+use philae::trace::TraceSpec;
+
+fn main() {
+    common::banner("skew", "§2.2 Eq.(1) skew robustness");
+    let cfg = SchedulerConfig::default();
+    println!(
+        "{:>6} {:>12} {:>13} {:>13}",
+        "σ", "P50 skew", "philae/sebf", "aalo/sebf"
+    );
+    for sigma in [0.2, 0.8, 1.2, 2.0, 3.0] {
+        let trace = TraceSpec::fb_like(100, 300)
+            .with_skew_sigma(sigma)
+            .with_load_factor(4.0)
+            .seed(11)
+            .generate();
+        let sk = skew_distribution(&trace);
+        let ph = Simulation::run(&trace, SchedulerKind::Philae, &cfg);
+        let aalo = Simulation::run(&trace, SchedulerKind::Aalo, &cfg);
+        let sebf = Simulation::run(&trace, SchedulerKind::Sebf, &cfg);
+        println!(
+            "{sigma:>6.1} {:>12.1} {:>13.3} {:>13.3}",
+            percentile(&sk, 50.0),
+            ph.avg_cct() / sebf.avg_cct(),
+            aalo.avg_cct() / sebf.avg_cct()
+        );
+    }
+
+    println!("\nEq.(1) bound vs pilots (skew h = 0.9, size ratio 1.2):");
+    for m in [1.0, 2.0, 4.0, 10.0, 25.0] {
+        let b = TwoCoflowSetting::symmetric(200.0, 10.0, 0.9, 1.2, m).hoeffding_bound();
+        println!("  m = {m:>4.0}: bound {b:.4}");
+    }
+}

@@ -1,0 +1,52 @@
+//! Bench for **Table 2** (and the CCT-speedup CDF figure): end-to-end
+//! Philae-vs-Aalo CCT comparison on the FB-like trace, full and wide-only,
+//! with simulation wall-time measurements.
+//!
+//! `cargo bench --bench bench_t2_cct`
+
+mod common;
+
+use philae::coordinator::{SchedulerConfig, SchedulerKind};
+use philae::metrics::SpeedupRow;
+use philae::sim::Simulation;
+use philae::trace::TraceSpec;
+
+fn main() {
+    common::banner("t2_cct", "Table 2: CCT improvement Philae vs Aalo");
+    let cfg = SchedulerConfig::default();
+    let trace = TraceSpec::fb_like(150, 526)
+        .with_load_factor(4.0)
+        .seed(42)
+        .generate();
+
+    let (aalo, philae) = {
+        let a = Simulation::run(&trace, SchedulerKind::Aalo, &cfg);
+        let p = Simulation::run(&trace, SchedulerKind::Philae, &cfg);
+        (a, p)
+    };
+    let row = SpeedupRow::from_ccts(&aalo.ccts, &philae.ccts);
+    println!("paper:    FB trace  P50 1.63x P90 8.00x avg 1.50x");
+    println!("measured: FB-like   {row}");
+
+    let wide = trace.wide_only();
+    let aw = Simulation::run(&wide, SchedulerKind::Aalo, &cfg);
+    let pw = Simulation::run(&wide, SchedulerKind::Philae, &cfg);
+    println!("paper:    wide-only P50 1.05x P90 2.14x avg 1.49x");
+    println!("measured: wide-only {}", SpeedupRow::from_ccts(&aw.ccts, &pw.ccts));
+
+    // Simulation throughput (perf tracking for §Perf).
+    let (min_s, mean_s) = common::time_it(3, || {
+        Simulation::run(&trace, SchedulerKind::Philae, &cfg).avg_cct()
+    });
+    println!(
+        "sim wall time (philae, {} flows): min {:.2}s mean {:.2}s ({:.0}k flows/s)",
+        trace.flows.len(),
+        min_s,
+        mean_s,
+        trace.flows.len() as f64 / min_s / 1e3
+    );
+    let (min_a, _) = common::time_it(3, || {
+        Simulation::run(&trace, SchedulerKind::Aalo, &cfg).avg_cct()
+    });
+    println!("sim wall time (aalo): min {min_a:.2}s");
+}

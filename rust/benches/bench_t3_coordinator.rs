@@ -1,0 +1,52 @@
+//! Bench for **Tables 3 & 4** and the §4.3 scalability claim: coordinator
+//! per-interval cost and missed-deadline fractions at 150 and 900 ports
+//! (6× replicated trace, δ′ = 6δ), plus the 900-port CCT speedup.
+//!
+//! `cargo bench --bench bench_t3_coordinator`
+
+mod common;
+
+use philae::coordinator::{SchedulerConfig, SchedulerKind};
+use philae::metrics::SpeedupRow;
+use philae::sim::Simulation;
+use philae::trace::TraceSpec;
+
+fn main() {
+    common::banner("t3_coordinator", "Tables 3/4 + §4.3 scalability");
+    let cfg = SchedulerConfig::default();
+    let base = TraceSpec::fb_like(150, 526)
+        .with_load_factor(4.0)
+        .seed(42)
+        .generate();
+
+    for (label, k) in [("150 ports", 1usize), ("900 ports", 6)] {
+        let trace = if k == 1 { base.clone() } else { base.replicate(k) };
+        let mut c = cfg.clone();
+        c.delta *= k as f64; // δ' = kδ as in §4.3
+        let philae = Simulation::run(&trace, SchedulerKind::Philae, &c);
+        let aalo = Simulation::run(&trace, SchedulerKind::Aalo, &c);
+        println!("\n-- {label} (δ = {:.0} ms) --", c.delta * 1e3);
+        for (name, r) in [("philae", &philae), ("aalo", &aalo)] {
+            println!(
+                "  {name:>6}: calc {:.3} ({:.3}) send {:.3} ({:.3}) recv {:.3} ({:.3}) total {:.3} ms/interval",
+                r.intervals.rate_calc.mean() * 1e3,
+                r.intervals.rate_calc.stddev() * 1e3,
+                r.intervals.rate_send.mean() * 1e3,
+                r.intervals.rate_send.stddev() * 1e3,
+                r.intervals.update_recv.mean() * 1e3,
+                r.intervals.update_recv.stddev() * 1e3,
+                r.intervals.total_ms_mean()
+            );
+            println!(
+                "          missed {:.1}% | idle-rate {:.1}% | updates/interval {:.1}",
+                100.0 * r.intervals.missed_fraction(),
+                100.0 * r.intervals.idle_rate_fraction(),
+                r.intervals.updates_per_interval.mean()
+            );
+        }
+        let row = SpeedupRow::from_ccts(&aalo.ccts, &philae.ccts);
+        println!("  CCT speedup philae vs aalo: {row}");
+    }
+    println!("\npaper: T3 total 14.80 vs 32.90 ms @900; T4 1%/16% @150, 10%/37% @900;");
+    println!("       §4.3 900-port avg 2.72x (P90 9.78x)");
+}

@@ -1,0 +1,23 @@
+//! Shared mini bench harness (no criterion on this offline image): runs a
+//! closure N times, reports min/mean wall time, and prints paper-table rows.
+
+use std::time::Instant;
+
+/// Time `f` over `iters` runs; returns (min_s, mean_s).
+pub fn time_it<T>(iters: usize, mut f: impl FnMut() -> T) -> (f64, f64) {
+    assert!(iters > 0);
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    (min, mean)
+}
+
+/// Standard bench banner.
+pub fn banner(name: &str, what: &str) {
+    println!("=== bench {name} — {what} ===");
+}

@@ -1,0 +1,223 @@
+//! Local agents: the per-machine daemons of §3.
+//!
+//! In the paper each machine runs a local agent that (a) schedules its
+//! port's flows according to the **last schedule received** from the
+//! coordinator, complying until a new one arrives, and (b) reports
+//! upward — Philae agents only report *flow completions* (with the length
+//! if the flow was a pilot), while Aalo agents additionally ship
+//! per-coflow byte counts every δ. That asymmetry is the whole of Table 1
+//! and drives Tables 3/4/6.
+//!
+//! [`AgentSim`] emulates one machine for the live tokio service
+//! (`crate::service`): it holds the flows whose *source* is its port,
+//! advances them at the last scheduled rates in (scaled) wall-clock time,
+//! and emits completion reports and byte updates over channels.
+
+use crate::{Bytes, CoflowId, FlowId, PortId, Time};
+
+/// Agent → coordinator messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AgentMsg {
+    /// A flow finished; `size` is its measured length (used by the
+    /// coordinator only when `pilot` — Philae's sampling measurement).
+    FlowComplete {
+        agent: PortId,
+        flow: FlowId,
+        coflow: CoflowId,
+        size: Bytes,
+        pilot: bool,
+        at: Time,
+    },
+    /// Periodic per-coflow bytes-sent report (Aalo only).
+    ByteUpdate {
+        agent: PortId,
+        coflow: CoflowId,
+        bytes_sent: Bytes,
+    },
+}
+
+/// Coordinator → agent messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CoordMsg {
+    /// New rates for this agent's flows; flows absent from the list stall.
+    NewSchedule { rates: Vec<(FlowId, f64)> },
+    /// A flow is newly assigned to this agent (src side).
+    AddFlow {
+        flow: FlowId,
+        coflow: CoflowId,
+        size: Bytes,
+        pilot: bool,
+    },
+    /// Drain and stop.
+    Shutdown,
+}
+
+/// One emulated machine.
+#[derive(Debug)]
+pub struct AgentSim {
+    pub port: PortId,
+    flows: Vec<AgentFlow>,
+    /// Local wall of received schedules (diagnostics).
+    pub schedules_received: u64,
+}
+
+#[derive(Debug, Clone)]
+struct AgentFlow {
+    id: FlowId,
+    coflow: CoflowId,
+    size: Bytes,
+    sent: Bytes,
+    rate: f64,
+    pilot: bool,
+}
+
+impl AgentSim {
+    pub fn new(port: PortId) -> Self {
+        AgentSim {
+            port,
+            flows: Vec::new(),
+            schedules_received: 0,
+        }
+    }
+
+    pub fn add_flow(&mut self, flow: FlowId, coflow: CoflowId, size: Bytes, pilot: bool) {
+        self.flows.push(AgentFlow {
+            id: flow,
+            coflow,
+            size,
+            sent: 0.0,
+            rate: 0.0,
+            pilot,
+        });
+    }
+
+    /// Apply a schedule: set listed rates, stall everything else — the
+    /// "comply with the last schedule until a new one is received" rule.
+    pub fn apply_schedule(&mut self, rates: &[(FlowId, f64)]) {
+        self.schedules_received += 1;
+        for f in &mut self.flows {
+            f.rate = 0.0;
+        }
+        for &(fid, r) in rates {
+            if let Some(f) = self.flows.iter_mut().find(|f| f.id == fid) {
+                f.rate = r;
+            }
+        }
+    }
+
+    /// Advance local flows by `dt` seconds; returns completion reports.
+    pub fn advance(&mut self, dt: Time, now: Time) -> Vec<AgentMsg> {
+        let mut out = Vec::new();
+        let port = self.port;
+        for f in &mut self.flows {
+            if f.rate > 0.0 {
+                f.sent = (f.sent + f.rate * dt).min(f.size);
+            }
+        }
+        self.flows.retain(|f| {
+            if f.size - f.sent <= crate::EPS {
+                out.push(AgentMsg::FlowComplete {
+                    agent: port,
+                    flow: f.id,
+                    coflow: f.coflow,
+                    size: f.size,
+                    pilot: f.pilot,
+                    at: now,
+                });
+                false
+            } else {
+                true
+            }
+        });
+        out
+    }
+
+    /// Seconds until this agent's next local completion (None if stalled).
+    pub fn next_completion(&self) -> Option<Time> {
+        self.flows
+            .iter()
+            .filter(|f| f.rate > 0.0)
+            .map(|f| (f.size - f.sent) / f.rate)
+            .min_by(f64::total_cmp)
+    }
+
+    /// Aalo-style per-coflow byte updates for the current instant.
+    pub fn byte_updates(&self) -> Vec<AgentMsg> {
+        let mut per_coflow: Vec<(CoflowId, Bytes)> = Vec::new();
+        for f in &self.flows {
+            match per_coflow.iter_mut().find(|(c, _)| *c == f.coflow) {
+                Some(e) => e.1 += f.sent,
+                None => per_coflow.push((f.coflow, f.sent)),
+            }
+        }
+        per_coflow
+            .into_iter()
+            .map(|(coflow, bytes_sent)| AgentMsg::ByteUpdate {
+                agent: self.port,
+                coflow,
+                bytes_sent,
+            })
+            .collect()
+    }
+
+    pub fn active_flows(&self) -> usize {
+        self.flows.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_compliance_and_completion() {
+        let mut a = AgentSim::new(3);
+        a.add_flow(0, 0, 100.0, true);
+        a.add_flow(1, 0, 50.0, false);
+        // no schedule yet: nothing moves
+        assert!(a.advance(1.0, 1.0).is_empty());
+        a.apply_schedule(&[(0, 10.0)]);
+        assert_eq!(a.next_completion(), Some(10.0));
+        let msgs = a.advance(10.0, 11.0);
+        assert_eq!(msgs.len(), 1);
+        match &msgs[0] {
+            AgentMsg::FlowComplete { flow, size, pilot, agent, .. } => {
+                assert_eq!(*flow, 0);
+                assert_eq!(*size, 100.0);
+                assert!(*pilot);
+                assert_eq!(*agent, 3);
+            }
+            m => panic!("unexpected {m:?}"),
+        }
+        assert_eq!(a.active_flows(), 1);
+    }
+
+    #[test]
+    fn new_schedule_stalls_unlisted_flows() {
+        let mut a = AgentSim::new(0);
+        a.add_flow(0, 0, 100.0, false);
+        a.add_flow(1, 1, 100.0, false);
+        a.apply_schedule(&[(0, 10.0), (1, 10.0)]);
+        a.advance(1.0, 1.0);
+        a.apply_schedule(&[(1, 20.0)]); // flow 0 dropped from schedule
+        a.advance(1.0, 2.0);
+        let upd = a.byte_updates();
+        assert!(upd.contains(&AgentMsg::ByteUpdate { agent: 0, coflow: 0, bytes_sent: 10.0 }));
+        assert!(upd.contains(&AgentMsg::ByteUpdate { agent: 0, coflow: 1, bytes_sent: 30.0 }));
+    }
+
+    #[test]
+    fn byte_updates_aggregate_per_coflow() {
+        let mut a = AgentSim::new(0);
+        a.add_flow(0, 7, 100.0, false);
+        a.add_flow(1, 7, 100.0, false);
+        a.apply_schedule(&[(0, 5.0), (1, 5.0)]);
+        a.advance(2.0, 2.0);
+        let upd = a.byte_updates();
+        assert_eq!(upd.len(), 1);
+        assert_eq!(
+            upd[0],
+            AgentMsg::ByteUpdate { agent: 0, coflow: 7, bytes_sent: 20.0 }
+        );
+    }
+}

@@ -1,0 +1,143 @@
+//! Analytical results of §2.2: the Hoeffding bound of Eq. (1) on the
+//! relative CCT gap between sampling-based scheduling and perfect
+//! knowledge, plus skew statistics used by the robustness experiments.
+
+use crate::coflow::CoflowOracle;
+use crate::trace::Trace;
+
+/// Parameters of the two-coflow setting of Eq. (1): coflow *i* has `c·nᵢ`
+/// flows i.i.d. in `[aᵢ, bᵢ]` with mean `μᵢ`; `mᵢ` pilot flows are sampled.
+/// WLOG `n₂μ₂ ≥ n₁μ₁`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TwoCoflowSetting {
+    pub n1: f64,
+    pub a1: f64,
+    pub b1: f64,
+    pub mu1: f64,
+    pub m1: f64,
+    pub n2: f64,
+    pub a2: f64,
+    pub b2: f64,
+    pub mu2: f64,
+    pub m2: f64,
+}
+
+impl TwoCoflowSetting {
+    /// The right-hand side of Eq. (1): the asymptotic (c→∞) upper bound on
+    /// `(T̃ᶜ − Tᶜ)/Tᶜ`.
+    ///
+    /// ```text
+    /// 4·exp[ −2(n₂μ₂−n₁μ₁)² / (n₂(b₂−a₂)/√m₂ + n₁(b₁−a₁)/√m₁)² ]
+    ///   · (n₂μ₂−n₁μ₁)/(n₂μ₂+2n₁μ₁)
+    /// ```
+    pub fn hoeffding_bound(&self) -> f64 {
+        let gap = self.n2 * self.mu2 - self.n1 * self.mu1;
+        debug_assert!(gap >= -1e-9, "requires n2*mu2 >= n1*mu1");
+        let gap = gap.max(0.0);
+        let denom = self.n2 * (self.b2 - self.a2) / self.m2.sqrt()
+            + self.n1 * (self.b1 - self.a1) / self.m1.sqrt();
+        let exp_term = if denom <= 0.0 {
+            if gap > 0.0 {
+                0.0
+            } else {
+                1.0
+            }
+        } else {
+            (-2.0 * gap * gap / (denom * denom)).exp()
+        };
+        4.0 * exp_term * gap / (self.n2 * self.mu2 + 2.0 * self.n1 * self.mu1)
+    }
+
+    /// Symmetric uniform setting used in the skew sweep: both coflows have
+    /// `n` flows in `[μ·(1−h), μ·(1+h)]` scaled so coflow 2 is `ratio`
+    /// larger; `m` pilots each. `h ∈ [0,1)` controls skew.
+    pub fn symmetric(n: f64, mu: f64, half_range: f64, size_ratio: f64, m: f64) -> Self {
+        let (a1, b1) = (mu * (1.0 - half_range), mu * (1.0 + half_range));
+        let mu2 = mu * size_ratio;
+        let (a2, b2) = (mu2 * (1.0 - half_range), mu2 * (1.0 + half_range));
+        TwoCoflowSetting {
+            n1: n,
+            a1,
+            b1,
+            mu1: mu,
+            m1: m,
+            n2: n,
+            a2,
+            b2,
+            mu2,
+            m2: m,
+        }
+    }
+}
+
+/// Distribution of intra-coflow skew (`max/min` flow length, §2.2) across
+/// a trace, ignoring single-flow coflows and zero-size degenerates.
+pub fn skew_distribution(trace: &Trace) -> Vec<f64> {
+    let oracles: Vec<CoflowOracle> = trace.oracles();
+    trace
+        .coflows
+        .iter()
+        .zip(oracles.iter())
+        .filter(|(c, _)| c.num_flows() > 1)
+        .map(|(_, o)| o.skew())
+        .filter(|s| s.is_finite())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bound_shrinks_with_more_pilots() {
+        let few = TwoCoflowSetting::symmetric(100.0, 10.0, 0.9, 1.1, 1.0).hoeffding_bound();
+        let many = TwoCoflowSetting::symmetric(100.0, 10.0, 0.9, 1.1, 25.0).hoeffding_bound();
+        assert!(many < few, "more pilots must tighten the bound: {many} vs {few}");
+    }
+
+    #[test]
+    fn bound_shrinks_as_skew_decreases() {
+        let skewed = TwoCoflowSetting::symmetric(100.0, 10.0, 0.9, 1.2, 4.0).hoeffding_bound();
+        let tight = TwoCoflowSetting::symmetric(100.0, 10.0, 0.1, 1.2, 4.0).hoeffding_bound();
+        assert!(tight < skewed);
+    }
+
+    #[test]
+    fn bound_small_at_both_extremes_of_size_gap() {
+        // near-identical sizes: numerator → 0
+        let near = TwoCoflowSetting::symmetric(100.0, 10.0, 0.5, 1.0001, 4.0).hoeffding_bound();
+        // hugely different sizes: exponential → 0
+        let far = TwoCoflowSetting::symmetric(100.0, 10.0, 0.5, 100.0, 4.0).hoeffding_bound();
+        // the worst case sits in between
+        let mid = TwoCoflowSetting::symmetric(100.0, 10.0, 0.5, 1.05, 4.0).hoeffding_bound();
+        assert!(near < mid, "near={near} mid={mid}");
+        assert!(far < mid, "far={far} mid={mid}");
+    }
+
+    #[test]
+    fn bound_nonnegative_and_bounded() {
+        for ratio in [1.0, 1.01, 1.5, 2.0, 10.0] {
+            for h in [0.0, 0.3, 0.9] {
+                for m in [1.0, 4.0, 16.0] {
+                    let b = TwoCoflowSetting::symmetric(50.0, 5.0, h, ratio, m).hoeffding_bound();
+                    assert!(b >= 0.0 && b <= 4.0, "bound {b} out of range");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_range_perfect_estimate() {
+        // no skew at all → exact estimate → bound is 0 when sizes differ...
+        let s = TwoCoflowSetting::symmetric(10.0, 1.0, 0.0, 2.0, 1.0);
+        assert_eq!(s.hoeffding_bound(), 0.0);
+    }
+
+    #[test]
+    fn skew_distribution_of_trace() {
+        let t = crate::trace::TraceSpec::fb_like(50, 60).seed(2).generate();
+        let sk = skew_distribution(&t);
+        assert!(!sk.is_empty());
+        assert!(sk.iter().all(|&s| s >= 1.0));
+    }
+}

@@ -1,0 +1,197 @@
+//! Runtime lifecycle state for flows and coflows inside the simulator and
+//! the coordinator service.
+
+use crate::{Bytes, CoflowId, FlowId, PortId, Time, EPS};
+
+/// Where a coflow is in the Philae pipeline. Aalo-style schedulers only use
+/// `Running`/`Done`; Philae walks `Piloting → Running → Done`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoflowPhase {
+    /// Pilot flows dispatched, size estimate pending.
+    Piloting,
+    /// Size estimated (or not needed); all flows eligible.
+    Running,
+    /// All flows finished.
+    Done,
+}
+
+/// Mutable per-flow state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlowState {
+    pub id: FlowId,
+    pub coflow: CoflowId,
+    pub src: PortId,
+    pub dst: PortId,
+    pub size: Bytes,
+    /// Bytes transferred so far.
+    pub sent: Bytes,
+    /// Current allocated rate in bytes/sec (0 when unscheduled).
+    pub rate: f64,
+    /// Chosen as a pilot flow by Philae.
+    pub pilot: bool,
+    /// Completion time, set once.
+    pub finished_at: Option<Time>,
+    /// Position inside the owning coflow's `active_list` (engine-maintained,
+    /// O(1) swap-removal on completion).
+    pub active_pos: usize,
+}
+
+impl FlowState {
+    pub fn new(id: FlowId, coflow: CoflowId, src: PortId, dst: PortId, size: Bytes) -> Self {
+        FlowState {
+            id,
+            coflow,
+            src,
+            dst,
+            size,
+            sent: 0.0,
+            rate: 0.0,
+            pilot: false,
+            finished_at: None,
+            active_pos: 0,
+        }
+    }
+
+    pub fn remaining(&self) -> Bytes {
+        (self.size - self.sent).max(0.0)
+    }
+
+    pub fn done(&self) -> bool {
+        self.finished_at.is_some() || self.remaining() <= EPS
+    }
+
+    /// Advance the flow by `dt` seconds at its current rate; returns `true`
+    /// if the flow just completed (caller stamps `finished_at`).
+    pub fn advance(&mut self, dt: Time) -> bool {
+        if self.done() || self.rate <= 0.0 {
+            return false;
+        }
+        self.sent = (self.sent + self.rate * dt).min(self.size);
+        self.remaining() <= EPS
+    }
+
+    /// Seconds until completion at the current rate (`None` if stalled).
+    pub fn eta(&self) -> Option<Time> {
+        if self.done() {
+            return Some(0.0);
+        }
+        if self.rate <= 0.0 {
+            None
+        } else {
+            Some(self.remaining() / self.rate)
+        }
+    }
+}
+
+/// Mutable per-coflow state.
+#[derive(Debug, Clone)]
+pub struct CoflowState {
+    pub id: CoflowId,
+    pub arrival: Time,
+    pub phase: CoflowPhase,
+    /// Flow ids of this coflow.
+    pub flows: Vec<FlowId>,
+    /// Unfinished flow ids (engine-maintained; iteration set for the rate
+    /// allocator — avoids rescanning finished flows of wide coflows).
+    pub active_list: Vec<FlowId>,
+    /// Distinct sender ports (static).
+    pub senders: Vec<crate::PortId>,
+    /// Distinct receiver ports (static).
+    pub receivers: Vec<crate::PortId>,
+    /// Pilot flow ids (Philae only).
+    pub pilots: Vec<FlowId>,
+    /// Number of flows not yet finished.
+    pub active_flows: usize,
+    /// Estimated total size in bytes (Philae: width × mean pilot size);
+    /// clairvoyant schedulers stash the oracle value here.
+    pub est_size: Option<Bytes>,
+    /// Total bytes sent so far across all flows (Aalo's queue-transition
+    /// "length"; also used for remaining-size scores).
+    pub bytes_sent: Bytes,
+    /// Total bytes of the coflow (for remaining computations *after*
+    /// estimation — Philae uses est_size, oracles use the true value).
+    pub total_bytes: Bytes,
+    /// Longest finished flow so far (Saath transition metric).
+    pub max_finished_flow: Bytes,
+    /// Completion time.
+    pub finished_at: Option<Time>,
+    /// Aalo: current priority queue index.
+    pub queue: usize,
+    /// Monotone FIFO sequence for intra-queue ordering.
+    pub seq: u64,
+}
+
+impl CoflowState {
+    pub fn new(id: CoflowId, arrival: Time, flows: Vec<FlowId>, total_bytes: Bytes, seq: u64) -> Self {
+        let n = flows.len();
+        CoflowState {
+            id,
+            arrival,
+            phase: CoflowPhase::Running,
+            active_list: flows.clone(),
+            flows,
+            senders: Vec::new(),
+            receivers: Vec::new(),
+            pilots: Vec::new(),
+            active_flows: n,
+            est_size: None,
+            bytes_sent: 0.0,
+            total_bytes,
+            max_finished_flow: 0.0,
+            finished_at: None,
+            queue: 0,
+            seq,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.finished_at.is_some()
+    }
+
+    /// Estimated remaining bytes: estimate (if any) minus bytes already
+    /// sent, floored at zero. Falls back to "unknown" (None) pre-estimate.
+    pub fn est_remaining(&self) -> Option<Bytes> {
+        self.est_size.map(|e| (e - self.bytes_sent).max(0.0))
+    }
+
+    /// CCT if finished.
+    pub fn cct(&self) -> Option<Time> {
+        self.finished_at.map(|t| t - self.arrival)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flow_advance_and_eta() {
+        let mut f = FlowState::new(0, 0, 0, 1, 100.0);
+        assert_eq!(f.eta(), None); // stalled at rate 0
+        f.rate = 10.0;
+        assert_eq!(f.eta(), Some(10.0));
+        assert!(!f.advance(5.0));
+        assert_eq!(f.sent, 50.0);
+        assert!(f.advance(5.0)); // completes exactly
+        assert!(f.remaining() <= EPS);
+    }
+
+    #[test]
+    fn flow_never_oversends() {
+        let mut f = FlowState::new(0, 0, 0, 1, 10.0);
+        f.rate = 100.0;
+        f.advance(1.0);
+        assert_eq!(f.sent, 10.0);
+    }
+
+    #[test]
+    fn coflow_est_remaining() {
+        let mut c = CoflowState::new(0, 0.0, vec![0, 1], 100.0, 0);
+        assert_eq!(c.est_remaining(), None);
+        c.est_size = Some(80.0);
+        c.bytes_sent = 30.0;
+        assert_eq!(c.est_remaining(), Some(50.0));
+        c.bytes_sent = 200.0; // estimate undershoot: clamp at 0
+        assert_eq!(c.est_remaining(), Some(0.0));
+    }
+}

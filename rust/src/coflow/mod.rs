@@ -1,0 +1,179 @@
+//! Coflow and flow data model.
+//!
+//! A **coflow** is a set of flows between cluster ports that accomplish a
+//! common task (e.g. the shuffle of one map-reduce job); its completion time
+//! (CCT) is the span from the arrival of its first flow to the completion of
+//! its last. The model here mirrors the paper's §1: ports are uplink/downlink
+//! pairs on a non-blocking switch, flows are (src, dst, size) with no
+//! in-network contention.
+
+mod lifecycle;
+
+pub use lifecycle::{CoflowPhase, CoflowState, FlowState};
+
+use crate::{Bytes, CoflowId, FlowId, PortId, Time};
+
+/// An immutable flow description from the trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlowSpec {
+    /// Global flow id (dense across the trace).
+    pub id: FlowId,
+    /// Owning coflow.
+    pub coflow: CoflowId,
+    /// Sender port (mapper side).
+    pub src: PortId,
+    /// Receiver port (reducer side).
+    pub dst: PortId,
+    /// Flow length in bytes.
+    pub size: Bytes,
+}
+
+/// An immutable coflow description from the trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoflowSpec {
+    /// Dense coflow id.
+    pub id: CoflowId,
+    /// External id from the trace file (e.g. FB trace job id).
+    pub external_id: u64,
+    /// Arrival time (seconds).
+    pub arrival: Time,
+    /// Flow ids (dense range into the trace flow table).
+    pub flows: Vec<FlowId>,
+    /// Distinct sender ports.
+    pub senders: Vec<PortId>,
+    /// Distinct receiver ports.
+    pub receivers: Vec<PortId>,
+}
+
+impl CoflowSpec {
+    /// Number of constituent flows — the coflow's *spatial dimension* the
+    /// paper's sampling idea exploits.
+    pub fn num_flows(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Width as the paper uses it for the wide-coflow filter: the number of
+    /// distinct ports the coflow is present on.
+    pub fn width(&self) -> usize {
+        self.senders.len() + self.receivers.len()
+    }
+
+    /// `true` if the coflow touches more than one sender or receiver port —
+    /// the “Wide-coflow-only” filter of Table 2.
+    pub fn is_wide(&self) -> bool {
+        self.senders.len() > 1 || self.receivers.len() > 1
+    }
+}
+
+/// Aggregate facts about a coflow derivable from its spec (clairvoyant
+/// schedulers use these; non-clairvoyant ones must not).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoflowOracle {
+    /// Total bytes over all flows (the classic SCF “length”).
+    pub total_bytes: Bytes,
+    /// Longest single flow in bytes (Saath's queue-transition metric).
+    pub max_flow: Bytes,
+    /// Shortest single flow in bytes.
+    pub min_flow: Bytes,
+    /// Bottleneck bytes: max over ports of bytes the coflow must move
+    /// through that port (Varys' SEBF effective-bottleneck metric).
+    pub bottleneck_bytes: Bytes,
+}
+
+impl CoflowOracle {
+    /// Compute oracle aggregates for `coflow` from the global flow table.
+    pub fn compute(coflow: &CoflowSpec, flows: &[FlowSpec], num_ports: usize) -> Self {
+        let mut total = 0.0;
+        let mut max_flow: Bytes = 0.0;
+        let mut min_flow: Bytes = f64::INFINITY;
+        let mut up = vec![0.0f64; num_ports];
+        let mut down = vec![0.0f64; num_ports];
+        for &fid in &coflow.flows {
+            let f = &flows[fid];
+            total += f.size;
+            max_flow = max_flow.max(f.size);
+            min_flow = min_flow.min(f.size);
+            up[f.src] += f.size;
+            down[f.dst] += f.size;
+        }
+        let bottleneck = up
+            .iter()
+            .chain(down.iter())
+            .cloned()
+            .fold(0.0f64, f64::max);
+        CoflowOracle {
+            total_bytes: total,
+            max_flow,
+            min_flow: if min_flow.is_finite() { min_flow } else { 0.0 },
+            bottleneck_bytes: bottleneck,
+        }
+    }
+
+    /// Intra-coflow skew as the paper measures it (§2.2):
+    /// `max flow length / min flow length`.
+    pub fn skew(&self) -> f64 {
+        if self.min_flow <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.max_flow / self.min_flow
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_flows() -> (CoflowSpec, Vec<FlowSpec>) {
+        let flows = vec![
+            FlowSpec { id: 0, coflow: 0, src: 0, dst: 2, size: 10.0 },
+            FlowSpec { id: 1, coflow: 0, src: 1, dst: 2, size: 30.0 },
+            FlowSpec { id: 2, coflow: 0, src: 0, dst: 3, size: 20.0 },
+        ];
+        let spec = CoflowSpec {
+            id: 0,
+            external_id: 0,
+            arrival: 0.0,
+            flows: vec![0, 1, 2],
+            senders: vec![0, 1],
+            receivers: vec![2, 3],
+        };
+        (spec, flows)
+    }
+
+    #[test]
+    fn oracle_aggregates() {
+        let (spec, flows) = mk_flows();
+        let o = CoflowOracle::compute(&spec, &flows, 4);
+        assert_eq!(o.total_bytes, 60.0);
+        assert_eq!(o.max_flow, 30.0);
+        assert_eq!(o.min_flow, 10.0);
+        // port 2 downlink carries flows 0+1 = 40 bytes: the bottleneck.
+        assert_eq!(o.bottleneck_bytes, 40.0);
+        assert_eq!(o.skew(), 3.0);
+    }
+
+    #[test]
+    fn width_and_wide_filter() {
+        let (spec, _) = mk_flows();
+        assert_eq!(spec.width(), 4);
+        assert!(spec.is_wide());
+        let narrow = CoflowSpec {
+            senders: vec![0],
+            receivers: vec![1],
+            ..spec
+        };
+        assert!(!narrow.is_wide());
+    }
+
+    #[test]
+    fn skew_degenerate_min_zero() {
+        let o = CoflowOracle {
+            total_bytes: 1.0,
+            max_flow: 1.0,
+            min_flow: 0.0,
+            bottleneck_bytes: 1.0,
+        };
+        assert!(o.skew().is_infinite());
+    }
+}

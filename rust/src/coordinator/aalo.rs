@@ -1,0 +1,238 @@
+//! Aalo (Chowdhury & Stoica, SIGCOMM'15) — the prior-art baseline.
+//!
+//! Aalo learns coflow "length" implicitly with **discretized multi-level
+//! feedback queues** (D-CLAS): a coflow starts in the highest-priority
+//! queue Q0 and is demoted to Qi+1 once the total bytes it has sent cross
+//! `E·Sⁱ`. Intra-queue order is FIFO. The coordinator needs **periodic
+//! byte-count updates** from every local agent (every δ) and recomputes
+//! rates every interval — exactly the overhead Table 1/Table 3 charge it
+//! with. Our model keeps that staleness: queue positions only move at tick
+//! boundaries, from the byte counts the coordinator has *seen* (updates can
+//! be lost with `update_loss_prob`, the Table 5 network-error knob).
+
+use super::{OrderEntry, Plan, Reaction, Scheduler, SchedulerConfig, World};
+use crate::{Bytes, CoflowId, FlowId, Time};
+use crate::util::Rng;
+
+pub struct AaloScheduler {
+    cfg: SchedulerConfig,
+    /// Byte counts as last reported to the coordinator (stale up to δ).
+    bytes_seen: Vec<Bytes>,
+    /// FIFO position *within the current queue* — reset on every demotion
+    /// (queue-entry order, not arrival order). This is what produces the
+    /// paper's “inadvertent round-robin”: two similar coflows leapfrog each
+    /// other every time one of them crosses a queue threshold.
+    queue_seq: Vec<u64>,
+    next_queue_seq: u64,
+    /// Number of per-coflow updates received (Table 1 / Table 3 accounting).
+    pub updates_received: u64,
+    /// Queue moves performed (diagnostics).
+    pub queue_moves: u64,
+    rng: Rng,
+}
+
+impl AaloScheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        let rng = Rng::seed_from_u64(cfg.dynamics_seed.wrapping_mul(0x9e37_79b9).wrapping_add(7));
+        AaloScheduler {
+            cfg,
+            bytes_seen: Vec::new(),
+            queue_seq: Vec::new(),
+            next_queue_seq: 0,
+            updates_received: 0,
+            queue_moves: 0,
+            rng,
+        }
+    }
+
+    fn ensure(&mut self, cid: CoflowId) {
+        if cid >= self.bytes_seen.len() {
+            self.bytes_seen.resize(cid + 1, 0.0);
+            self.queue_seq.resize(cid + 1, 0);
+        }
+    }
+
+    /// Queue index for a coflow that has sent `bytes`:
+    /// Q0 while `bytes < E`, then Qi for `bytes < E·Sⁱ`, capped at K−1.
+    pub fn queue_of(&self, bytes: Bytes) -> usize {
+        let mut threshold = self.cfg.q0_threshold;
+        for q in 0..self.cfg.num_queues - 1 {
+            if bytes < threshold {
+                return q;
+            }
+            threshold *= self.cfg.queue_mult;
+        }
+        self.cfg.num_queues - 1
+    }
+}
+
+impl Scheduler for AaloScheduler {
+    fn name(&self) -> String {
+        "aalo".into()
+    }
+
+    fn tick_interval(&self) -> Option<Time> {
+        Some(self.cfg.delta)
+    }
+
+    fn on_arrival(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
+        self.ensure(cid);
+        world.coflows[cid].queue = 0;
+        self.queue_seq[cid] = self.next_queue_seq;
+        self.next_queue_seq += 1;
+        Reaction::Reallocate
+    }
+
+    fn on_flow_complete(&mut self, _fid: FlowId, _world: &mut World) -> Reaction {
+        // Local agents immediately backfill the freed port from their local
+        // queues; the centralized model approximates that with a realloc.
+        // Queue positions do NOT move here — only at tick boundaries.
+        Reaction::Reallocate
+    }
+
+    /// δ tick: ingest byte updates (possibly lossy), demote coflows whose
+    /// seen-bytes crossed their queue threshold. Aalo recomputes rates
+    /// every interval regardless (the engine charges it for that).
+    fn on_tick(&mut self, world: &mut World) -> Reaction {
+        // Periodic pipeline: ingest byte updates, demote across queues, and
+        // recompute rates — every δ, whether or not anything moved (the
+        // paper's "Rate calculation: Periodic (δ)", Table 1).
+        let mut reaction = if world.active.is_empty() {
+            Reaction::None
+        } else {
+            Reaction::Reallocate
+        };
+        for i in 0..world.active.len() {
+            let cid = world.active[i];
+            self.ensure(cid);
+            if self.cfg.update_loss_prob > 0.0
+                && self.rng.chance(self.cfg.update_loss_prob)
+            {
+                continue; // update lost; coordinator keeps stale bytes
+            }
+            self.updates_received += 1;
+            self.bytes_seen[cid] = world.coflows[cid].bytes_sent;
+            let q = self.queue_of(self.bytes_seen[cid]);
+            if q != world.coflows[cid].queue {
+                debug_assert!(q > world.coflows[cid].queue, "Aalo demotions are monotone");
+                world.coflows[cid].queue = q;
+                // entering a new queue resets the FIFO position
+                self.queue_seq[cid] = self.next_queue_seq;
+                self.next_queue_seq += 1;
+                self.queue_moves += 1;
+                reaction = Reaction::Reallocate;
+            }
+        }
+        reaction
+    }
+
+    /// D-CLAS plan: queues get **fixed weighted bandwidth shares** (§1.1:
+    /// "each queue at each port receives a fixed bandwidth allocation"),
+    /// decaying with queue depth; FIFO within a queue. Leftovers are
+    /// backfilled in the same order (work conservation), so low queues can
+    /// still run when high queues are idle.
+    fn order(&mut self, world: &World) -> Plan {
+        let mut coflows: Vec<(usize, u64, CoflowId)> = world
+            .active
+            .iter()
+            .filter(|&&cid| !world.coflows[cid].done())
+            .map(|&cid| {
+                let qseq = self.queue_seq.get(cid).copied().unwrap_or(0);
+                (world.coflows[cid].queue, qseq, cid)
+            })
+            .collect();
+        coflows.sort_unstable();
+        let entries = coflows
+            .into_iter()
+            .map(|(q, _, cid)| OrderEntry::grouped(cid, q))
+            .collect();
+        // exponentially decaying weights across the K queues
+        let group_weights = (0..self.cfg.num_queues)
+            .map(|q| 0.5f64.powi(q as i32))
+            .collect();
+        Plan { entries, group_weights }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coflow::{CoflowState, FlowState};
+    use crate::fabric::{Fabric, PortLoad};
+    use crate::MB;
+
+    fn world2() -> World {
+        let flows = vec![
+            FlowState::new(0, 0, 0, 2, 100.0 * MB),
+            FlowState::new(1, 1, 1, 3, 100.0 * MB),
+        ];
+        let coflows = vec![
+            CoflowState::new(0, 0.0, vec![0], 100.0 * MB, 0),
+            CoflowState::new(1, 0.0, vec![1], 100.0 * MB, 1),
+        ];
+        World {
+            now: 0.0,
+            flows,
+            coflows,
+            fabric: Fabric::homogeneous(4, 100.0),
+            load: PortLoad::new(4),
+            active: vec![0, 1],
+        }
+    }
+
+    #[test]
+    fn queue_thresholds_follow_e_times_s_powers() {
+        let a = AaloScheduler::new(SchedulerConfig::default());
+        // E = 10 MB, S = 10, K = 10
+        assert_eq!(a.queue_of(0.0), 0);
+        assert_eq!(a.queue_of(9.9 * MB), 0);
+        assert_eq!(a.queue_of(10.0 * MB), 1);
+        assert_eq!(a.queue_of(99.0 * MB), 1);
+        assert_eq!(a.queue_of(100.0 * MB), 2);
+        assert_eq!(a.queue_of(1e9 * MB), 9); // capped at K-1
+    }
+
+    #[test]
+    fn tick_demotes_on_seen_bytes() {
+        let mut w = world2();
+        let mut a = AaloScheduler::new(SchedulerConfig::default());
+        a.on_arrival(0, &mut w);
+        a.on_arrival(1, &mut w);
+        w.coflows[0].bytes_sent = 50.0 * MB; // crossed E
+        a.on_tick(&mut w);
+        assert_eq!(w.coflows[0].queue, 1);
+        assert_eq!(w.coflows[1].queue, 0);
+        assert_eq!(a.queue_moves, 1);
+        assert_eq!(a.updates_received, 2);
+        // demoted coflow now sorts after the fresh one
+        let order = a.order(&w);
+        assert_eq!(order.entries[0], OrderEntry::grouped(1, 0));
+        assert_eq!(order.entries[1], OrderEntry::grouped(0, 1));
+    }
+
+    #[test]
+    fn lost_updates_keep_stale_queue() {
+        let mut w = world2();
+        let mut cfg = SchedulerConfig::default();
+        cfg.update_loss_prob = 1.0; // every update lost
+        let mut a = AaloScheduler::new(cfg);
+        a.on_arrival(0, &mut w);
+        w.coflows[0].bytes_sent = 500.0 * MB;
+        a.on_tick(&mut w);
+        assert_eq!(w.coflows[0].queue, 0, "no update seen, no demotion");
+        assert_eq!(a.updates_received, 0);
+    }
+
+    #[test]
+    fn fifo_within_queue() {
+        let mut w = world2();
+        let mut a = AaloScheduler::new(SchedulerConfig::default());
+        a.on_arrival(0, &mut w);
+        a.on_arrival(1, &mut w);
+        // both Q0, FIFO by seq
+        let order = a.order(&w);
+        assert_eq!(order.entries, vec![OrderEntry::grouped(0, 0), OrderEntry::grouped(1, 0)]);
+        // queue weights decay
+        assert!(order.group_weights[0] > order.group_weights[1]);
+    }
+}

@@ -1,0 +1,217 @@
+//! The §2.2 error-correction variants of Philae.
+//!
+//! The paper asks whether UCB-style confidence-interval machinery helps the
+//! sampling estimator and finds it **hurts**: similar-sized coflows end up
+//! round-robined by alternating lower-confidence-bounds, instead of one
+//! running to completion. Three variants are evaluated against default
+//! Philae on the FB trace:
+//!
+//! 1. [`ErrCorrMode::LcbOnly`] — use the bootstrap lower-confidence-bound
+//!    `mean − 3σ_bootstrap` of the pilot sample as the size estimate.
+//! 2. [`ErrCorrMode::OneRound`] — additionally re-estimate once, after the
+//!    first set of `p` post-pilot flows completes (p = pilot count).
+//! 3. [`ErrCorrMode::MultiRound`] — re-estimate after every further set of
+//!    `p` completions until the coflow finishes.
+//!
+//! The bootstrap (resample the pilot sizes with replacement `B` times, take
+//! the σ of the resampled means) is the same computation the L1 Pallas
+//! `estimator` kernel performs with a host-provided index matrix; the
+//! native implementation here uses an identical deterministic index stream
+//! so the two paths agree (see `rust/tests/runtime_parity.rs`).
+
+use super::philae::{CompletionOutcome, PhilaeCore};
+use super::{Plan, Reaction, Scheduler, SchedulerConfig, World};
+use crate::coflow::CoflowPhase;
+use crate::{Bytes, CoflowId, FlowId};
+use crate::util::Rng;
+
+/// Which §2.2 variant to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCorrMode {
+    LcbOnly,
+    OneRound,
+    MultiRound,
+}
+
+impl ErrCorrMode {
+    fn max_rounds(self) -> usize {
+        match self {
+            ErrCorrMode::LcbOnly => 0,
+            ErrCorrMode::OneRound => 1,
+            ErrCorrMode::MultiRound => usize::MAX,
+        }
+    }
+}
+
+/// Deterministic bootstrap: resample `samples` with replacement `b` times,
+/// return (mean, σ of resampled means). The index stream is generated from
+/// `seed` exactly like `python/compile/aot.py` generates the kernel's
+/// resample-index matrix, so native and PJRT paths match.
+pub fn bootstrap(samples: &[Bytes], b: usize, seed: u64) -> (f64, f64) {
+    if samples.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    if samples.len() == 1 || b == 0 {
+        return (mean, 0.0);
+    }
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut means = Vec::with_capacity(b);
+    for _ in 0..b {
+        let mut acc = 0.0;
+        for _ in 0..samples.len() {
+            acc += samples[rng.below(samples.len())];
+        }
+        means.push(acc / samples.len() as f64);
+    }
+    let m = means.iter().sum::<f64>() / b as f64;
+    let var = means.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / b as f64;
+    (mean, var.sqrt())
+}
+
+/// Lower confidence bound `mean − k·σ_bootstrap`, floored at a small
+/// positive value so a wildly uncertain coflow isn't treated as size ~0.
+pub fn lcb_estimate(samples: &[Bytes], num_flows: usize, cfg: &SchedulerConfig, cid: CoflowId) -> Bytes {
+    let (mean, sigma) = bootstrap(
+        samples,
+        cfg.bootstrap_resamples,
+        cfg.bootstrap_seed ^ (cid as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+    );
+    ((mean - cfg.lcb_sigmas * sigma) * num_flows as f64).max(1.0)
+}
+
+/// Philae with bootstrap-LCB estimation and optional iterative correction.
+pub struct PhilaeErrCorrScheduler {
+    core: PhilaeCore,
+    mode: ErrCorrMode,
+    cfg: SchedulerConfig,
+    /// Per coflow: sizes of flows completed *after* estimation — the
+    /// error-correction sets (§2.2: sets of `p` flows, grouped by start
+    /// order; completion-grouped here since the sim dispatches in order).
+    post_est: Vec<Vec<Bytes>>,
+    /// Rounds of correction already applied per coflow.
+    rounds_done: Vec<usize>,
+    /// Pilot sample kept for re-estimation.
+    pilot_sample: Vec<Vec<Bytes>>,
+}
+
+impl PhilaeErrCorrScheduler {
+    pub fn new(cfg: SchedulerConfig, mode: ErrCorrMode) -> Self {
+        PhilaeErrCorrScheduler {
+            core: PhilaeCore::new(cfg.clone()),
+            mode,
+            cfg,
+            post_est: Vec::new(),
+            rounds_done: Vec::new(),
+            pilot_sample: Vec::new(),
+        }
+    }
+
+    fn ensure(&mut self, cid: CoflowId) {
+        if cid >= self.post_est.len() {
+            self.post_est.resize(cid + 1, Vec::new());
+            self.rounds_done.resize(cid + 1, 0);
+            self.pilot_sample.resize(cid + 1, Vec::new());
+        }
+    }
+}
+
+impl Scheduler for PhilaeErrCorrScheduler {
+    fn name(&self) -> String {
+        match self.mode {
+            ErrCorrMode::LcbOnly => "philae-lcb".into(),
+            ErrCorrMode::OneRound => "philae-ec1".into(),
+            ErrCorrMode::MultiRound => "philae-ec-multi".into(),
+        }
+    }
+
+    fn on_arrival(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
+        self.ensure(cid);
+        self.core.handle_arrival(cid, world)
+    }
+
+    fn on_flow_complete(&mut self, fid: FlowId, world: &mut World) -> Reaction {
+        let cid = world.flows[fid].coflow;
+        self.ensure(cid);
+        match self.core.record_completion(fid, world) {
+            CompletionOutcome::SampleComplete(samples) => {
+                let n = world.coflows[cid].flows.len();
+                world.coflows[cid].est_size = Some(lcb_estimate(&samples, n, &self.cfg, cid));
+                world.coflows[cid].phase = CoflowPhase::Running;
+                self.pilot_sample[cid] = samples;
+                Reaction::Reallocate
+            }
+            CompletionOutcome::Normal => {
+                // Error-correction bookkeeping for estimated coflows.
+                if world.coflows[cid].phase == CoflowPhase::Running
+                    && world.coflows[cid].est_size.is_some()
+                    && self.rounds_done[cid] < self.mode.max_rounds()
+                {
+                    self.post_est[cid].push(world.flows[fid].size);
+                    let p = self.pilot_sample[cid].len().max(1);
+                    if self.post_est[cid].len() >= p {
+                        // one set of p flows completed → one correction round
+                        self.rounds_done[cid] += 1;
+                        let mut enlarged = self.pilot_sample[cid].clone();
+                        enlarged.extend(self.post_est[cid].drain(..));
+                        let n = world.coflows[cid].flows.len();
+                        world.coflows[cid].est_size =
+                            Some(lcb_estimate(&enlarged, n, &self.cfg, cid));
+                        self.pilot_sample[cid] = enlarged;
+                    }
+                }
+                Reaction::Reallocate
+            }
+        }
+    }
+
+    fn order(&mut self, world: &World) -> Plan {
+        self.core.order(world)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bootstrap_is_deterministic() {
+        let s = [10.0, 20.0, 30.0, 40.0];
+        let a = bootstrap(&s, 100, 7);
+        let b = bootstrap(&s, 100, 7);
+        assert_eq!(a, b);
+        let c = bootstrap(&s, 100, 8);
+        assert_ne!(a.1, c.1);
+    }
+
+    #[test]
+    fn bootstrap_mean_matches_sample_mean() {
+        let s = [10.0, 20.0, 30.0, 40.0];
+        let (mean, sigma) = bootstrap(&s, 200, 1);
+        assert_eq!(mean, 25.0);
+        // σ of the bootstrap means ≈ sample σ/√n = 11.18/2 ≈ 5.6
+        assert!(sigma > 2.0 && sigma < 10.0, "sigma={sigma}");
+    }
+
+    #[test]
+    fn bootstrap_degenerate_cases() {
+        assert_eq!(bootstrap(&[], 100, 1), (0.0, 0.0));
+        assert_eq!(bootstrap(&[5.0], 100, 1), (5.0, 0.0));
+        let (m, s) = bootstrap(&[3.0, 3.0, 3.0], 50, 1);
+        assert_eq!(m, 3.0);
+        assert_eq!(s, 0.0);
+    }
+
+    #[test]
+    fn lcb_below_mean_and_floored() {
+        let cfg = SchedulerConfig::default();
+        let samples = [10.0e6, 20.0e6, 90.0e6];
+        let lcb = lcb_estimate(&samples, 100, &cfg, 0);
+        let mean_est = (samples.iter().sum::<f64>() / 3.0) * 100.0;
+        assert!(lcb < mean_est, "LCB {lcb} must undercut mean estimate {mean_est}");
+        assert!(lcb >= 1.0);
+        // huge σ with tiny mean floors at 1.0
+        let tiny = lcb_estimate(&[0.0, 0.0], 10, &cfg, 0);
+        assert_eq!(tiny, 1.0);
+    }
+}

@@ -1,0 +1,72 @@
+//! FIFO baseline: coflows served strictly in arrival order (Baraat-like
+//! decentralized FIFO without size learning). Included because the paper's
+//! lineage (Aalo §7) compares against it, and as the weakest sane baseline
+//! for the benchmark harness.
+
+use super::{Plan, Reaction, Scheduler, World};
+use crate::{CoflowId, FlowId};
+
+#[derive(Default)]
+pub struct FifoScheduler;
+
+impl FifoScheduler {
+    pub fn new() -> Self {
+        FifoScheduler
+    }
+}
+
+impl Scheduler for FifoScheduler {
+    fn name(&self) -> String {
+        "fifo".into()
+    }
+
+    fn on_arrival(&mut self, _cid: CoflowId, _world: &mut World) -> Reaction {
+        Reaction::Reallocate
+    }
+
+    fn on_flow_complete(&mut self, _fid: FlowId, _world: &mut World) -> Reaction {
+        Reaction::Reallocate
+    }
+
+    fn order(&mut self, world: &World) -> Plan {
+        let mut coflows: Vec<(u64, CoflowId)> = world
+            .active
+            .iter()
+            .filter(|&&cid| !world.coflows[cid].done())
+            .map(|&cid| (world.coflows[cid].seq, cid))
+            .collect();
+        coflows.sort_unstable();
+        Plan::strict(coflows.into_iter().map(|(_, cid)| cid))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coflow::{CoflowState, FlowState};
+    use crate::fabric::{Fabric, PortLoad};
+
+    #[test]
+    fn strict_arrival_order() {
+        let flows = vec![
+            FlowState::new(0, 0, 0, 1, 10.0),
+            FlowState::new(1, 1, 0, 1, 1.0),
+        ];
+        let coflows = vec![
+            CoflowState::new(0, 0.0, vec![0], 10.0, 0),
+            CoflowState::new(1, 0.1, vec![1], 1.0, 1),
+        ];
+        let w = World {
+            now: 1.0,
+            flows,
+            coflows,
+            fabric: Fabric::homogeneous(2, 100.0),
+            load: PortLoad::new(2),
+            active: vec![0, 1],
+        };
+        let mut s = FifoScheduler::new();
+        // the tiny coflow arrived later: FIFO refuses to reorder
+        let plan = s.order(&w);
+        assert_eq!(plan.entries.iter().map(|e| e.coflow).collect::<Vec<_>>(), vec![0, 1]);
+    }
+}

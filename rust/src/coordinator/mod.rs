@@ -1,0 +1,322 @@
+//! The coordinator: scheduler implementations and rate allocation.
+//!
+//! All schedulers implement [`Scheduler`]: the simulation (or the live tokio
+//! service) feeds them coflow arrival / flow completion / periodic tick
+//! events and asks for a **priority order over eligible flows** whenever a
+//! reallocation is triggered; [`rate::allocate`] turns that order into
+//! per-flow rates that respect port capacities (greedy max-min in priority
+//! order, which is work-conserving by construction).
+//!
+//! Implemented policies:
+//!
+//! * [`PhilaeScheduler`] — the paper's contribution: pilot-flow sampling,
+//!   explicit size estimation, contention-adjusted shortest-coflow-first.
+//! * [`AaloScheduler`] — prior art baseline: D-CLAS multi-level feedback
+//!   queues driven by periodic byte updates.
+//! * [`SebfScheduler`], [`ScfScheduler`] — clairvoyant oracles
+//!   (Varys-style shortest-effective-bottleneck-first; total-size SCF).
+//! * [`FifoScheduler`] — non-clairvoyant FIFO (Baraat-like, no preemption
+//!   across coflows).
+//! * [`SaathScheduler`] — Saath-like: queue transitions by longest finished
+//!   flow, contention-aware intra-queue order, all-or-none grouping.
+//! * [`errcorr`] — the §2.2 error-correction variants of Philae
+//!   (bootstrap lower-confidence-bound, one-round, multi-round).
+
+pub mod aalo;
+pub mod errcorr;
+pub mod fifo;
+pub mod philae;
+pub mod rate;
+pub mod saath;
+pub mod scf;
+pub mod sebf;
+
+pub use aalo::AaloScheduler;
+pub use errcorr::{ErrCorrMode, PhilaeErrCorrScheduler};
+pub use fifo::FifoScheduler;
+pub use philae::PhilaeScheduler;
+pub use rate::{allocate, Allocation, FlowFilter, OrderEntry, Plan};
+pub use saath::SaathScheduler;
+pub use scf::ScfScheduler;
+pub use sebf::SebfScheduler;
+
+use crate::coflow::{CoflowState, FlowState};
+use crate::fabric::{Fabric, PortLoad};
+use crate::trace::Trace;
+use crate::{CoflowId, FlowId, Time, MB};
+
+/// Everything a scheduler may inspect and (for its own coflows' learning
+/// state) mutate when reacting to an event.
+pub struct World {
+    pub now: Time,
+    pub flows: Vec<FlowState>,
+    pub coflows: Vec<CoflowState>,
+    pub fabric: Fabric,
+    pub load: PortLoad,
+    /// Ids of arrived, unfinished coflows in arrival order.
+    pub active: Vec<CoflowId>,
+}
+
+impl World {
+    /// Eligible (arrived, unfinished) flows of a coflow.
+    pub fn active_flows_of(&self, cid: CoflowId) -> impl Iterator<Item = FlowId> + '_ {
+        self.coflows[cid]
+            .flows
+            .iter()
+            .copied()
+            .filter(move |&f| !self.flows[f].done())
+    }
+}
+
+/// What an event handler wants the engine to do next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reaction {
+    /// Nothing changed that affects rates.
+    None,
+    /// Priorities changed: recompute the order and reallocate rates.
+    Reallocate,
+}
+
+impl Reaction {
+    pub fn merge(self, other: Reaction) -> Reaction {
+        if self == Reaction::Reallocate || other == Reaction::Reallocate {
+            Reaction::Reallocate
+        } else {
+            Reaction::None
+        }
+    }
+}
+
+/// The scheduler interface shared by the simulator and the live service.
+pub trait Scheduler: Send {
+    fn name(&self) -> String;
+
+    /// `Some(δ)` if the policy needs a periodic tick (Aalo's scheduling
+    /// interval); Philae is event-triggered and returns `None`.
+    fn tick_interval(&self) -> Option<Time> {
+        None
+    }
+
+    /// A coflow arrived (already appended to `world.active`).
+    fn on_arrival(&mut self, cid: CoflowId, world: &mut World) -> Reaction;
+
+    /// A flow finished (completion report from a local agent; Philae's only
+    /// steady-state update — see Table 1).
+    fn on_flow_complete(&mut self, fid: FlowId, world: &mut World) -> Reaction;
+
+    /// A whole coflow finished.
+    fn on_coflow_complete(&mut self, _cid: CoflowId, _world: &mut World) -> Reaction {
+        Reaction::Reallocate
+    }
+
+    /// Periodic tick (only called when `tick_interval` is `Some`).
+    fn on_tick(&mut self, _world: &mut World) -> Reaction {
+        Reaction::None
+    }
+
+    /// Produce the scheduling plan: priority order over coflows (highest
+    /// first), lane filters, and any bandwidth-group weights. Flows of one
+    /// coflow are contiguous by construction (all-or-none).
+    fn order(&mut self, world: &World) -> Plan;
+}
+
+/// Which scheduler to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Philae: sampling-based size learning + contention-aware SCF.
+    Philae,
+    /// Aalo: multi-level feedback queues (prior art).
+    Aalo,
+    /// Clairvoyant shortest-effective-bottleneck-first (Varys).
+    Sebf,
+    /// Clairvoyant shortest-total-size coflow first.
+    Scf,
+    /// Non-clairvoyant FIFO.
+    Fifo,
+    /// Saath-like priority-queue scheduler.
+    Saath,
+    /// Philae + bootstrap lower-confidence-bound estimate (§2.2 variant 1).
+    PhilaeLcb,
+    /// Philae + LCB + one round of error correction (§2.2 variant 2).
+    PhilaeEc1,
+    /// Philae + LCB + error correction until completion (§2.2 variant 3).
+    PhilaeEcMulti,
+}
+
+impl SchedulerKind {
+    /// Instantiate the scheduler for `trace` under `cfg`. Clairvoyant
+    /// policies receive the oracle; non-clairvoyant ones must not touch it.
+    pub fn build(self, trace: &Trace, cfg: &SchedulerConfig) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerKind::Philae => Box::new(PhilaeScheduler::new(cfg.clone())),
+            SchedulerKind::Aalo => Box::new(AaloScheduler::new(cfg.clone())),
+            SchedulerKind::Sebf => Box::new(SebfScheduler::new(trace)),
+            SchedulerKind::Scf => Box::new(ScfScheduler::new(trace)),
+            SchedulerKind::Fifo => Box::new(FifoScheduler::new()),
+            SchedulerKind::Saath => Box::new(SaathScheduler::new(cfg.clone())),
+            SchedulerKind::PhilaeLcb => {
+                Box::new(PhilaeErrCorrScheduler::new(cfg.clone(), ErrCorrMode::LcbOnly))
+            }
+            SchedulerKind::PhilaeEc1 => {
+                Box::new(PhilaeErrCorrScheduler::new(cfg.clone(), ErrCorrMode::OneRound))
+            }
+            SchedulerKind::PhilaeEcMulti => {
+                Box::new(PhilaeErrCorrScheduler::new(cfg.clone(), ErrCorrMode::MultiRound))
+            }
+        }
+    }
+
+    /// CLI name of the scheduler.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SchedulerKind::Philae => "philae",
+            SchedulerKind::Aalo => "aalo",
+            SchedulerKind::Sebf => "sebf",
+            SchedulerKind::Scf => "scf",
+            SchedulerKind::Fifo => "fifo",
+            SchedulerKind::Saath => "saath",
+            SchedulerKind::PhilaeLcb => "philae-lcb",
+            SchedulerKind::PhilaeEc1 => "philae-ec1",
+            SchedulerKind::PhilaeEcMulti => "philae-ec-multi",
+        }
+    }
+
+    pub fn all() -> &'static [SchedulerKind] {
+        &[
+            SchedulerKind::Philae,
+            SchedulerKind::Aalo,
+            SchedulerKind::Sebf,
+            SchedulerKind::Scf,
+            SchedulerKind::Fifo,
+            SchedulerKind::Saath,
+            SchedulerKind::PhilaeLcb,
+            SchedulerKind::PhilaeEc1,
+            SchedulerKind::PhilaeEcMulti,
+        ]
+    }
+}
+
+impl std::str::FromStr for SchedulerKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        SchedulerKind::all()
+            .iter()
+            .copied()
+            .find(|k| k.as_str() == s)
+            .ok_or_else(|| {
+                let names: Vec<&str> = SchedulerKind::all().iter().map(|k| k.as_str()).collect();
+                format!("unknown scheduler {s:?}; expected one of {names:?}")
+            })
+    }
+}
+
+/// Tunables for all policies; defaults follow the paper (§IV “all the
+/// experiments use default parameters K, E, S and the default pilot flow
+/// selection policy”, plus Aalo's published defaults).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulerConfig {
+    // ---- Philae (sampling) ----
+    /// Fraction of a coflow's flows to pilot (paper: “never larger than 1%”
+    /// for wide coflows).
+    pub pilot_frac: f64,
+    /// Lower bound on pilot flows per coflow.
+    pub pilot_min: usize,
+    /// Upper bound on pilot flows per coflow.
+    pub pilot_max: usize,
+    /// Weight of contention in the priority score:
+    /// `score = est_remaining × (1 + w · avg_extra_sharers)`.
+    pub contention_weight: f64,
+    /// Starvation avoidance: coflows waiting longer than this enter the
+    /// express lane (FIFO, above everything else). A rare safety valve —
+    /// far above typical CCTs, so SJF ordering is undisturbed unless a
+    /// coflow is genuinely starving.
+    pub age_threshold: Time,
+    // ---- Aalo / Saath (priority queues) ----
+    /// Number of logical priority queues K.
+    pub num_queues: usize,
+    /// First queue threshold E in bytes.
+    pub q0_threshold: f64,
+    /// Per-queue threshold multiplier S.
+    pub queue_mult: f64,
+    /// Scheduling interval δ (seconds) for periodic policies.
+    pub delta: Time,
+    // ---- error correction (§2.2) ----
+    /// Bootstrap resamples for the confidence interval.
+    pub bootstrap_resamples: usize,
+    /// LCB = mean − `lcb_sigmas` · bootstrap σ.
+    pub lcb_sigmas: f64,
+    /// Seed for the (deterministic) bootstrap resampling.
+    pub bootstrap_seed: u64,
+    // ---- failure / dynamics modelling ----
+    /// Probability an Aalo per-interval byte update is lost (Table 5's
+    /// network-error robustness study perturbs this via run seeds).
+    pub update_loss_prob: f64,
+    /// Max extra latency (seconds) on completion reports.
+    pub report_jitter: Time,
+    /// Seed for the dynamics above (varied across the 5 runs of Table 5).
+    pub dynamics_seed: u64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            pilot_frac: 0.01,
+            pilot_min: 1,
+            pilot_max: 10,
+            contention_weight: 0.5,
+            age_threshold: 3600.0,
+            num_queues: 10,
+            q0_threshold: 10.0 * MB,
+            queue_mult: 10.0,
+            delta: 0.008,
+            bootstrap_resamples: 100,
+            lcb_sigmas: 3.0,
+            bootstrap_seed: 1,
+            update_loss_prob: 0.0,
+            report_jitter: 0.0,
+            dynamics_seed: 0,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    /// Number of pilot flows for a coflow with `n` flows:
+    /// `clamp(⌈frac·n⌉, pilot_min, pilot_max)`, capped at `n`.
+    pub fn pilots_for(&self, n: usize) -> usize {
+        let want = (self.pilot_frac * n as f64).ceil() as usize;
+        want.clamp(self.pilot_min, self.pilot_max).min(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pilot_count_defaults() {
+        let cfg = SchedulerConfig::default();
+        assert_eq!(cfg.pilots_for(1), 1);
+        assert_eq!(cfg.pilots_for(50), 1);
+        assert_eq!(cfg.pilots_for(400), 4);
+        assert_eq!(cfg.pilots_for(5000), 10); // capped at pilot_max
+        assert_eq!(cfg.pilots_for(0), 0);
+    }
+
+    #[test]
+    fn reaction_merge() {
+        assert_eq!(Reaction::None.merge(Reaction::None), Reaction::None);
+        assert_eq!(Reaction::None.merge(Reaction::Reallocate), Reaction::Reallocate);
+        assert_eq!(Reaction::Reallocate.merge(Reaction::None), Reaction::Reallocate);
+    }
+
+    #[test]
+    fn all_kinds_buildable() {
+        let trace = crate::trace::TraceSpec::tiny(4, 3).generate();
+        let cfg = SchedulerConfig::default();
+        for &k in SchedulerKind::all() {
+            let s = k.build(&trace, &cfg);
+            assert!(!s.name().is_empty());
+        }
+    }
+}

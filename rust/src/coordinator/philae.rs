@@ -1,0 +1,522 @@
+//! Philae: sampling-based coflow size learning + contention-aware SCF.
+//!
+//! On coflow arrival Philae **pre-schedules pilot flows** (≈1% of the
+//! coflow's flows, at least one, at most `pilot_max`, at most one per
+//! distinct sender port, placed on the least-busy port pairs). When every
+//! pilot has finished, the coflow's size is **estimated once** as
+//! `width × mean(pilot sizes)` and the coflow joins the scheduled set,
+//! ordered by contention-adjusted estimated remaining size (shortest
+//! first). Rate allocation is event-triggered — there is no periodic tick.
+//!
+//! Priority lanes, highest first:
+//!
+//! 1. **Express** — coflows older than `age_threshold` (starvation
+//!    freedom), FIFO.
+//! 2. **Pilot** — pilot flows of coflows still being sampled, FIFO.
+//! 3. **Scheduled** — estimated coflows by ascending
+//!    `score = est_remaining × (1 + w · contention)`.
+//! 4. **Backfill** — non-pilot flows of unestimated coflows, FIFO (work
+//!    conservation: they only see capacity the upper lanes left over).
+
+use super::{OrderEntry, Plan, Reaction, Scheduler, SchedulerConfig, World};
+use crate::coflow::CoflowPhase;
+use crate::{Bytes, CoflowId, FlowId};
+
+/// What a completion report meant to the sampling state machine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CompletionOutcome {
+    /// A non-pilot flow (or a pilot of an already-estimated coflow) ended.
+    Normal,
+    /// The last outstanding pilot finished: the sample is complete and the
+    /// coflow must be given an estimate now. Carries the pilot sizes.
+    SampleComplete(Vec<Bytes>),
+}
+
+/// Sampling/learning state shared by default Philae and the §2.2
+/// error-correction variants.
+#[derive(Debug, Clone)]
+pub struct PhilaeCore {
+    pub cfg: SchedulerConfig,
+    /// Completed pilot sizes per coflow.
+    pilot_sizes: Vec<Vec<Bytes>>,
+    /// Outstanding (unfinished) pilot count per coflow.
+    pilots_left: Vec<usize>,
+    /// Bytes of *completed* flows per coflow — Philae's view of progress
+    /// (it never receives byte-granularity updates; see Table 1).
+    done_bytes: Vec<Bytes>,
+    /// Completed-flow count per coflow (drives the remaining-size score).
+    flows_done: Vec<usize>,
+}
+
+impl PhilaeCore {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        PhilaeCore {
+            cfg,
+            pilot_sizes: Vec::new(),
+            pilots_left: Vec::new(),
+            done_bytes: Vec::new(),
+            flows_done: Vec::new(),
+        }
+    }
+
+    fn ensure(&mut self, cid: CoflowId) {
+        if cid >= self.pilot_sizes.len() {
+            self.pilot_sizes.resize(cid + 1, Vec::new());
+            self.pilots_left.resize(cid + 1, 0);
+            self.done_bytes.resize(cid + 1, 0.0);
+            self.flows_done.resize(cid + 1, 0);
+        }
+    }
+
+    /// Bytes of completed flows of `cid` (Philae's progress view).
+    pub fn done_bytes(&self, cid: CoflowId) -> Bytes {
+        self.done_bytes.get(cid).copied().unwrap_or(0.0)
+    }
+
+    /// Pilot selection (§2.1): up to `pilots_for(n)` flows, at most one per
+    /// distinct sender port, preferring the least-busy (src,dst) pairs so
+    /// piloting mostly displaces traffic that wasn't on any critical path.
+    /// Marks the flows and flips the coflow to `Piloting`.
+    pub fn handle_arrival(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
+        self.ensure(cid);
+        let n = world.coflows[cid].flows.len();
+        let want = self.cfg.pilots_for(n);
+        if want == 0 {
+            world.coflows[cid].phase = CoflowPhase::Running;
+            world.coflows[cid].est_size = Some(0.0);
+            return Reaction::Reallocate;
+        }
+        // Rank candidate flows by pair busyness.
+        let mut candidates: Vec<(f64, FlowId)> = world.coflows[cid]
+            .flows
+            .iter()
+            .map(|&f| {
+                let fl = &world.flows[f];
+                (world.load.pair_busyness(fl.src, fl.dst), f)
+            })
+            .collect();
+        candidates.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+
+        // Diversity passes: pilots must *sample the spatial dimension*, so
+        // prefer flows on (1) unseen sender AND receiver ports, then
+        // (2) unseen senders, then (3) anything — all least-busy first.
+        // Receiver diversity matters because shuffle flow sizes correlate
+        // per reducer (the benchmark format makes them equal): sampling one
+        // reducer ten times would collapse the sample to a single draw.
+        let mut chosen: Vec<FlowId> = Vec::with_capacity(want);
+        let mut used_src: Vec<usize> = Vec::new();
+        let mut used_dst: Vec<usize> = Vec::new();
+        for &(_, f) in &candidates {
+            if chosen.len() == want {
+                break;
+            }
+            let (src, dst) = (world.flows[f].src, world.flows[f].dst);
+            if !used_src.contains(&src) && !used_dst.contains(&dst) {
+                used_src.push(src);
+                used_dst.push(dst);
+                chosen.push(f);
+            }
+        }
+        for &(_, f) in &candidates {
+            if chosen.len() == want {
+                break;
+            }
+            let src = world.flows[f].src;
+            if !used_src.contains(&src) && !chosen.contains(&f) {
+                used_src.push(src);
+                chosen.push(f);
+            }
+        }
+        for &(_, f) in &candidates {
+            if chosen.len() == want {
+                break;
+            }
+            if !chosen.contains(&f) {
+                chosen.push(f);
+            }
+        }
+
+        for &f in &chosen {
+            world.flows[f].pilot = true;
+        }
+        self.pilots_left[cid] = chosen.len();
+        let c = &mut world.coflows[cid];
+        c.pilots = chosen;
+        c.phase = CoflowPhase::Piloting;
+        Reaction::Reallocate
+    }
+
+    /// Record a completion report. Returns `SampleComplete` exactly once per
+    /// coflow — when its last pilot finishes while still `Piloting`.
+    pub fn record_completion(&mut self, fid: FlowId, world: &mut World) -> CompletionOutcome {
+        let flow = world.flows[fid];
+        let cid = flow.coflow;
+        self.ensure(cid);
+        self.done_bytes[cid] += flow.size;
+        self.flows_done[cid] += 1;
+        if flow.pilot && world.coflows[cid].phase == CoflowPhase::Piloting {
+            self.pilot_sizes[cid].push(flow.size);
+            self.pilots_left[cid] = self.pilots_left[cid].saturating_sub(1);
+            if self.pilots_left[cid] == 0 {
+                return CompletionOutcome::SampleComplete(self.pilot_sizes[cid].clone());
+            }
+        }
+        CompletionOutcome::Normal
+    }
+
+    /// Contention of a coflow: average number of *other* active coflows
+    /// sharing its ports (paper: “with how many other coflows a coflow is
+    /// sharing ports”). Matches the L1 `contention` kernel's
+    /// `occ·occᵀ` row-sum semantics.
+    pub fn contention(&self, world: &World, cid: CoflowId) -> f64 {
+        let c = &world.coflows[cid];
+        // The load counters include this coflow itself while active, hence
+        // the −1 per port. Distinct-port lists are static (engine-filled).
+        let mut sharers = 0usize;
+        let ports = c.senders.len() + c.receivers.len();
+        for &p in &c.senders {
+            sharers += world.load.up_coflows[p].saturating_sub(1);
+        }
+        for &p in &c.receivers {
+            sharers += world.load.down_coflows[p].saturating_sub(1);
+        }
+        if ports == 0 {
+            0.0
+        } else {
+            sharers as f64 / ports as f64
+        }
+    }
+
+    /// The Philae priority score (lower = sooner): contention-adjusted
+    /// estimated remaining bytes. Mirrors the L2 `scorer` graph.
+    ///
+    /// Remaining size is estimated from the *completed-flow fraction*,
+    /// `est × (1 − flows_done/n)`, not from `est − bytes_done`: the latter
+    /// clamps to zero once a coflow out-sends an under-estimate, pinning a
+    /// still-huge coflow at top priority for its whole residual life (the
+    /// inverse of SJF). Flow counts are information Philae actually has —
+    /// completion reports are its only updates (Table 1).
+    pub fn score(&self, world: &World, cid: CoflowId) -> f64 {
+        let est = world.coflows[cid].est_size.unwrap_or(f64::INFINITY);
+        let n = world.coflows[cid].flows.len().max(1);
+        let done = self.flows_done.get(cid).copied().unwrap_or(0).min(n);
+        let remaining = est * (1.0 - done as f64 / n as f64);
+        remaining * (1.0 + self.cfg.contention_weight * self.contention(world, cid))
+    }
+
+    /// Completed-flow count for `cid`.
+    pub fn flows_done(&self, cid: CoflowId) -> usize {
+        self.flows_done.get(cid).copied().unwrap_or(0)
+    }
+
+    /// Completed pilot sizes recorded so far for `cid` (feature marshalling
+    /// for the PJRT scoring path).
+    pub fn pilot_sizes(&self, cid: CoflowId) -> &[Bytes] {
+        self.pilot_sizes
+            .get(cid)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Build the four-lane priority order using externally computed scores
+    /// for the scheduled lane (the PJRT scorer path); falls back to the
+    /// native score for coflows missing from `scores`.
+    pub fn order_with_scores(
+        &self,
+        world: &World,
+        scores: &std::collections::HashMap<CoflowId, f64>,
+    ) -> Plan {
+        self.order_impl(world, Some(scores))
+    }
+
+    /// Build the four-lane priority order (see module docs).
+    pub fn order(&self, world: &World) -> Plan {
+        self.order_impl(world, None)
+    }
+
+    fn order_impl(
+        &self,
+        world: &World,
+        scores: Option<&std::collections::HashMap<CoflowId, f64>>,
+    ) -> Plan {
+        let mut express: Vec<CoflowId> = Vec::new();
+        let mut piloting: Vec<CoflowId> = Vec::new();
+        let mut scheduled: Vec<(f64, u64, CoflowId)> = Vec::new();
+        for &cid in &world.active {
+            let c = &world.coflows[cid];
+            if c.done() {
+                continue;
+            }
+            if world.now - c.arrival > self.cfg.age_threshold {
+                express.push(cid);
+            } else if c.phase == CoflowPhase::Piloting {
+                piloting.push(cid);
+            } else {
+                let s = scores
+                    .and_then(|m| m.get(&cid).copied())
+                    .unwrap_or_else(|| self.score(world, cid));
+                scheduled.push((s, c.seq, cid));
+            }
+        }
+        express.sort_by_key(|&cid| world.coflows[cid].seq);
+        piloting.sort_by_key(|&cid| world.coflows[cid].seq);
+        scheduled.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+
+        let mut entries: Vec<OrderEntry> =
+            Vec::with_capacity(express.len() + 2 * piloting.len() + scheduled.len());
+        for &cid in &express {
+            entries.push(OrderEntry::all(cid));
+        }
+        // Pilot lane: only the pilot flows.
+        for &cid in &piloting {
+            entries.push(OrderEntry::pilots(cid));
+        }
+        for &(_, _, cid) in &scheduled {
+            entries.push(OrderEntry::all(cid));
+        }
+        // Backfill lane: the unestimated coflows' non-pilot flows.
+        for &cid in &piloting {
+            entries.push(OrderEntry::backfill(cid));
+        }
+        Plan { entries, group_weights: Vec::new() }
+    }
+}
+
+/// The default Philae scheduler: unbiased mean estimate, no error
+/// correction (the paper's best-performing configuration).
+pub struct PhilaeScheduler {
+    core: PhilaeCore,
+}
+
+impl PhilaeScheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        PhilaeScheduler { core: PhilaeCore::new(cfg) }
+    }
+
+    /// Point estimate from a completed pilot sample:
+    /// `width × mean(pilot sizes)` (unbiased under i.i.d. flow sizes).
+    pub fn estimate(samples: &[Bytes], num_flows: usize) -> Bytes {
+        if samples.is_empty() {
+            return 0.0;
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        mean * num_flows as f64
+    }
+}
+
+impl Scheduler for PhilaeScheduler {
+    fn name(&self) -> String {
+        "philae".into()
+    }
+
+    fn on_arrival(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
+        self.core.handle_arrival(cid, world)
+    }
+
+    fn on_flow_complete(&mut self, fid: FlowId, world: &mut World) -> Reaction {
+        match self.core.record_completion(fid, world) {
+            CompletionOutcome::SampleComplete(samples) => {
+                let cid = world.flows[fid].coflow;
+                let n = world.coflows[cid].flows.len();
+                world.coflows[cid].est_size = Some(Self::estimate(&samples, n));
+                world.coflows[cid].phase = CoflowPhase::Running;
+                Reaction::Reallocate
+            }
+            // Completion frees port capacity; Philae's rate calculation is
+            // event-triggered, and completions are events (Table 1).
+            CompletionOutcome::Normal => Reaction::Reallocate,
+        }
+    }
+
+    fn order(&mut self, world: &World) -> Plan {
+        self.core.order(world)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coflow::{CoflowState, FlowState};
+    use crate::fabric::{Fabric, PortLoad};
+
+    fn world_with(coflow_flows: &[&[(usize, usize, f64)]]) -> World {
+        let mut flows = Vec::new();
+        let mut coflows = Vec::new();
+        for (cid, fl) in coflow_flows.iter().enumerate() {
+            let mut ids = Vec::new();
+            let mut total = 0.0;
+            for &(src, dst, size) in fl.iter() {
+                let id = flows.len();
+                flows.push(FlowState::new(id, cid, src, dst, size));
+                ids.push(id);
+                total += size;
+            }
+            let mut c = CoflowState::new(cid, 0.0, ids, total, cid as u64);
+            let mut senders: Vec<usize> = fl.iter().map(|&(s, _, _)| s).collect();
+            senders.sort_unstable();
+            senders.dedup();
+            let mut receivers: Vec<usize> = fl.iter().map(|&(_, d, _)| d).collect();
+            receivers.sort_unstable();
+            receivers.dedup();
+            c.senders = senders;
+            c.receivers = receivers;
+            coflows.push(c);
+        }
+        let n = 8;
+        World {
+            now: 0.0,
+            flows,
+            coflows,
+            fabric: Fabric::homogeneous(n, 100.0),
+            load: PortLoad::new(n),
+            active: (0..coflow_flows.len()).collect(),
+        }
+    }
+
+    #[test]
+    fn estimate_is_mean_times_width() {
+        assert_eq!(PhilaeScheduler::estimate(&[10.0, 20.0], 100), 1500.0);
+        assert_eq!(PhilaeScheduler::estimate(&[], 100), 0.0);
+    }
+
+    #[test]
+    fn pilot_selection_prefers_distinct_senders_and_least_busy() {
+        let mut w = world_with(&[&[
+            (0, 4, 10.0),
+            (0, 5, 10.0),
+            (1, 4, 10.0),
+            (1, 5, 10.0),
+            (2, 4, 10.0),
+            (2, 5, 10.0),
+        ]]);
+        // make sender 0 and receiver 4 busy
+        w.load.up_bytes[0] = 1000.0;
+        w.load.down_bytes[4] = 500.0;
+        let mut cfg = SchedulerConfig::default();
+        cfg.pilot_min = 2;
+        let mut core = PhilaeCore::new(cfg);
+        core.handle_arrival(0, &mut w);
+        let pilots = w.coflows[0].pilots.clone();
+        assert_eq!(pilots.len(), 2);
+        // distinct senders AND distinct receivers (spatial sampling)
+        let srcs: Vec<_> = pilots.iter().map(|&f| w.flows[f].src).collect();
+        let dsts: Vec<_> = pilots.iter().map(|&f| w.flows[f].dst).collect();
+        assert_ne!(srcs[0], srcs[1]);
+        assert_ne!(dsts[0], dsts[1]);
+        // the busy sender 0 should not host a pilot; the least-busy pair
+        // (1→5) must be the first pick
+        assert!(!srcs.contains(&0));
+        assert!(pilots.iter().any(|&f| w.flows[f].src == 1 && w.flows[f].dst == 5));
+        for &f in &pilots {
+            assert!(w.flows[f].pilot);
+        }
+        assert_eq!(w.coflows[0].phase, CoflowPhase::Piloting);
+    }
+
+    #[test]
+    fn sample_completes_after_all_pilots() {
+        let mut w = world_with(&[&[(0, 4, 10.0), (1, 5, 30.0), (2, 6, 50.0)]]);
+        let mut cfg = SchedulerConfig::default();
+        cfg.pilot_min = 2;
+        let mut core = PhilaeCore::new(cfg);
+        core.handle_arrival(0, &mut w);
+        let pilots = w.coflows[0].pilots.clone();
+        assert_eq!(pilots.len(), 2);
+        // finish first pilot: not complete yet
+        w.flows[pilots[0]].finished_at = Some(1.0);
+        let sent0 = w.flows[pilots[0]].size;
+        w.flows[pilots[0]].sent = sent0;
+        assert_eq!(core.record_completion(pilots[0], &mut w), CompletionOutcome::Normal);
+        // finish second pilot: sample complete with both sizes
+        w.flows[pilots[1]].finished_at = Some(2.0);
+        let sent1 = w.flows[pilots[1]].size;
+        w.flows[pilots[1]].sent = sent1;
+        match core.record_completion(pilots[1], &mut w) {
+            CompletionOutcome::SampleComplete(s) => {
+                assert_eq!(s.len(), 2);
+                assert!((s.iter().sum::<f64>() - (sent0 + sent1)).abs() < 1e-9);
+            }
+            o => panic!("expected SampleComplete, got {o:?}"),
+        }
+        assert_eq!(core.done_bytes(0), sent0 + sent1);
+    }
+
+    #[test]
+    fn order_lanes_pilots_before_estimated_before_backfill() {
+        let mut w = world_with(&[
+            &[(0, 4, 10.0), (1, 5, 10.0)], // coflow 0: estimated
+            &[(2, 6, 10.0), (3, 7, 10.0)], // coflow 1: piloting
+        ]);
+        let mut cfg = SchedulerConfig::default();
+        cfg.pilot_min = 1;
+        cfg.pilot_max = 1;
+        let mut core = PhilaeCore::new(cfg);
+        core.handle_arrival(0, &mut w);
+        core.handle_arrival(1, &mut w);
+        // estimate coflow 0 directly
+        w.coflows[0].est_size = Some(20.0);
+        w.coflows[0].phase = CoflowPhase::Running;
+        let order = core.order(&w);
+        // pilot lane of coflow 1 first, then estimated coflow 0, then the
+        // backfill lane of coflow 1
+        assert_eq!(
+            order.entries,
+            vec![
+                OrderEntry::pilots(1),
+                OrderEntry::all(0),
+                OrderEntry::backfill(1),
+            ]
+        );
+    }
+
+    #[test]
+    fn shorter_estimated_coflow_ranks_first() {
+        let mut w = world_with(&[
+            &[(0, 4, 100.0)],
+            &[(1, 5, 10.0)],
+        ]);
+        for cid in 0..2 {
+            w.coflows[cid].phase = CoflowPhase::Running;
+        }
+        w.coflows[0].est_size = Some(100.0);
+        w.coflows[1].est_size = Some(10.0);
+        let core = PhilaeCore::new(SchedulerConfig::default());
+        let order = core.order(&w);
+        assert_eq!(order.entries, vec![OrderEntry::all(1), OrderEntry::all(0)]);
+    }
+
+    #[test]
+    fn express_lane_preempts_everything() {
+        let mut w = world_with(&[
+            &[(0, 4, 10.0)], // will be aged
+            &[(1, 5, 1.0)],
+        ]);
+        for cid in 0..2 {
+            w.coflows[cid].phase = CoflowPhase::Running;
+            w.coflows[cid].est_size = Some(w.coflows[cid].total_bytes);
+        }
+        let mut cfg = SchedulerConfig::default();
+        cfg.age_threshold = 5.0;
+        w.now = 10.0; // coflow 0 is 10s old > threshold
+        w.coflows[1].arrival = 9.0; // coflow 1 is fresh
+        let core = PhilaeCore::new(cfg);
+        let order = core.order(&w);
+        assert_eq!(order.entries[0].coflow, 0, "aged coflow must come first despite larger size");
+    }
+
+    #[test]
+    fn contention_counts_other_coflows() {
+        let mut w = world_with(&[
+            &[(0, 4, 10.0)],
+            &[(0, 4, 10.0)], // same ports as coflow 0
+        ]);
+        // both active on port 0 up and 4 down
+        w.load.up_coflows[0] = 2;
+        w.load.down_coflows[4] = 2;
+        let core = PhilaeCore::new(SchedulerConfig::default());
+        assert_eq!(core.contention(&w, 0), 1.0);
+        w.load.up_coflows[0] = 1;
+        w.load.down_coflows[4] = 1;
+        assert_eq!(core.contention(&w, 0), 0.0);
+    }
+}

@@ -1,0 +1,356 @@
+//! Rate allocation: turn a priority order over coflows into per-flow rates.
+//!
+//! Greedy max-min in priority order: walk the coflows highest-priority
+//! first (flows of one coflow contiguous — Saath's all-or-none) and grant
+//! each unfinished flow the full residual `min(uplink(src), downlink(dst))`.
+//! Properties:
+//!
+//! * **Feasible** — per-port rate sums never exceed capacity (the ledger
+//!   clamps every claim).
+//! * **Work-conserving** — lower-priority entries absorb whatever the
+//!   higher-priority ones leave (Philae's unestimated non-pilot flows sit
+//!   at the tail of the order and soak up leftovers).
+//! * **Cheap** — every grant saturates at least one port direction, so at
+//!   most `2·P` flows receive non-zero rate; the walk early-exits once all
+//!   directions are saturated, and iterates each coflow's engine-maintained
+//!   `active_list` so finished flows of wide coflows cost nothing.
+
+use crate::coflow::{CoflowState, FlowState};
+use crate::fabric::{CapacityLedger, Fabric};
+use crate::{CoflowId, FlowId, EPS};
+
+/// Which of a coflow's flows an order entry admits — Philae's lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlowFilter {
+    /// Every unfinished flow.
+    All,
+    /// Only the pilot flows (Philae's sampling lane).
+    PilotsOnly,
+    /// Only non-pilot flows (Philae's backfill lane).
+    NonPilots,
+}
+
+/// One priority-order entry: a coflow, the lane filter to apply, and an
+/// optional bandwidth group (Aalo-style queues with fixed weighted shares).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OrderEntry {
+    pub coflow: CoflowId,
+    pub filter: FlowFilter,
+    /// `Some(q)` assigns the entry to bandwidth group `q` (see
+    /// [`Plan::group_weights`]); `None` means strict priority.
+    pub group: Option<usize>,
+}
+
+impl OrderEntry {
+    pub fn all(coflow: CoflowId) -> Self {
+        OrderEntry { coflow, filter: FlowFilter::All, group: None }
+    }
+
+    pub fn pilots(coflow: CoflowId) -> Self {
+        OrderEntry { coflow, filter: FlowFilter::PilotsOnly, group: None }
+    }
+
+    pub fn backfill(coflow: CoflowId) -> Self {
+        OrderEntry { coflow, filter: FlowFilter::NonPilots, group: None }
+    }
+
+    pub fn grouped(coflow: CoflowId, group: usize) -> Self {
+        OrderEntry { coflow, filter: FlowFilter::All, group: Some(group) }
+    }
+}
+
+/// A full scheduling plan: the priority order plus the bandwidth weights of
+/// any groups referenced by entries. Weights are normalized internally;
+/// groups model Aalo/Saath's "each queue receives a fixed bandwidth share
+/// at every port" semantics (paper §1.1). Strict-priority entries
+/// (`group: None`) are unbudgeted.
+#[derive(Debug, Clone, Default)]
+pub struct Plan {
+    pub entries: Vec<OrderEntry>,
+    pub group_weights: Vec<f64>,
+}
+
+impl Plan {
+    /// Strict-priority plan over whole coflows.
+    pub fn strict(coflows: impl IntoIterator<Item = CoflowId>) -> Self {
+        Plan {
+            entries: coflows.into_iter().map(OrderEntry::all).collect(),
+            group_weights: Vec::new(),
+        }
+    }
+}
+
+/// Result of one allocation pass.
+#[derive(Debug, Clone, Default)]
+pub struct Allocation {
+    /// `(flow, rate)` for every flow granted a non-zero rate, in priority
+    /// order. Flows not listed are implicitly stalled (rate 0).
+    pub grants: Vec<(FlowId, f64)>,
+    /// Number of flows inspected (profiling: walk cost).
+    pub visited: usize,
+}
+
+impl Allocation {
+    /// Total allocated rate (bytes/sec).
+    pub fn total_rate(&self) -> f64 {
+        self.grants.iter().map(|(_, r)| r).sum()
+    }
+}
+
+/// Allocate rates for `plan` (entries highest priority first) against
+/// `fabric`.
+///
+/// Two passes when bandwidth groups are present: pass 1 walks entries in
+/// priority order with each grouped claim capped by its group's per-port
+/// budget (`weight × port capacity`); pass 2 backfills the leftovers in the
+/// same priority order without budgets (work conservation). Group-free
+/// plans collapse to the single greedy pass.
+pub fn allocate(
+    fabric: &Fabric,
+    flows: &[FlowState],
+    coflows: &[CoflowState],
+    plan: &Plan,
+) -> Allocation {
+    let mut ledger = CapacityLedger::new(fabric);
+    let mut grants: Vec<(FlowId, f64)> = Vec::with_capacity((2 * fabric.num_ports).min(1024));
+    let mut visited = 0usize;
+    let has_groups = plan.entries.iter().any(|e| e.group.is_some())
+        && plan.group_weights.iter().any(|&w| w > 0.0);
+
+    // Per-group per-port budgets (pass 1 only).
+    let wsum: f64 = plan.group_weights.iter().sum();
+    let mut budget_up: Vec<Vec<f64>> = Vec::new();
+    let mut budget_down: Vec<Vec<f64>> = Vec::new();
+    if has_groups {
+        for &w in &plan.group_weights {
+            let frac = w / wsum;
+            budget_up.push(fabric.up_capacity.iter().map(|c| c * frac).collect());
+            budget_down.push(fabric.down_capacity.iter().map(|c| c * frac).collect());
+        }
+    }
+
+    let mut open_up = fabric.up_capacity.iter().filter(|&&c| c > EPS).count();
+    let mut open_down = fabric.down_capacity.iter().filter(|&&c| c > EPS).count();
+    let passes: &[bool] = if has_groups { &[true, false] } else { &[false] };
+
+    for &budgeted in passes {
+        if open_up == 0 || open_down == 0 {
+            break;
+        }
+        'entries: for e in &plan.entries {
+            for &fid in &coflows[e.coflow].active_list {
+                if open_up == 0 || open_down == 0 {
+                    break 'entries;
+                }
+                let f = &flows[fid];
+                if f.done() {
+                    continue;
+                }
+                match e.filter {
+                    FlowFilter::All => {}
+                    FlowFilter::PilotsOnly if !f.pilot => continue,
+                    FlowFilter::NonPilots if f.pilot => continue,
+                    _ => {}
+                }
+                visited += 1;
+                let up_before = ledger.up_left(f.src) > EPS;
+                let down_before = ledger.down_left(f.dst) > EPS;
+                if !up_before || !down_before {
+                    continue;
+                }
+                let want = if budgeted {
+                    match e.group {
+                        Some(g) => budget_up[g][f.src].min(budget_down[g][f.dst]).max(0.0),
+                        None => f64::INFINITY,
+                    }
+                } else {
+                    f64::INFINITY
+                };
+                if want <= EPS {
+                    continue;
+                }
+                let granted = ledger.claim(f.src, f.dst, want);
+                if granted > EPS {
+                    match grants.iter_mut().find(|(id, _)| *id == fid) {
+                        Some(g) => g.1 += granted,
+                        None => grants.push((fid, granted)),
+                    }
+                    if budgeted {
+                        if let Some(g) = e.group {
+                            budget_up[g][f.src] -= granted;
+                            budget_down[g][f.dst] -= granted;
+                        }
+                    }
+                }
+                if up_before && ledger.up_left(f.src) <= EPS {
+                    open_up -= 1;
+                }
+                if down_before && ledger.down_left(f.dst) <= EPS {
+                    open_down -= 1;
+                }
+            }
+        }
+    }
+    Allocation { grants, visited }
+}
+
+/// Apply an allocation to the flow table: zero every active rate of the
+/// ordered coflows, then set the granted rates. Returns the number of flows
+/// whose rate changed (the count of `new rate` messages the coordinator
+/// must push to agents — the Table 3 “New Rate Send” column).
+pub fn apply(
+    flows: &mut [FlowState],
+    coflows: &[CoflowState],
+    plan: &Plan,
+    alloc: &Allocation,
+) -> usize {
+    let granted: std::collections::HashMap<FlowId, f64> =
+        alloc.grants.iter().copied().collect();
+    let mut changed = 0;
+    for e in &plan.entries {
+        for &fid in &coflows[e.coflow].active_list {
+            let new = granted.get(&fid).copied().unwrap_or(0.0);
+            if (flows[fid].rate - new).abs() > EPS {
+                changed += 1;
+            }
+            flows[fid].rate = new;
+        }
+    }
+    changed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::Fabric;
+
+    fn setup(flow_defs: &[(usize, usize, f64)]) -> (Vec<FlowState>, Vec<CoflowState>) {
+        // each flow is its own coflow for simple ordering tests
+        let mut flows = Vec::new();
+        let mut coflows = Vec::new();
+        for (i, &(src, dst, size)) in flow_defs.iter().enumerate() {
+            flows.push(FlowState::new(i, i, src, dst, size));
+            coflows.push(CoflowState::new(i, 0.0, vec![i], size, i as u64));
+        }
+        (flows, coflows)
+    }
+
+    fn entries(n: usize) -> Plan {
+        Plan::strict(0..n)
+    }
+
+    #[test]
+    fn priority_order_wins() {
+        let fabric = Fabric::homogeneous(2, 100.0);
+        let (flows, coflows) = setup(&[(0, 1, 10.0), (0, 1, 10.0)]);
+        let alloc = allocate(&fabric, &flows, &coflows, &entries(2));
+        assert_eq!(alloc.grants, vec![(0, 100.0)]);
+    }
+
+    #[test]
+    fn grouped_entries_share_by_weight() {
+        // two coflows on the same pair in different groups with weights
+        // 2:1 → pass 1 splits the port 2/3 vs 1/3 (then pass 2 has nothing
+        // left to backfill).
+        let fabric = Fabric::homogeneous(2, 90.0);
+        let (flows, coflows) = setup(&[(0, 1, 10.0), (0, 1, 10.0)]);
+        let plan = Plan {
+            entries: vec![OrderEntry::grouped(0, 0), OrderEntry::grouped(1, 1)],
+            group_weights: vec![2.0, 1.0],
+        };
+        let alloc = allocate(&fabric, &flows, &coflows, &plan);
+        assert_eq!(alloc.grants, vec![(0, 60.0), (1, 30.0)]);
+    }
+
+    #[test]
+    fn grouped_backfill_is_work_conserving() {
+        // only group 1 has a runnable flow: pass 1 gives it its 1/3 share,
+        // pass 2 tops it up to the full port.
+        let fabric = Fabric::homogeneous(2, 90.0);
+        let (flows, coflows) = setup(&[(0, 1, 10.0)]);
+        let plan = Plan {
+            entries: vec![OrderEntry::grouped(0, 1)],
+            group_weights: vec![2.0, 1.0],
+        };
+        let alloc = allocate(&fabric, &flows, &coflows, &plan);
+        assert_eq!(alloc.grants, vec![(0, 90.0)]);
+    }
+
+    #[test]
+    fn work_conservation_backfill() {
+        let fabric = Fabric::homogeneous(4, 100.0);
+        let (flows, coflows) = setup(&[(0, 1, 10.0), (2, 3, 10.0)]);
+        let alloc = allocate(&fabric, &flows, &coflows, &entries(2));
+        assert_eq!(alloc.grants.len(), 2);
+        assert_eq!(alloc.total_rate(), 200.0);
+    }
+
+    #[test]
+    fn no_port_oversubscription() {
+        let fabric = Fabric::homogeneous(3, 100.0);
+        let (flows, coflows) = setup(&[(0, 1, 10.0), (0, 2, 10.0), (2, 1, 10.0)]);
+        let alloc = allocate(&fabric, &flows, &coflows, &entries(3));
+        let mut up = vec![0.0; 3];
+        let mut down = vec![0.0; 3];
+        for &(fid, r) in &alloc.grants {
+            up[flows[fid].src] += r;
+            down[flows[fid].dst] += r;
+        }
+        for p in 0..3 {
+            assert!(up[p] <= 100.0 + 1e-9);
+            assert!(down[p] <= 100.0 + 1e-9);
+        }
+        assert_eq!(alloc.grants, vec![(0, 100.0)]);
+    }
+
+    #[test]
+    fn early_exit_on_saturation() {
+        let fabric = Fabric::homogeneous(1, 100.0);
+        let (flows, coflows) = setup(&(0..1000).map(|_| (0, 0, 1.0)).collect::<Vec<_>>());
+        let alloc = allocate(&fabric, &flows, &coflows, &entries(1000));
+        assert_eq!(alloc.grants.len(), 1);
+        assert!(alloc.visited <= 2, "visited {} flows", alloc.visited);
+    }
+
+    #[test]
+    fn skips_done_flows() {
+        let fabric = Fabric::homogeneous(2, 100.0);
+        let (mut flows, coflows) = setup(&[(0, 1, 10.0), (0, 1, 10.0)]);
+        flows[0].sent = 10.0;
+        let alloc = allocate(&fabric, &flows, &coflows, &entries(2));
+        assert_eq!(alloc.grants, vec![(1, 100.0)]);
+    }
+
+    #[test]
+    fn pilot_lane_filters() {
+        let fabric = Fabric::homogeneous(4, 100.0);
+        let mut flows = vec![
+            FlowState::new(0, 0, 0, 2, 10.0),
+            FlowState::new(1, 0, 1, 3, 10.0),
+        ];
+        flows[0].pilot = true;
+        let coflows = vec![CoflowState::new(0, 0.0, vec![0, 1], 20.0, 0)];
+        let pilot_plan = Plan { entries: vec![OrderEntry::pilots(0)], group_weights: vec![] };
+        let pilots = allocate(&fabric, &flows, &coflows, &pilot_plan);
+        assert_eq!(pilots.grants, vec![(0, 100.0)]);
+        let rest_plan = Plan { entries: vec![OrderEntry::backfill(0)], group_weights: vec![] };
+        let rest = allocate(&fabric, &flows, &coflows, &rest_plan);
+        assert_eq!(rest.grants, vec![(1, 100.0)]);
+    }
+
+    #[test]
+    fn apply_counts_rate_changes() {
+        let fabric = Fabric::homogeneous(2, 100.0);
+        let (mut flows, coflows) = setup(&[(0, 1, 10.0), (0, 1, 10.0)]);
+        let order = entries(2);
+        let alloc = allocate(&fabric, &flows, &coflows, &order);
+        let changed = apply(&mut flows, &coflows, &order, &alloc);
+        assert_eq!(changed, 1); // only flow 0 started
+        assert_eq!(flows[0].rate, 100.0);
+        assert_eq!(flows[1].rate, 0.0);
+        // re-applying the identical allocation changes nothing
+        let alloc2 = allocate(&fabric, &flows, &coflows, &order);
+        let changed2 = apply(&mut flows, &coflows, &order, &alloc2);
+        assert_eq!(changed2, 0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Saath-like scheduler (Jajoo et al., CoNEXT'17) — the strongest
+//! priority-queue baseline in the paper's lineage. Three ideas on top of
+//! Aalo (§1.1):
+//!
+//! 1. **All-or-none**: flows of a coflow are scheduled together so none of
+//!    them goes out-of-sync (our coflow-contiguous order gives this).
+//! 2. **Contention-aware intra-queue order** instead of FIFO.
+//! 3. **Queue transition by the longest finished flow** rather than total
+//!    bytes sent, which converges to the right queue faster.
+//!
+//! Transitions are event-driven (flow completions), but like all PQ-based
+//! designs it still pays the sieving overhead Philae's sampling removes.
+
+use super::{OrderEntry, Plan, Reaction, Scheduler, SchedulerConfig, World};
+use crate::{Bytes, CoflowId, FlowId};
+
+pub struct SaathScheduler {
+    cfg: SchedulerConfig,
+    pub queue_moves: u64,
+}
+
+impl SaathScheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        SaathScheduler { cfg, queue_moves: 0 }
+    }
+
+    /// Queue from the longest *finished* flow: thresholds E·Sⁱ like Aalo,
+    /// but keyed on a single flow length (a proxy for the coflow's flow
+    /// size scale, which is what determines how long it will occupy ports).
+    pub fn queue_of(&self, max_finished_flow: Bytes) -> usize {
+        let mut threshold = self.cfg.q0_threshold;
+        for q in 0..self.cfg.num_queues - 1 {
+            if max_finished_flow < threshold {
+                return q;
+            }
+            threshold *= self.cfg.queue_mult;
+        }
+        self.cfg.num_queues - 1
+    }
+
+    /// Contention: distinct active coflows sharing this coflow's ports,
+    /// normalized per port (same definition as Philae's, so the two
+    /// policies differ only in *size learning*).
+    fn contention(&self, world: &World, cid: CoflowId) -> f64 {
+        let c = &world.coflows[cid];
+        let mut sharers = 0usize;
+        let ports = c.senders.len() + c.receivers.len();
+        for &p in &c.senders {
+            sharers += world.load.up_coflows[p].saturating_sub(1);
+        }
+        for &p in &c.receivers {
+            sharers += world.load.down_coflows[p].saturating_sub(1);
+        }
+        if ports == 0 {
+            0.0
+        } else {
+            sharers as f64 / ports as f64
+        }
+    }
+}
+
+impl Scheduler for SaathScheduler {
+    fn name(&self) -> String {
+        "saath".into()
+    }
+
+    fn on_arrival(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
+        world.coflows[cid].queue = 0;
+        Reaction::Reallocate
+    }
+
+    fn on_flow_complete(&mut self, fid: FlowId, world: &mut World) -> Reaction {
+        // max_finished_flow is maintained by the engine before this call.
+        let cid = world.flows[fid].coflow;
+        let q = self.queue_of(world.coflows[cid].max_finished_flow);
+        if q != world.coflows[cid].queue {
+            world.coflows[cid].queue = q;
+            self.queue_moves += 1;
+        }
+        Reaction::Reallocate
+    }
+
+    fn order(&mut self, world: &World) -> Plan {
+        // (queue, contention, FIFO seq): low-contention coflows first within
+        // a queue — they can be finished off and free their ports fastest.
+        let mut coflows: Vec<(usize, f64, u64, CoflowId)> = world
+            .active
+            .iter()
+            .filter(|&&cid| !world.coflows[cid].done())
+            .map(|&cid| {
+                let c = &world.coflows[cid];
+                (c.queue, self.contention(world, cid), c.seq, cid)
+            })
+            .collect();
+        coflows.sort_by(|a, b| {
+            a.0.cmp(&b.0)
+                .then(a.1.total_cmp(&b.1))
+                .then(a.2.cmp(&b.2))
+        });
+        let entries = coflows
+            .into_iter()
+            .map(|(q, _, _, cid)| OrderEntry::grouped(cid, q))
+            .collect();
+        let group_weights = (0..self.cfg.num_queues)
+            .map(|q| 0.5f64.powi(q as i32))
+            .collect();
+        Plan { entries, group_weights }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coflow::{CoflowState, FlowState};
+    use crate::fabric::{Fabric, PortLoad};
+    use crate::MB;
+
+    fn world2() -> World {
+        let flows = vec![
+            FlowState::new(0, 0, 0, 2, 100.0 * MB),
+            FlowState::new(1, 1, 1, 3, 100.0 * MB),
+        ];
+        let mut c0 = CoflowState::new(0, 0.0, vec![0], 100.0 * MB, 0);
+        c0.senders = vec![0];
+        c0.receivers = vec![2];
+        let mut c1 = CoflowState::new(1, 0.0, vec![1], 100.0 * MB, 1);
+        c1.senders = vec![1];
+        c1.receivers = vec![3];
+        let coflows = vec![c0, c1];
+        World {
+            now: 0.0,
+            flows,
+            coflows,
+            fabric: Fabric::homogeneous(4, 100.0),
+            load: PortLoad::new(4),
+            active: vec![0, 1],
+        }
+    }
+
+    #[test]
+    fn transition_keyed_on_longest_finished_flow() {
+        let mut w = world2();
+        let mut s = SaathScheduler::new(SchedulerConfig::default());
+        s.on_arrival(0, &mut w);
+        // a 50 MB flow finished: above E=10MB, below E·S=100MB → queue 1
+        w.coflows[0].max_finished_flow = 50.0 * MB;
+        w.flows[0].finished_at = Some(1.0);
+        s.on_flow_complete(0, &mut w);
+        assert_eq!(w.coflows[0].queue, 1);
+        assert_eq!(s.queue_moves, 1);
+    }
+
+    #[test]
+    fn contention_breaks_queue_ties() {
+        let mut w = world2();
+        let mut s = SaathScheduler::new(SchedulerConfig::default());
+        s.on_arrival(0, &mut w);
+        s.on_arrival(1, &mut w);
+        // coflow 0's ports are contended by 2 coflows, coflow 1's by none
+        w.load.up_coflows[0] = 3;
+        w.load.down_coflows[2] = 3;
+        w.load.up_coflows[1] = 1;
+        w.load.down_coflows[3] = 1;
+        let order = s.order(&w);
+        // same queue, but coflow 1 has lower contention → first despite seq
+        assert_eq!(order.entries[0].coflow, 1);
+    }
+}

@@ -1,0 +1,80 @@
+//! Clairvoyant Shortest-Coflow-First oracle.
+//!
+//! Knows every coflow's true total size on arrival (the assumption the
+//! paper argues is implausible in practice — §1) and always serves the
+//! coflow with the least *remaining* bytes. This is the upper-bound policy
+//! Philae's sampling approximates; the gap between Philae and SCF is the
+//! cost of learning.
+
+use super::{Plan, Reaction, Scheduler, World};
+use crate::trace::Trace;
+use crate::{Bytes, CoflowId, FlowId};
+
+pub struct ScfScheduler {
+    total_bytes: Vec<Bytes>,
+}
+
+impl ScfScheduler {
+    pub fn new(trace: &Trace) -> Self {
+        let oracles = trace.oracles();
+        ScfScheduler {
+            total_bytes: oracles.iter().map(|o| o.total_bytes).collect(),
+        }
+    }
+}
+
+impl Scheduler for ScfScheduler {
+    fn name(&self) -> String {
+        "scf-oracle".into()
+    }
+
+    fn on_arrival(&mut self, _cid: CoflowId, _world: &mut World) -> Reaction {
+        Reaction::Reallocate
+    }
+
+    fn on_flow_complete(&mut self, _fid: FlowId, _world: &mut World) -> Reaction {
+        Reaction::Reallocate
+    }
+
+    fn order(&mut self, world: &World) -> Plan {
+        let mut coflows: Vec<(f64, u64, CoflowId)> = world
+            .active
+            .iter()
+            .filter(|&&cid| !world.coflows[cid].done())
+            .map(|&cid| {
+                let c = &world.coflows[cid];
+                let remaining = (self.total_bytes[cid] - c.bytes_sent).max(0.0);
+                (remaining, c.seq, cid)
+            })
+            .collect();
+        coflows.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        Plan::strict(coflows.into_iter().map(|(_, _, cid)| cid))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Trace, TraceRecord};
+
+    #[test]
+    fn shortest_remaining_first() {
+        let trace = Trace::from_records(
+            4,
+            vec![
+                TraceRecord::uniform(1, 0.0, vec![0], vec![2], 100.0),
+                TraceRecord::uniform(2, 0.0, vec![1], vec![3], 1.0),
+            ],
+        );
+        let mut s = ScfScheduler::new(&trace);
+        let mut w = crate::sim::world_from_trace(&trace);
+        w.active = vec![0, 1];
+        let order = s.order(&w);
+        // coflow 1 (1 MB) before coflow 0 (100 MB)
+        assert_eq!(order.entries[0].coflow, 1);
+        // after coflow 0 sends most of its bytes it jumps ahead
+        w.coflows[0].bytes_sent = w.coflows[0].total_bytes - 1.0;
+        let order = s.order(&w);
+        assert_eq!(order.entries[0].coflow, 0);
+    }
+}

@@ -1,0 +1,167 @@
+//! Non-blocking switch fabric model.
+//!
+//! The datacenter network is abstracted as one big non-blocking switch
+//! (paper §1): every machine is a *port* with an uplink and a downlink of
+//! fixed capacity, and ports are the only source of contention — the core
+//! sustains any admitted traffic. A rate allocation is feasible iff for
+//! every port the sum of flow rates sending from (resp. received at) it
+//! stays within the uplink (downlink) capacity.
+
+use crate::{Bytes, PortId, EPS, GBPS};
+
+/// Static fabric description.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    /// Number of ports (machines).
+    pub num_ports: usize,
+    /// Uplink capacity per port, bytes/sec.
+    pub up_capacity: Vec<f64>,
+    /// Downlink capacity per port, bytes/sec.
+    pub down_capacity: Vec<f64>,
+}
+
+impl Fabric {
+    /// Homogeneous fabric: `n` ports at `rate` bytes/sec each direction.
+    pub fn homogeneous(n: usize, rate: f64) -> Self {
+        Fabric {
+            num_ports: n,
+            up_capacity: vec![rate; n],
+            down_capacity: vec![rate; n],
+        }
+    }
+
+    /// The paper's testbed: 1 Gbps NICs.
+    pub fn gbps(n: usize) -> Self {
+        Self::homogeneous(n, GBPS)
+    }
+}
+
+/// A mutable view of remaining port capacity used while building one rate
+/// allocation. Greedy allocators draw from it in priority order.
+#[derive(Debug, Clone)]
+pub struct CapacityLedger {
+    up: Vec<f64>,
+    down: Vec<f64>,
+}
+
+impl CapacityLedger {
+    pub fn new(fabric: &Fabric) -> Self {
+        CapacityLedger {
+            up: fabric.up_capacity.clone(),
+            down: fabric.down_capacity.clone(),
+        }
+    }
+
+    /// Residual rate available on the (src→dst) pair.
+    #[inline]
+    pub fn available(&self, src: PortId, dst: PortId) -> f64 {
+        self.up[src].min(self.down[dst]).max(0.0)
+    }
+
+    /// Claim `rate` on the pair; clamps to the residual and returns what was
+    /// actually granted.
+    #[inline]
+    pub fn claim(&mut self, src: PortId, dst: PortId, rate: f64) -> f64 {
+        let granted = rate.min(self.available(src, dst)).max(0.0);
+        self.up[src] -= granted;
+        self.down[dst] -= granted;
+        granted
+    }
+
+    /// Residual uplink at `p`.
+    #[inline]
+    pub fn up_left(&self, p: PortId) -> f64 {
+        self.up[p].max(0.0)
+    }
+
+    /// Residual downlink at `p`.
+    #[inline]
+    pub fn down_left(&self, p: PortId) -> f64 {
+        self.down[p].max(0.0)
+    }
+
+    /// `true` if the pair still has allocatable rate.
+    #[inline]
+    pub fn has_room(&self, src: PortId, dst: PortId) -> bool {
+        self.available(src, dst) > EPS
+    }
+}
+
+/// Per-port load bookkeeping used by Philae's *least-busy port* pilot
+/// placement (§2.1) and by contention tracking: how many bytes are queued to
+/// cross each uplink/downlink and how many distinct coflows occupy it.
+#[derive(Debug, Clone, Default)]
+pub struct PortLoad {
+    /// Backlogged bytes per uplink.
+    pub up_bytes: Vec<Bytes>,
+    /// Backlogged bytes per downlink.
+    pub down_bytes: Vec<Bytes>,
+    /// Distinct active coflows per uplink.
+    pub up_coflows: Vec<usize>,
+    /// Distinct active coflows per downlink.
+    pub down_coflows: Vec<usize>,
+}
+
+impl PortLoad {
+    pub fn new(num_ports: usize) -> Self {
+        PortLoad {
+            up_bytes: vec![0.0; num_ports],
+            down_bytes: vec![0.0; num_ports],
+            up_coflows: vec![0; num_ports],
+            down_coflows: vec![0; num_ports],
+        }
+    }
+
+    /// Combined busyness of the (src,dst) pair in backlogged bytes — the
+    /// metric Philae minimizes when placing pilot flows so that piloting
+    /// "only affects earlier finishing flows of other coflows".
+    pub fn pair_busyness(&self, src: PortId, dst: PortId) -> Bytes {
+        self.up_bytes[src] + self.down_bytes[dst]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_respects_capacity() {
+        let fabric = Fabric::homogeneous(2, 100.0);
+        let mut l = CapacityLedger::new(&fabric);
+        assert_eq!(l.claim(0, 1, 60.0), 60.0);
+        assert_eq!(l.claim(0, 1, 60.0), 40.0); // clamped to residual
+        assert_eq!(l.claim(0, 1, 1.0), 0.0);
+        assert!(!l.has_room(0, 1));
+    }
+
+    #[test]
+    fn ledger_couples_up_and_down() {
+        let fabric = Fabric::homogeneous(3, 100.0);
+        let mut l = CapacityLedger::new(&fabric);
+        l.claim(0, 1, 100.0); // saturates up[0] and down[1]
+        assert_eq!(l.available(0, 2), 0.0); // up[0] gone
+        assert_eq!(l.available(2, 1), 0.0); // down[1] gone
+        assert_eq!(l.available(2, 0), 100.0); // untouched pair
+    }
+
+    #[test]
+    fn heterogeneous_pair_min() {
+        let fabric = Fabric {
+            num_ports: 2,
+            up_capacity: vec![30.0, 100.0],
+            down_capacity: vec![100.0, 50.0],
+        };
+        let l = CapacityLedger::new(&fabric);
+        assert_eq!(l.available(0, 1), 30.0);
+        assert_eq!(l.available(1, 0), 100.0);
+    }
+
+    #[test]
+    fn pair_busyness() {
+        let mut load = PortLoad::new(2);
+        load.up_bytes[0] = 5.0;
+        load.down_bytes[1] = 7.0;
+        assert_eq!(load.pair_busyness(0, 1), 12.0);
+        assert_eq!(load.pair_busyness(1, 0), 0.0);
+    }
+}

@@ -1,0 +1,62 @@
+//! # Philae — sampling-based online coflow scheduling
+//!
+//! Reproduction of *“A Case for Sampling Based Learning Techniques in Coflow
+//! Scheduling”* (Jajoo, Hu, Lin — CS.DC 2021; extended Philae, USENIX ATC'19).
+//!
+//! The crate is the **Layer-3 rust coordinator** of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the coflow schedulers (Philae, Aalo, SEBF, SCF,
+//!   FIFO, Saath-like, error-correction variants), the non-blocking-fabric
+//!   flow simulator, the trace toolkit, the tokio coordinator service with
+//!   local agents, and the metrics/analysis used to regenerate every table
+//!   and figure of the paper.
+//! * **L2 (python/compile/model.py)** — the JAX scoring graph (sampling
+//!   estimator + bootstrap LCB + contention), AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the batched
+//!   estimator and the MXU-friendly contention matmul.
+//!
+//! Python never runs on the scheduling path: `runtime::Engine` loads the
+//! AOT artifacts via PJRT (`xla` crate) once at startup.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use philae::trace::TraceSpec;
+//! use philae::sim::Simulation;
+//! use philae::coordinator::{SchedulerKind, SchedulerConfig};
+//!
+//! let trace = TraceSpec::fb_like(150, 526).seed(7).generate();
+//! let philae = Simulation::run(&trace, SchedulerKind::Philae, &SchedulerConfig::default());
+//! let aalo = Simulation::run(&trace, SchedulerKind::Aalo, &SchedulerConfig::default());
+//! println!("avg CCT speedup: {:.2}x", aalo.avg_cct() / philae.avg_cct());
+//! ```
+
+pub mod agents;
+pub mod analysis;
+pub mod coflow;
+pub mod coordinator;
+pub mod fabric;
+pub mod metrics;
+pub mod runtime;
+pub mod service;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+/// Simulation time in seconds.
+pub type Time = f64;
+/// Bytes (sizes, progress).
+pub type Bytes = f64;
+/// Network port index (a machine's uplink+downlink pair).
+pub type PortId = usize;
+/// Coflow identifier (dense index into the trace).
+pub type CoflowId = usize;
+/// Flow identifier (dense index, global across the trace).
+pub type FlowId = usize;
+
+/// 1 MB in bytes — trace flow sizes are specified in MB.
+pub const MB: f64 = 1.0e6;
+/// Default port line rate: 1 Gbps in bytes/sec (the paper's Azure NICs).
+pub const GBPS: f64 = 125.0e6;
+/// Epsilon for progress/size comparisons in the flow simulator.
+pub const EPS: f64 = 1e-9;

@@ -1,0 +1,216 @@
+//! `philae` — CLI for the coflow-scheduling reproduction.
+//!
+//! ```text
+//! philae sim       --scheduler philae --ports 150 --coflows 526
+//! philae compare   --ports 150 --coflows 526 [--baseline aalo --candidate philae]
+//! philae serve     --scheduler philae --coflows 60 [--artifacts artifacts]
+//! philae gen-trace --ports 150 --coflows 526 --out fb_like.txt
+//! ```
+//!
+//! (No clap on this offline image — a small hand-rolled parser below.)
+
+use philae::coordinator::{SchedulerConfig, SchedulerKind};
+use philae::metrics::SpeedupRow;
+use philae::service::{run_service, ServiceConfig};
+use philae::sim::Simulation;
+use philae::trace::{Trace, TraceSpec};
+use std::collections::HashMap;
+use std::time::Duration;
+
+const USAGE: &str = "\
+philae — sampling-based coflow scheduling (Philae, Jajoo/Hu/Lin 2021)
+
+USAGE:
+  philae <sim|compare|serve|gen-trace> [flags]
+
+COMMON FLAGS:
+  --trace <file>       load a coflow-benchmark trace instead of generating
+  --ports <n>          generated trace ports            [default: 150]
+  --coflows <n>        generated trace coflows          [default: 526]
+  --seed <n>           generator seed                   [default: 42]
+  --wide-only          keep only wide coflows (Table 2 row 2)
+  --replicate <k>      replicate k× across ports (900-port derivation)
+
+sim:      --scheduler <name>                            [default: philae]
+compare:  --baseline <name> --candidate <name>          [default: aalo vs philae]
+serve:    --scheduler <philae|aalo> --artifacts <dir> --time-scale <x> --delta-ms <n>
+gen-trace: --out <file>
+
+schedulers: philae aalo sebf scf fifo saath philae-lcb philae-ec1 philae-ec-multi";
+
+struct Flags {
+    map: HashMap<String, String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags, String> {
+        let mut map = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if !a.starts_with("--") {
+                return Err(format!("unexpected argument {a:?}"));
+            }
+            let key = a.trim_start_matches("--").to_string();
+            // boolean flags
+            if key == "wide-only" {
+                map.insert(key, "true".into());
+                i += 1;
+                continue;
+            }
+            let val = args
+                .get(i + 1)
+                .ok_or_else(|| format!("flag --{key} needs a value"))?;
+            map.insert(key, val.clone());
+            i += 2;
+        }
+        Ok(Flags { map })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    fn get_opt(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+}
+
+fn build_trace(flags: &Flags) -> anyhow::Result<Trace> {
+    let mut t = match flags.get_opt("trace") {
+        Some(path) => Trace::load(path)?,
+        None => {
+            let ports = flags.get("ports", 150usize).map_err(anyhow::Error::msg)?;
+            let coflows = flags.get("coflows", 526usize).map_err(anyhow::Error::msg)?;
+            let seed = flags.get("seed", 42u64).map_err(anyhow::Error::msg)?;
+            TraceSpec::fb_like(ports, coflows).seed(seed).generate()
+        }
+    };
+    if flags.has("wide-only") {
+        t = t.wide_only();
+    }
+    let replicate = flags.get("replicate", 1usize).map_err(anyhow::Error::msg)?;
+    if replicate > 1 {
+        t = t.replicate(replicate);
+    }
+    Ok(t)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    };
+    let flags = Flags::parse(&args[1..]).map_err(|e| {
+        eprintln!("{USAGE}");
+        anyhow::anyhow!(e)
+    })?;
+    let cfg = SchedulerConfig::default();
+
+    match cmd.as_str() {
+        "sim" => {
+            let t = build_trace(&flags)?;
+            let kind: SchedulerKind = flags
+                .get("scheduler", SchedulerKind::Philae)
+                .map_err(anyhow::Error::msg)?;
+            let res = Simulation::run(&t, kind, &cfg);
+            println!(
+                "{}: {} coflows on {} ports | avg CCT {:.3}s | makespan {:.1}s | rate calcs {} | updates {}",
+                res.scheduler,
+                t.coflows.len(),
+                t.num_ports,
+                res.avg_cct(),
+                res.makespan,
+                res.rate_calcs,
+                res.update_msgs,
+            );
+        }
+        "compare" => {
+            let t = build_trace(&flags)?;
+            let baseline: SchedulerKind = flags
+                .get("baseline", SchedulerKind::Aalo)
+                .map_err(anyhow::Error::msg)?;
+            let candidate: SchedulerKind = flags
+                .get("candidate", SchedulerKind::Philae)
+                .map_err(anyhow::Error::msg)?;
+            let base = Simulation::run(&t, baseline, &cfg);
+            let cand = Simulation::run(&t, candidate, &cfg);
+            let row = SpeedupRow::from_ccts(&base.ccts, &cand.ccts);
+            println!(
+                "{} vs {} on {} coflows / {} ports:",
+                cand.scheduler,
+                base.scheduler,
+                t.coflows.len(),
+                t.num_ports
+            );
+            println!("  {row}");
+            println!(
+                "  updates: {} vs {} | rate calcs: {} vs {}",
+                cand.update_msgs, base.update_msgs, cand.rate_calcs, base.rate_calcs
+            );
+        }
+        "serve" => {
+            let t = build_trace(&flags)?;
+            let kind: SchedulerKind = flags
+                .get("scheduler", SchedulerKind::Philae)
+                .map_err(anyhow::Error::msg)?;
+            let svc = ServiceConfig {
+                kind,
+                sched: cfg,
+                time_scale: flags.get("time-scale", 20.0f64).map_err(anyhow::Error::msg)?,
+                delta_wall: Duration::from_millis(
+                    flags.get("delta-ms", 8u64).map_err(anyhow::Error::msg)?,
+                ),
+                engine_dir: flags.get_opt("artifacts").map(Into::into),
+                port_rate: philae::GBPS,
+            };
+            let report = run_service(&t, &svc)?;
+            println!(
+                "{} (engine={}): avg CCT {:.3}s | missed intervals {:.1}% | idle-rate intervals {:.1}%",
+                report.scheduler,
+                report.used_engine,
+                report.avg_cct(),
+                100.0 * report.missed_fraction,
+                100.0 * report.idle_rate_fraction,
+            );
+            println!(
+                "  per-interval ms: calc {:.3} ({:.3}) | send {:.3} ({:.3}) | recv {:.3} ({:.3})",
+                report.rate_calc.mean() * 1e3,
+                report.rate_calc.stddev() * 1e3,
+                report.rate_send.mean() * 1e3,
+                report.rate_send.stddev() * 1e3,
+                report.update_recv.mean() * 1e3,
+                report.update_recv.stddev() * 1e3,
+            );
+        }
+        "gen-trace" => {
+            let t = build_trace(&flags)?;
+            let out = flags
+                .get_opt("out")
+                .ok_or_else(|| anyhow::anyhow!("gen-trace requires --out <file>"))?;
+            t.save(out)?;
+            println!(
+                "wrote {} coflows / {} ports to {}",
+                t.coflows.len(),
+                t.num_ports,
+                out
+            );
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! Job-completion-time model (§4.2).
+//!
+//! The paper maps CCT improvements to JCT improvements with the shuffle
+//! fraction distribution used in Aalo: 61% of jobs spend <25% of their time
+//! in shuffle, 13% spend 25–49%, 14% spend 50–74%, and the rest ≥75%.
+//! For a job whose baseline JCT decomposes into compute + shuffle with
+//! shuffle fraction `f`, a new CCT yields
+//! `JCT' = (1−f)·JCT + CCT'·(f·JCT/CCT)` — i.e. only the shuffle part
+//! scales with the CCT speedup.
+
+use crate::Time;
+use crate::util::Rng;
+
+/// The Aalo shuffle-fraction buckets: (probability, f_low, f_high).
+#[derive(Debug, Clone)]
+pub struct ShuffleFractionModel {
+    pub buckets: Vec<(f64, f64, f64)>,
+    pub seed: u64,
+}
+
+impl Default for ShuffleFractionModel {
+    fn default() -> Self {
+        ShuffleFractionModel {
+            buckets: vec![
+                (0.61, 0.05, 0.25),
+                (0.13, 0.25, 0.49),
+                (0.14, 0.50, 0.74),
+                (0.12, 0.75, 0.95),
+            ],
+            seed: 2021,
+        }
+    }
+}
+
+impl ShuffleFractionModel {
+    /// Sample one shuffle fraction.
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        let total: f64 = self.buckets.iter().map(|b| b.0).sum();
+        let mut x = rng.f64() * total;
+        for &(w, lo, hi) in &self.buckets {
+            if x < w {
+                return rng.uniform(lo, hi);
+            }
+            x -= w;
+        }
+        let last = self.buckets.last().unwrap();
+        last.2
+    }
+}
+
+/// Per-job JCT speedups given matched per-coflow CCTs under the baseline
+/// and the candidate scheduler. Job `i`'s shuffle == coflow `i` (the paper
+/// uses 526 jobs, one per FB-trace coflow).
+pub fn jct_speedups(
+    baseline_cct: &[Time],
+    candidate_cct: &[Time],
+    model: &ShuffleFractionModel,
+) -> Vec<f64> {
+    let mut rng = Rng::seed_from_u64(model.seed);
+    baseline_cct
+        .iter()
+        .zip(candidate_cct.iter())
+        .filter(|(&b, &c)| b > 0.0 && c > 0.0)
+        .map(|(&b, &c)| {
+            let frac = model.sample(&mut rng);
+            // baseline job time normalized to 1: shuffle = frac, compute = 1-frac
+            // candidate shuffle time scales by c/b.
+            let jct_base = 1.0;
+            let jct_cand = (1.0 - frac) + frac * (c / b);
+            jct_base / jct_cand
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{mean, percentile};
+
+    #[test]
+    fn jct_speedup_bounded_by_cct_speedup() {
+        let base = vec![10.0; 1000];
+        let cand = vec![2.0; 1000]; // 5x CCT speedup
+        let sp = jct_speedups(&base, &cand, &ShuffleFractionModel::default());
+        assert_eq!(sp.len(), 1000);
+        for &s in &sp {
+            assert!(s >= 1.0 - 1e-9, "jct speedup {s} < 1");
+            assert!(s <= 5.0 + 1e-9, "jct speedup {s} exceeds cct speedup");
+        }
+        // most jobs are compute-heavy, so median JCT gain is far below 5x
+        assert!(percentile(&sp, 50.0) < 2.0);
+        // but high-shuffle jobs approach it
+        assert!(percentile(&sp, 95.0) > 2.0);
+    }
+
+    #[test]
+    fn no_cct_change_no_jct_change() {
+        let base = vec![10.0; 100];
+        let sp = jct_speedups(&base, &base, &ShuffleFractionModel::default());
+        assert!(sp.iter().all(|&s| (s - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let base = vec![10.0, 20.0, 30.0];
+        let cand = vec![5.0, 10.0, 15.0];
+        let m = ShuffleFractionModel::default();
+        assert_eq!(jct_speedups(&base, &cand, &m), jct_speedups(&base, &cand, &m));
+    }
+
+    #[test]
+    fn slower_candidate_gives_sub_one_speedup() {
+        let base = vec![10.0; 200];
+        let cand = vec![20.0; 200];
+        let sp = jct_speedups(&base, &cand, &ShuffleFractionModel::default());
+        assert!(mean(&sp) < 1.0);
+    }
+}

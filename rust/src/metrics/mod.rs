@@ -1,0 +1,169 @@
+//! Metrics: percentile/CDF helpers, speedup tables, coordinator-cost
+//! accounting (Tables 3/4/6) and the shuffle-fraction JCT model (§4.2).
+
+mod counters;
+mod jct;
+
+pub use counters::{IntervalStats, MessageCostModel, ResourceUsage, RunningStat};
+pub use jct::{jct_speedups, ShuffleFractionModel};
+
+use crate::Time;
+
+/// Percentile of a sample (nearest-rank on a sorted copy); `p` in [0,100].
+pub fn percentile(values: &[f64], p: f64) -> f64 {
+    if values.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = values.to_vec();
+    v.sort_by(f64::total_cmp);
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Arithmetic mean.
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return f64::NAN;
+    }
+    values.iter().sum::<f64>() / values.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return f64::NAN;
+    }
+    let m = mean(values);
+    (values.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / values.len() as f64).sqrt()
+}
+
+/// Mean-normalized standard deviation (Table 5's robustness metric).
+pub fn mean_normalized_stddev(values: &[f64]) -> f64 {
+    let m = mean(values);
+    if m == 0.0 {
+        0.0
+    } else {
+        stddev(values) / m
+    }
+}
+
+/// Per-coflow speedups `baseline/candidate`, skipping degenerate zeros.
+pub fn speedups(baseline: &[Time], candidate: &[Time]) -> Vec<f64> {
+    baseline
+        .iter()
+        .zip(candidate.iter())
+        .filter(|(&b, &c)| b > 0.0 && c > 0.0)
+        .map(|(&b, &c)| b / c)
+        .collect()
+}
+
+/// Empirical CDF as `(value, fraction ≤ value)` pairs at `points` evenly
+/// spaced quantiles — what the paper's Fig. CDF-of-speedup plots show.
+pub fn cdf(values: &[f64], points: usize) -> Vec<(f64, f64)> {
+    if values.is_empty() {
+        return Vec::new();
+    }
+    let mut v: Vec<f64> = values.to_vec();
+    v.sort_by(f64::total_cmp);
+    (0..points)
+        .map(|i| {
+            let q = (i as f64 + 0.5) / points as f64;
+            let idx = ((q * v.len() as f64) as usize).min(v.len() - 1);
+            (v[idx], q)
+        })
+        .collect()
+}
+
+/// The summary row the paper reports per comparison: P50 / P90 / average
+/// speedup of per-coflow CCTs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpeedupRow {
+    pub p10: f64,
+    pub p50: f64,
+    pub p90: f64,
+    /// Ratio of average CCTs (paper's “Avg. CCT” column): avg(base)/avg(cand).
+    pub avg_cct_ratio: f64,
+    /// Average of per-coflow speedups (a different, noisier statistic).
+    pub mean_speedup: f64,
+    pub n: usize,
+}
+
+impl SpeedupRow {
+    /// Build from matched per-coflow CCT vectors.
+    pub fn from_ccts(baseline: &[Time], candidate: &[Time]) -> Self {
+        let sp = speedups(baseline, candidate);
+        let avg_b = mean(baseline);
+        let avg_c = mean(candidate);
+        SpeedupRow {
+            p10: percentile(&sp, 10.0),
+            p50: percentile(&sp, 50.0),
+            p90: percentile(&sp, 90.0),
+            avg_cct_ratio: if avg_c > 0.0 { avg_b / avg_c } else { f64::NAN },
+            mean_speedup: mean(&sp),
+            n: sp.len(),
+        }
+    }
+}
+
+impl std::fmt::Display for SpeedupRow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "P50 {:.2}x  P90 {:.2}x  avg-CCT {:.2}x  (n={})",
+            self.p50, self.p90, self.avg_cct_ratio, self.n
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let v = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&v, 50.0), 3.0);
+    }
+
+    #[test]
+    fn stddev_and_normalized() {
+        let v = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((stddev(&v) - 2.0).abs() < 1e-12);
+        assert!((mean_normalized_stddev(&v) - 2.0 / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_row() {
+        let base = [10.0, 10.0, 100.0];
+        let cand = [5.0, 10.0, 10.0];
+        let row = SpeedupRow::from_ccts(&base, &cand);
+        assert_eq!(row.n, 3);
+        assert_eq!(row.p50, 2.0);
+        assert!((row.avg_cct_ratio - 120.0 / 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedups_skip_zeros() {
+        assert_eq!(speedups(&[0.0, 10.0], &[1.0, 5.0]), vec![2.0]);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let v = [3.0, 1.0, 2.0, 5.0, 4.0];
+        let c = cdf(&v, 10);
+        assert_eq!(c.len(), 10);
+        for w in c.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+}

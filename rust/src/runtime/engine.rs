@@ -1,0 +1,147 @@
+//! The PJRT engine: compile `artifacts/*.hlo.txt` once, execute per batch.
+
+use super::features::{BatchFeatures, ShapeManifest};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Outputs of one scorer execution, trimmed to the live rows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScorerOutput {
+    /// Priority score (lower = sooner).
+    pub score: Vec<f32>,
+    /// Size estimate (mean × nflows).
+    pub est: Vec<f32>,
+    /// Bootstrap lower-confidence-bound estimate.
+    pub lcb: Vec<f32>,
+    /// Per-coflow contention.
+    pub contention: Vec<f32>,
+}
+
+/// Compiled AOT artifacts on a PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    scorer: xla::PjRtLoadedExecutable,
+    estimator: xla::PjRtLoadedExecutable,
+    contention: xla::PjRtLoadedExecutable,
+    pub manifest: ShapeManifest,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Load and compile all artifacts from `dir` (default `artifacts/`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = ShapeManifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(anyhow::Error::msg)?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(anyhow::Error::msg)
+            .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(anyhow::Error::msg)
+                .with_context(|| format!("compiling {name}"))
+        };
+        Ok(Engine {
+            scorer: compile("scorer")?,
+            estimator: compile("estimator")?,
+            contention: compile("contention")?,
+            client,
+            manifest,
+            dir,
+        })
+    }
+
+    /// PJRT platform (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact directory this engine was loaded from.
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn lit2(data: &[f32], d0: usize, d1: usize) -> Result<xla::Literal> {
+        xla::Literal::vec1(data)
+            .reshape(&[d0 as i64, d1 as i64])
+            .map_err(anyhow::Error::msg)
+    }
+
+    fn lit1(data: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    /// Run the full scorer graph on a packed batch.
+    pub fn score(&self, batch: &BatchFeatures, weight: f32) -> Result<ScorerOutput> {
+        let (c, m, b, p) = (batch.c, batch.m, batch.b, batch.p);
+        let sizes = Self::lit2(&batch.sizes, c, m)?;
+        let mask = Self::lit2(&batch.mask, c, m)?;
+        let nflows = Self::lit1(&batch.nflows);
+        let w = xla::Literal::vec1(&batch.w)
+            .reshape(&[c as i64, b as i64, m as i64])
+            .map_err(anyhow::Error::msg)?;
+        let done = Self::lit1(&batch.done);
+        let occ = Self::lit2(&batch.occ, c, p)?;
+        let weight = xla::Literal::scalar(weight);
+
+        let result = self
+            .scorer
+            .execute::<xla::Literal>(&[sizes, mask, nflows, w, done, occ, weight])
+            .map_err(anyhow::Error::msg)?[0][0]
+            .to_literal_sync()
+            .map_err(anyhow::Error::msg)?;
+        let mut parts = result.to_tuple().map_err(anyhow::Error::msg)?;
+        anyhow::ensure!(parts.len() == 4, "scorer returned {} outputs", parts.len());
+        let contention = parts.pop().unwrap().to_vec::<f32>().map_err(anyhow::Error::msg)?;
+        let lcb = parts.pop().unwrap().to_vec::<f32>().map_err(anyhow::Error::msg)?;
+        let est = parts.pop().unwrap().to_vec::<f32>().map_err(anyhow::Error::msg)?;
+        let score = parts.pop().unwrap().to_vec::<f32>().map_err(anyhow::Error::msg)?;
+        let live = batch.live;
+        Ok(ScorerOutput {
+            score: score[..live].to_vec(),
+            est: est[..live].to_vec(),
+            lcb: lcb[..live].to_vec(),
+            contention: contention[..live].to_vec(),
+        })
+    }
+
+    /// Run only the estimator artifact: returns (est, lcb), trimmed.
+    pub fn estimate(&self, batch: &BatchFeatures) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (c, m, b) = (batch.c, batch.m, batch.b);
+        let sizes = Self::lit2(&batch.sizes, c, m)?;
+        let mask = Self::lit2(&batch.mask, c, m)?;
+        let nflows = Self::lit1(&batch.nflows);
+        let w = xla::Literal::vec1(&batch.w)
+            .reshape(&[c as i64, b as i64, m as i64])
+            .map_err(anyhow::Error::msg)?;
+        let result = self
+            .estimator
+            .execute::<xla::Literal>(&[sizes, mask, nflows, w])
+            .map_err(anyhow::Error::msg)?[0][0]
+            .to_literal_sync()
+            .map_err(anyhow::Error::msg)?;
+        let (est, lcb) = result.to_tuple2().map_err(anyhow::Error::msg)?;
+        let est = est.to_vec::<f32>().map_err(anyhow::Error::msg)?;
+        let lcb = lcb.to_vec::<f32>().map_err(anyhow::Error::msg)?;
+        Ok((est[..batch.live].to_vec(), lcb[..batch.live].to_vec()))
+    }
+
+    /// Run only the contention artifact, trimmed to live rows.
+    pub fn contention(&self, batch: &BatchFeatures) -> Result<Vec<f32>> {
+        let occ = Self::lit2(&batch.occ, batch.c, batch.p)?;
+        let result = self
+            .contention
+            .execute::<xla::Literal>(&[occ])
+            .map_err(anyhow::Error::msg)?[0][0]
+            .to_literal_sync()
+            .map_err(anyhow::Error::msg)?;
+        let out = result.to_tuple1().map_err(anyhow::Error::msg)?;
+        let v = out.to_vec::<f32>().map_err(anyhow::Error::msg)?;
+        Ok(v[..batch.live].to_vec())
+    }
+}

@@ -1,0 +1,227 @@
+//! Feature marshalling: pack per-coflow learning state into the padded
+//! tensors the AOT artifacts expect, and the shape manifest emitted by
+//! `python -m compile.aot`.
+
+use anyhow::{bail, Context, Result};
+use crate::util::{JsonValue, Rng};
+use std::path::Path;
+
+/// `artifacts/manifest.json` — the fixed AOT shapes.
+#[derive(Debug, Clone)]
+pub struct ShapeManifest {
+    pub c: usize,
+    pub m: usize,
+    pub b: usize,
+    pub p: usize,
+    pub lcb_sigmas: f64,
+    pub format: String,
+}
+
+impl ShapeManifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = JsonValue::parse(text).map_err(anyhow::Error::msg)?;
+        let field = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(|x| x.as_usize())
+                .with_context(|| format!("manifest missing integer field {k:?}"))
+        };
+        let m = ShapeManifest {
+            c: field("C")?,
+            m: field("M")?,
+            b: field("B")?,
+            p: field("P")?,
+            lcb_sigmas: v
+                .get("lcb_sigmas")
+                .and_then(|x| x.as_f64())
+                .context("manifest missing lcb_sigmas")?,
+            format: v
+                .get("format")
+                .and_then(|x| x.as_str())
+                .context("manifest missing format")?
+                .to_string(),
+        };
+        if m.format != "hlo-text" {
+            bail!("unexpected artifact format {:?}", m.format);
+        }
+        Ok(m)
+    }
+}
+
+/// One scoring batch, padded to the manifest shapes.
+#[derive(Debug, Clone)]
+pub struct BatchFeatures {
+    pub c: usize,
+    pub m: usize,
+    pub b: usize,
+    pub p: usize,
+    /// Row-major [C, M].
+    pub sizes: Vec<f32>,
+    /// Row-major [C, M].
+    pub mask: Vec<f32>,
+    /// [C].
+    pub nflows: Vec<f32>,
+    /// Row-major [C, B, M] bootstrap resample weights.
+    pub w: Vec<f32>,
+    /// [C].
+    pub done: Vec<f32>,
+    /// Row-major [C, P] occupancy.
+    pub occ: Vec<f32>,
+    /// Number of real (non-padding) coflow rows.
+    pub live: usize,
+}
+
+impl BatchFeatures {
+    pub fn new(manifest: &ShapeManifest) -> Self {
+        BatchFeatures {
+            c: manifest.c,
+            m: manifest.m,
+            b: manifest.b,
+            p: manifest.p,
+            sizes: vec![0.0; manifest.c * manifest.m],
+            mask: vec![0.0; manifest.c * manifest.m],
+            nflows: vec![1.0; manifest.c],
+            w: vec![0.0; manifest.c * manifest.b * manifest.m],
+            done: vec![0.0; manifest.c],
+            occ: vec![0.0; manifest.c * manifest.p],
+            live: 0,
+        }
+    }
+
+    /// Fill row `row` for one coflow. `pilot_sizes` is truncated at `M`;
+    /// `ports` are the coflow's occupied port directions encoded as
+    /// `port` (uplink) and `P/2 + port` (downlink) indices.
+    pub fn set_row(
+        &mut self,
+        row: usize,
+        pilot_sizes: &[f64],
+        nflows: usize,
+        done_bytes: f64,
+        ports: &[usize],
+        boot_seed: u64,
+    ) {
+        assert!(row < self.c, "batch row {row} out of range");
+        let m_c = pilot_sizes.len().min(self.m);
+        for j in 0..self.m {
+            let idx = row * self.m + j;
+            if j < m_c {
+                self.sizes[idx] = pilot_sizes[j] as f32;
+                self.mask[idx] = 1.0;
+            } else {
+                self.sizes[idx] = 0.0;
+                self.mask[idx] = 0.0;
+            }
+        }
+        self.nflows[row] = nflows as f32;
+        self.done[row] = done_bytes as f32;
+        for x in &mut self.occ[row * self.p..(row + 1) * self.p] {
+            *x = 0.0;
+        }
+        for &pt in ports {
+            if pt < self.p {
+                self.occ[row * self.p + pt] = 1.0;
+            }
+        }
+        // Bootstrap weights: counts/m over the valid slots, deterministic
+        // from the seed (the same SmallRng stream errcorr::bootstrap uses).
+        let wrow = &mut self.w[row * self.b * self.m..(row + 1) * self.b * self.m];
+        for x in wrow.iter_mut() {
+            *x = 0.0;
+        }
+        if m_c > 0 {
+            let mut rng = Rng::seed_from_u64(boot_seed);
+            for bi in 0..self.b {
+                for _ in 0..m_c {
+                    let k = rng.below(m_c);
+                    wrow[bi * self.m + k] += 1.0 / m_c as f32;
+                }
+            }
+        }
+        self.live = self.live.max(row + 1);
+    }
+
+    /// Reset to an all-padding batch (reuse the allocation).
+    pub fn clear(&mut self) {
+        self.sizes.iter_mut().for_each(|x| *x = 0.0);
+        self.mask.iter_mut().for_each(|x| *x = 0.0);
+        self.nflows.iter_mut().for_each(|x| *x = 1.0);
+        self.w.iter_mut().for_each(|x| *x = 0.0);
+        self.done.iter_mut().for_each(|x| *x = 0.0);
+        self.occ.iter_mut().for_each(|x| *x = 0.0);
+        self.live = 0;
+    }
+
+    /// The occupancy matrix as rows (for the native contention fallback).
+    pub fn occ_rows(&self) -> Vec<Vec<f32>> {
+        (0..self.live)
+            .map(|r| self.occ[r * self.p..(r + 1) * self.p].to_vec())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> ShapeManifest {
+        ShapeManifest {
+            c: 8,
+            m: 4,
+            b: 10,
+            p: 16,
+            lcb_sigmas: 3.0,
+            format: "hlo-text".into(),
+        }
+    }
+
+    #[test]
+    fn set_row_packs_and_masks() {
+        let mut b = BatchFeatures::new(&manifest());
+        b.set_row(2, &[10.0, 20.0], 100, 5.0, &[1, 8 + 3], 42);
+        assert_eq!(b.sizes[2 * 4], 10.0);
+        assert_eq!(b.sizes[2 * 4 + 1], 20.0);
+        assert_eq!(b.mask[2 * 4..2 * 4 + 4], [1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(b.nflows[2], 100.0);
+        assert_eq!(b.done[2], 5.0);
+        assert_eq!(b.occ[2 * 16 + 1], 1.0);
+        assert_eq!(b.occ[2 * 16 + 11], 1.0);
+        assert_eq!(b.live, 3);
+        // W rows sum to 1 per resample
+        for bi in 0..10 {
+            let s: f32 = b.w[(2 * 10 + bi) * 4..(2 * 10 + bi) * 4 + 4].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn truncates_excess_pilots() {
+        let mut b = BatchFeatures::new(&manifest());
+        b.set_row(0, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 10, 0.0, &[], 1);
+        let mask: f32 = b.mask[0..4].iter().sum();
+        assert_eq!(mask, 4.0);
+    }
+
+    #[test]
+    fn clear_resets_live() {
+        let mut b = BatchFeatures::new(&manifest());
+        b.set_row(5, &[1.0], 1, 0.0, &[0], 9);
+        b.clear();
+        assert_eq!(b.live, 0);
+        assert!(b.w.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn deterministic_w_given_seed() {
+        let mut a = BatchFeatures::new(&manifest());
+        let mut b = BatchFeatures::new(&manifest());
+        a.set_row(0, &[1.0, 2.0, 3.0], 5, 0.0, &[], 77);
+        b.set_row(0, &[1.0, 2.0, 3.0], 5, 0.0, &[], 77);
+        assert_eq!(a.w, b.w);
+    }
+}

@@ -1,0 +1,87 @@
+//! PJRT runtime: load the AOT artifacts and run them from the rust hot
+//! path. Python never executes at scheduling time — `make artifacts` lowers
+//! the JAX/Pallas graphs to HLO text once; this module compiles them on the
+//! PJRT CPU client at startup and exposes typed entry points.
+//!
+//! The native fallback (`native_*` functions) implements the identical math
+//! in rust so the simulator and tests run without artifacts; parity between
+//! the two paths is asserted in `rust/tests/runtime_parity.rs`.
+
+mod engine;
+mod features;
+
+pub use engine::{Engine, ScorerOutput};
+pub use features::{BatchFeatures, ShapeManifest};
+
+use crate::Bytes;
+
+/// Native mirror of the L1 estimator kernel: masked mean × nflows.
+pub fn native_estimate(sizes: &[Bytes], nflows: f64) -> f64 {
+    if sizes.is_empty() {
+        return 0.0;
+    }
+    let mean = sizes.iter().sum::<f64>() / sizes.len() as f64;
+    mean * nflows
+}
+
+/// Native mirror of the L1 contention kernel for one occupancy matrix:
+/// `contention[c] = Σ_{c'≠c} |ports(c) ∩ ports(c')| / |ports(c)|`.
+pub fn native_contention(occ: &[Vec<f32>]) -> Vec<f32> {
+    let c = occ.len();
+    let mut out = vec![0.0f32; c];
+    for i in 0..c {
+        let width: f32 = occ[i].iter().sum();
+        if width <= 0.0 {
+            continue;
+        }
+        let mut total = 0.0f32;
+        for j in 0..c {
+            if i == j {
+                continue;
+            }
+            total += occ[i]
+                .iter()
+                .zip(occ[j].iter())
+                .map(|(a, b)| a * b)
+                .sum::<f32>();
+        }
+        out[i] = total / width.max(1.0);
+    }
+    out
+}
+
+/// Native mirror of the L2 score composition.
+pub fn native_score(est: f64, done: f64, contention: f64, weight: f64) -> f64 {
+    (est - done).max(0.0) * (1.0 + weight * contention)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_estimate_mean_times_n() {
+        assert_eq!(native_estimate(&[10.0, 20.0, 30.0], 100.0), 2000.0);
+        assert_eq!(native_estimate(&[], 100.0), 0.0);
+    }
+
+    #[test]
+    fn native_contention_pairwise() {
+        // coflow 0 on ports {0,1,2,3}, coflow 1 on {2,3,4,5}: overlap 2/4
+        let mut occ = vec![vec![0.0f32; 8]; 2];
+        for p in 0..4 {
+            occ[0][p] = 1.0;
+        }
+        for p in 2..6 {
+            occ[1][p] = 1.0;
+        }
+        let c = native_contention(&occ);
+        assert_eq!(c, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn native_score_clamps() {
+        assert_eq!(native_score(10.0, 100.0, 1.0, 0.5), 0.0);
+        assert_eq!(native_score(100.0, 0.0, 2.0, 0.5), 200.0);
+    }
+}

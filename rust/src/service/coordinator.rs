@@ -1,0 +1,795 @@
+//! The coordinator thread, the agent threads, and the trace replayer.
+
+use super::ops::{CoflowOp, OpsHandle};
+use crate::agents::{AgentMsg, AgentSim, CoordMsg};
+use crate::coflow::{CoflowPhase, CoflowState, FlowState};
+use crate::coordinator::{
+    philae::{CompletionOutcome, PhilaeCore},
+    rate, AaloScheduler, Scheduler, SchedulerConfig, SchedulerKind, World,
+};
+use crate::fabric::{Fabric, PortLoad};
+use crate::metrics::{IntervalStats, RunningStat};
+use crate::runtime::{BatchFeatures, Engine};
+use crate::trace::{Trace, TraceRecord};
+use crate::{CoflowId, FlowId, PortId, Time};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Everything the coordinator thread receives, merged onto one channel
+/// (std mpsc has no select).
+#[derive(Debug)]
+pub enum Input {
+    Op(CoflowOp),
+    Agent(AgentMsg),
+}
+
+/// Configuration of a live service run.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub kind: SchedulerKind,
+    pub sched: SchedulerConfig,
+    /// Simulated seconds per wall second (trace replay acceleration).
+    pub time_scale: f64,
+    /// Coordinator scheduling interval in wall time (the paper's δ).
+    pub delta_wall: Duration,
+    /// Load AOT artifacts from here and score through PJRT (Philae only).
+    pub engine_dir: Option<PathBuf>,
+    /// Port line rate in bytes per *simulated* second.
+    pub port_rate: f64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            kind: SchedulerKind::Philae,
+            sched: SchedulerConfig::default(),
+            time_scale: 20.0,
+            delta_wall: Duration::from_millis(8),
+            engine_dir: None,
+            port_rate: crate::GBPS,
+        }
+    }
+}
+
+/// Measured outcome of a service run (Tables 3/4 in wall time).
+#[derive(Debug, Clone)]
+pub struct ServiceReport {
+    pub scheduler: String,
+    /// Per-coflow CCT in *simulated* seconds.
+    pub ccts: Vec<Time>,
+    pub makespan: Time,
+    pub intervals: IntervalStats,
+    /// Measured per-interval phase times (seconds, wall).
+    pub rate_calc: RunningStat,
+    pub rate_send: RunningStat,
+    pub update_recv: RunningStat,
+    pub rate_msgs: u64,
+    pub update_msgs: u64,
+    pub rate_calcs: u64,
+    /// Fraction of intervals whose coordinator work exceeded δ.
+    pub missed_fraction: f64,
+    /// Fraction of intervals with no rate flush at all.
+    pub idle_rate_fraction: f64,
+    /// Whether scoring ran through the PJRT engine.
+    pub used_engine: bool,
+    pub wall_seconds: f64,
+}
+
+impl ServiceReport {
+    pub fn avg_cct(&self) -> f64 {
+        crate::metrics::mean(&self.ccts)
+    }
+}
+
+/// Run `trace` through the live coordinator + agents; returns when every
+/// coflow has completed.
+pub fn run_service(trace: &Trace, cfg: &ServiceConfig) -> Result<ServiceReport> {
+    let (input_tx, input_rx) = mpsc::channel::<Input>();
+    let handle = OpsHandle { tx: input_tx.clone() };
+
+    // Trace replayer: registers coflows at scaled arrival times.
+    let records: Vec<TraceRecord> = trace
+        .coflows
+        .iter()
+        .map(|c| {
+            let mut per_red: HashMap<PortId, f64> = HashMap::new();
+            for &f in &c.flows {
+                *per_red.entry(trace.flows[f].dst).or_insert(0.0) += trace.flows[f].size;
+            }
+            let mut reducers: Vec<(usize, f64)> = per_red.into_iter().collect();
+            reducers.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+            TraceRecord {
+                external_id: c.external_id,
+                arrival: c.arrival,
+                mappers: c.senders.clone(),
+                reducers,
+            }
+        })
+        .collect();
+    let time_scale = cfg.time_scale;
+    let replayer = thread::spawn(move || {
+        let start = Instant::now();
+        for rec in records {
+            let due = Duration::from_secs_f64(rec.arrival / time_scale);
+            let elapsed = start.elapsed();
+            if due > elapsed {
+                thread::sleep(due - elapsed);
+            }
+            let _ = handle.register(rec);
+        }
+        handle.seal();
+    });
+
+    let report = Coordinator::new(trace.num_ports, cfg, input_tx)?.run(input_rx);
+    let _ = replayer.join();
+    report
+}
+
+struct AgentHandle {
+    tx: mpsc::Sender<CoordMsg>,
+}
+
+struct Coordinator {
+    cfg: ServiceConfig,
+    world: World,
+    philae: Option<PhilaeCore>,
+    aalo: Option<AaloScheduler>,
+    engine: Option<Engine>,
+    batch: Option<BatchFeatures>,
+    agents: Vec<AgentHandle>,
+    input_tx: mpsc::Sender<Input>,
+    agent_threads: Vec<thread::JoinHandle<()>>,
+    port_refs: Vec<Vec<(PortId, usize)>>, // per coflow: (src port, active refs)
+    port_refs_down: Vec<Vec<(PortId, usize)>>,
+    last_rates: HashMap<FlowId, f64>,
+    /// Cached PJRT scores; refreshed only when the estimated set changes
+    /// (new estimate / coflow completion / arrival), not per event — one
+    /// scorer batch costs ~ms, reallocs happen per completion report.
+    cached_scores: HashMap<CoflowId, f64>,
+    scores_dirty: bool,
+    sealed: bool,
+    seq: u64,
+    start: Instant,
+    // measured accounting
+    stats: IntervalStats,
+    rate_calc: RunningStat,
+    rate_send: RunningStat,
+    update_recv: RunningStat,
+    iv_calc: f64,
+    iv_send: f64,
+    iv_recv: f64,
+    iv_updates: u64,
+    iv_rate_msgs: u64,
+    iv_rate_calcs: u64,
+    rate_msgs: u64,
+    update_msgs: u64,
+    rate_calcs: u64,
+}
+
+impl Coordinator {
+    fn new(num_ports: usize, cfg: &ServiceConfig, input_tx: mpsc::Sender<Input>) -> Result<Self> {
+        let engine = match (&cfg.engine_dir, cfg.kind) {
+            (Some(dir), SchedulerKind::Philae) => Some(Engine::load(dir)?),
+            _ => None,
+        };
+        let batch = engine.as_ref().map(|e| BatchFeatures::new(&e.manifest));
+        let world = World {
+            now: 0.0,
+            flows: Vec::new(),
+            coflows: Vec::new(),
+            fabric: Fabric::homogeneous(num_ports, cfg.port_rate),
+            load: PortLoad::new(num_ports),
+            active: Vec::new(),
+        };
+        let philae = matches!(cfg.kind, SchedulerKind::Philae)
+            .then(|| PhilaeCore::new(cfg.sched.clone()));
+        let aalo =
+            matches!(cfg.kind, SchedulerKind::Aalo).then(|| AaloScheduler::new(cfg.sched.clone()));
+        anyhow::ensure!(
+            philae.is_some() || aalo.is_some(),
+            "service mode supports philae and aalo (got {:?})",
+            cfg.kind
+        );
+        Ok(Coordinator {
+            cfg: cfg.clone(),
+            world,
+            philae,
+            aalo,
+            engine,
+            batch,
+            agents: Vec::new(),
+            input_tx,
+            agent_threads: Vec::new(),
+            port_refs: Vec::new(),
+            port_refs_down: Vec::new(),
+            last_rates: HashMap::new(),
+            cached_scores: HashMap::new(),
+            scores_dirty: true,
+            sealed: false,
+            seq: 0,
+            start: Instant::now(),
+            stats: IntervalStats::default(),
+            rate_calc: RunningStat::default(),
+            rate_send: RunningStat::default(),
+            update_recv: RunningStat::default(),
+            iv_calc: 0.0,
+            iv_send: 0.0,
+            iv_recv: 0.0,
+            iv_updates: 0,
+            iv_rate_msgs: 0,
+            iv_rate_calcs: 0,
+            rate_msgs: 0,
+            update_msgs: 0,
+            rate_calcs: 0,
+        })
+    }
+
+    fn spawn_agents(&mut self) {
+        let n = self.world.fabric.num_ports;
+        let aalo_updates = self.aalo.is_some();
+        for port in 0..n {
+            let (tx, rx) = mpsc::channel::<CoordMsg>();
+            let up = self.input_tx.clone();
+            let scale = self.cfg.time_scale;
+            let delta = self.cfg.delta_wall;
+            let th = thread::spawn(move || {
+                let mut sim = AgentSim::new(port);
+                let start = Instant::now();
+                let mut last = Instant::now();
+                let mut next_tick = Instant::now() + delta;
+                loop {
+                    let now = Instant::now();
+                    let mut wait = Duration::from_millis(200);
+                    if let Some(s) = sim.next_completion() {
+                        wait = wait.min(Duration::from_secs_f64((s / scale).max(0.0)));
+                    }
+                    if aalo_updates {
+                        wait = wait.min(next_tick.saturating_duration_since(now));
+                    }
+                    let msg = rx.recv_timeout(wait);
+                    // advance local flows to 'now' first, reporting completions
+                    let dt = last.elapsed().as_secs_f64() * scale;
+                    last = Instant::now();
+                    let sim_now = start.elapsed().as_secs_f64() * scale;
+                    for m in sim.advance(dt, sim_now) {
+                        let _ = up.send(Input::Agent(m));
+                    }
+                    match msg {
+                        Ok(CoordMsg::AddFlow { flow, coflow, size, pilot }) => {
+                            sim.add_flow(flow, coflow, size, pilot);
+                        }
+                        Ok(CoordMsg::NewSchedule { rates }) => {
+                            sim.apply_schedule(&rates);
+                        }
+                        Ok(CoordMsg::Shutdown) => break,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                    if aalo_updates && Instant::now() >= next_tick {
+                        if sim.active_flows() > 0 {
+                            for m in sim.byte_updates() {
+                                let _ = up.send(Input::Agent(m));
+                            }
+                        }
+                        next_tick += delta;
+                    }
+                }
+            });
+            self.agents.push(AgentHandle { tx });
+            self.agent_threads.push(th);
+        }
+    }
+
+    fn run(mut self, input_rx: mpsc::Receiver<Input>) -> Result<ServiceReport> {
+        self.spawn_agents();
+        let mut next_tick = Instant::now() + self.cfg.delta_wall;
+
+        loop {
+            if self.sealed && self.world.active.is_empty() && !self.world.coflows.is_empty() {
+                break;
+            }
+            let wait = next_tick.saturating_duration_since(Instant::now());
+            match input_rx.recv_timeout(wait) {
+                Ok(Input::Op(op)) => match op {
+                    CoflowOp::Register { record, reply } => {
+                        let cid = self.register(&record);
+                        let _ = reply.send(cid);
+                        if self.philae.is_some() {
+                            self.reallocate(); // event-triggered
+                        }
+                    }
+                    CoflowOp::Deregister { coflow } => {
+                        self.deregister(coflow);
+                        self.reallocate();
+                    }
+                    CoflowOp::Update { coflow, record } => {
+                        self.deregister(coflow);
+                        let _ = self.register(&record);
+                        self.reallocate();
+                    }
+                    CoflowOp::Seal => {
+                        self.sealed = true;
+                    }
+                },
+                Ok(Input::Agent(msg)) => {
+                    let t0 = Instant::now();
+                    let mut need_realloc = self.handle_agent_msg(msg);
+                    // drain whatever else is queued, batched
+                    while let Ok(next) = input_rx.try_recv() {
+                        match next {
+                            Input::Agent(m) => need_realloc |= self.handle_agent_msg(m),
+                            Input::Op(op) => {
+                                // requeue ops through the normal path
+                                match op {
+                                    CoflowOp::Register { record, reply } => {
+                                        let cid = self.register(&record);
+                                        let _ = reply.send(cid);
+                                        need_realloc = true;
+                                    }
+                                    CoflowOp::Deregister { coflow } => {
+                                        self.deregister(coflow);
+                                        need_realloc = true;
+                                    }
+                                    CoflowOp::Update { coflow, record } => {
+                                        self.deregister(coflow);
+                                        let _ = self.register(&record);
+                                        need_realloc = true;
+                                    }
+                                    CoflowOp::Seal => self.sealed = true,
+                                }
+                            }
+                        }
+                    }
+                    self.iv_recv += t0.elapsed().as_secs_f64();
+                    if need_realloc && self.philae.is_some() {
+                        self.reallocate(); // event-triggered
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            if Instant::now() >= next_tick {
+                self.on_interval();
+                next_tick += self.cfg.delta_wall;
+            }
+        }
+
+        for a in &self.agents {
+            let _ = a.tx.send(CoordMsg::Shutdown);
+        }
+        for th in self.agent_threads.drain(..) {
+            let _ = th.join();
+        }
+        let ccts: Vec<Time> = self
+            .world
+            .coflows
+            .iter()
+            .map(|c| c.cct().unwrap_or(f64::NAN))
+            .collect();
+        Ok(ServiceReport {
+            scheduler: if self.philae.is_some() {
+                "philae".into()
+            } else {
+                "aalo".into()
+            },
+            ccts,
+            makespan: self.start.elapsed().as_secs_f64() * self.cfg.time_scale,
+            missed_fraction: self.stats.missed_fraction(),
+            idle_rate_fraction: self.stats.idle_rate_fraction(),
+            intervals: self.stats,
+            rate_calc: self.rate_calc,
+            rate_send: self.rate_send,
+            update_recv: self.update_recv,
+            rate_msgs: self.rate_msgs,
+            update_msgs: self.update_msgs,
+            rate_calcs: self.rate_calcs,
+            used_engine: self.engine.is_some(),
+            wall_seconds: self.start.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// δ interval boundary: Aalo's periodic pipeline; interval accounting
+    /// for everyone.
+    fn on_interval(&mut self) {
+        if self.aalo.is_some() {
+            if !self.world.active.is_empty() {
+                let mut aalo = self.aalo.take().unwrap();
+                aalo.on_tick(&mut self.world);
+                self.aalo = Some(aalo);
+                self.reallocate(); // Aalo flushes rates every interval
+            }
+        }
+        let busy =
+            !self.world.active.is_empty() || self.iv_rate_calcs > 0 || self.iv_updates > 0;
+        if busy {
+            self.rate_calc.push(self.iv_calc);
+            self.rate_send.push(self.iv_send);
+            self.update_recv.push(self.iv_recv);
+            self.stats.push_interval(
+                self.cfg.delta_wall.as_secs_f64(),
+                self.iv_calc,
+                self.iv_send,
+                self.iv_recv,
+                self.iv_updates,
+                self.iv_rate_msgs,
+                self.iv_rate_calcs,
+            );
+        }
+        self.iv_calc = 0.0;
+        self.iv_send = 0.0;
+        self.iv_recv = 0.0;
+        self.iv_updates = 0;
+        self.iv_rate_msgs = 0;
+        self.iv_rate_calcs = 0;
+    }
+
+    fn sim_now(&self) -> Time {
+        self.start.elapsed().as_secs_f64() * self.cfg.time_scale
+    }
+
+    /// Register a coflow: extend the world, notify src agents, run the
+    /// scheduler's arrival hook.
+    fn register(&mut self, rec: &TraceRecord) -> CoflowId {
+        let cid = self.world.coflows.len();
+        let now = self.sim_now();
+        let mut flow_ids = Vec::new();
+        let mut total = 0.0;
+        for &(dst, reducer_bytes) in &rec.reducers {
+            let per_flow = reducer_bytes / rec.mappers.len() as f64;
+            for &src in &rec.mappers {
+                let fid = self.world.flows.len();
+                self.world
+                    .flows
+                    .push(FlowState::new(fid, cid, src, dst, per_flow));
+                flow_ids.push(fid);
+                total += per_flow;
+            }
+        }
+        let mut c = CoflowState::new(cid, now, flow_ids.clone(), total, self.seq);
+        self.seq += 1;
+        c.phase = CoflowPhase::Running;
+        c.senders = rec.mappers.clone();
+        c.senders.sort_unstable();
+        c.senders.dedup();
+        c.receivers = rec.reducers.iter().map(|&(p, _)| p).collect();
+        c.receivers.sort_unstable();
+        c.receivers.dedup();
+        for (i, &fid) in c.active_list.iter().enumerate() {
+            self.world.flows[fid].active_pos = i;
+        }
+        self.world.coflows.push(c);
+        self.world.active.push(cid);
+
+        // port refs + load
+        let mut up: Vec<(PortId, usize)> = Vec::new();
+        let mut down: Vec<(PortId, usize)> = Vec::new();
+        for &f in &flow_ids {
+            let fl = self.world.flows[f];
+            self.world.load.up_bytes[fl.src] += fl.size;
+            self.world.load.down_bytes[fl.dst] += fl.size;
+            match up.iter_mut().find(|(p, _)| *p == fl.src) {
+                Some(e) => e.1 += 1,
+                None => up.push((fl.src, 1)),
+            }
+            match down.iter_mut().find(|(p, _)| *p == fl.dst) {
+                Some(e) => e.1 += 1,
+                None => down.push((fl.dst, 1)),
+            }
+        }
+        for &(p, _) in &up {
+            self.world.load.up_coflows[p] += 1;
+        }
+        for &(p, _) in &down {
+            self.world.load.down_coflows[p] += 1;
+        }
+        self.port_refs.push(up);
+        self.port_refs_down.push(down);
+
+        self.scores_dirty = true;
+        // scheduler arrival hooks (Philae marks pilots here)
+        if let Some(mut ph) = self.philae.take() {
+            ph.handle_arrival(cid, &mut self.world);
+            self.philae = Some(ph);
+        }
+        if let Some(mut aalo) = self.aalo.take() {
+            aalo.on_arrival(cid, &mut self.world);
+            self.aalo = Some(aalo);
+        }
+
+        // ship flows to their src agents
+        for &f in &flow_ids {
+            let fl = self.world.flows[f];
+            let _ = self.agents[fl.src].tx.send(CoordMsg::AddFlow {
+                flow: f,
+                coflow: cid,
+                size: fl.size,
+                pilot: fl.pilot,
+            });
+        }
+        cid
+    }
+
+    /// Deregister: drop unfinished flows and release port state.
+    fn deregister(&mut self, cid: CoflowId) {
+        if cid >= self.world.coflows.len() || self.world.coflows[cid].done() {
+            return;
+        }
+        let now = self.sim_now();
+        let flow_ids = self.world.coflows[cid].flows.clone();
+        for f in flow_ids {
+            if !self.world.flows[f].done() {
+                self.world.flows[f].finished_at = Some(now);
+                self.last_rates.remove(&f);
+                let fl = self.world.flows[f];
+                self.world.load.up_bytes[fl.src] =
+                    (self.world.load.up_bytes[fl.src] - fl.size).max(0.0);
+                self.world.load.down_bytes[fl.dst] =
+                    (self.world.load.down_bytes[fl.dst] - fl.size).max(0.0);
+            }
+        }
+        for &(p, n) in &self.port_refs[cid] {
+            if n > 0 {
+                self.world.load.up_coflows[p] = self.world.load.up_coflows[p].saturating_sub(1);
+            }
+        }
+        for &(p, n) in &self.port_refs_down[cid] {
+            if n > 0 {
+                self.world.load.down_coflows[p] =
+                    self.world.load.down_coflows[p].saturating_sub(1);
+            }
+        }
+        self.port_refs[cid].clear();
+        self.port_refs_down[cid].clear();
+        let c = &mut self.world.coflows[cid];
+        c.active_flows = 0;
+        c.active_list.clear();
+        c.finished_at = Some(now);
+        c.phase = CoflowPhase::Done;
+        self.world.active.retain(|&x| x != cid);
+    }
+
+    /// Returns true if the message warrants an (event-triggered) realloc.
+    fn handle_agent_msg(&mut self, msg: AgentMsg) -> bool {
+        match msg {
+            AgentMsg::FlowComplete { flow, coflow, size, .. } => {
+                self.iv_updates += 1;
+                self.update_msgs += 1;
+                if flow >= self.world.flows.len() || self.world.flows[flow].done() {
+                    return false;
+                }
+                let now = self.sim_now();
+                {
+                    let fl = &mut self.world.flows[flow];
+                    fl.sent = fl.size;
+                    fl.rate = 0.0;
+                    fl.finished_at = Some(now);
+                }
+                self.last_rates.remove(&flow);
+                let fl = self.world.flows[flow];
+                self.world.load.up_bytes[fl.src] =
+                    (self.world.load.up_bytes[fl.src] - size).max(0.0);
+                self.world.load.down_bytes[fl.dst] =
+                    (self.world.load.down_bytes[fl.dst] - size).max(0.0);
+                if let Some(e) = self.port_refs[coflow].iter_mut().find(|(p, _)| *p == fl.src) {
+                    e.1 = e.1.saturating_sub(1);
+                    if e.1 == 0 {
+                        self.world.load.up_coflows[fl.src] =
+                            self.world.load.up_coflows[fl.src].saturating_sub(1);
+                    }
+                }
+                if let Some(e) = self.port_refs_down[coflow]
+                    .iter_mut()
+                    .find(|(p, _)| *p == fl.dst)
+                {
+                    e.1 = e.1.saturating_sub(1);
+                    if e.1 == 0 {
+                        self.world.load.down_coflows[fl.dst] =
+                            self.world.load.down_coflows[fl.dst].saturating_sub(1);
+                    }
+                }
+                // learning hooks (Philae's sampling state machine)
+                if let Some(mut ph) = self.philae.take() {
+                    if let CompletionOutcome::SampleComplete(samples) =
+                        ph.record_completion(flow, &mut self.world)
+                    {
+                        let n = self.world.coflows[coflow].flows.len();
+                        let est = self.engine_estimate(&samples, n, coflow);
+                        self.world.coflows[coflow].est_size = Some(est);
+                        self.world.coflows[coflow].phase = CoflowPhase::Running;
+                        self.scores_dirty = true;
+                    }
+                    self.philae = Some(ph);
+                }
+                let pos = self.world.flows[flow].active_pos;
+                {
+                    let c = &mut self.world.coflows[coflow];
+                    if pos < c.active_list.len() && c.active_list[pos] == flow {
+                        c.active_list.swap_remove(pos);
+                        if pos < c.active_list.len() {
+                            let moved = c.active_list[pos];
+                            self.world.flows[moved].active_pos = pos;
+                        }
+                    } else if let Some(i) = c.active_list.iter().position(|&x| x == flow) {
+                        c.active_list.swap_remove(i);
+                        if i < c.active_list.len() {
+                            let moved = c.active_list[i];
+                            self.world.flows[moved].active_pos = i;
+                        }
+                    }
+                }
+                let c = &mut self.world.coflows[coflow];
+                c.active_flows = c.active_flows.saturating_sub(1);
+                if size > c.max_finished_flow {
+                    c.max_finished_flow = size;
+                }
+                if c.active_flows == 0 && c.finished_at.is_none() {
+                    c.finished_at = Some(now);
+                    c.phase = CoflowPhase::Done;
+                    self.world.active.retain(|&x| x != coflow);
+                    self.scores_dirty = true;
+                }
+                true
+            }
+            AgentMsg::ByteUpdate { coflow, bytes_sent, .. } => {
+                self.iv_updates += 1;
+                self.update_msgs += 1;
+                if coflow < self.world.coflows.len() {
+                    // Each agent reports its local share; the coordinator's
+                    // view is the running max of partial aggregates (an
+                    // under-estimate between intervals, exactly like Aalo's
+                    // stale view).
+                    let c = &mut self.world.coflows[coflow];
+                    c.bytes_sent = c.bytes_sent.max(bytes_sent);
+                }
+                false
+            }
+        }
+    }
+
+    /// Size estimation, through PJRT when the engine is loaded.
+    fn engine_estimate(&mut self, samples: &[f64], nflows: usize, cid: CoflowId) -> f64 {
+        if let (Some(engine), Some(batch)) = (self.engine.as_ref(), self.batch.as_mut()) {
+            batch.clear();
+            batch.set_row(
+                0,
+                samples,
+                nflows,
+                0.0,
+                &[],
+                self.cfg.sched.bootstrap_seed ^ cid as u64,
+            );
+            if let Ok((est, _lcb)) = engine.estimate(batch) {
+                if let Some(&e) = est.first() {
+                    return e as f64;
+                }
+            }
+        }
+        crate::runtime::native_estimate(samples, nflows as f64)
+    }
+
+    /// Compute the priority order (through the PJRT scorer when loaded),
+    /// allocate rates, and push per-agent schedules.
+    fn reallocate(&mut self) {
+        let t0 = Instant::now();
+        let plan: crate::coordinator::Plan = if let Some(ph) = self.philae.as_ref() {
+            if self.engine.is_some() {
+                if self.scores_dirty {
+                    self.cached_scores = self.engine_scores();
+                    self.scores_dirty = false;
+                }
+                self.philae
+                    .as_ref()
+                    .unwrap()
+                    .order_with_scores(&self.world, &self.cached_scores)
+            } else {
+                ph.order(&self.world)
+            }
+        } else if let Some(mut aalo) = self.aalo.take() {
+            let o = aalo.order(&self.world);
+            self.aalo = Some(aalo);
+            o
+        } else {
+            crate::coordinator::Plan::default()
+        };
+        let alloc =
+            rate::allocate(&self.world.fabric, &self.world.flows, &self.world.coflows, &plan);
+        let calc = t0.elapsed().as_secs_f64();
+        self.iv_calc += calc;
+        self.iv_rate_calcs += 1;
+        self.rate_calcs += 1;
+
+        // diff against last flushed rates, group by src agent
+        let t1 = Instant::now();
+        let new_rates: HashMap<FlowId, f64> = alloc.grants.iter().copied().collect();
+        let mut dirty_agents: Vec<PortId> = Vec::new();
+        for (&f, &r) in &new_rates {
+            let prev = self.last_rates.get(&f).copied().unwrap_or(0.0);
+            if (prev - r).abs() > crate::EPS {
+                let a = self.world.flows[f].src;
+                if !dirty_agents.contains(&a) {
+                    dirty_agents.push(a);
+                }
+            }
+        }
+        for (&f, _) in self.last_rates.iter() {
+            if !new_rates.contains_key(&f) && !self.world.flows[f].done() {
+                let a = self.world.flows[f].src;
+                if !dirty_agents.contains(&a) {
+                    dirty_agents.push(a);
+                }
+            }
+        }
+        // a schedule message carries *all* rates for that agent so "comply
+        // with the last schedule" stays consistent
+        for &agent in &dirty_agents {
+            let rates: Vec<(FlowId, f64)> = new_rates
+                .iter()
+                .filter(|(&f, _)| self.world.flows[f].src == agent)
+                .map(|(&f, &r)| (f, r))
+                .collect();
+            let _ = self.agents[agent].tx.send(CoordMsg::NewSchedule { rates });
+            self.iv_rate_msgs += 1;
+            self.rate_msgs += 1;
+        }
+        self.last_rates = new_rates;
+        self.iv_send += t1.elapsed().as_secs_f64();
+    }
+
+    /// Batch the scheduled coflows through the PJRT scorer.
+    fn engine_scores(&mut self) -> HashMap<CoflowId, f64> {
+        let mut out = HashMap::new();
+        let (engine, batch, philae) = match (
+            self.engine.as_ref(),
+            self.batch.as_mut(),
+            self.philae.as_ref(),
+        ) {
+            (Some(e), Some(b), Some(p)) => (e, b, p),
+            _ => return out,
+        };
+        let half_p = batch.p / 2;
+        let cands: Vec<CoflowId> = self
+            .world
+            .active
+            .iter()
+            .copied()
+            .filter(|&cid| {
+                self.world.coflows[cid].phase == CoflowPhase::Running
+                    && self.world.coflows[cid].est_size.is_some()
+            })
+            .collect();
+        for chunk in cands.chunks(batch.c) {
+            batch.clear();
+            for (row, &cid) in chunk.iter().enumerate() {
+                let mut ports: Vec<usize> = Vec::new();
+                for &(p, n) in &self.port_refs[cid] {
+                    if n > 0 {
+                        ports.push(p.min(half_p - 1));
+                    }
+                }
+                for &(p, n) in &self.port_refs_down[cid] {
+                    if n > 0 {
+                        ports.push(half_p + p.min(half_p - 1));
+                    }
+                }
+                batch.set_row(
+                    row,
+                    philae.pilot_sizes(cid),
+                    self.world.coflows[cid].flows.len(),
+                    philae.done_bytes(cid),
+                    &ports,
+                    self.cfg.sched.bootstrap_seed ^ cid as u64,
+                );
+            }
+            if let Ok(res) = engine.score(batch, self.cfg.sched.contention_weight as f32) {
+                for (i, &cid) in chunk.iter().enumerate() {
+                    out.insert(cid, res.score[i] as f64);
+                }
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,18 @@
+//! The live coordinator service: an OS thread for the global coordinator
+//! and one local-agent thread per port, exchanging the §3 message
+//! vocabulary over channels. Unlike the discrete-event simulator (which
+//! *models* message costs), this mode **measures** the coordinator's
+//! per-interval phases — update-receive, rate-calculation, new-rate-send —
+//! in wall-clock time, which is how Tables 3 and 4 were produced on the
+//! paper's testbed.
+//!
+//! The service also exercises the full three-layer stack: with
+//! [`ServiceConfig::engine_dir`] set, Philae's scoring runs through the AOT
+//! PJRT artifacts (L2 scorer composed of the L1 Pallas kernels) instead of
+//! the native fallback.
+
+mod coordinator;
+mod ops;
+
+pub use coordinator::{run_service, Input, ServiceConfig, ServiceReport};
+pub use ops::{CoflowOp, OpsHandle};

@@ -1,0 +1,61 @@
+//! Coflow operations API (§3): the coordinator runs independently from any
+//! compute framework and exposes `register` / `deregister` / `update`.
+//! Frameworks drive it through an [`OpsHandle`]; the trace replayer in
+//! `coordinator.rs` is just one such client.
+
+use crate::trace::TraceRecord;
+use crate::CoflowId;
+use std::sync::mpsc;
+
+/// One coflow operation.
+#[derive(Debug)]
+pub enum CoflowOp {
+    /// Register a new coflow; replies with the dense id assigned.
+    Register {
+        record: TraceRecord,
+        reply: mpsc::SyncSender<CoflowId>,
+    },
+    /// Remove a coflow (job exit / kill): its unfinished flows are dropped.
+    Deregister { coflow: CoflowId },
+    /// Structure change (task migration, restart): replace the unfinished
+    /// part of the coflow with the new record's flows.
+    Update {
+        coflow: CoflowId,
+        record: TraceRecord,
+    },
+    /// Finish the run: no more operations will arrive.
+    Seal,
+}
+
+/// Client handle to the coordinator's ops endpoint.
+#[derive(Clone)]
+pub struct OpsHandle {
+    pub(crate) tx: mpsc::Sender<super::coordinator::Input>,
+}
+
+impl OpsHandle {
+    /// Register a coflow and await its id.
+    pub fn register(&self, record: TraceRecord) -> Option<CoflowId> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(super::coordinator::Input::Op(CoflowOp::Register { record, reply }))
+            .ok()?;
+        rx.recv().ok()
+    }
+
+    pub fn deregister(&self, coflow: CoflowId) {
+        let _ = self
+            .tx
+            .send(super::coordinator::Input::Op(CoflowOp::Deregister { coflow }));
+    }
+
+    pub fn update(&self, coflow: CoflowId, record: TraceRecord) {
+        let _ = self
+            .tx
+            .send(super::coordinator::Input::Op(CoflowOp::Update { coflow, record }));
+    }
+
+    pub fn seal(&self) {
+        let _ = self.tx.send(super::coordinator::Input::Op(CoflowOp::Seal));
+    }
+}

@@ -1,0 +1,17 @@
+//! Flow-level discrete-event simulator over the non-blocking fabric.
+//!
+//! The engine owns the [`World`] (flow/coflow state, port loads) and drives
+//! a [`Scheduler`] with the paper's event vocabulary: coflow arrivals, flow
+//! completion reports (optionally jittered/delayed — the network-error
+//! model of Table 5), periodic δ ticks for PQ-based policies, and
+//! reallocation requests. Between events every running flow progresses at
+//! its last allocated rate — exactly the "local agents comply with the last
+//! schedule until a new one arrives" semantics of §3.
+//!
+//! Coordinator costs are accounted per δ-interval (rate-calculation wall
+//! time is *measured*, message costs use [`MessageCostModel`]) to
+//! regenerate Tables 3/4/6.
+
+mod engine;
+
+pub use engine::{world_from_trace, SimConfig, SimResult, Simulation};

@@ -1,0 +1,180 @@
+//! Coflow-benchmark trace file format (the format the FB trace ships in).
+//!
+//! ```text
+//! <num_ports> <num_coflows>
+//! <id> <arrival_ms> <num_mappers> <m1> ... <num_reducers> <r1:mb> <r2:mb> ...
+//! ```
+//!
+//! Ports are 1-based in the file (as in the published trace) and 0-based in
+//! memory. Reducer entries are `port:size_in_MB`.
+
+use super::{Trace, TraceRecord};
+use crate::MB;
+use anyhow::{bail, Context, Result};
+
+/// Parse a coflow-benchmark trace file body.
+pub fn parse_trace(text: &str) -> Result<Trace> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines.next().context("empty trace file")?;
+    let mut it = header.split_whitespace();
+    let num_ports: usize = it
+        .next()
+        .context("missing port count")?
+        .parse()
+        .context("bad port count")?;
+    let num_coflows: usize = it
+        .next()
+        .context("missing coflow count")?
+        .parse()
+        .context("bad coflow count")?;
+
+    let mut records = Vec::with_capacity(num_coflows);
+    for (lineno, line) in lines.enumerate() {
+        let rec = parse_record(line)
+            .with_context(|| format!("trace line {} malformed: {line:?}", lineno + 2))?;
+        for &m in &rec.mappers {
+            if m >= num_ports {
+                bail!("mapper port {} out of range (num_ports={num_ports})", m + 1);
+            }
+        }
+        for &(r, _) in &rec.reducers {
+            if r >= num_ports {
+                bail!("reducer port {} out of range (num_ports={num_ports})", r + 1);
+            }
+        }
+        records.push(rec);
+    }
+    if records.len() != num_coflows {
+        bail!("header says {num_coflows} coflows, file has {}", records.len());
+    }
+    Ok(Trace::from_records(num_ports, records))
+}
+
+fn parse_record(line: &str) -> Result<TraceRecord> {
+    let mut it = line.split_whitespace();
+    let external_id: u64 = it.next().context("missing id")?.parse()?;
+    let arrival_ms: f64 = it.next().context("missing arrival")?.parse()?;
+    let nm: usize = it.next().context("missing mapper count")?.parse()?;
+    let mut mappers = Vec::with_capacity(nm);
+    for _ in 0..nm {
+        let p: usize = it.next().context("missing mapper port")?.parse()?;
+        if p == 0 {
+            bail!("ports are 1-based in trace files");
+        }
+        mappers.push(p - 1);
+    }
+    let nr: usize = it.next().context("missing reducer count")?.parse()?;
+    let mut reducers = Vec::with_capacity(nr);
+    for _ in 0..nr {
+        let tok = it.next().context("missing reducer entry")?;
+        let (port, mb) = tok
+            .split_once(':')
+            .with_context(|| format!("reducer entry {tok:?} not port:mb"))?;
+        let port: usize = port.parse()?;
+        if port == 0 {
+            bail!("ports are 1-based in trace files");
+        }
+        let mb: f64 = mb.parse()?;
+        reducers.push((port - 1, mb * MB));
+    }
+    if mappers.is_empty() || reducers.is_empty() {
+        bail!("coflow {external_id} has no mappers or no reducers");
+    }
+    Ok(TraceRecord {
+        external_id,
+        arrival: arrival_ms / 1000.0,
+        mappers,
+        reducers,
+    })
+}
+
+/// Render a trace back to the benchmark format.
+pub fn render_trace(trace: &Trace) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{} {}\n", trace.num_ports, trace.coflows.len()));
+    for c in &trace.coflows {
+        // re-aggregate per-reducer bytes
+        let mut reducers: Vec<(usize, f64)> = c.receivers.iter().map(|&p| (p, 0.0)).collect();
+        for &fid in &c.flows {
+            let f = &trace.flows[fid];
+            if let Some(r) = reducers.iter_mut().find(|(p, _)| *p == f.dst) {
+                r.1 += f.size;
+            }
+        }
+        out.push_str(&format!(
+            "{} {} {}",
+            c.external_id,
+            (c.arrival * 1000.0).round() as u64,
+            c.senders.len()
+        ));
+        for &m in &c.senders {
+            out.push_str(&format!(" {}", m + 1));
+        }
+        out.push_str(&format!(" {}", reducers.len()));
+        for (p, bytes) in reducers {
+            out.push_str(&format!(" {}:{}", p + 1, bytes / MB));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "4 2\n\
+        1 0 2 1 2 2 3:10 4:10\n\
+        7 1500 1 1 1 3:5\n";
+
+    #[test]
+    fn parse_sample() {
+        let t = parse_trace(SAMPLE).unwrap();
+        assert_eq!(t.num_ports, 4);
+        assert_eq!(t.coflows.len(), 2);
+        assert_eq!(t.coflows[0].senders, vec![0, 1]);
+        assert_eq!(t.coflows[0].receivers, vec![2, 3]);
+        assert_eq!(t.coflows[1].arrival, 1.5);
+        assert_eq!(t.coflows[1].external_id, 7);
+        // 2 mappers × 10 MB reducer → 5 MB flows
+        assert!((t.flows[0].size - 5.0 * MB).abs() < 1e-6);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = parse_trace(SAMPLE).unwrap();
+        let rendered = render_trace(&t);
+        let t2 = parse_trace(&rendered).unwrap();
+        assert_eq!(t.coflows.len(), t2.coflows.len());
+        for (a, b) in t.coflows.iter().zip(t2.coflows.iter()) {
+            assert_eq!(a.senders, b.senders);
+            assert_eq!(a.receivers, b.receivers);
+            assert!((a.arrival - b.arrival).abs() < 1e-3);
+        }
+        assert!((t.total_bytes() - t2.total_bytes()).abs() < 1.0);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(parse_trace("").is_err());
+        assert!(parse_trace("x y\n").is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_port() {
+        let bad = "2 1\n1 0 1 3 1 1:5\n";
+        assert!(parse_trace(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_port() {
+        let bad = "2 1\n1 0 1 0 1 1:5\n";
+        assert!(parse_trace(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_count_mismatch() {
+        let bad = "4 3\n1 0 1 1 1 2:5\n";
+        assert!(parse_trace(bad).is_err());
+    }
+}

@@ -1,0 +1,282 @@
+//! FB-like synthetic trace generator.
+//!
+//! The published FB trace (526 coflows, 150 ports, ~1 hour) has three
+//! properties that drive every result in the paper:
+//!
+//! 1. **Count is dominated by small coflows, bytes by large ones** — the
+//!    average CCT improvement is therefore dominated by how fast the
+//!    scheduler learns *large* coflows' sizes (paper §2.2, §4.1).
+//! 2. **Widths are heavy-tailed**: most coflows touch a handful of ports,
+//!    a few span (nearly) the whole cluster.
+//! 3. **Intra-coflow flow sizes are skewed** (max/min spans orders of
+//!    magnitude for some coflows) — the sampling robustness question.
+//!
+//! [`TraceSpec`] generates traces with a four-class mixture (the classic
+//! Varys/Aalo taxonomy: short-narrow, long-narrow, short-wide, long-wide)
+//! and per-class lognormal flow sizes whose σ sets the intra-coflow skew.
+//! Every knob is public so evaluation sweeps (skew, load, width) can be
+//! expressed directly.
+
+use super::{Trace, TraceRecord};
+use crate::{Time, MB};
+use crate::util::Rng;
+
+/// One class of the coflow mixture.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoflowClass {
+    /// Probability of drawing this class.
+    pub weight: f64,
+    /// Mapper count range (inclusive).
+    pub mappers: (usize, usize),
+    /// Reducer count range (inclusive).
+    pub reducers: (usize, usize),
+    /// Median per-flow size in MB (lognormal μ = ln(median)).
+    pub flow_mb_median: f64,
+    /// Lognormal σ of per-flow sizes — sets the intra-coflow skew.
+    pub flow_mb_sigma: f64,
+}
+
+/// Generator parameters; defaults approximate the FB trace marginals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSpec {
+    pub num_ports: usize,
+    pub num_coflows: usize,
+    /// Mean inter-arrival gap in seconds (Poisson arrivals).
+    pub mean_interarrival: Time,
+    /// Fraction of coflows arriving inside a burst — production traces are
+    /// strongly clustered (jobs launch in waves), which is what creates
+    /// contention among small coflows.
+    pub burstiness: f64,
+    /// Mean intra-burst gap in seconds.
+    pub burst_gap: Time,
+    /// The class mixture.
+    pub classes: Vec<CoflowClass>,
+    /// RNG seed.
+    pub rng_seed: u64,
+}
+
+impl TraceSpec {
+    /// FB-like defaults: the four-class mixture of the Varys/Aalo taxonomy.
+    /// With 150 ports and 526 coflows this yields ≈60% narrow coflows by
+    /// count while long-wide coflows carry the vast majority of bytes.
+    pub fn fb_like(num_ports: usize, num_coflows: usize) -> Self {
+        TraceSpec {
+            num_ports,
+            num_coflows,
+            // 526 coflows over ~1 hour; roughly half arrive in bursts, so
+            // the base gap is doubled to keep the span.
+            mean_interarrival: 2.0 * 3600.0 / num_coflows.max(1) as f64,
+            burstiness: 0.5,
+            burst_gap: 0.25,
+            classes: vec![
+                // short & narrow: the bulk of coflows by count
+                CoflowClass {
+                    weight: 0.52,
+                    mappers: (1, 4),
+                    reducers: (1, 4),
+                    flow_mb_median: 2.0,
+                    flow_mb_sigma: 0.8,
+                },
+                // long & narrow
+                CoflowClass {
+                    weight: 0.16,
+                    mappers: (1, 4),
+                    reducers: (1, 4),
+                    flow_mb_median: 60.0,
+                    flow_mb_sigma: 1.0,
+                },
+                // short & wide
+                CoflowClass {
+                    weight: 0.15,
+                    mappers: (5, 40),
+                    reducers: (5, 40),
+                    flow_mb_median: 1.0,
+                    flow_mb_sigma: 0.8,
+                },
+                // long & wide: few coflows, most of the bytes. Port spans
+                // reach the full cluster through the mapper range cap; the
+                // flow-count tail is kept near the published trace's scale
+                // so full-trace simulations stay tractable.
+                CoflowClass {
+                    weight: 0.17,
+                    mappers: (10, 60),
+                    reducers: (10, 60),
+                    flow_mb_median: 25.0,
+                    flow_mb_sigma: 1.2,
+                },
+            ],
+            rng_seed: 42,
+        }
+    }
+
+    /// A small trace for tests and the quickstart example.
+    pub fn tiny(num_ports: usize, num_coflows: usize) -> Self {
+        let mut spec = Self::fb_like(num_ports, num_coflows);
+        spec.mean_interarrival = 0.5;
+        for c in &mut spec.classes {
+            c.mappers.1 = c.mappers.1.min(num_ports);
+            c.reducers.1 = c.reducers.1.min(num_ports);
+            c.flow_mb_median = (c.flow_mb_median / 4.0).max(0.25);
+        }
+        spec
+    }
+
+    /// Uniform-skew variant: every class uses lognormal σ `sigma`, so
+    /// `max/min` within a coflow grows with σ — the §2.2 skew sweep.
+    pub fn with_skew_sigma(mut self, sigma: f64) -> Self {
+        for c in &mut self.classes {
+            c.flow_mb_sigma = sigma;
+        }
+        self
+    }
+
+    /// Scale offered load by shrinking/stretching inter-arrival gaps.
+    pub fn with_load_factor(mut self, load: f64) -> Self {
+        assert!(load > 0.0, "load factor must be positive");
+        self.mean_interarrival /= load;
+        self
+    }
+
+    /// Set the RNG seed (builder style).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.rng_seed = seed;
+        self
+    }
+
+    /// Generate the trace.
+    pub fn generate(&self) -> Trace {
+        assert!(self.num_ports >= 1, "need at least one port");
+        assert!(!self.classes.is_empty(), "need at least one coflow class");
+        let mut rng = Rng::seed_from_u64(self.rng_seed);
+        let total_w: f64 = self.classes.iter().map(|c| c.weight).sum();
+
+        let mut t = 0.0;
+        let mut records = Vec::with_capacity(self.num_coflows);
+        for ext in 0..self.num_coflows {
+            if ext > 0 {
+                t += if rng.chance(self.burstiness) {
+                    rng.exp(self.burst_gap.max(1e-9))
+                } else {
+                    rng.exp(self.mean_interarrival.max(1e-9))
+                };
+            }
+            let class = self.pick_class(&mut rng, total_w);
+            let nm = rng.range_inclusive(class.mappers.0.min(self.num_ports), class.mappers.1.min(self.num_ports)).max(1);
+            let nr = rng.range_inclusive(class.reducers.0.min(self.num_ports), class.reducers.1.min(self.num_ports)).max(1);
+            let mappers = rng.sample_distinct(self.num_ports, nm);
+            let reducer_ports = rng.sample_distinct(self.num_ports, nr);
+            // Draw a size per (reducer) aggregated over mappers so the
+            // per-flow size (reducer_total / nm) follows the class lognormal.
+            let reducers = reducer_ports
+                .into_iter()
+                .map(|p| {
+                    let per_flow_mb: f64 = rng
+                        .lognormal(class.flow_mb_median.ln(), class.flow_mb_sigma)
+                        .clamp(0.01, 10_000.0);
+                    (p, per_flow_mb * nm as f64 * MB)
+                })
+                .collect();
+            records.push(TraceRecord {
+                external_id: ext as u64 + 1,
+                arrival: t,
+                mappers,
+                reducers,
+            });
+        }
+        Trace::from_records(self.num_ports, records)
+    }
+
+    fn pick_class(&self, rng: &mut Rng, total_w: f64) -> &CoflowClass {
+        let mut x = rng.f64() * total_w;
+        for c in &self.classes {
+            if x < c.weight {
+                return c;
+            }
+            x -= c.weight;
+        }
+        self.classes.last().unwrap()
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = TraceSpec::fb_like(50, 40).seed(9).generate();
+        let b = TraceSpec::fb_like(50, 40).seed(9).generate();
+        assert_eq!(a.coflows.len(), b.coflows.len());
+        assert_eq!(a.flows.len(), b.flows.len());
+        for (x, y) in a.flows.iter().zip(b.flows.iter()) {
+            assert_eq!(x, y);
+        }
+        let c = TraceSpec::fb_like(50, 40).seed(10).generate();
+        assert!(a.flows.len() != c.flows.len() || a.flows.iter().zip(c.flows.iter()).any(|(x, y)| x != y));
+    }
+
+    #[test]
+    fn respects_counts_and_port_range() {
+        let t = TraceSpec::fb_like(150, 100).seed(1).generate();
+        assert_eq!(t.num_ports, 150);
+        assert_eq!(t.coflows.len(), 100);
+        for f in &t.flows {
+            assert!(f.src < 150 && f.dst < 150);
+            assert!(f.size > 0.0);
+        }
+        // arrivals are sorted and span a realistic window
+        for w in t.coflows.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+    }
+
+    #[test]
+    fn bytes_dominated_by_wide_coflows() {
+        let t = TraceSpec::fb_like(150, 526).seed(42).generate();
+        let total = t.total_bytes();
+        let wide_bytes: f64 = t
+            .coflows
+            .iter()
+            .filter(|c| c.width() >= 30)
+            .flat_map(|c| c.flows.iter().map(|&f| t.flows[f].size))
+            .sum();
+        // the long-wide class must dominate total bytes (FB property)
+        assert!(
+            wide_bytes / total > 0.5,
+            "wide coflows carry {:.0}% of bytes",
+            100.0 * wide_bytes / total
+        );
+        // ...while most coflows are narrow by count
+        let narrow_count = t.coflows.iter().filter(|c| c.width() <= 10).count();
+        assert!(narrow_count as f64 / t.coflows.len() as f64 > 0.5);
+    }
+
+    #[test]
+    fn skew_sigma_increases_intra_coflow_skew() {
+        let lo = TraceSpec::fb_like(60, 80).with_skew_sigma(0.1).seed(3).generate();
+        let hi = TraceSpec::fb_like(60, 80).with_skew_sigma(2.0).seed(3).generate();
+        let avg_skew = |t: &Trace| {
+            let oracles = t.oracles();
+            let mut skews: Vec<f64> = t
+                .coflows
+                .iter()
+                .zip(&oracles)
+                .filter(|(c, _)| c.num_flows() > 1)
+                .map(|(_, o)| o.skew())
+                .filter(|s| s.is_finite())
+                .collect();
+            skews.sort_by(f64::total_cmp);
+            skews[skews.len() / 2]
+        };
+        assert!(avg_skew(&hi) > avg_skew(&lo) * 2.0);
+    }
+
+    #[test]
+    fn load_factor_compresses_arrivals() {
+        let base = TraceSpec::fb_like(50, 60).seed(5).generate();
+        let hot = TraceSpec::fb_like(50, 60).with_load_factor(4.0).seed(5).generate();
+        assert!(hot.makespan_lower_bound() < base.makespan_lower_bound());
+    }
+
+}

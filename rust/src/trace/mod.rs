@@ -1,0 +1,250 @@
+//! Trace toolkit: the coflow-benchmark trace format, an FB-like synthetic
+//! generator, port-replication (the paper's 900-port derivation), and the
+//! wide-coflow filter.
+//!
+//! ## Substitution note (DESIGN.md §3)
+//!
+//! The paper replays a production Facebook trace (526 coflows, 150 ports,
+//! one hour of a 3000-machine cluster) in the standard coflow-benchmark
+//! format. That trace is an external artifact; [`TraceSpec::fb_like`]
+//! generates a synthetic trace with the published marginals (port count,
+//! coflow count, arrival process, the narrow/wide × short/long mix in which
+//! most coflows are small but large coflows dominate bytes, heavy-tailed
+//! flow sizes with intra-coflow skew). [`Trace::load`] reads the real file
+//! format, so the genuine trace drops in unchanged if present.
+
+mod format;
+mod generator;
+
+pub use format::{parse_trace, render_trace};
+pub use generator::{CoflowClass, TraceSpec};
+
+use crate::coflow::{CoflowOracle, CoflowSpec, FlowSpec};
+use crate::{Time, MB};
+use anyhow::Result;
+use std::path::Path;
+
+/// A fully expanded workload: ports, coflows, and the global flow table.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub num_ports: usize,
+    pub coflows: Vec<CoflowSpec>,
+    pub flows: Vec<FlowSpec>,
+}
+
+impl Trace {
+    /// Assemble a trace from raw (arrival, mappers, reducer:bytes) records,
+    /// expanding every mapper×reducer pair into a flow whose size is the
+    /// reducer total divided by the mapper count — exactly how the FB
+    /// benchmark defines flow sizes.
+    pub fn from_records(num_ports: usize, records: Vec<TraceRecord>) -> Self {
+        let mut coflows = Vec::with_capacity(records.len());
+        let mut flows = Vec::new();
+        for (cid, rec) in records.into_iter().enumerate() {
+            let mut flow_ids = Vec::with_capacity(rec.mappers.len() * rec.reducers.len());
+            for &(dst, reducer_bytes) in &rec.reducers {
+                let per_flow = reducer_bytes / rec.mappers.len() as f64;
+                for &src in &rec.mappers {
+                    let id = flows.len();
+                    flows.push(FlowSpec { id, coflow: cid, src, dst, size: per_flow });
+                    flow_ids.push(id);
+                }
+            }
+            let mut senders = rec.mappers.clone();
+            senders.sort_unstable();
+            senders.dedup();
+            let mut receivers: Vec<_> = rec.reducers.iter().map(|&(p, _)| p).collect();
+            receivers.sort_unstable();
+            receivers.dedup();
+            coflows.push(CoflowSpec {
+                id: cid,
+                external_id: rec.external_id,
+                arrival: rec.arrival,
+                flows: flow_ids,
+                senders,
+                receivers,
+            });
+        }
+        Trace { num_ports, coflows, flows }
+    }
+
+    /// Load a coflow-benchmark format trace file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        parse_trace(&text)
+    }
+
+    /// Save in coflow-benchmark format (lossy: flow sizes re-aggregate to
+    /// per-reducer MB).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, render_trace(self))?;
+        Ok(())
+    }
+
+    /// The paper's Table 2 “Wide-coflow-only” filter: keep coflows that are
+    /// present on more than one sender or receiver port.
+    pub fn wide_only(&self) -> Trace {
+        let records: Vec<TraceRecord> = self
+            .coflows
+            .iter()
+            .filter(|c| c.is_wide())
+            .map(|c| self.record_of(c))
+            .collect();
+        Trace::from_records(self.num_ports, records)
+    }
+
+    /// Derive a `k×`-port trace exactly as §4.3: replicate every coflow `k`
+    /// times, same arrival times, sender/receiver ports shifted by
+    /// `i × num_ports` for copy `i`.
+    pub fn replicate(&self, k: usize) -> Trace {
+        let mut records = Vec::with_capacity(self.coflows.len() * k);
+        for c in &self.coflows {
+            for i in 0..k {
+                let off = i * self.num_ports;
+                let mut rec = self.record_of(c);
+                rec.external_id = rec.external_id * k as u64 + i as u64;
+                for m in &mut rec.mappers {
+                    *m += off;
+                }
+                for r in &mut rec.reducers {
+                    r.0 += off;
+                }
+                records.push(rec);
+            }
+        }
+        // Keep arrival-sorted order so dense ids stay arrival-monotone.
+        records.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        Trace::from_records(self.num_ports * k, records)
+    }
+
+    /// Re-derive the raw record of a coflow (inverse of `from_records`).
+    fn record_of(&self, c: &CoflowSpec) -> TraceRecord {
+        let mappers = c.senders.clone();
+        let mut reducers: Vec<(usize, f64)> = c.receivers.iter().map(|&p| (p, 0.0)).collect();
+        for &fid in &c.flows {
+            let f = &self.flows[fid];
+            if let Some(r) = reducers.iter_mut().find(|(p, _)| *p == f.dst) {
+                r.1 += f.size;
+            }
+        }
+        TraceRecord {
+            external_id: c.external_id,
+            arrival: c.arrival,
+            mappers,
+            reducers,
+        }
+    }
+
+    /// Oracle aggregates for every coflow (for clairvoyant baselines and
+    /// analysis).
+    pub fn oracles(&self) -> Vec<CoflowOracle> {
+        self.coflows
+            .iter()
+            .map(|c| CoflowOracle::compute(c, &self.flows, self.num_ports))
+            .collect()
+    }
+
+    /// Total bytes across the whole trace.
+    pub fn total_bytes(&self) -> f64 {
+        self.flows.iter().map(|f| f.size).sum()
+    }
+
+    /// Span of arrivals in seconds.
+    pub fn makespan_lower_bound(&self) -> Time {
+        self.coflows
+            .iter()
+            .map(|c| c.arrival)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// One line of a coflow-benchmark trace: a coflow with its mapper ports and
+/// per-reducer (port, total bytes) pairs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    pub external_id: u64,
+    /// Arrival in seconds.
+    pub arrival: Time,
+    pub mappers: Vec<usize>,
+    /// (reducer port, total bytes received by that reducer).
+    pub reducers: Vec<(usize, f64)>,
+}
+
+impl TraceRecord {
+    /// Convenience for tests: a coflow with uniform per-reducer size in MB.
+    pub fn uniform(external_id: u64, arrival: Time, mappers: Vec<usize>, reducer_ports: Vec<usize>, reducer_mb: f64) -> Self {
+        TraceRecord {
+            external_id,
+            arrival,
+            mappers,
+            reducers: reducer_ports.into_iter().map(|p| (p, reducer_mb * MB)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_coflow_trace() -> Trace {
+        Trace::from_records(
+            4,
+            vec![
+                TraceRecord::uniform(1, 0.0, vec![0, 1], vec![2, 3], 10.0),
+                TraceRecord::uniform(2, 1.0, vec![0], vec![2], 5.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn expansion_counts_and_sizes() {
+        let t = two_coflow_trace();
+        assert_eq!(t.coflows.len(), 2);
+        // coflow 0: 2 mappers × 2 reducers = 4 flows of 5 MB each
+        assert_eq!(t.coflows[0].num_flows(), 4);
+        assert!((t.flows[0].size - 5.0 * MB).abs() < 1e-6);
+        // coflow 1: 1×1
+        assert_eq!(t.coflows[1].num_flows(), 1);
+        assert!((t.total_bytes() - 25.0 * MB).abs() < 1e-3);
+    }
+
+    #[test]
+    fn wide_only_drops_narrow() {
+        let t = two_coflow_trace();
+        let w = t.wide_only();
+        assert_eq!(w.coflows.len(), 1);
+        assert_eq!(w.coflows[0].external_id, 1);
+    }
+
+    #[test]
+    fn replicate_shifts_ports_and_preserves_arrivals() {
+        let t = two_coflow_trace();
+        let r = t.replicate(3);
+        assert_eq!(r.num_ports, 12);
+        assert_eq!(r.coflows.len(), 6);
+        assert!((r.total_bytes() - 3.0 * t.total_bytes()).abs() < 1e-3);
+        // every copy keeps its arrival time
+        let arrivals: Vec<_> = r.coflows.iter().map(|c| c.arrival).collect();
+        assert_eq!(arrivals.iter().filter(|&&a| a == 0.0).count(), 3);
+        assert_eq!(arrivals.iter().filter(|&&a| a == 1.0).count(), 3);
+        // port shifts: some coflow uses port 0+4=4 or 0+8=8 as mapper
+        assert!(r.coflows.iter().any(|c| c.senders.contains(&4)));
+        assert!(r.coflows.iter().any(|c| c.senders.contains(&8)));
+        // no copy crosses its 4-port slice
+        for c in &r.coflows {
+            let slice = c.senders[0] / 4;
+            for &p in c.senders.iter().chain(c.receivers.iter()) {
+                assert_eq!(p / 4, slice);
+            }
+        }
+    }
+
+    #[test]
+    fn record_roundtrip_through_from_records() {
+        let t = two_coflow_trace();
+        let rec = t.record_of(&t.coflows[0]);
+        assert_eq!(rec.mappers, vec![0, 1]);
+        assert_eq!(rec.reducers.len(), 2);
+        assert!((rec.reducers[0].1 - 10.0 * MB).abs() < 1e-3);
+    }
+}

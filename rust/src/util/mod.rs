@@ -1,0 +1,13 @@
+//! Offline-image substrates: deterministic RNG + distributions, a minimal
+//! JSON reader for the artifact manifest, and a tiny property-test driver.
+//!
+//! The build image carries no crates.io mirror beyond `xla` and `anyhow`,
+//! so the usual `rand`/`serde`/`proptest` stack is reimplemented here with
+//! exactly the surface this project needs.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use json::JsonValue;
+pub use rng::Rng;

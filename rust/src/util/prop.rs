@@ -1,0 +1,73 @@
+//! A tiny property-test driver (no proptest on this image).
+//!
+//! [`for_all`] runs a property over `n` seeded cases; on failure it reports
+//! the failing seed so the case can be replayed deterministically:
+//!
+//! ```
+//! use philae::util::{prop, Rng};
+//! prop::for_all(64, |rng| {
+//!     let x = rng.below(100);
+//!     assert!(x < 100);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Default case count for in-crate property tests.
+pub const CASES: u64 = 128;
+
+/// Run `property` over `cases` deterministic seeds. Panics (propagating the
+/// property's panic, annotated with the seed) on the first failure.
+pub fn for_all<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: u64, property: F) {
+    for case in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::seed_from_u64(0xA11C_E000 + case);
+            property(&mut rng);
+        });
+        if let Err(e) = result {
+            eprintln!("property failed at case {case} (seed {})", 0xA11C_E000u64 + case);
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Like [`for_all`] but the property returns `Result`, for invariants that
+/// want early-exit error plumbing instead of asserts.
+pub fn for_all_ok<E: std::fmt::Debug>(
+    cases: u64,
+    property: impl Fn(&mut Rng) -> Result<(), E>,
+) {
+    for case in 0..cases {
+        let mut rng = Rng::seed_from_u64(0xA11C_E000 + case);
+        if let Err(e) = property(&mut rng) {
+            panic!("property failed at case {case}: {e:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let counter = std::sync::atomic::AtomicU64::new(0);
+        for_all(10, |_| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn propagates_failure() {
+        for_all(10, |rng| {
+            assert!(rng.below(10) < 5, "eventually fails");
+        });
+    }
+
+    #[test]
+    fn ok_variant() {
+        for_all_ok::<String>(5, |_| Ok(()));
+    }
+}

@@ -1,0 +1,194 @@
+//! Deterministic PRNG + the distributions the trace generator and the
+//! dynamics models need.
+//!
+//! Core generator: **SplitMix64** (Steele et al., *Fast Splittable
+//! Pseudorandom Number Generators*) — tiny state, excellent equidistribution
+//! for simulation workloads, stable across platforms (pure u64 arithmetic),
+//! which keeps every experiment bit-reproducible from its seed.
+
+/// Seeded deterministic RNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        // Avoid the all-zeros orbit and decorrelate small seeds.
+        Rng {
+            state: seed ^ 0x9E37_79B9_7F4A_7C15,
+        }
+    }
+
+    /// Next raw 64 random bits (SplitMix64 step).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)`; `n` must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // multiply-shift bounded sampling (Lemire); bias is < 2^-64·n
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive.
+    #[inline]
+    pub fn range_inclusive(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// `true` with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential with mean `mean` (inverse-CDF).
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        let u = 1.0 - self.f64(); // (0, 1]
+        -mean * u.ln()
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.f64()).max(f64::MIN_POSITIVE); // (0,1]
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Lognormal with ln-median `mu` and ln-σ `sigma`.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Choose `n` distinct values from `0..pool` (partial Fisher–Yates),
+    /// returned sorted.
+    pub fn sample_distinct(&mut self, pool: usize, n: usize) -> Vec<usize> {
+        let n = n.min(pool);
+        let mut items: Vec<usize> = (0..pool).collect();
+        for i in 0..n {
+            let j = i + self.below(pool - i);
+            items.swap(i, j);
+        }
+        let mut chosen = items[..n].to_vec();
+        chosen.sort_unstable();
+        chosen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = Rng::seed_from_u64(7);
+        let mut b = Rng::seed_from_u64(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::seed_from_u64(8);
+        assert_ne!(Rng::seed_from_u64(7).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::seed_from_u64(1);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_uniformish() {
+        let mut r = Rng::seed_from_u64(2);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[r.below(10)] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "bucket count {c}");
+        }
+    }
+
+    #[test]
+    fn exp_mean_close() {
+        let mut r = Rng::seed_from_u64(3);
+        let n = 200_000;
+        let s: f64 = (0..n).map(|_| r.exp(5.0)).sum();
+        let mean = s / n as f64;
+        assert!((mean - 5.0).abs() < 0.1, "exp mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from_u64(4);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "normal mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "normal var {var}");
+    }
+
+    #[test]
+    fn lognormal_median() {
+        let mut r = Rng::seed_from_u64(5);
+        let n = 100_001;
+        let mut xs: Vec<f64> = (0..n).map(|_| r.lognormal(2.0_f64.ln(), 1.0)).collect();
+        xs.sort_by(f64::total_cmp);
+        let median = xs[n / 2];
+        assert!((median - 2.0).abs() < 0.1, "lognormal median {median}");
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut r = Rng::seed_from_u64(6);
+        for _ in 0..100 {
+            let s = r.sample_distinct(20, 7);
+            assert_eq!(s.len(), 7);
+            let mut d = s.clone();
+            d.dedup();
+            assert_eq!(d.len(), 7, "duplicates in {s:?}");
+            assert!(s.iter().all(|&x| x < 20));
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+        }
+        // n > pool clamps
+        assert_eq!(r.sample_distinct(3, 10).len(), 3);
+    }
+
+    #[test]
+    fn range_inclusive_bounds() {
+        let mut r = Rng::seed_from_u64(9);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..10_000 {
+            let x = r.range_inclusive(3, 5);
+            assert!((3..=5).contains(&x));
+            seen_lo |= x == 3;
+            seen_hi |= x == 5;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+}

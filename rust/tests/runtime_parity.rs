@@ -1,0 +1,123 @@
+//! PJRT ↔ native parity: the AOT artifacts (L2 scorer graph composed of the
+//! L1 Pallas kernels) must agree with the rust-native mirror functions the
+//! simulator uses. Requires `make artifacts`; tests skip politely if the
+//! artifacts are missing (CI without python).
+
+use philae::runtime::{
+    native_contention, native_estimate, native_score, BatchFeatures, Engine,
+};
+use philae::util::Rng;
+
+fn engine() -> Option<Engine> {
+    match Engine::load("artifacts") {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping runtime parity test: {err:#}");
+            None
+        }
+    }
+}
+
+fn fill_random(batch: &mut BatchFeatures, seed: u64) -> Vec<(Vec<f64>, usize, f64, Vec<usize>)> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut rows = Vec::new();
+    let live = batch.c.min(40);
+    for row in 0..live {
+        let m = rng.range_inclusive(1, batch.m.min(10));
+        let sizes: Vec<f64> = (0..m).map(|_| rng.lognormal(15.0, 1.5)).collect();
+        let nflows = rng.range_inclusive(m, 5000);
+        let done = rng.uniform(0.0, 1e8);
+        let width = rng.range_inclusive(1, 40);
+        let half = batch.p / 2;
+        let mut ports: Vec<usize> = (0..width).map(|_| rng.below(half)).collect();
+        ports.extend((0..width).map(|_| half + rng.below(half)));
+        ports.sort_unstable();
+        ports.dedup();
+        batch.set_row(row, &sizes, nflows, done, &ports, seed ^ row as u64);
+        rows.push((sizes, nflows, done, ports));
+    }
+    rows
+}
+
+#[test]
+fn estimator_matches_native_mean() {
+    let Some(engine) = engine() else { return };
+    let mut batch = BatchFeatures::new(&engine.manifest);
+    let rows = fill_random(&mut batch, 7);
+    let (est, lcb) = engine.estimate(&batch).expect("estimate");
+    for (i, (sizes, nflows, _, _)) in rows.iter().enumerate() {
+        let expect = native_estimate(sizes, *nflows as f64);
+        let got = est[i] as f64;
+        assert!(
+            (got - expect).abs() <= expect.abs() * 2e-4 + 1.0,
+            "row {i}: kernel est {got} vs native {expect}"
+        );
+        // LCB never exceeds the unbiased estimate (modulo float noise)
+        assert!(lcb[i] as f64 <= expect * (1.0 + 1e-3) + 1.0);
+    }
+}
+
+#[test]
+fn contention_matches_native() {
+    let Some(engine) = engine() else { return };
+    let mut batch = BatchFeatures::new(&engine.manifest);
+    fill_random(&mut batch, 21);
+    let kernel = engine.contention(&batch).expect("contention");
+    let native = native_contention(&batch.occ_rows());
+    assert_eq!(kernel.len(), native.len());
+    for (i, (k, n)) in kernel.iter().zip(native.iter()).enumerate() {
+        assert!(
+            (k - n).abs() <= n.abs() * 1e-4 + 1e-3,
+            "row {i}: kernel {k} vs native {n}"
+        );
+    }
+}
+
+#[test]
+fn scorer_composes_estimator_and_contention() {
+    let Some(engine) = engine() else { return };
+    let mut batch = BatchFeatures::new(&engine.manifest);
+    let rows = fill_random(&mut batch, 35);
+    let weight = 0.5f32;
+    let out = engine.score(&batch, weight).expect("score");
+    let native_cont = native_contention(&batch.occ_rows());
+    for (i, (sizes, nflows, done, _)) in rows.iter().enumerate() {
+        let est = native_estimate(sizes, *nflows as f64);
+        let expect = native_score(est, *done, native_cont[i] as f64, weight as f64);
+        let got = out.score[i] as f64;
+        assert!(
+            (got - expect).abs() <= expect.abs() * 5e-4 + 10.0,
+            "row {i}: scorer {got} vs native {expect} (est {est}, cont {})",
+            native_cont[i]
+        );
+    }
+}
+
+#[test]
+fn scorer_is_deterministic_across_calls() {
+    let Some(engine) = engine() else { return };
+    let mut batch = BatchFeatures::new(&engine.manifest);
+    fill_random(&mut batch, 99);
+    let a = engine.score(&batch, 0.5).unwrap();
+    let b = engine.score(&batch, 0.5).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn empty_batch_yields_padding_values() {
+    let Some(engine) = engine() else { return };
+    let mut batch = BatchFeatures::new(&engine.manifest);
+    batch.set_row(0, &[], 1, 0.0, &[], 0); // a live row with no pilots
+    let (est, lcb) = engine.estimate(&batch).unwrap();
+    assert_eq!(est[0], 0.0);
+    assert_eq!(lcb[0], 1.0); // floored LCB
+}
+
+#[test]
+fn manifest_shapes_cover_scheduler_defaults() {
+    let Some(engine) = engine() else { return };
+    let cfg = philae::coordinator::SchedulerConfig::default();
+    assert!(engine.manifest.m >= cfg.pilot_max, "M must hold pilot_max");
+    assert!(engine.manifest.p >= 2 * 900, "P must hold the 900-port run");
+    assert_eq!(engine.manifest.lcb_sigmas, cfg.lcb_sigmas);
+}

@@ -1,0 +1,69 @@
+//! Live-service integration: the threaded coordinator + per-port agents run
+//! a small trace end to end, coflow ops (register/deregister/update) behave,
+//! and the measured interval accounting is sane.
+
+use philae::coordinator::{SchedulerConfig, SchedulerKind};
+use philae::service::{run_service, ServiceConfig};
+use philae::trace::TraceSpec;
+use std::time::Duration;
+
+fn svc(kind: SchedulerKind) -> ServiceConfig {
+    ServiceConfig {
+        kind,
+        sched: SchedulerConfig::default(),
+        time_scale: 200.0, // fast replay: tiny traces finish in < 2 s wall
+        delta_wall: Duration::from_millis(8),
+        engine_dir: None,
+        port_rate: philae::GBPS,
+    }
+}
+
+#[test]
+fn philae_service_completes_trace() {
+    let trace = TraceSpec::tiny(8, 12).seed(5).generate();
+    let report = run_service(&trace, &svc(SchedulerKind::Philae)).expect("service run");
+    assert_eq!(report.ccts.len(), trace.coflows.len());
+    for (i, &cct) in report.ccts.iter().enumerate() {
+        assert!(cct.is_finite() && cct > 0.0, "coflow {i} unfinished: {cct}");
+    }
+    assert!(report.rate_calcs > 0);
+    assert!(report.update_msgs as usize >= trace.flows.len());
+    assert!(!report.used_engine);
+}
+
+#[test]
+fn aalo_service_completes_and_reports_intervals() {
+    let trace = TraceSpec::tiny(8, 10).seed(6).generate();
+    let report = run_service(&trace, &svc(SchedulerKind::Aalo)).expect("service run");
+    assert!(report.ccts.iter().all(|c| c.is_finite() && *c > 0.0));
+    assert!(report.intervals.intervals > 0, "no busy intervals recorded");
+    // Aalo gets byte updates on top of completions
+    assert!(report.update_msgs as usize > trace.flows.len());
+}
+
+#[test]
+fn philae_sends_fewer_updates_than_aalo() {
+    let trace = TraceSpec::tiny(10, 15).seed(7).generate();
+    let ph = run_service(&trace, &svc(SchedulerKind::Philae)).expect("philae");
+    let aa = run_service(&trace, &svc(SchedulerKind::Aalo)).expect("aalo");
+    assert!(
+        aa.update_msgs > ph.update_msgs,
+        "aalo {} should exceed philae {}",
+        aa.update_msgs,
+        ph.update_msgs
+    );
+}
+
+#[test]
+fn service_with_engine_if_artifacts_present() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping engine service test: artifacts missing");
+        return;
+    }
+    let trace = TraceSpec::tiny(6, 8).seed(8).generate();
+    let mut cfg = svc(SchedulerKind::Philae);
+    cfg.engine_dir = Some("artifacts".into());
+    let report = run_service(&trace, &cfg).expect("engine service run");
+    assert!(report.used_engine);
+    assert!(report.ccts.iter().all(|c| c.is_finite() && *c > 0.0));
+}
