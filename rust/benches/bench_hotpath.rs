@@ -2,19 +2,44 @@
 //! construction, rate allocation, and (when artifacts are built) the PJRT
 //! scorer — the three components every scheduling decision pays for.
 //!
+//! Measures both paths of each stage so the incremental engine's win over
+//! the from-scratch baseline is tracked per PR:
+//!
+//! * **full** — `order_full_into` (oracle re-sort) + `allocate` with a
+//!   fresh scratch per call: the pre-optimization per-event behavior.
+//! * **incremental** — `order_into` against the persistent lane cache +
+//!   `allocate_into` with a reused [`AllocScratch`]: the shipping hot path.
+//!
+//! Emits machine-readable `BENCH_hotpath.json` at the repo root.
+//!
 //! `cargo bench --bench bench_hotpath`
 
 mod common;
 
 use philae::coordinator::philae::PhilaeCore;
-use philae::coordinator::{rate, SchedulerConfig, SchedulerKind};
+use philae::coordinator::{rate, Plan, Scheduler, SchedulerConfig, SchedulerKind};
 use philae::runtime::{BatchFeatures, Engine};
 use philae::sim::world_from_trace;
 use philae::trace::TraceSpec;
 
+struct Row {
+    ports: usize,
+    coflows: usize,
+    full_order_us: f64,
+    full_alloc_us: f64,
+    inc_order_us: f64,
+    inc_alloc_us: f64,
+    aalo_full_us: f64,
+    aalo_inc_us: f64,
+    grants: usize,
+    visited: usize,
+}
+
 fn main() {
-    common::banner("hotpath", "order + allocate + PJRT scorer");
+    common::banner("hotpath", "order + allocate + PJRT scorer (full vs incremental)");
     let cfg = SchedulerConfig::default();
+    let iters = common::iters(20);
+    let mut rows: Vec<Row> = Vec::new();
 
     for (ports, coflows) in [(150usize, 200usize), (900, 600)] {
         let trace = TraceSpec::fb_like(ports, coflows).seed(5).generate();
@@ -28,28 +53,114 @@ fn main() {
             world.coflows[cid].est_size = Some(world.coflows[cid].total_bytes);
         }
 
-        let (min_order, _) = common::time_it(20, || core.order(&world));
-        let plan = core.order(&world);
-        let (min_alloc, _) = common::time_it(20, || {
-            rate::allocate(&world.fabric, &world.flows, &world.coflows, &plan)
+        // -- full (from-scratch) baseline: what every event used to pay --
+        let mut plan_full = Plan::default();
+        let (full_order, _) = common::time_it(iters, || {
+            core.order_full_into(&world, &mut plan_full)
         });
-        let alloc = rate::allocate(&world.fabric, &world.flows, &world.coflows, &plan);
+        core.order_full_into(&world, &mut plan_full);
+        let (full_alloc, _) = common::time_it(iters, || {
+            rate::allocate(&world.fabric, &world.flows, &world.coflows, &plan_full)
+        });
+
+        // -- incremental steady state: cache warmed by the first call --
+        let mut plan = Plan::default();
+        let mut scratch = rate::AllocScratch::new();
+        core.order_into(&world, &mut plan);
+        rate::allocate_into(&world.fabric, &world.flows, &world.coflows, &plan, &mut scratch);
+        let (inc_order, _) = common::time_it(iters, || core.order_into(&world, &mut plan));
+        let (inc_alloc, _) = common::time_it(iters, || {
+            rate::allocate_into(&world.fabric, &world.flows, &world.coflows, &plan, &mut scratch)
+        });
+        assert_eq!(plan.entries, plan_full.entries, "incremental order diverged");
+        let grants = scratch.grants().len();
+        let visited = scratch.visited();
         println!(
-            "{ports} ports / {coflows} active coflows: order {:.0} µs | allocate {:.0} µs ({} grants, {} visited)",
-            min_order * 1e6,
-            min_alloc * 1e6,
-            alloc.grants.len(),
-            alloc.visited
+            "{ports} ports / {coflows} active coflows ({} grants, {} visited):",
+            grants, visited
+        );
+        println!(
+            "  philae order    full {:>8.1} µs | incremental {:>8.1} µs ({:.1}x)",
+            full_order * 1e6,
+            inc_order * 1e6,
+            full_order / inc_order.max(1e-12)
+        );
+        println!(
+            "  philae allocate full {:>8.1} µs | incremental {:>8.1} µs ({:.1}x)",
+            full_alloc * 1e6,
+            inc_alloc * 1e6,
+            full_alloc / inc_alloc.max(1e-12)
         );
 
         // Aalo's per-tick pipeline on the same world (Table 3's "calc").
         let mut aalo = SchedulerKind::Aalo.build(&trace, &cfg);
-        let (min_aalo, _) = common::time_it(20, || {
-            let p = aalo.order(&world);
-            rate::allocate(&world.fabric, &world.flows, &world.coflows, &p)
+        let mut aalo_plan = Plan::default();
+        let (aalo_full, _) = common::time_it(iters, || {
+            aalo.order_full_into(&world, &mut aalo_plan);
+            rate::allocate(&world.fabric, &world.flows, &world.coflows, &aalo_plan)
         });
-        println!("  aalo order+allocate: {:.0} µs", min_aalo * 1e6);
+        let mut aalo_scratch = rate::AllocScratch::new();
+        aalo.order_into(&world, &mut aalo_plan);
+        let (aalo_inc, _) = common::time_it(iters, || {
+            aalo.order_into(&world, &mut aalo_plan);
+            rate::allocate_into(
+                &world.fabric,
+                &world.flows,
+                &world.coflows,
+                &aalo_plan,
+                &mut aalo_scratch,
+            )
+        });
+        println!(
+            "  aalo order+alloc full {:>8.1} µs | incremental {:>8.1} µs ({:.1}x)",
+            aalo_full * 1e6,
+            aalo_inc * 1e6,
+            aalo_full / aalo_inc.max(1e-12)
+        );
+
+        rows.push(Row {
+            ports,
+            coflows,
+            full_order_us: full_order * 1e6,
+            full_alloc_us: full_alloc * 1e6,
+            inc_order_us: inc_order * 1e6,
+            inc_alloc_us: inc_alloc * 1e6,
+            aalo_full_us: aalo_full * 1e6,
+            aalo_inc_us: aalo_inc * 1e6,
+            grants,
+            visited,
+        });
     }
+
+    // machine-readable trajectory for cross-PR tracking
+    let mut json = String::from("{\n  \"bench\": \"hotpath\",\n  \"iters\": ");
+    json.push_str(&iters.to_string());
+    json.push_str(",\n  \"configs\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let combined_full = r.full_order_us + r.full_alloc_us;
+        let combined_inc = r.inc_order_us + r.inc_alloc_us;
+        json.push_str(&format!(
+            "    {{\"ports\": {}, \"active_coflows\": {}, \"grants\": {}, \"visited\": {},\n      \
+             \"full\": {{\"order_us\": {:.3}, \"alloc_us\": {:.3}}},\n      \
+             \"incremental\": {{\"order_us\": {:.3}, \"alloc_us\": {:.3}}},\n      \
+             \"order_alloc_speedup\": {:.3},\n      \
+             \"aalo\": {{\"full_us\": {:.3}, \"incremental_us\": {:.3}}}}}{}\n",
+            r.ports,
+            r.coflows,
+            r.grants,
+            r.visited,
+            r.full_order_us,
+            r.full_alloc_us,
+            r.inc_order_us,
+            r.inc_alloc_us,
+            combined_full / combined_inc.max(1e-9),
+            r.aalo_full_us,
+            r.aalo_inc_us,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    common::write_json("BENCH_hotpath.json", &json);
 
     // PJRT scorer (L2 graph of L1 kernels) — the AOT hot path.
     match Engine::load("artifacts") {

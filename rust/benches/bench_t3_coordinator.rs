@@ -2,6 +2,8 @@
 //! per-interval cost and missed-deadline fractions at 150 and 900 ports
 //! (6× replicated trace, δ′ = 6δ), plus the 900-port CCT speedup.
 //!
+//! Emits machine-readable `BENCH_t3_coordinator.json` at the repo root.
+//!
 //! `cargo bench --bench bench_t3_coordinator`
 
 mod common;
@@ -19,14 +21,21 @@ fn main() {
         .seed(42)
         .generate();
 
-    for (label, k) in [("150 ports", 1usize), ("900 ports", 6)] {
+    let mut json = String::from("{\n  \"bench\": \"t3_coordinator\",\n  \"configs\": [\n");
+    let n_cfgs = 2;
+    for (ci, (label, k)) in [("150 ports", 1usize), ("900 ports", 6)].into_iter().enumerate() {
         let trace = if k == 1 { base.clone() } else { base.replicate(k) };
         let mut c = cfg.clone();
         c.delta *= k as f64; // δ' = kδ as in §4.3
         let philae = Simulation::run(&trace, SchedulerKind::Philae, &c);
         let aalo = Simulation::run(&trace, SchedulerKind::Aalo, &c);
         println!("\n-- {label} (δ = {:.0} ms) --", c.delta * 1e3);
-        for (name, r) in [("philae", &philae), ("aalo", &aalo)] {
+        json.push_str(&format!(
+            "    {{\"ports\": {}, \"delta_ms\": {:.3}, \"schedulers\": {{\n",
+            150 * k,
+            c.delta * 1e3
+        ));
+        for (si, (name, r)) in [("philae", &philae), ("aalo", &aalo)].into_iter().enumerate() {
             println!(
                 "  {name:>6}: calc {:.3} ({:.3}) send {:.3} ({:.3}) recv {:.3} ({:.3}) total {:.3} ms/interval",
                 r.intervals.rate_calc.mean() * 1e3,
@@ -43,10 +52,30 @@ fn main() {
                 100.0 * r.intervals.idle_rate_fraction(),
                 r.intervals.updates_per_interval.mean()
             );
+            json.push_str(&format!(
+                "      \"{name}\": {{\"calc_ms\": {:.4}, \"send_ms\": {:.4}, \"recv_ms\": {:.4}, \
+                 \"total_ms\": {:.4}, \"missed_frac\": {:.4}, \"avg_cct_s\": {:.4}, \
+                 \"rate_calc_wall_s\": {:.4}}}{}\n",
+                r.intervals.rate_calc.mean() * 1e3,
+                r.intervals.rate_send.mean() * 1e3,
+                r.intervals.update_recv.mean() * 1e3,
+                r.intervals.total_ms_mean(),
+                r.intervals.missed_fraction(),
+                r.avg_cct(),
+                r.rate_calc_wall_s,
+                if si == 0 { "," } else { "" }
+            ));
         }
         let row = SpeedupRow::from_ccts(&aalo.ccts, &philae.ccts);
         println!("  CCT speedup philae vs aalo: {row}");
+        json.push_str(&format!(
+            "    }}, \"cct_speedup_avg\": {:.4}}}{}\n",
+            aalo.avg_cct() / philae.avg_cct(),
+            if ci + 1 < n_cfgs { "," } else { "" }
+        ));
     }
+    json.push_str("  ]\n}\n");
+    common::write_json("BENCH_t3_coordinator.json", &json);
     println!("\npaper: T3 total 14.80 vs 32.90 ms @900; T4 1%/16% @150, 10%/37% @900;");
     println!("       §4.3 900-port avg 2.72x (P90 9.78x)");
 }

@@ -17,7 +17,31 @@ pub fn time_it<T>(iters: usize, mut f: impl FnMut() -> T) -> (f64, f64) {
     (min, mean)
 }
 
+/// Iteration count: `default`, overridable via `PHILAE_BENCH_ITERS` (CI
+/// smoke runs set it to 2 so hot-path regressions fail loudly but fast).
+pub fn iters(default: usize) -> usize {
+    std::env::var("PHILAE_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}
+
 /// Standard bench banner.
 pub fn banner(name: &str, what: &str) {
     println!("=== bench {name} — {what} ===");
+}
+
+/// Write machine-readable results next to the repo root (the parent of the
+/// crate directory), so the perf trajectory is tracked across PRs.
+#[allow(dead_code)]
+pub fn write_json(file_name: &str, json: &str) {
+    let root = std::env::var("CARGO_MANIFEST_DIR")
+        .map(|d| std::path::PathBuf::from(d).join(".."))
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+    let path = root.join(file_name);
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    }
 }

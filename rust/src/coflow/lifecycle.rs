@@ -34,6 +34,10 @@ pub struct FlowState {
     /// Position inside the owning coflow's `active_list` (engine-maintained,
     /// O(1) swap-removal on completion).
     pub active_pos: usize,
+    /// Transient mark owned by `rate::apply_grants` — lets the allocator
+    /// distinguish granted from stalled flows in a single pass without a
+    /// per-call lookup table. Always `false` outside that call.
+    pub alloc_mark: bool,
 }
 
 impl FlowState {
@@ -49,6 +53,7 @@ impl FlowState {
             pilot: false,
             finished_at: None,
             active_pos: 0,
+            alloc_mark: false,
         }
     }
 

@@ -14,6 +14,17 @@ use super::{OrderEntry, Plan, Reaction, Scheduler, SchedulerConfig, World};
 use crate::{Bytes, CoflowId, FlowId, Time};
 use crate::util::Rng;
 
+/// Binary-search insert into the sorted `(queue, qseq, cid)` order.
+fn insert_key(v: &mut Vec<(usize, u64, CoflowId)>, key: (usize, u64, CoflowId)) {
+    super::insert_sorted(v, key, |a, b| a.cmp(b));
+}
+
+/// Remove `key` from the sorted order (defensive linear fallback on a
+/// stale key; no-op if the coflow is absent entirely).
+fn remove_key(v: &mut Vec<(usize, u64, CoflowId)>, key: (usize, u64, CoflowId)) {
+    super::remove_sorted(v, &key, |a, b| a.cmp(b), |e| e.2 == key.2);
+}
+
 pub struct AaloScheduler {
     cfg: SchedulerConfig,
     /// Byte counts as last reported to the coordinator (stale up to δ).
@@ -29,11 +40,23 @@ pub struct AaloScheduler {
     /// Queue moves performed (diagnostics).
     pub queue_moves: u64,
     rng: Rng,
+    /// Exponentially decaying D-CLAS group weights (static per config).
+    weights: Vec<f64>,
+    /// Incrementally maintained order, sorted by `(queue, qseq, cid)`;
+    /// repaired around the single coflow whose queue position changed
+    /// instead of re-sorting all active coflows per event.
+    sorted: Vec<(usize, u64, CoflowId)>,
+    /// Cached `(queue, qseq)` key per coflow (`usize::MAX` = absent).
+    cached: Vec<(usize, u64)>,
+    /// Scan stamps for dropping departed coflows at emit time.
+    seen: Vec<u64>,
+    scan: u64,
 }
 
 impl AaloScheduler {
     pub fn new(cfg: SchedulerConfig) -> Self {
         let rng = Rng::seed_from_u64(cfg.dynamics_seed.wrapping_mul(0x9e37_79b9).wrapping_add(7));
+        let weights = (0..cfg.num_queues).map(|q| 0.5f64.powi(q as i32)).collect();
         AaloScheduler {
             cfg,
             bytes_seen: Vec::new(),
@@ -42,6 +65,11 @@ impl AaloScheduler {
             updates_received: 0,
             queue_moves: 0,
             rng,
+            weights,
+            sorted: Vec::new(),
+            cached: Vec::new(),
+            seen: Vec::new(),
+            scan: 0,
         }
     }
 
@@ -49,6 +77,8 @@ impl AaloScheduler {
         if cid >= self.bytes_seen.len() {
             self.bytes_seen.resize(cid + 1, 0.0);
             self.queue_seq.resize(cid + 1, 0);
+            self.cached.resize(cid + 1, (usize::MAX, 0));
+            self.seen.resize(cid + 1, 0);
         }
     }
 
@@ -131,7 +161,46 @@ impl Scheduler for AaloScheduler {
     /// decaying with queue depth; FIFO within a queue. Leftovers are
     /// backfilled in the same order (work conservation), so low queues can
     /// still run when high queues are idle.
-    fn order(&mut self, world: &World) -> Plan {
+    ///
+    /// Incremental: the `(queue, qseq, cid)` order persists across events;
+    /// each call repairs only the coflows whose queue position moved (a
+    /// demotion or a new arrival) and compacts out departed coflows while
+    /// emitting — no per-event sort or allocation in steady state.
+    fn order_into(&mut self, world: &World, plan: &mut Plan) {
+        self.scan = self.scan.wrapping_add(1);
+        let scan = self.scan;
+        for idx in 0..world.active.len() {
+            let cid = world.active[idx];
+            if world.coflows[cid].done() {
+                continue;
+            }
+            self.ensure(cid);
+            self.seen[cid] = scan;
+            let key = (world.coflows[cid].queue, self.queue_seq[cid]);
+            if self.cached[cid] != key {
+                if self.cached[cid].0 != usize::MAX {
+                    remove_key(&mut self.sorted, (self.cached[cid].0, self.cached[cid].1, cid));
+                }
+                insert_key(&mut self.sorted, (key.0, key.1, cid));
+                self.cached[cid] = key;
+            }
+        }
+        plan.clear();
+        let mut w = 0;
+        for r in 0..self.sorted.len() {
+            let (q, qs, cid) = self.sorted[r];
+            if self.seen[cid] == scan && self.cached[cid] == (q, qs) {
+                self.sorted[w] = (q, qs, cid);
+                w += 1;
+                plan.entries.push(OrderEntry::grouped(cid, q));
+            }
+        }
+        self.sorted.truncate(w);
+        plan.group_weights.clone_from(&self.weights);
+    }
+
+    /// From-scratch oracle rebuild (see trait docs).
+    fn order_full_into(&mut self, world: &World, plan: &mut Plan) {
         let mut coflows: Vec<(usize, u64, CoflowId)> = world
             .active
             .iter()
@@ -142,15 +211,13 @@ impl Scheduler for AaloScheduler {
             })
             .collect();
         coflows.sort_unstable();
-        let entries = coflows
-            .into_iter()
-            .map(|(q, _, cid)| OrderEntry::grouped(cid, q))
-            .collect();
+        plan.clear();
+        plan.entries
+            .extend(coflows.into_iter().map(|(q, _, cid)| OrderEntry::grouped(cid, q)));
         // exponentially decaying weights across the K queues
-        let group_weights = (0..self.cfg.num_queues)
-            .map(|q| 0.5f64.powi(q as i32))
-            .collect();
-        Plan { entries, group_weights }
+        plan.group_weights.clear();
+        plan.group_weights
+            .extend((0..self.cfg.num_queues).map(|q| 0.5f64.powi(q as i32)));
     }
 }
 
@@ -221,6 +288,35 @@ mod tests {
         a.on_tick(&mut w);
         assert_eq!(w.coflows[0].queue, 0, "no update seen, no demotion");
         assert_eq!(a.updates_received, 0);
+    }
+
+    #[test]
+    fn incremental_order_matches_oracle_across_demotions() {
+        let mut w = world2();
+        let mut a = AaloScheduler::new(SchedulerConfig::default());
+        a.on_arrival(0, &mut w);
+        a.on_arrival(1, &mut w);
+        let check = |a: &mut AaloScheduler, w: &World| {
+            let mut inc = Plan::default();
+            let mut full = Plan::default();
+            a.order_into(w, &mut inc);
+            a.order_full_into(w, &mut full);
+            assert_eq!(inc.entries, full.entries);
+            assert_eq!(inc.group_weights, full.group_weights);
+        };
+        check(&mut a, &w);
+        // demotion repositions coflow 0 behind coflow 1
+        w.coflows[0].bytes_sent = 50.0 * MB;
+        a.on_tick(&mut w);
+        check(&mut a, &w);
+        // a second demotion
+        w.coflows[0].bytes_sent = 500.0 * MB;
+        a.on_tick(&mut w);
+        check(&mut a, &w);
+        // departure: coflow 1 finishes and leaves the active set
+        w.coflows[1].finished_at = Some(1.0);
+        w.active.retain(|&c| c != 1);
+        check(&mut a, &w);
     }
 
     #[test]

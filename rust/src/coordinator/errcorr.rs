@@ -165,8 +165,12 @@ impl Scheduler for PhilaeErrCorrScheduler {
         }
     }
 
-    fn order(&mut self, world: &World) -> Plan {
-        self.core.order(world)
+    fn order_into(&mut self, world: &World, plan: &mut Plan) {
+        self.core.order_into(world, plan);
+    }
+
+    fn order_full_into(&mut self, world: &World, plan: &mut Plan) {
+        self.core.order_full_into(world, plan);
     }
 }
 

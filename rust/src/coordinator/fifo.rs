@@ -3,15 +3,31 @@
 //! lineage (Aalo §7) compares against it, and as the weakest sane baseline
 //! for the benchmark harness.
 
-use super::{Plan, Reaction, Scheduler, World};
+use super::{OrderEntry, Plan, Reaction, Scheduler, World};
 use crate::{CoflowId, FlowId};
 
 #[derive(Default)]
-pub struct FifoScheduler;
+pub struct FifoScheduler {
+    /// Persistent arrival order, sorted by `(seq, cid)`; arrivals are
+    /// binary-search inserted, departures compacted out at emit time.
+    sorted: Vec<(u64, CoflowId)>,
+    /// Whether a coflow currently has an entry in `sorted`.
+    present: Vec<bool>,
+    /// Scan stamps for departure detection.
+    seen: Vec<u64>,
+    scan: u64,
+}
 
 impl FifoScheduler {
     pub fn new() -> Self {
-        FifoScheduler
+        FifoScheduler::default()
+    }
+
+    fn ensure(&mut self, cid: CoflowId) {
+        if cid >= self.present.len() {
+            self.present.resize(cid + 1, false);
+            self.seen.resize(cid + 1, 0);
+        }
     }
 }
 
@@ -28,7 +44,39 @@ impl Scheduler for FifoScheduler {
         Reaction::Reallocate
     }
 
-    fn order(&mut self, world: &World) -> Plan {
+    fn order_into(&mut self, world: &World, plan: &mut Plan) {
+        self.scan = self.scan.wrapping_add(1);
+        let scan = self.scan;
+        for idx in 0..world.active.len() {
+            let cid = world.active[idx];
+            if world.coflows[cid].done() {
+                continue;
+            }
+            self.ensure(cid);
+            self.seen[cid] = scan;
+            if !self.present[cid] {
+                let key = (world.coflows[cid].seq, cid);
+                super::insert_sorted(&mut self.sorted, key, |a, b| a.cmp(b));
+                self.present[cid] = true;
+            }
+        }
+        plan.clear();
+        let mut w = 0;
+        for r in 0..self.sorted.len() {
+            let (seq, cid) = self.sorted[r];
+            if self.seen[cid] == scan {
+                self.sorted[w] = (seq, cid);
+                w += 1;
+                plan.entries.push(OrderEntry::all(cid));
+            } else {
+                self.present[cid] = false;
+            }
+        }
+        self.sorted.truncate(w);
+    }
+
+    /// From-scratch oracle rebuild (see trait docs).
+    fn order_full_into(&mut self, world: &World, plan: &mut Plan) {
         let mut coflows: Vec<(u64, CoflowId)> = world
             .active
             .iter()
@@ -36,7 +84,9 @@ impl Scheduler for FifoScheduler {
             .map(|&cid| (world.coflows[cid].seq, cid))
             .collect();
         coflows.sort_unstable();
-        Plan::strict(coflows.into_iter().map(|(_, cid)| cid))
+        plan.clear();
+        plan.entries
+            .extend(coflows.into_iter().map(|(_, cid)| OrderEntry::all(cid)));
     }
 }
 

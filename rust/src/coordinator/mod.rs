@@ -35,7 +35,9 @@ pub use aalo::AaloScheduler;
 pub use errcorr::{ErrCorrMode, PhilaeErrCorrScheduler};
 pub use fifo::FifoScheduler;
 pub use philae::PhilaeScheduler;
-pub use rate::{allocate, Allocation, FlowFilter, OrderEntry, Plan};
+pub use rate::{
+    allocate, allocate_into, apply_grants, AllocScratch, Allocation, FlowFilter, OrderEntry, Plan,
+};
 pub use saath::SaathScheduler;
 pub use scf::ScfScheduler;
 pub use sebf::SebfScheduler;
@@ -44,6 +46,39 @@ use crate::coflow::{CoflowState, FlowState};
 use crate::fabric::{Fabric, PortLoad};
 use crate::trace::Trace;
 use crate::{CoflowId, FlowId, Time, MB};
+
+/// Binary-search insert into a vector kept sorted under `cmp` — the shared
+/// repair primitive of the incremental order caches.
+pub(crate) fn insert_sorted<T>(
+    v: &mut Vec<T>,
+    key: T,
+    cmp: impl Fn(&T, &T) -> std::cmp::Ordering,
+) {
+    let pos = v.partition_point(|e| cmp(e, &key) == std::cmp::Ordering::Less);
+    v.insert(pos, key);
+}
+
+/// Remove the entry matching `key` under `cmp`. If the cached key turned
+/// out stale (binary search misses), fall back to a linear scan by
+/// identity (`is_same`) so the structure self-heals; no-op when the item
+/// is absent entirely.
+pub(crate) fn remove_sorted<T>(
+    v: &mut Vec<T>,
+    key: &T,
+    cmp: impl Fn(&T, &T) -> std::cmp::Ordering,
+    is_same: impl Fn(&T) -> bool,
+) {
+    match v.binary_search_by(|e| cmp(e, key)) {
+        Ok(pos) => {
+            v.remove(pos);
+        }
+        Err(_) => {
+            if let Some(pos) = v.iter().position(|e| is_same(e)) {
+                v.remove(pos);
+            }
+        }
+    }
+}
 
 /// Everything a scheduler may inspect and (for its own coflows' learning
 /// state) mutate when reacting to an event.
@@ -114,10 +149,34 @@ pub trait Scheduler: Send {
         Reaction::None
     }
 
-    /// Produce the scheduling plan: priority order over coflows (highest
-    /// first), lane filters, and any bandwidth-group weights. Flows of one
-    /// coflow are contiguous by construction (all-or-none).
-    fn order(&mut self, world: &World) -> Plan;
+    /// Write the scheduling plan into `plan` (cleared first): priority
+    /// order over coflows (highest first), lane filters, and any
+    /// bandwidth-group weights. Flows of one coflow are contiguous by
+    /// construction (all-or-none).
+    ///
+    /// The plan is **caller-owned and reused** across events; schedulers
+    /// maintain their order incrementally (repairing a sorted structure
+    /// around the coflows whose key changed, validated lazily against
+    /// `world`), so steady-state calls perform no heap allocation and no
+    /// full re-sort.
+    fn order_into(&mut self, world: &World, plan: &mut Plan);
+
+    /// From-scratch rebuild of the plan, bypassing any incremental order
+    /// state — the reference ("oracle") path that incremental
+    /// implementations are property-tested against, and the pre-optimization
+    /// baseline the hot-path benches measure. Must emit exactly the same
+    /// plan as [`Scheduler::order_into`] on the same world.
+    fn order_full_into(&mut self, world: &World, plan: &mut Plan) {
+        self.order_into(world, plan);
+    }
+
+    /// Convenience wrapper allocating a fresh [`Plan`] per call (tests and
+    /// one-shot callers; hot paths use [`Scheduler::order_into`]).
+    fn order(&mut self, world: &World) -> Plan {
+        let mut plan = Plan::default();
+        self.order_into(world, &mut plan);
+        plan
+    }
 }
 
 /// Which scheduler to run.

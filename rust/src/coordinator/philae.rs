@@ -17,9 +17,23 @@
 //!    `score = est_remaining × (1 + w · contention)`.
 //! 4. **Backfill** — non-pilot flows of unestimated coflows, FIFO (work
 //!    conservation: they only see capacity the upper lanes left over).
+//!
+//! ## Incremental order maintenance
+//!
+//! The lanes are **persistent sorted structures**, not per-event rebuilds:
+//! express and pilot are seq-ordered FIFO vectors, the scheduled lane is a
+//! vector sorted by `(score, seq)`. Each [`PhilaeCore::order_into`] call
+//! lazily validates the cache against the world — a coflow whose estimate,
+//! completed-flow count, or lane changed is repaired by a binary-search
+//! remove/insert of just that coflow; a port-occupancy change (tracked by
+//! [`crate::fabric::PortLoad::occ_epoch`]) invalidates every contention
+//! term at once and triggers the only full re-sort, into the same reused
+//! buffers. Steady-state ordering is therefore allocation-free and
+//! sort-free. [`PhilaeCore::order_full_into`] keeps the from-scratch
+//! rebuild as the equivalence oracle: both paths emit bit-identical plans.
 
 use super::{OrderEntry, Plan, Reaction, Scheduler, SchedulerConfig, World};
-use crate::coflow::CoflowPhase;
+use crate::coflow::{CoflowPhase, CoflowState};
 use crate::{Bytes, CoflowId, FlowId};
 
 /// What a completion report meant to the sampling state machine.
@@ -30,6 +44,105 @@ pub enum CompletionOutcome {
     /// The last outstanding pilot finished: the sample is complete and the
     /// coflow must be given an estimate now. Carries the pilot sizes.
     SampleComplete(Vec<Bytes>),
+}
+
+/// Which lane of the four-lane order a coflow currently occupies in the
+/// incremental cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Lane {
+    /// Not in any lane (never seen, or stale bookkeeping).
+    Absent,
+    Express,
+    Piloting,
+    Scheduled,
+}
+
+/// The incrementally maintained four-lane order (see module docs). All
+/// vectors are reused across events; per-coflow tables are dense by id.
+#[derive(Debug, Clone)]
+struct OrderCache {
+    /// Express lane entries, sorted by `(seq, cid)`.
+    express: Vec<(u64, CoflowId)>,
+    /// Pilot lane entries, sorted by `(seq, cid)`.
+    piloting: Vec<(u64, CoflowId)>,
+    /// Scheduled lane entries, sorted by `(score, seq)`.
+    scheduled: Vec<(f64, u64, CoflowId)>,
+    /// Current lane per coflow.
+    lane: Vec<Lane>,
+    /// Cached scheduled-lane score per coflow (the removal key).
+    score: Vec<f64>,
+    /// Bit pattern of the estimate the cached score was computed from.
+    est_bits: Vec<u64>,
+    /// Completed-flow count the cached score was computed from.
+    done_count: Vec<usize>,
+    /// Scan stamp: entries whose coflow was not stamped in the current scan
+    /// left the active set and are dropped at emit time.
+    seen: Vec<u64>,
+    scan: u64,
+    /// `PortLoad::occ_epoch` the cached contention terms were computed
+    /// under; `u64::MAX` = cache never built.
+    last_occ: u64,
+}
+
+impl OrderCache {
+    fn new() -> Self {
+        OrderCache {
+            express: Vec::new(),
+            piloting: Vec::new(),
+            scheduled: Vec::new(),
+            lane: Vec::new(),
+            score: Vec::new(),
+            est_bits: Vec::new(),
+            done_count: Vec::new(),
+            seen: Vec::new(),
+            scan: 0,
+            last_occ: u64::MAX,
+        }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.lane.len() < n {
+            self.lane.resize(n, Lane::Absent);
+            self.score.resize(n, 0.0);
+            self.est_bits.resize(n, 0);
+            self.done_count.resize(n, 0);
+            self.seen.resize(n, 0);
+        }
+    }
+}
+
+/// Estimate bit pattern used for exact change detection (`None` maps to the
+/// same +∞ the score computation uses).
+#[inline]
+fn est_bits(c: &CoflowState) -> u64 {
+    c.est_size.unwrap_or(f64::INFINITY).to_bits()
+}
+
+/// Scheduled-lane comparator: ascending `(score, seq)` — seq is unique per
+/// coflow, so the order is total and insert/remove positions are unique.
+#[inline]
+fn cmp_scored(a: &(f64, u64, CoflowId), b: &(f64, u64, CoflowId)) -> std::cmp::Ordering {
+    a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
+}
+
+/// Binary-search insert into a `(seq, cid)` FIFO lane.
+fn insert_seq(v: &mut Vec<(u64, CoflowId)>, seq: u64, cid: CoflowId) {
+    super::insert_sorted(v, (seq, cid), |a, b| a.cmp(b));
+}
+
+/// Remove from a `(seq, cid)` FIFO lane (no-op if absent).
+fn remove_seq(v: &mut Vec<(u64, CoflowId)>, seq: u64, cid: CoflowId) {
+    super::remove_sorted(v, &(seq, cid), |a, b| a.cmp(b), |e| e.1 == cid);
+}
+
+/// Binary-search insert into the scheduled lane.
+fn insert_scored(v: &mut Vec<(f64, u64, CoflowId)>, score: f64, seq: u64, cid: CoflowId) {
+    super::insert_sorted(v, (score, seq, cid), cmp_scored);
+}
+
+/// Remove from the scheduled lane by its cached key (no-op if absent).
+fn remove_scored(v: &mut Vec<(f64, u64, CoflowId)>, score: f64, seq: u64, cid: CoflowId) {
+    super::remove_sorted(v, &(score, seq, cid), cmp_scored, |e| e.2 == cid);
 }
 
 /// Sampling/learning state shared by default Philae and the §2.2
@@ -46,6 +159,8 @@ pub struct PhilaeCore {
     done_bytes: Vec<Bytes>,
     /// Completed-flow count per coflow (drives the remaining-size score).
     flows_done: Vec<usize>,
+    /// Incremental four-lane order (see module docs).
+    cache: OrderCache,
 }
 
 impl PhilaeCore {
@@ -56,6 +171,7 @@ impl PhilaeCore {
             pilots_left: Vec::new(),
             done_bytes: Vec::new(),
             flows_done: Vec::new(),
+            cache: OrderCache::new(),
         }
     }
 
@@ -226,19 +342,196 @@ impl PhilaeCore {
         world: &World,
         scores: &std::collections::HashMap<CoflowId, f64>,
     ) -> Plan {
-        self.order_impl(world, Some(scores))
+        let mut plan = Plan::default();
+        self.order_impl(world, Some(scores), &mut plan);
+        plan
     }
 
-    /// Build the four-lane priority order (see module docs).
-    pub fn order(&self, world: &World) -> Plan {
-        self.order_impl(world, None)
+    /// Build the four-lane priority order incrementally (see module docs),
+    /// writing into the caller-owned `plan`. Steady-state calls perform no
+    /// heap allocation and no sort.
+    pub fn order_into(&mut self, world: &World, plan: &mut Plan) {
+        self.cache.ensure(world.coflows.len());
+        self.cache.scan = self.cache.scan.wrapping_add(1);
+        let scan = self.cache.scan;
+        if self.cache.last_occ != world.load.occ_epoch {
+            // Port occupancy moved: every contention term (and thus every
+            // scheduled score) is suspect — rebuild the lanes wholesale
+            // into the reused buffers. This is the only sorting path.
+            self.rebuild_cache(world);
+        } else {
+            // Occupancy unchanged: repair exactly the coflows whose own
+            // inputs (lane, estimate, completed-flow count) moved.
+            for idx in 0..world.active.len() {
+                let cid = world.active[idx];
+                let c = &world.coflows[cid];
+                if c.done() {
+                    continue; // unstamped → dropped at emit
+                }
+                let seq = c.seq;
+                let desired = self.desired_lane(world, c);
+                self.cache.seen[cid] = scan;
+                let current = self.cache.lane[cid];
+                if current != desired {
+                    match current {
+                        Lane::Absent => {}
+                        Lane::Express => remove_seq(&mut self.cache.express, seq, cid),
+                        Lane::Piloting => remove_seq(&mut self.cache.piloting, seq, cid),
+                        Lane::Scheduled => remove_scored(
+                            &mut self.cache.scheduled,
+                            self.cache.score[cid],
+                            seq,
+                            cid,
+                        ),
+                    }
+                    match desired {
+                        Lane::Absent => unreachable!("desired lane is never Absent"),
+                        Lane::Express => insert_seq(&mut self.cache.express, seq, cid),
+                        Lane::Piloting => insert_seq(&mut self.cache.piloting, seq, cid),
+                        Lane::Scheduled => {
+                            let s = self.score(world, cid);
+                            self.cache.score[cid] = s;
+                            self.cache.est_bits[cid] = est_bits(c);
+                            self.cache.done_count[cid] =
+                                self.flows_done.get(cid).copied().unwrap_or(0);
+                            insert_scored(&mut self.cache.scheduled, s, seq, cid);
+                        }
+                    }
+                    self.cache.lane[cid] = desired;
+                } else if desired == Lane::Scheduled {
+                    let eb = est_bits(c);
+                    let dc = self.flows_done.get(cid).copied().unwrap_or(0);
+                    if eb != self.cache.est_bits[cid] || dc != self.cache.done_count[cid] {
+                        remove_scored(
+                            &mut self.cache.scheduled,
+                            self.cache.score[cid],
+                            seq,
+                            cid,
+                        );
+                        let s = self.score(world, cid);
+                        self.cache.score[cid] = s;
+                        self.cache.est_bits[cid] = eb;
+                        self.cache.done_count[cid] = dc;
+                        insert_scored(&mut self.cache.scheduled, s, seq, cid);
+                    }
+                }
+            }
+        }
+        self.emit(plan);
+    }
+
+    /// From-scratch four-lane rebuild — the equivalence oracle for
+    /// [`order_into`](Self::order_into) and the pre-optimization baseline
+    /// measured by `bench_hotpath`. Ignores and leaves untouched the
+    /// incremental cache.
+    pub fn order_full_into(&self, world: &World, plan: &mut Plan) {
+        self.order_impl(world, None, plan);
+    }
+
+    fn desired_lane(&self, world: &World, c: &CoflowState) -> Lane {
+        if world.now - c.arrival > self.cfg.age_threshold {
+            Lane::Express
+        } else if c.phase == CoflowPhase::Piloting {
+            Lane::Piloting
+        } else {
+            Lane::Scheduled
+        }
+    }
+
+    /// Reclassify and re-sort every active coflow into the reused lane
+    /// buffers (the occupancy-change slow path).
+    fn rebuild_cache(&mut self, world: &World) {
+        let scan = self.cache.scan;
+        self.cache.express.clear();
+        self.cache.piloting.clear();
+        self.cache.scheduled.clear();
+        for &cid in &world.active {
+            let c = &world.coflows[cid];
+            if c.done() {
+                continue;
+            }
+            self.cache.seen[cid] = scan;
+            let lane = self.desired_lane(world, c);
+            self.cache.lane[cid] = lane;
+            match lane {
+                Lane::Absent => unreachable!("desired lane is never Absent"),
+                Lane::Express => self.cache.express.push((c.seq, cid)),
+                Lane::Piloting => self.cache.piloting.push((c.seq, cid)),
+                Lane::Scheduled => {
+                    let s = self.score(world, cid);
+                    self.cache.score[cid] = s;
+                    self.cache.est_bits[cid] = est_bits(c);
+                    self.cache.done_count[cid] = self.flows_done.get(cid).copied().unwrap_or(0);
+                    self.cache.scheduled.push((s, c.seq, cid));
+                }
+            }
+        }
+        // Unique keys (seq / (score, seq) with unique seq), so unstable
+        // sorting is deterministic and matches the oracle's output.
+        self.cache.express.sort_unstable();
+        self.cache.piloting.sort_unstable();
+        self.cache.scheduled.sort_unstable_by(cmp_scored);
+        self.cache.last_occ = world.load.occ_epoch;
+    }
+
+    /// Copy the lanes into `plan`, compacting away entries whose coflow
+    /// left the active set (stamp mismatch) since the last scan.
+    fn emit(&mut self, plan: &mut Plan) {
+        plan.clear();
+        let cache = &mut self.cache;
+        let scan = cache.scan;
+        let mut w = 0;
+        for r in 0..cache.express.len() {
+            let (seq, cid) = cache.express[r];
+            if cache.seen[cid] == scan && cache.lane[cid] == Lane::Express {
+                cache.express[w] = (seq, cid);
+                w += 1;
+                plan.entries.push(OrderEntry::all(cid));
+            }
+        }
+        cache.express.truncate(w);
+        // Pilot lane: only the pilot flows.
+        w = 0;
+        for r in 0..cache.piloting.len() {
+            let (seq, cid) = cache.piloting[r];
+            if cache.seen[cid] == scan && cache.lane[cid] == Lane::Piloting {
+                cache.piloting[w] = (seq, cid);
+                w += 1;
+                plan.entries.push(OrderEntry::pilots(cid));
+            }
+        }
+        cache.piloting.truncate(w);
+        w = 0;
+        for r in 0..cache.scheduled.len() {
+            let (score, seq, cid) = cache.scheduled[r];
+            if cache.seen[cid] == scan && cache.lane[cid] == Lane::Scheduled {
+                cache.scheduled[w] = (score, seq, cid);
+                w += 1;
+                plan.entries.push(OrderEntry::all(cid));
+            }
+        }
+        cache.scheduled.truncate(w);
+        // Backfill lane: the unestimated coflows' non-pilot flows (the
+        // pilot lane was compacted above, so reuse it directly).
+        for &(_, cid) in &cache.piloting {
+            plan.entries.push(OrderEntry::backfill(cid));
+        }
+    }
+
+    /// Convenience wrapper allocating a fresh plan (tests and one-shot
+    /// callers; hot paths use [`order_into`](Self::order_into)).
+    pub fn order(&mut self, world: &World) -> Plan {
+        let mut plan = Plan::default();
+        self.order_into(world, &mut plan);
+        plan
     }
 
     fn order_impl(
         &self,
         world: &World,
         scores: Option<&std::collections::HashMap<CoflowId, f64>>,
-    ) -> Plan {
+        plan: &mut Plan,
+    ) {
         let mut express: Vec<CoflowId> = Vec::new();
         let mut piloting: Vec<CoflowId> = Vec::new();
         let mut scheduled: Vec<(f64, u64, CoflowId)> = Vec::new();
@@ -258,27 +551,29 @@ impl PhilaeCore {
                 scheduled.push((s, c.seq, cid));
             }
         }
-        express.sort_by_key(|&cid| world.coflows[cid].seq);
-        piloting.sort_by_key(|&cid| world.coflows[cid].seq);
-        scheduled.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        // (seq, cid) is the same total key the incremental lanes maintain,
+        // so the two paths agree even on degenerate duplicate seqs.
+        express.sort_unstable_by_key(|&cid| (world.coflows[cid].seq, cid));
+        piloting.sort_unstable_by_key(|&cid| (world.coflows[cid].seq, cid));
+        scheduled.sort_unstable_by(cmp_scored);
 
-        let mut entries: Vec<OrderEntry> =
-            Vec::with_capacity(express.len() + 2 * piloting.len() + scheduled.len());
+        plan.clear();
+        plan.entries
+            .reserve(express.len() + 2 * piloting.len() + scheduled.len());
         for &cid in &express {
-            entries.push(OrderEntry::all(cid));
+            plan.entries.push(OrderEntry::all(cid));
         }
         // Pilot lane: only the pilot flows.
         for &cid in &piloting {
-            entries.push(OrderEntry::pilots(cid));
+            plan.entries.push(OrderEntry::pilots(cid));
         }
         for &(_, _, cid) in &scheduled {
-            entries.push(OrderEntry::all(cid));
+            plan.entries.push(OrderEntry::all(cid));
         }
         // Backfill lane: the unestimated coflows' non-pilot flows.
         for &cid in &piloting {
-            entries.push(OrderEntry::backfill(cid));
+            plan.entries.push(OrderEntry::backfill(cid));
         }
-        Plan { entries, group_weights: Vec::new() }
     }
 }
 
@@ -328,8 +623,12 @@ impl Scheduler for PhilaeScheduler {
         }
     }
 
-    fn order(&mut self, world: &World) -> Plan {
-        self.core.order(world)
+    fn order_into(&mut self, world: &World, plan: &mut Plan) {
+        self.core.order_into(world, plan);
+    }
+
+    fn order_full_into(&mut self, world: &World, plan: &mut Plan) {
+        self.core.order_full_into(world, plan);
     }
 }
 
@@ -480,7 +779,7 @@ mod tests {
         }
         w.coflows[0].est_size = Some(100.0);
         w.coflows[1].est_size = Some(10.0);
-        let core = PhilaeCore::new(SchedulerConfig::default());
+        let mut core = PhilaeCore::new(SchedulerConfig::default());
         let order = core.order(&w);
         assert_eq!(order.entries, vec![OrderEntry::all(1), OrderEntry::all(0)]);
     }
@@ -499,9 +798,54 @@ mod tests {
         cfg.age_threshold = 5.0;
         w.now = 10.0; // coflow 0 is 10s old > threshold
         w.coflows[1].arrival = 9.0; // coflow 1 is fresh
-        let core = PhilaeCore::new(cfg);
+        let mut core = PhilaeCore::new(cfg);
         let order = core.order(&w);
         assert_eq!(order.entries[0].coflow, 0, "aged coflow must come first despite larger size");
+    }
+
+    #[test]
+    fn incremental_order_tracks_transitions_and_matches_oracle() {
+        let mut w = world_with(&[
+            &[(0, 4, 10.0), (1, 5, 10.0)],
+            &[(2, 6, 10.0), (3, 7, 10.0)],
+            &[(0, 6, 30.0)],
+        ]);
+        let mut cfg = SchedulerConfig::default();
+        cfg.pilot_min = 1;
+        cfg.pilot_max = 1;
+        let mut core = PhilaeCore::new(cfg);
+        for cid in 0..3 {
+            core.handle_arrival(cid, &mut w);
+        }
+        let check = |core: &mut PhilaeCore, w: &World| {
+            let mut inc = Plan::default();
+            let mut full = Plan::default();
+            core.order_into(w, &mut inc);
+            core.order_full_into(w, &mut full);
+            assert_eq!(inc.entries, full.entries);
+        };
+        check(&mut core, &w); // all piloting
+        // estimate coflow 1: piloting → scheduled transition
+        w.coflows[1].est_size = Some(20.0);
+        w.coflows[1].phase = CoflowPhase::Running;
+        check(&mut core, &w);
+        // estimate coflow 0 with a smaller size: must sort before coflow 1
+        w.coflows[0].est_size = Some(5.0);
+        w.coflows[0].phase = CoflowPhase::Running;
+        check(&mut core, &w);
+        // a score change repositions within the scheduled lane
+        w.coflows[1].est_size = Some(1.0);
+        check(&mut core, &w);
+        // coflow 2 finishes: dropped from the emitted plan
+        w.coflows[2].finished_at = Some(1.0);
+        w.active.retain(|&c| c != 2);
+        check(&mut core, &w);
+        // aging flips coflow 1 into the express lane
+        w.now = 1e9;
+        check(&mut core, &w);
+        // occupancy change forces the rebuild path
+        w.load.occupy_up(0);
+        check(&mut core, &w);
     }
 
     #[test]

@@ -14,6 +14,26 @@
 //!   most `2·P` flows receive non-zero rate; the walk early-exits once all
 //!   directions are saturated, and iterates each coflow's engine-maintained
 //!   `active_list` so finished flows of wide coflows cost nothing.
+//!
+//! ## Scratch architecture (zero steady-state allocation)
+//!
+//! The hot path is [`allocate_into`] + [`apply_grants`], which perform **no
+//! heap allocation in steady state**: every buffer lives in a caller-owned
+//! [`AllocScratch`] that is grown once and reused for every subsequent
+//! scheduling event. Concretely:
+//!
+//! * the [`CapacityLedger`] is reset in place from the fabric;
+//! * the grants list is a reused `Vec` cleared per call;
+//! * duplicate-grant merging (a flow granted in both the budgeted and the
+//!   backfill pass) uses **epoch-stamped dense per-flow tables**
+//!   (`grant_epoch`/`grant_slot`): bumping one counter invalidates the whole
+//!   table in O(1), so nothing is cleared and no hash map is built;
+//! * per-group port budgets are flattened `groups × ports` rows in two
+//!   reused `Vec<f64>`s.
+//!
+//! [`allocate`] and [`apply`] remain as thin compatibility wrappers that
+//! build the scratch per call; the simulator engine, the live service, and
+//! the benches all thread a persistent scratch through instead.
 
 use crate::coflow::{CoflowState, FlowState};
 use crate::fabric::{CapacityLedger, Fabric};
@@ -64,6 +84,11 @@ impl OrderEntry {
 /// groups model Aalo/Saath's "each queue receives a fixed bandwidth share
 /// at every port" semantics (paper §1.1). Strict-priority entries
 /// (`group: None`) are unbudgeted.
+///
+/// Plans are designed to be **caller-owned and reused**: schedulers write
+/// into an existing plan through [`Scheduler::order_into`]
+/// (`crate::coordinator::Scheduler::order_into`), so the entry vector's
+/// allocation is paid once per run, not once per scheduling event.
 #[derive(Debug, Clone, Default)]
 pub struct Plan {
     pub entries: Vec<OrderEntry>,
@@ -77,6 +102,12 @@ impl Plan {
             entries: coflows.into_iter().map(OrderEntry::all).collect(),
             group_weights: Vec::new(),
         }
+    }
+
+    /// Empty the plan, keeping both buffers' capacity for reuse.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.group_weights.clear();
     }
 }
 
@@ -97,35 +128,115 @@ impl Allocation {
     }
 }
 
+/// Reusable workspace for [`allocate_into`]/[`apply_grants`]. Construct once
+/// (cheap, empty) and thread through every allocation; all internal tables
+/// grow to the working-set high-water mark and are then reused without
+/// further heap traffic.
+#[derive(Debug, Clone, Default)]
+pub struct AllocScratch {
+    /// Residual port capacity, reset in place from the fabric per call.
+    ledger: CapacityLedger,
+    /// Current allocation round; stamps below are valid iff they equal it.
+    epoch: u64,
+    /// Per-flow stamp: `grant_epoch[f] == epoch` iff flow `f` holds a grant
+    /// this round.
+    grant_epoch: Vec<u64>,
+    /// Per-flow index into `grants` (valid only when the stamp is current) —
+    /// the O(1) replacement for the old `grants.iter_mut().find(...)` dedup.
+    grant_slot: Vec<u32>,
+    /// Flattened `groups × ports` pass-1 budgets.
+    budget_up: Vec<f64>,
+    budget_down: Vec<f64>,
+    /// `(flow, rate)` output of the last [`allocate_into`], priority order.
+    grants: Vec<(FlowId, f64)>,
+    /// Flows inspected by the last [`allocate_into`].
+    visited: usize,
+}
+
+impl AllocScratch {
+    pub fn new() -> Self {
+        AllocScratch { ledger: CapacityLedger::empty(), ..Default::default() }
+    }
+
+    /// Grants of the last allocation round, in priority order.
+    #[inline]
+    pub fn grants(&self) -> &[(FlowId, f64)] {
+        &self.grants
+    }
+
+    /// Flows inspected by the last allocation round.
+    #[inline]
+    pub fn visited(&self) -> usize {
+        self.visited
+    }
+
+    /// Whether `fid` received a grant in the last allocation round.
+    #[inline]
+    pub fn was_granted(&self, fid: FlowId) -> bool {
+        self.grant_epoch.get(fid).copied() == Some(self.epoch)
+    }
+
+    /// Rate granted to `fid` in the last round (0.0 if stalled).
+    #[inline]
+    pub fn granted_rate(&self, fid: FlowId) -> f64 {
+        if self.was_granted(fid) {
+            self.grants[self.grant_slot[fid] as usize].1
+        } else {
+            0.0
+        }
+    }
+
+    /// Copy the last round out as an owned [`Allocation`] (compat shim).
+    pub fn to_allocation(&self) -> Allocation {
+        Allocation { grants: self.grants.clone(), visited: self.visited }
+    }
+}
+
 /// Allocate rates for `plan` (entries highest priority first) against
-/// `fabric`.
+/// `fabric`, writing the result into `scratch` (see
+/// [`AllocScratch::grants`]). Zero heap allocation once the scratch tables
+/// have reached their high-water size.
 ///
 /// Two passes when bandwidth groups are present: pass 1 walks entries in
 /// priority order with each grouped claim capped by its group's per-port
 /// budget (`weight × port capacity`); pass 2 backfills the leftovers in the
 /// same priority order without budgets (work conservation). Group-free
 /// plans collapse to the single greedy pass.
-pub fn allocate(
+pub fn allocate_into(
     fabric: &Fabric,
     flows: &[FlowState],
     coflows: &[CoflowState],
     plan: &Plan,
-) -> Allocation {
-    let mut ledger = CapacityLedger::new(fabric);
-    let mut grants: Vec<(FlowId, f64)> = Vec::with_capacity((2 * fabric.num_ports).min(1024));
-    let mut visited = 0usize;
+    scratch: &mut AllocScratch,
+) {
+    scratch.epoch += 1;
+    let epoch = scratch.epoch;
+    if scratch.grant_epoch.len() < flows.len() {
+        scratch.grant_epoch.resize(flows.len(), 0);
+        scratch.grant_slot.resize(flows.len(), 0);
+    }
+    scratch.ledger.reset(fabric);
+    scratch.grants.clear();
+    scratch.visited = 0;
+
     let has_groups = plan.entries.iter().any(|e| e.group.is_some())
         && plan.group_weights.iter().any(|&w| w > 0.0);
 
-    // Per-group per-port budgets (pass 1 only).
-    let wsum: f64 = plan.group_weights.iter().sum();
-    let mut budget_up: Vec<Vec<f64>> = Vec::new();
-    let mut budget_down: Vec<Vec<f64>> = Vec::new();
+    // Per-group per-port budgets (pass 1 only), flattened groups-major.
+    let nports = fabric.num_ports;
     if has_groups {
-        for &w in &plan.group_weights {
+        let wsum: f64 = plan.group_weights.iter().sum();
+        let need = plan.group_weights.len() * nports;
+        if scratch.budget_up.len() < need {
+            scratch.budget_up.resize(need, 0.0);
+            scratch.budget_down.resize(need, 0.0);
+        }
+        for (g, &w) in plan.group_weights.iter().enumerate() {
             let frac = w / wsum;
-            budget_up.push(fabric.up_capacity.iter().map(|c| c * frac).collect());
-            budget_down.push(fabric.down_capacity.iter().map(|c| c * frac).collect());
+            for p in 0..nports {
+                scratch.budget_up[g * nports + p] = fabric.up_capacity[p] * frac;
+                scratch.budget_down[g * nports + p] = fabric.down_capacity[p] * frac;
+            }
         }
     }
 
@@ -152,15 +263,17 @@ pub fn allocate(
                     FlowFilter::NonPilots if f.pilot => continue,
                     _ => {}
                 }
-                visited += 1;
-                let up_before = ledger.up_left(f.src) > EPS;
-                let down_before = ledger.down_left(f.dst) > EPS;
+                scratch.visited += 1;
+                let up_before = scratch.ledger.up_left(f.src) > EPS;
+                let down_before = scratch.ledger.down_left(f.dst) > EPS;
                 if !up_before || !down_before {
                     continue;
                 }
                 let want = if budgeted {
                     match e.group {
-                        Some(g) => budget_up[g][f.src].min(budget_down[g][f.dst]).max(0.0),
+                        Some(g) => scratch.budget_up[g * nports + f.src]
+                            .min(scratch.budget_down[g * nports + f.dst])
+                            .max(0.0),
                         None => f64::INFINITY,
                     }
                 } else {
@@ -169,54 +282,96 @@ pub fn allocate(
                 if want <= EPS {
                     continue;
                 }
-                let granted = ledger.claim(f.src, f.dst, want);
+                let granted = scratch.ledger.claim(f.src, f.dst, want);
                 if granted > EPS {
-                    match grants.iter_mut().find(|(id, _)| *id == fid) {
-                        Some(g) => g.1 += granted,
-                        None => grants.push((fid, granted)),
+                    if scratch.grant_epoch[fid] == epoch {
+                        scratch.grants[scratch.grant_slot[fid] as usize].1 += granted;
+                    } else {
+                        scratch.grant_epoch[fid] = epoch;
+                        scratch.grant_slot[fid] = scratch.grants.len() as u32;
+                        scratch.grants.push((fid, granted));
                     }
                     if budgeted {
                         if let Some(g) = e.group {
-                            budget_up[g][f.src] -= granted;
-                            budget_down[g][f.dst] -= granted;
+                            scratch.budget_up[g * nports + f.src] -= granted;
+                            scratch.budget_down[g * nports + f.dst] -= granted;
                         }
                     }
                 }
-                if up_before && ledger.up_left(f.src) <= EPS {
+                if up_before && scratch.ledger.up_left(f.src) <= EPS {
                     open_up -= 1;
                 }
-                if down_before && ledger.down_left(f.dst) <= EPS {
+                if down_before && scratch.ledger.down_left(f.dst) <= EPS {
                     open_down -= 1;
                 }
             }
         }
     }
-    Allocation { grants, visited }
 }
 
-/// Apply an allocation to the flow table: zero every active rate of the
-/// ordered coflows, then set the granted rates. Returns the number of flows
+/// Compatibility wrapper: allocate with a fresh scratch and return an owned
+/// [`Allocation`]. Prefer [`allocate_into`] with a persistent
+/// [`AllocScratch`] on hot paths.
+pub fn allocate(
+    fabric: &Fabric,
+    flows: &[FlowState],
+    coflows: &[CoflowState],
+    plan: &Plan,
+) -> Allocation {
+    let mut scratch = AllocScratch::new();
+    allocate_into(fabric, flows, coflows, plan, &mut scratch);
+    Allocation { grants: scratch.grants, visited: scratch.visited }
+}
+
+/// Apply a grants list to the flow table: set granted rates, zero every
+/// other active rate of the ordered coflows. Returns the number of flows
 /// whose rate changed (the count of `new rate` messages the coordinator
 /// must push to agents — the Table 3 “New Rate Send” column).
+///
+/// Allocation-free: instead of a per-call lookup table, granted flows are
+/// tagged in place via [`FlowState::alloc_mark`] (pass 1), the plan walk
+/// zeroes untagged flows (pass 2), and the tags are cleared again (pass 3).
+/// Only flows whose rate actually changed are written.
+pub fn apply_grants(
+    flows: &mut [FlowState],
+    coflows: &[CoflowState],
+    plan: &Plan,
+    grants: &[(FlowId, f64)],
+) -> usize {
+    let mut changed = 0;
+    for &(fid, r) in grants {
+        let f = &mut flows[fid];
+        if (f.rate - r).abs() > EPS {
+            changed += 1;
+            f.rate = r;
+        }
+        f.alloc_mark = true;
+    }
+    for e in &plan.entries {
+        for &fid in &coflows[e.coflow].active_list {
+            let f = &mut flows[fid];
+            if !f.alloc_mark && f.rate.abs() > EPS {
+                changed += 1;
+                f.rate = 0.0;
+            } else if !f.alloc_mark {
+                f.rate = 0.0;
+            }
+        }
+    }
+    for &(fid, _) in grants {
+        flows[fid].alloc_mark = false;
+    }
+    changed
+}
+
+/// Compatibility wrapper over [`apply_grants`] taking an [`Allocation`].
 pub fn apply(
     flows: &mut [FlowState],
     coflows: &[CoflowState],
     plan: &Plan,
     alloc: &Allocation,
 ) -> usize {
-    let granted: std::collections::HashMap<FlowId, f64> =
-        alloc.grants.iter().copied().collect();
-    let mut changed = 0;
-    for e in &plan.entries {
-        for &fid in &coflows[e.coflow].active_list {
-            let new = granted.get(&fid).copied().unwrap_or(0.0);
-            if (flows[fid].rate - new).abs() > EPS {
-                changed += 1;
-            }
-            flows[fid].rate = new;
-        }
-    }
-    changed
+    apply_grants(flows, coflows, plan, &alloc.grants)
 }
 
 #[cfg(test)]
@@ -265,7 +420,8 @@ mod tests {
     #[test]
     fn grouped_backfill_is_work_conserving() {
         // only group 1 has a runnable flow: pass 1 gives it its 1/3 share,
-        // pass 2 tops it up to the full port.
+        // pass 2 tops it up to the full port — and the two grants must be
+        // merged into one entry by the stamped dedup.
         let fabric = Fabric::homogeneous(2, 90.0);
         let (flows, coflows) = setup(&[(0, 1, 10.0)]);
         let plan = Plan {
@@ -348,9 +504,53 @@ mod tests {
         assert_eq!(changed, 1); // only flow 0 started
         assert_eq!(flows[0].rate, 100.0);
         assert_eq!(flows[1].rate, 0.0);
+        assert!(flows.iter().all(|f| !f.alloc_mark), "marks must be cleared");
         // re-applying the identical allocation changes nothing
         let alloc2 = allocate(&fabric, &flows, &coflows, &order);
         let changed2 = apply(&mut flows, &coflows, &order, &alloc2);
         assert_eq!(changed2, 0);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_allocation() {
+        let fabric = Fabric::homogeneous(4, 100.0);
+        let (flows, coflows) =
+            setup(&[(0, 1, 10.0), (0, 2, 10.0), (2, 3, 10.0), (3, 1, 10.0)]);
+        let plan = entries(4);
+        let mut scratch = AllocScratch::new();
+        for _ in 0..3 {
+            allocate_into(&fabric, &flows, &coflows, &plan, &mut scratch);
+            let fresh = allocate(&fabric, &flows, &coflows, &plan);
+            assert_eq!(scratch.grants(), &fresh.grants[..]);
+            assert_eq!(scratch.visited(), fresh.visited);
+        }
+    }
+
+    #[test]
+    fn scratch_grant_queries() {
+        let fabric = Fabric::homogeneous(2, 100.0);
+        let (flows, coflows) = setup(&[(0, 1, 10.0), (0, 1, 10.0)]);
+        let mut scratch = AllocScratch::new();
+        allocate_into(&fabric, &flows, &coflows, &entries(2), &mut scratch);
+        assert!(scratch.was_granted(0));
+        assert!(!scratch.was_granted(1));
+        assert_eq!(scratch.granted_rate(0), 100.0);
+        assert_eq!(scratch.granted_rate(1), 0.0);
+        // next round invalidates the previous stamps wholesale
+        let empty = Plan::default();
+        allocate_into(&fabric, &flows, &coflows, &empty, &mut scratch);
+        assert!(!scratch.was_granted(0));
+        assert_eq!(scratch.grants().len(), 0);
+    }
+
+    #[test]
+    fn apply_grants_zeroes_only_planned_flows() {
+        let fabric = Fabric::homogeneous(2, 100.0);
+        let (mut flows, coflows) = setup(&[(0, 1, 10.0), (0, 1, 10.0)]);
+        flows[1].rate = 55.0; // stale rate on the flow the plan covers
+        let alloc = allocate(&fabric, &flows, &coflows, &entries(2));
+        let changed = apply(&mut flows, &coflows, &entries(2), &alloc);
+        assert_eq!(changed, 2); // flow 0 gained 100, flow 1 lost 55
+        assert_eq!(flows[1].rate, 0.0);
     }
 }

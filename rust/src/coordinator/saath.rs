@@ -14,14 +14,67 @@
 use super::{OrderEntry, Plan, Reaction, Scheduler, SchedulerConfig, World};
 use crate::{Bytes, CoflowId, FlowId};
 
+/// Intra-queue comparator: `(queue, contention, seq, cid)` ascending —
+/// seq is unique, so the order is total.
+#[inline]
+fn cmp_key(a: &(usize, f64, u64, CoflowId), b: &(usize, f64, u64, CoflowId)) -> std::cmp::Ordering {
+    a.0.cmp(&b.0)
+        .then(a.1.total_cmp(&b.1))
+        .then(a.2.cmp(&b.2))
+        .then(a.3.cmp(&b.3))
+}
+
+fn insert_key(v: &mut Vec<(usize, f64, u64, CoflowId)>, key: (usize, f64, u64, CoflowId)) {
+    super::insert_sorted(v, key, cmp_key);
+}
+
+fn remove_key(v: &mut Vec<(usize, f64, u64, CoflowId)>, key: (usize, f64, u64, CoflowId)) {
+    super::remove_sorted(v, &key, cmp_key, |e| e.3 == key.3);
+}
+
 pub struct SaathScheduler {
     cfg: SchedulerConfig,
     pub queue_moves: u64,
+    /// Static D-CLAS group weights.
+    weights: Vec<f64>,
+    /// Incrementally maintained order, sorted by
+    /// `(queue, contention, seq, cid)`. Queue transitions repair one entry;
+    /// port-occupancy changes (which move contention terms wholesale)
+    /// trigger the only full rebuild, keyed on `PortLoad::occ_epoch`.
+    sorted: Vec<(usize, f64, u64, CoflowId)>,
+    /// Cached key parts per coflow (`usize::MAX` queue = absent).
+    cached_queue: Vec<usize>,
+    cached_cont: Vec<f64>,
+    cached_seq: Vec<u64>,
+    seen: Vec<u64>,
+    scan: u64,
+    last_occ: u64,
 }
 
 impl SaathScheduler {
     pub fn new(cfg: SchedulerConfig) -> Self {
-        SaathScheduler { cfg, queue_moves: 0 }
+        let weights = (0..cfg.num_queues).map(|q| 0.5f64.powi(q as i32)).collect();
+        SaathScheduler {
+            cfg,
+            queue_moves: 0,
+            weights,
+            sorted: Vec::new(),
+            cached_queue: Vec::new(),
+            cached_cont: Vec::new(),
+            cached_seq: Vec::new(),
+            seen: Vec::new(),
+            scan: 0,
+            last_occ: u64::MAX,
+        }
+    }
+
+    fn ensure(&mut self, cid: CoflowId) {
+        if cid >= self.cached_queue.len() {
+            self.cached_queue.resize(cid + 1, usize::MAX);
+            self.cached_cont.resize(cid + 1, 0.0);
+            self.cached_seq.resize(cid + 1, 0);
+            self.seen.resize(cid + 1, 0);
+        }
     }
 
     /// Queue from the longest *finished* flow: thresholds E·Sⁱ like Aalo,
@@ -80,9 +133,84 @@ impl Scheduler for SaathScheduler {
         Reaction::Reallocate
     }
 
-    fn order(&mut self, world: &World) -> Plan {
-        // (queue, contention, FIFO seq): low-contention coflows first within
-        // a queue — they can be finished off and free their ports fastest.
+    /// (queue, contention, FIFO seq): low-contention coflows first within
+    /// a queue — they can be finished off and free their ports fastest.
+    ///
+    /// Incremental: contention terms are cached and only recomputed when
+    /// `PortLoad::occ_epoch` moves (the rebuild path); otherwise only
+    /// coflows whose queue changed are repositioned.
+    fn order_into(&mut self, world: &World, plan: &mut Plan) {
+        self.scan = self.scan.wrapping_add(1);
+        let scan = self.scan;
+        if self.last_occ != world.load.occ_epoch {
+            // contention moved wholesale: rebuild into the reused buffer
+            self.sorted.clear();
+            for idx in 0..world.active.len() {
+                let cid = world.active[idx];
+                let c = &world.coflows[cid];
+                if c.done() {
+                    continue;
+                }
+                self.ensure(cid);
+                self.seen[cid] = scan;
+                let cont = self.contention(world, cid);
+                self.cached_queue[cid] = c.queue;
+                self.cached_cont[cid] = cont;
+                self.cached_seq[cid] = c.seq;
+                self.sorted.push((c.queue, cont, c.seq, cid));
+            }
+            self.sorted.sort_unstable_by(cmp_key);
+            self.last_occ = world.load.occ_epoch;
+        } else {
+            for idx in 0..world.active.len() {
+                let cid = world.active[idx];
+                let c = &world.coflows[cid];
+                if c.done() {
+                    continue;
+                }
+                self.ensure(cid);
+                self.seen[cid] = scan;
+                if self.cached_queue[cid] == usize::MAX {
+                    // new coflow under unchanged occupancy
+                    let cont = self.contention(world, cid);
+                    self.cached_queue[cid] = c.queue;
+                    self.cached_cont[cid] = cont;
+                    self.cached_seq[cid] = c.seq;
+                    insert_key(&mut self.sorted, (c.queue, cont, c.seq, cid));
+                } else if self.cached_queue[cid] != c.queue {
+                    remove_key(
+                        &mut self.sorted,
+                        (
+                            self.cached_queue[cid],
+                            self.cached_cont[cid],
+                            self.cached_seq[cid],
+                            cid,
+                        ),
+                    );
+                    self.cached_queue[cid] = c.queue;
+                    insert_key(
+                        &mut self.sorted,
+                        (c.queue, self.cached_cont[cid], self.cached_seq[cid], cid),
+                    );
+                }
+            }
+        }
+        plan.clear();
+        let mut w = 0;
+        for r in 0..self.sorted.len() {
+            let (q, cont, seq, cid) = self.sorted[r];
+            if self.seen[cid] == scan && self.cached_queue[cid] == q {
+                self.sorted[w] = (q, cont, seq, cid);
+                w += 1;
+                plan.entries.push(OrderEntry::grouped(cid, q));
+            }
+        }
+        self.sorted.truncate(w);
+        plan.group_weights.clone_from(&self.weights);
+    }
+
+    /// From-scratch oracle rebuild (see trait docs).
+    fn order_full_into(&mut self, world: &World, plan: &mut Plan) {
         let mut coflows: Vec<(usize, f64, u64, CoflowId)> = world
             .active
             .iter()
@@ -92,19 +220,11 @@ impl Scheduler for SaathScheduler {
                 (c.queue, self.contention(world, cid), c.seq, cid)
             })
             .collect();
-        coflows.sort_by(|a, b| {
-            a.0.cmp(&b.0)
-                .then(a.1.total_cmp(&b.1))
-                .then(a.2.cmp(&b.2))
-        });
-        let entries = coflows
-            .into_iter()
-            .map(|(q, _, _, cid)| OrderEntry::grouped(cid, q))
-            .collect();
-        let group_weights = (0..self.cfg.num_queues)
-            .map(|q| 0.5f64.powi(q as i32))
-            .collect();
-        Plan { entries, group_weights }
+        coflows.sort_unstable_by(cmp_key);
+        plan.clear();
+        plan.entries
+            .extend(coflows.into_iter().map(|(q, _, _, cid)| OrderEntry::grouped(cid, q)));
+        plan.group_weights.clone_from(&self.weights);
     }
 }
 

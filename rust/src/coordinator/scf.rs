@@ -6,12 +6,15 @@
 //! Philae's sampling approximates; the gap between Philae and SCF is the
 //! cost of learning.
 
-use super::{Plan, Reaction, Scheduler, World};
+use super::{OrderEntry, Plan, Reaction, Scheduler, World};
 use crate::trace::Trace;
 use crate::{Bytes, CoflowId, FlowId};
 
 pub struct ScfScheduler {
     total_bytes: Vec<Bytes>,
+    /// Reused sort buffer — remaining size moves with every byte sent, so
+    /// the order is rebuilt per event but allocation-free in steady state.
+    scratch: Vec<(f64, u64, CoflowId)>,
 }
 
 impl ScfScheduler {
@@ -19,6 +22,7 @@ impl ScfScheduler {
         let oracles = trace.oracles();
         ScfScheduler {
             total_bytes: oracles.iter().map(|o| o.total_bytes).collect(),
+            scratch: Vec::new(),
         }
     }
 }
@@ -36,19 +40,21 @@ impl Scheduler for ScfScheduler {
         Reaction::Reallocate
     }
 
-    fn order(&mut self, world: &World) -> Plan {
-        let mut coflows: Vec<(f64, u64, CoflowId)> = world
-            .active
-            .iter()
-            .filter(|&&cid| !world.coflows[cid].done())
-            .map(|&cid| {
-                let c = &world.coflows[cid];
-                let remaining = (self.total_bytes[cid] - c.bytes_sent).max(0.0);
-                (remaining, c.seq, cid)
-            })
-            .collect();
-        coflows.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-        Plan::strict(coflows.into_iter().map(|(_, _, cid)| cid))
+    fn order_into(&mut self, world: &World, plan: &mut Plan) {
+        self.scratch.clear();
+        for &cid in &world.active {
+            let c = &world.coflows[cid];
+            if c.done() {
+                continue;
+            }
+            let remaining = (self.total_bytes[cid] - c.bytes_sent).max(0.0);
+            self.scratch.push((remaining, c.seq, cid));
+        }
+        self.scratch
+            .sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        plan.clear();
+        plan.entries
+            .extend(self.scratch.iter().map(|&(_, _, cid)| OrderEntry::all(cid)));
     }
 }
 

@@ -3,13 +3,17 @@
 //! port — the quantity that lower-bounds the coflow's completion time on a
 //! non-blocking fabric.
 
-use super::{Plan, Reaction, Scheduler, World};
+use super::{OrderEntry, Plan, Reaction, Scheduler, World};
 use crate::trace::Trace;
 use crate::{Bytes, CoflowId, FlowId};
 
 pub struct SebfScheduler {
     bottleneck: Vec<Bytes>,
     total: Vec<Bytes>,
+    /// Reused sort buffer — the SEBF key moves with every byte sent by
+    /// every coflow, so there is no stable order to repair incrementally;
+    /// the rebuild at least allocates nothing in steady state.
+    scratch: Vec<(f64, u64, CoflowId)>,
 }
 
 impl SebfScheduler {
@@ -18,6 +22,7 @@ impl SebfScheduler {
         SebfScheduler {
             bottleneck: oracles.iter().map(|o| o.bottleneck_bytes).collect(),
             total: oracles.iter().map(|o| o.total_bytes).collect(),
+            scratch: Vec::new(),
         }
     }
 
@@ -48,18 +53,21 @@ impl Scheduler for SebfScheduler {
         Reaction::Reallocate
     }
 
-    fn order(&mut self, world: &World) -> Plan {
-        let mut coflows: Vec<(f64, u64, CoflowId)> = world
-            .active
-            .iter()
-            .filter(|&&cid| !world.coflows[cid].done())
-            .map(|&cid| {
-                let c = &world.coflows[cid];
-                (self.remaining_bottleneck(cid, c.bytes_sent), c.seq, cid)
-            })
-            .collect();
-        coflows.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-        Plan::strict(coflows.into_iter().map(|(_, _, cid)| cid))
+    fn order_into(&mut self, world: &World, plan: &mut Plan) {
+        self.scratch.clear();
+        for &cid in &world.active {
+            let c = &world.coflows[cid];
+            if c.done() {
+                continue;
+            }
+            let key = (self.remaining_bottleneck(cid, c.bytes_sent), c.seq, cid);
+            self.scratch.push(key);
+        }
+        self.scratch
+            .sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        plan.clear();
+        plan.entries
+            .extend(self.scratch.iter().map(|&(_, _, cid)| OrderEntry::all(cid)));
     }
 }
 

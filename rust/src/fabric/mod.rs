@@ -38,7 +38,7 @@ impl Fabric {
 
 /// A mutable view of remaining port capacity used while building one rate
 /// allocation. Greedy allocators draw from it in priority order.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct CapacityLedger {
     up: Vec<f64>,
     down: Vec<f64>,
@@ -50,6 +50,21 @@ impl CapacityLedger {
             up: fabric.up_capacity.clone(),
             down: fabric.down_capacity.clone(),
         }
+    }
+
+    /// An empty ledger to be [`reset`](Self::reset) before first use — the
+    /// allocation-free construction path for reusable scratch state.
+    pub fn empty() -> Self {
+        CapacityLedger { up: Vec::new(), down: Vec::new() }
+    }
+
+    /// Reload the residuals from `fabric`, reusing the existing buffers
+    /// (allocates only if the port count grew).
+    pub fn reset(&mut self, fabric: &Fabric) {
+        self.up.clear();
+        self.up.extend_from_slice(&fabric.up_capacity);
+        self.down.clear();
+        self.down.extend_from_slice(&fabric.down_capacity);
     }
 
     /// Residual rate available on the (src→dst) pair.
@@ -100,6 +115,13 @@ pub struct PortLoad {
     pub up_coflows: Vec<usize>,
     /// Distinct active coflows per downlink.
     pub down_coflows: Vec<usize>,
+    /// Monotone counter bumped on every occupancy change (see the
+    /// `occupy_*`/`release_*` methods). Schedulers cache contention-derived
+    /// priority scores keyed on this epoch: while it is unchanged, no
+    /// coflow's port-sharing picture has moved, so cached scores are exact.
+    /// Mutate occupancy through the methods — writing the counters directly
+    /// leaves stale caches behind.
+    pub occ_epoch: u64,
 }
 
 impl PortLoad {
@@ -109,7 +131,36 @@ impl PortLoad {
             down_bytes: vec![0.0; num_ports],
             up_coflows: vec![0; num_ports],
             down_coflows: vec![0; num_ports],
+            occ_epoch: 0,
         }
+    }
+
+    /// A coflow now occupies uplink `p`.
+    #[inline]
+    pub fn occupy_up(&mut self, p: PortId) {
+        self.up_coflows[p] += 1;
+        self.occ_epoch += 1;
+    }
+
+    /// A coflow now occupies downlink `p`.
+    #[inline]
+    pub fn occupy_down(&mut self, p: PortId) {
+        self.down_coflows[p] += 1;
+        self.occ_epoch += 1;
+    }
+
+    /// A coflow's last flow at uplink `p` finished.
+    #[inline]
+    pub fn release_up(&mut self, p: PortId) {
+        self.up_coflows[p] = self.up_coflows[p].saturating_sub(1);
+        self.occ_epoch += 1;
+    }
+
+    /// A coflow's last flow at downlink `p` finished.
+    #[inline]
+    pub fn release_down(&mut self, p: PortId) {
+        self.down_coflows[p] = self.down_coflows[p].saturating_sub(1);
+        self.occ_epoch += 1;
     }
 
     /// Combined busyness of the (src,dst) pair in backlogged bytes — the
@@ -154,6 +205,35 @@ mod tests {
         let l = CapacityLedger::new(&fabric);
         assert_eq!(l.available(0, 1), 30.0);
         assert_eq!(l.available(1, 0), 100.0);
+    }
+
+    #[test]
+    fn ledger_reset_reuses_buffers() {
+        let fabric = Fabric::homogeneous(2, 100.0);
+        let mut l = CapacityLedger::empty();
+        l.reset(&fabric);
+        assert_eq!(l.claim(0, 1, 30.0), 30.0);
+        l.reset(&fabric);
+        assert_eq!(l.available(0, 1), 100.0);
+    }
+
+    #[test]
+    fn occupancy_methods_bump_epoch() {
+        let mut load = PortLoad::new(2);
+        assert_eq!(load.occ_epoch, 0);
+        load.occupy_up(0);
+        load.occupy_down(1);
+        assert_eq!(load.up_coflows[0], 1);
+        assert_eq!(load.down_coflows[1], 1);
+        assert_eq!(load.occ_epoch, 2);
+        load.release_up(0);
+        load.release_down(1);
+        assert_eq!(load.up_coflows[0], 0);
+        assert_eq!(load.occ_epoch, 4);
+        // saturating: double release stays at zero but still bumps
+        load.release_up(0);
+        assert_eq!(load.up_coflows[0], 0);
+        assert_eq!(load.occ_epoch, 5);
     }
 
     #[test]

@@ -1,0 +1,69 @@
+//! Stub PJRT engine, compiled when the `pjrt` feature is off (no `xla`
+//! crate available — e.g. vanilla CI runners without the XLA extension
+//! library). `load` always fails with a clear message, so every caller
+//! takes its existing missing-artifacts fallback: the simulator and the
+//! service score through the `native_*` mirrors instead.
+
+use super::features::ShapeManifest;
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+/// Outputs of one scorer execution, trimmed to the live rows (same shape
+/// as the real engine's).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScorerOutput {
+    /// Priority score (lower = sooner).
+    pub score: Vec<f32>,
+    /// Size estimate (mean × nflows).
+    pub est: Vec<f32>,
+    /// Bootstrap lower-confidence-bound estimate.
+    pub lcb: Vec<f32>,
+    /// Per-coflow contention.
+    pub contention: Vec<f32>,
+}
+
+/// Never constructible: [`Engine::load`] always errors without `pjrt`.
+pub struct Engine {
+    pub manifest: ShapeManifest,
+    dir: PathBuf,
+}
+
+impl Engine {
+    pub fn load(_dir: impl AsRef<Path>) -> Result<Self> {
+        bail!(
+            "PJRT engine unavailable: this binary was built without the \
+             `pjrt` feature (no `xla` crate); rebuild with \
+             `cargo build --features pjrt` on an image that carries the \
+             XLA extension library"
+        );
+    }
+
+    /// PJRT platform (diagnostics).
+    pub fn platform(&self) -> String {
+        "stub".into()
+    }
+
+    /// Artifact directory this engine was loaded from.
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn score(
+        &self,
+        _batch: &super::features::BatchFeatures,
+        _weight: f32,
+    ) -> Result<ScorerOutput> {
+        bail!("PJRT engine unavailable (built without the `pjrt` feature)");
+    }
+
+    pub fn estimate(
+        &self,
+        _batch: &super::features::BatchFeatures,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        bail!("PJRT engine unavailable (built without the `pjrt` feature)");
+    }
+
+    pub fn contention(&self, _batch: &super::features::BatchFeatures) -> Result<Vec<f32>> {
+        bail!("PJRT engine unavailable (built without the `pjrt` feature)");
+    }
+}

@@ -7,6 +7,13 @@
 //! in rust so the simulator and tests run without artifacts; parity between
 //! the two paths is asserted in `rust/tests/runtime_parity.rs`.
 
+#[cfg(feature = "pjrt")]
+mod engine;
+/// Without the `pjrt` feature (no `xla` crate / XLA extension library),
+/// the engine is a stub whose `load` always fails — callers fall back to
+/// the `native_*` path below.
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 mod engine;
 mod features;
 

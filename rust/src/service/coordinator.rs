@@ -5,7 +5,7 @@ use crate::agents::{AgentMsg, AgentSim, CoordMsg};
 use crate::coflow::{CoflowPhase, CoflowState, FlowState};
 use crate::coordinator::{
     philae::{CompletionOutcome, PhilaeCore},
-    rate, AaloScheduler, Scheduler, SchedulerConfig, SchedulerKind, World,
+    rate, AaloScheduler, Plan, Scheduler, SchedulerConfig, SchedulerKind, World,
 };
 use crate::fabric::{Fabric, PortLoad};
 use crate::metrics::{IntervalStats, RunningStat};
@@ -145,6 +145,10 @@ struct Coordinator {
     agent_threads: Vec<thread::JoinHandle<()>>,
     port_refs: Vec<Vec<(PortId, usize)>>, // per coflow: (src port, active refs)
     port_refs_down: Vec<Vec<(PortId, usize)>>,
+    /// Reused scheduling plan (see `Scheduler::order_into`).
+    plan: Plan,
+    /// Reused allocation workspace shared with the simulator's hot path.
+    scratch: rate::AllocScratch,
     last_rates: HashMap<FlowId, f64>,
     /// Cached PJRT scores; refreshed only when the estimated set changes
     /// (new estimate / coflow completion / arrival), not per event — one
@@ -206,6 +210,8 @@ impl Coordinator {
             agent_threads: Vec::new(),
             port_refs: Vec::new(),
             port_refs_down: Vec::new(),
+            plan: Plan::default(),
+            scratch: rate::AllocScratch::new(),
             last_rates: HashMap::new(),
             cached_scores: HashMap::new(),
             scores_dirty: true,
@@ -481,10 +487,10 @@ impl Coordinator {
             }
         }
         for &(p, _) in &up {
-            self.world.load.up_coflows[p] += 1;
+            self.world.load.occupy_up(p);
         }
         for &(p, _) in &down {
-            self.world.load.down_coflows[p] += 1;
+            self.world.load.occupy_down(p);
         }
         self.port_refs.push(up);
         self.port_refs_down.push(down);
@@ -531,15 +537,16 @@ impl Coordinator {
                     (self.world.load.down_bytes[fl.dst] - fl.size).max(0.0);
             }
         }
-        for &(p, n) in &self.port_refs[cid] {
+        for i in 0..self.port_refs[cid].len() {
+            let (p, n) = self.port_refs[cid][i];
             if n > 0 {
-                self.world.load.up_coflows[p] = self.world.load.up_coflows[p].saturating_sub(1);
+                self.world.load.release_up(p);
             }
         }
-        for &(p, n) in &self.port_refs_down[cid] {
+        for i in 0..self.port_refs_down[cid].len() {
+            let (p, n) = self.port_refs_down[cid][i];
             if n > 0 {
-                self.world.load.down_coflows[p] =
-                    self.world.load.down_coflows[p].saturating_sub(1);
+                self.world.load.release_down(p);
             }
         }
         self.port_refs[cid].clear();
@@ -574,22 +581,24 @@ impl Coordinator {
                     (self.world.load.up_bytes[fl.src] - size).max(0.0);
                 self.world.load.down_bytes[fl.dst] =
                     (self.world.load.down_bytes[fl.dst] - size).max(0.0);
+                let mut freed_up = false;
                 if let Some(e) = self.port_refs[coflow].iter_mut().find(|(p, _)| *p == fl.src) {
                     e.1 = e.1.saturating_sub(1);
-                    if e.1 == 0 {
-                        self.world.load.up_coflows[fl.src] =
-                            self.world.load.up_coflows[fl.src].saturating_sub(1);
-                    }
+                    freed_up = e.1 == 0;
                 }
+                if freed_up {
+                    self.world.load.release_up(fl.src);
+                }
+                let mut freed_down = false;
                 if let Some(e) = self.port_refs_down[coflow]
                     .iter_mut()
                     .find(|(p, _)| *p == fl.dst)
                 {
                     e.1 = e.1.saturating_sub(1);
-                    if e.1 == 0 {
-                        self.world.load.down_coflows[fl.dst] =
-                            self.world.load.down_coflows[fl.dst].saturating_sub(1);
-                    }
+                    freed_down = e.1 == 0;
+                }
+                if freed_down {
+                    self.world.load.release_down(fl.dst);
                 }
                 // learning hooks (Philae's sampling state machine)
                 if let Some(mut ph) = self.philae.take() {
@@ -672,41 +681,53 @@ impl Coordinator {
     }
 
     /// Compute the priority order (through the PJRT scorer when loaded),
-    /// allocate rates, and push per-agent schedules.
+    /// allocate rates, and push per-agent schedules. Shares the incremental
+    /// order path and the [`rate::AllocScratch`] workspace with the
+    /// simulator's hot loop — the coordinator thread allocates nothing per
+    /// event in the native-scoring steady state.
     fn reallocate(&mut self) {
         let t0 = Instant::now();
-        let plan: crate::coordinator::Plan = if let Some(ph) = self.philae.as_ref() {
+        if self.philae.is_some() {
             if self.engine.is_some() {
                 if self.scores_dirty {
                     self.cached_scores = self.engine_scores();
                     self.scores_dirty = false;
                 }
-                self.philae
+                let p = self
+                    .philae
                     .as_ref()
                     .unwrap()
-                    .order_with_scores(&self.world, &self.cached_scores)
+                    .order_with_scores(&self.world, &self.cached_scores);
+                self.plan = p;
             } else {
-                ph.order(&self.world)
+                let mut ph = self.philae.take().unwrap();
+                ph.order_into(&self.world, &mut self.plan);
+                self.philae = Some(ph);
             }
         } else if let Some(mut aalo) = self.aalo.take() {
-            let o = aalo.order(&self.world);
+            aalo.order_into(&self.world, &mut self.plan);
             self.aalo = Some(aalo);
-            o
         } else {
-            crate::coordinator::Plan::default()
-        };
-        let alloc =
-            rate::allocate(&self.world.fabric, &self.world.flows, &self.world.coflows, &plan);
+            self.plan.clear();
+        }
+        rate::allocate_into(
+            &self.world.fabric,
+            &self.world.flows,
+            &self.world.coflows,
+            &self.plan,
+            &mut self.scratch,
+        );
         let calc = t0.elapsed().as_secs_f64();
         self.iv_calc += calc;
         self.iv_rate_calcs += 1;
         self.rate_calcs += 1;
 
-        // diff against last flushed rates, group by src agent
+        // diff against last flushed rates, group by src agent — lookups go
+        // through the scratch's stamped grant table, so no per-call rate map
+        // is built
         let t1 = Instant::now();
-        let new_rates: HashMap<FlowId, f64> = alloc.grants.iter().copied().collect();
         let mut dirty_agents: Vec<PortId> = Vec::new();
-        for (&f, &r) in &new_rates {
+        for &(f, r) in self.scratch.grants() {
             let prev = self.last_rates.get(&f).copied().unwrap_or(0.0);
             if (prev - r).abs() > crate::EPS {
                 let a = self.world.flows[f].src;
@@ -716,7 +737,7 @@ impl Coordinator {
             }
         }
         for (&f, _) in self.last_rates.iter() {
-            if !new_rates.contains_key(&f) && !self.world.flows[f].done() {
+            if !self.scratch.was_granted(f) && !self.world.flows[f].done() {
                 let a = self.world.flows[f].src;
                 if !dirty_agents.contains(&a) {
                     dirty_agents.push(a);
@@ -726,16 +747,20 @@ impl Coordinator {
         // a schedule message carries *all* rates for that agent so "comply
         // with the last schedule" stays consistent
         for &agent in &dirty_agents {
-            let rates: Vec<(FlowId, f64)> = new_rates
+            let rates: Vec<(FlowId, f64)> = self
+                .scratch
+                .grants()
                 .iter()
-                .filter(|(&f, _)| self.world.flows[f].src == agent)
-                .map(|(&f, &r)| (f, r))
+                .filter(|&&(f, _)| self.world.flows[f].src == agent)
+                .copied()
                 .collect();
             let _ = self.agents[agent].tx.send(CoordMsg::NewSchedule { rates });
             self.iv_rate_msgs += 1;
             self.rate_msgs += 1;
         }
-        self.last_rates = new_rates;
+        self.last_rates.clear();
+        self.last_rates
+            .extend(self.scratch.grants().iter().copied());
         self.iv_send += t1.elapsed().as_secs_f64();
     }
 

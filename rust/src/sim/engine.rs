@@ -1,6 +1,29 @@
 //! The event loop.
+//!
+//! ## Hot-path architecture: scratch reuse + incremental ordering
+//!
+//! Coordinator compute is *simulated CCT* here: measured `order + allocate`
+//! wall time feeds the §4.3 deadline model (a tick whose work exceeds δ is
+//! skipped), so the reallocation path is engineered for zero steady-state
+//! heap allocation:
+//!
+//! * [`Scheduler::order_into`] writes into one engine-owned, reused
+//!   [`Plan`]; schedulers maintain their priority order incrementally
+//!   (binary-search repair around the coflow whose key changed) instead of
+//!   re-sorting all active coflows per event.
+//! * [`rate::allocate_into`] runs against an engine-owned
+//!   [`rate::AllocScratch`]: reusable capacity ledger, reused grants
+//!   buffer, and epoch-stamped dense per-flow tables that replace the old
+//!   per-event `HashMap`s and O(G²) grant dedup.
+//! * The engine's own bookkeeping (`running` set, per-coflow `rate_sum`
+//!   integrator) uses the same pattern: swap buffers plus an epoch-stamped
+//!   dirty list, cleared in O(changed) rather than O(total).
+//!
+//! [`SimConfig::full_recompute`] forces [`Scheduler::order_full_into`] — the
+//! from-scratch oracle path — instead; `rust/tests/cct_equivalence.rs`
+//! asserts the two produce bit-identical per-coflow CCTs.
 
-use crate::coordinator::{rate, Reaction, Scheduler, SchedulerConfig, SchedulerKind, World};
+use crate::coordinator::{rate, Plan, Reaction, Scheduler, SchedulerConfig, SchedulerKind, World};
 use crate::coflow::{CoflowState, FlowState};
 use crate::fabric::{Fabric, PortLoad};
 use crate::metrics::{IntervalStats, MessageCostModel, RunningStat};
@@ -22,6 +45,11 @@ pub struct SimConfig {
     pub costs: MessageCostModel,
     /// Hard cap on simulated seconds (safety net; 0 = unlimited).
     pub max_sim_time: Time,
+    /// Route every reallocation through [`Scheduler::order_full_into`]
+    /// (the from-scratch oracle) instead of the incremental
+    /// [`Scheduler::order_into`]. Slower; exists so equivalence tests can
+    /// pin the incremental engine to the reference behavior bit-for-bit.
+    pub full_recompute: bool,
 }
 
 impl Default for SimConfig {
@@ -31,6 +59,7 @@ impl Default for SimConfig {
             account_delta: None,
             costs: MessageCostModel::default(),
             max_sim_time: 0.0,
+            full_recompute: false,
         }
     }
 }
@@ -168,8 +197,22 @@ struct Engine {
     epoch: Vec<u64>,
     /// Flows currently holding a non-zero rate.
     running: Vec<FlowId>,
+    /// Spare buffer swapped with `running` on each reallocation so the new
+    /// running set is built without allocating.
+    running_spare: Vec<FlowId>,
     /// Per-coflow sum of allocated rates (progress integration).
     rate_sum: Vec<f64>,
+    /// Coflows whose `rate_sum` must be rebuilt this round (reused buffer).
+    rate_dirty: Vec<CoflowId>,
+    /// Epoch-stamped membership for `rate_dirty` (O(1) dedup, no clearing).
+    rate_dirty_stamp: Vec<u64>,
+    rate_dirty_epoch: u64,
+    /// Reused scheduling plan written by `Scheduler::order_into`.
+    plan: Plan,
+    /// Reused allocation workspace (see `rate::AllocScratch`).
+    scratch: rate::AllocScratch,
+    /// Use the from-scratch oracle order path (equivalence testing).
+    full_recompute: bool,
     port_refs: Vec<Option<PortRefs>>,
     /// Completion reports queued but not yet delivered, per coflow.
     reports_pending: Vec<usize>,
@@ -216,11 +259,20 @@ impl Engine {
             world,
             arrivals,
             next_arrival: 0,
-            completions: BinaryHeap::new(),
-            reports: BinaryHeap::new(),
+            // Reserve for one in-flight completion event per flow plus
+            // rate-change churn so steady-state pushes rarely reallocate.
+            completions: BinaryHeap::with_capacity(2 * nf + 64),
+            reports: BinaryHeap::with_capacity(64),
             epoch: vec![0; nf],
             running: Vec::new(),
+            running_spare: Vec::new(),
             rate_sum: vec![0.0; nc],
+            rate_dirty: Vec::with_capacity(nc),
+            rate_dirty_stamp: vec![0; nc],
+            rate_dirty_epoch: 0,
+            plan: Plan::default(),
+            scratch: rate::AllocScratch::new(),
+            full_recompute: sim_cfg.full_recompute,
             port_refs: (0..nc).map(|_| None).collect(),
             reports_pending: vec![0; nc],
             coflow_delivered: vec![false; nc],
@@ -426,8 +478,9 @@ impl Engine {
         let mut down: Vec<(usize, usize)> = Vec::new();
         // NB: loops over the coflow's flows; wide coflows are the big cost,
         // amortized once per coflow lifetime.
-        let flow_ids = self.world.coflows[cid].flows.clone();
-        for &f in &flow_ids {
+        let nflows = self.world.coflows[cid].flows.len();
+        for i in 0..nflows {
+            let f = self.world.coflows[cid].flows[i];
             let fl = self.world.flows[f];
             self.world.load.up_bytes[fl.src] += fl.size;
             self.world.load.down_bytes[fl.dst] += fl.size;
@@ -441,15 +494,15 @@ impl Engine {
             }
         }
         for &(p, _) in &up {
-            self.world.load.up_coflows[p] += 1;
+            self.world.load.occupy_up(p);
             self.mark_port_active(p);
         }
         for &(p, _) in &down {
-            self.world.load.down_coflows[p] += 1;
+            self.world.load.occupy_down(p);
             self.mark_port_active(p);
         }
         self.port_refs[cid] = Some(PortRefs { up, down });
-        self.totals.active_flows += flow_ids.len();
+        self.totals.active_flows += nflows;
         self.totals.peak_active_flows =
             self.totals.peak_active_flows.max(self.totals.active_flows);
         self.totals.peak_active_coflows =
@@ -507,13 +560,11 @@ impl Engine {
             }
         }
         if freed_up {
-            self.world.load.up_coflows[fl.src] =
-                self.world.load.up_coflows[fl.src].saturating_sub(1);
+            self.world.load.release_up(fl.src);
             self.unmark_port_active(fl.src);
         }
         if freed_down {
-            self.world.load.down_coflows[fl.dst] =
-                self.world.load.down_coflows[fl.dst].saturating_sub(1);
+            self.world.load.release_down(fl.dst);
             self.unmark_port_active(fl.dst);
         }
         self.totals.active_flows -= 1;
@@ -562,11 +613,24 @@ impl Engine {
 
     /// Recompute the priority order and rates; measured as coordinator
     /// rate-calculation work. Returns (measured calc seconds, rate messages).
+    ///
+    /// Zero steady-state heap allocation: the plan, the allocation scratch,
+    /// the running set, and the dirty list are all engine-owned reusable
+    /// buffers (see the module docs).
     fn reallocate(&mut self, sched: &mut dyn Scheduler) -> (f64, u64) {
         let t0 = Instant::now();
-        let plan = sched.order(&self.world);
-        let alloc =
-            rate::allocate(&self.world.fabric, &self.world.flows, &self.world.coflows, &plan);
+        if self.full_recompute {
+            sched.order_full_into(&self.world, &mut self.plan);
+        } else {
+            sched.order_into(&self.world, &mut self.plan);
+        }
+        rate::allocate_into(
+            &self.world.fabric,
+            &self.world.flows,
+            &self.world.coflows,
+            &self.plan,
+            &mut self.scratch,
+        );
         let calc_s = t0.elapsed().as_secs_f64();
         self.totals.rate_calc_wall_s += calc_s;
         self.totals.rate_calcs += 1;
@@ -574,48 +638,60 @@ impl Engine {
         self.iv_rate_calcs += 1;
 
         // Apply: zero flows that lost their rate, set granted ones, push
-        // fresh completion events for changed rates.
+        // fresh completion events for changed rates. Coflows touched by
+        // either the previous or the new running set land on the stamped
+        // dirty list exactly once.
         let mut changed = 0u64;
-        let prev = std::mem::take(&mut self.running);
         let now = self.world.now;
-        let granted: std::collections::HashMap<FlowId, f64> =
-            alloc.grants.iter().copied().collect();
-        for &f in &prev {
-            if !granted.contains_key(&f) && !self.world.flows[f].done() {
-                if self.world.flows[f].rate != 0.0 {
-                    self.world.flows[f].rate = 0.0;
-                    self.epoch[f] += 1;
-                    changed += 1;
-                }
+        self.rate_dirty_epoch += 1;
+        let de = self.rate_dirty_epoch;
+        for idx in 0..self.running.len() {
+            let f = self.running[idx];
+            let cid = self.world.flows[f].coflow;
+            if self.rate_dirty_stamp[cid] != de {
+                self.rate_dirty_stamp[cid] = de;
+                self.rate_dirty.push(cid);
             }
-        }
-        let mut rate_sum_dirty: Vec<CoflowId> = prev
-            .iter()
-            .map(|&f| self.world.flows[f].coflow)
-            .collect();
-        self.running = Vec::with_capacity(alloc.grants.len());
-        for &(f, r) in &alloc.grants {
-            let fl = &mut self.world.flows[f];
-            if (fl.rate - r).abs() > EPS {
-                fl.rate = r;
+            if !self.scratch.was_granted(f)
+                && !self.world.flows[f].done()
+                && self.world.flows[f].rate != 0.0
+            {
+                self.world.flows[f].rate = 0.0;
                 self.epoch[f] += 1;
                 changed += 1;
-                self.completions
-                    .push(Reverse(Ev(now + fl.remaining() / r, f, self.epoch[f])));
+            }
+        }
+        // Rebuild the running set from the grants without allocating: the
+        // spare buffer takes over as the new list.
+        std::mem::swap(&mut self.running, &mut self.running_spare);
+        self.running.clear();
+        for idx in 0..self.scratch.grants().len() {
+            let (f, r) = self.scratch.grants()[idx];
+            let old_rate = self.world.flows[f].rate;
+            if (old_rate - r).abs() > EPS {
+                self.world.flows[f].rate = r;
+                self.epoch[f] += 1;
+                changed += 1;
+                let due = now + self.world.flows[f].remaining() / r;
+                self.completions.push(Reverse(Ev(due, f, self.epoch[f])));
             }
             self.running.push(f);
-            rate_sum_dirty.push(fl.coflow);
+            let cid = self.world.flows[f].coflow;
+            if self.rate_dirty_stamp[cid] != de {
+                self.rate_dirty_stamp[cid] = de;
+                self.rate_dirty.push(cid);
+            }
         }
         // Rebuild per-coflow rate sums for the touched coflows.
-        rate_sum_dirty.sort_unstable();
-        rate_sum_dirty.dedup();
-        for cid in rate_sum_dirty {
+        for idx in 0..self.rate_dirty.len() {
+            let cid = self.rate_dirty[idx];
             self.rate_sum[cid] = 0.0;
         }
         for &f in &self.running {
             let fl = &self.world.flows[f];
             self.rate_sum[fl.coflow] += fl.rate;
         }
+        self.rate_dirty.clear();
         self.totals.rate_msgs += changed;
         self.iv_rate_msgs += changed;
         (calc_s, changed)

@@ -3,7 +3,7 @@
 //! random workloads and every scheduler (the in-crate `util::prop` driver
 //! stands in for proptest on this offline image).
 
-use philae::coordinator::{rate, SchedulerConfig, SchedulerKind};
+use philae::coordinator::{rate, Scheduler, SchedulerConfig, SchedulerKind};
 use philae::metrics::MessageCostModel;
 use philae::sim::{world_from_trace, SimConfig, Simulation};
 use philae::trace::{Trace, TraceRecord, TraceSpec};

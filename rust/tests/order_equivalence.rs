@@ -1,0 +1,207 @@
+//! Property test for the incremental order engine: replay random
+//! arrival/completion/tick sequences against every scheduler kind and
+//! assert after each event that the incrementally maintained
+//! `order_into` plan is identical to the from-scratch `order_full_into`
+//! oracle re-sort.
+//!
+//! The driver mirrors exactly the world mutations the simulator engine
+//! performs around each event (port occupancy through the epoch-bumping
+//! `PortLoad` methods, active-list bookkeeping, byte/progress accounting),
+//! so the schedulers see the same state transitions as in a real run.
+
+use philae::coflow::CoflowPhase;
+use philae::coordinator::{Plan, Scheduler, SchedulerConfig, SchedulerKind, World};
+use philae::sim::world_from_trace;
+use philae::trace::TraceSpec;
+use philae::util::{prop, Rng};
+use philae::{CoflowId, FlowId, Time};
+
+fn check(sched: &mut dyn Scheduler, world: &World, kind: SchedulerKind, step: usize) {
+    let mut inc = Plan::default();
+    let mut full = Plan::default();
+    sched.order_into(world, &mut inc);
+    sched.order_full_into(world, &mut full);
+    assert_eq!(
+        inc.entries, full.entries,
+        "{kind:?} step {step}: incremental order diverged from the oracle"
+    );
+    assert_eq!(
+        inc.group_weights, full.group_weights,
+        "{kind:?} step {step}: group weights diverged"
+    );
+}
+
+/// Mirror of the engine's `admit`: activate the coflow and register port
+/// occupancy/backlog.
+fn admit(world: &mut World, cid: CoflowId) {
+    world.active.push(cid);
+    for i in 0..world.coflows[cid].flows.len() {
+        let f = world.coflows[cid].flows[i];
+        let fl = world.flows[f];
+        world.load.up_bytes[fl.src] += fl.size;
+        world.load.down_bytes[fl.dst] += fl.size;
+    }
+    for i in 0..world.coflows[cid].senders.len() {
+        let p = world.coflows[cid].senders[i];
+        world.load.occupy_up(p);
+    }
+    for i in 0..world.coflows[cid].receivers.len() {
+        let p = world.coflows[cid].receivers[i];
+        world.load.occupy_down(p);
+    }
+}
+
+/// Mirror of the engine's `complete_flow`; returns whether the whole
+/// coflow just finished.
+fn complete(world: &mut World, fid: FlowId, now: Time) -> bool {
+    world.now = now;
+    let fl = world.flows[fid];
+    let cid = fl.coflow;
+    {
+        let f = &mut world.flows[fid];
+        f.sent = f.size;
+        f.rate = 0.0;
+        f.finished_at = Some(now);
+    }
+    world.load.up_bytes[fl.src] = (world.load.up_bytes[fl.src] - fl.size).max(0.0);
+    world.load.down_bytes[fl.dst] = (world.load.down_bytes[fl.dst] - fl.size).max(0.0);
+    // progress accounting feeds the Aalo/Saath/SCF/SEBF keys
+    world.coflows[cid].bytes_sent += fl.size;
+    // port freeing: last unfinished flow of this coflow at each endpoint
+    let freed_up = !world.coflows[cid].flows.iter().any(|&g| {
+        let w = world.flows[g];
+        w.src == fl.src && w.finished_at.is_none()
+    });
+    let freed_down = !world.coflows[cid].flows.iter().any(|&g| {
+        let w = world.flows[g];
+        w.dst == fl.dst && w.finished_at.is_none()
+    });
+    if freed_up {
+        world.load.release_up(fl.src);
+    }
+    if freed_down {
+        world.load.release_down(fl.dst);
+    }
+    // O(1) removal from the allocator iteration set
+    let pos = world.flows[fid].active_pos;
+    let c = &mut world.coflows[cid];
+    if pos < c.active_list.len() && c.active_list[pos] == fid {
+        c.active_list.swap_remove(pos);
+        if pos < c.active_list.len() {
+            let moved = c.active_list[pos];
+            world.flows[moved].active_pos = pos;
+        }
+    }
+    let c = &mut world.coflows[cid];
+    c.active_flows -= 1;
+    if fl.size > c.max_finished_flow {
+        c.max_finished_flow = fl.size;
+    }
+    if c.active_flows == 0 && c.finished_at.is_none() {
+        c.finished_at = Some(now);
+        c.phase = CoflowPhase::Done;
+        world.active.retain(|&x| x != cid);
+        true
+    } else {
+        false
+    }
+}
+
+/// Driver shape: trace geometry plus event-mix knobs.
+struct DriveOpts {
+    /// Inclusive port-count range for the generated trace.
+    ports: (usize, usize),
+    /// Inclusive coflow-count range.
+    coflows: (usize, usize),
+    /// Probability of preferring an arrival when both event types are
+    /// possible.
+    arrival_p: f64,
+    /// Probability of running a case with an aggressive age threshold so
+    /// the express lane is exercised.
+    aging_p: f64,
+}
+
+fn drive(kind: SchedulerKind, rng: &mut Rng, opts: &DriveOpts) {
+    let ports = rng.range_inclusive(opts.ports.0, opts.ports.1);
+    let n = rng.range_inclusive(opts.coflows.0, opts.coflows.1);
+    let trace = TraceSpec::tiny(ports, n).seed(rng.next_u64()).generate();
+    let mut world = world_from_trace(&trace);
+    let mut cfg = SchedulerConfig::default();
+    if rng.chance(opts.aging_p) {
+        cfg.age_threshold = 0.02;
+    }
+    let mut sched = kind.build(&trace, &cfg);
+
+    let mut arrivals: Vec<(Time, CoflowId)> =
+        trace.coflows.iter().map(|c| (c.arrival, c.id)).collect();
+    arrivals.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let mut next_arrival = 0usize;
+    let mut unfinished: Vec<FlowId> = Vec::new();
+    let mut now: Time = 0.0;
+    let mut step = 0usize;
+
+    while next_arrival < arrivals.len() || !unfinished.is_empty() {
+        step += 1;
+        let do_arrival = next_arrival < arrivals.len()
+            && (unfinished.is_empty() || rng.chance(opts.arrival_p));
+        if do_arrival {
+            let (t, cid) = arrivals[next_arrival];
+            next_arrival += 1;
+            now = now.max(t) + rng.uniform(0.0, 0.005);
+            world.now = now;
+            admit(&mut world, cid);
+            sched.on_arrival(cid, &mut world);
+            unfinished.extend(world.coflows[cid].flows.iter().copied());
+        } else {
+            let i = rng.below(unfinished.len());
+            let fid = unfinished.swap_remove(i);
+            now += rng.uniform(0.0, 0.02);
+            let cid = world.flows[fid].coflow;
+            let coflow_done = complete(&mut world, fid, now);
+            sched.on_flow_complete(fid, &mut world);
+            if coflow_done {
+                sched.on_coflow_complete(cid, &mut world);
+            }
+        }
+        if sched.tick_interval().is_some() && rng.chance(0.3) {
+            sched.on_tick(&mut world);
+        }
+        check(sched.as_mut(), &world, kind, step);
+    }
+}
+
+#[test]
+fn incremental_order_equals_oracle_for_every_scheduler() {
+    let opts = DriveOpts {
+        ports: (4, 12),
+        coflows: (2, 10),
+        arrival_p: 0.4,
+        aging_p: 0.33,
+    };
+    prop::for_all(24, |rng| {
+        for &kind in SchedulerKind::all() {
+            drive(kind, rng, &opts);
+        }
+    });
+}
+
+#[test]
+fn incremental_order_equals_oracle_under_heavy_contention() {
+    // One shared pair: every coflow contends on the same ports, so
+    // occupancy epochs and contention terms move on almost every event.
+    let opts = DriveOpts {
+        ports: (2, 2),
+        coflows: (2, 8),
+        arrival_p: 0.5,
+        aging_p: 0.0,
+    };
+    prop::for_all(16, |rng| {
+        for &kind in &[
+            SchedulerKind::Philae,
+            SchedulerKind::Aalo,
+            SchedulerKind::Saath,
+        ] {
+            drive(kind, rng, &opts);
+        }
+    });
+}
