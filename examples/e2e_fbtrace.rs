@@ -72,6 +72,7 @@ fn main() -> anyhow::Result<()> {
         delta_wall: Duration::from_millis(8),
         engine_dir: artifacts,
         port_rate: philae::GBPS,
+        alloc_shards: 1,
     };
 
     let philae_run = run_service(&trace, &base)?;

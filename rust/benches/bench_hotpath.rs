@@ -25,6 +25,7 @@ use philae::trace::TraceSpec;
 struct Row {
     ports: usize,
     coflows: usize,
+    fabric: &'static str,
     full_order_us: f64,
     full_alloc_us: f64,
     inc_order_us: f64,
@@ -41,9 +42,19 @@ fn main() {
     let iters = common::iters(20);
     let mut rows: Vec<Row> = Vec::new();
 
-    for (ports, coflows) in [(150usize, 200usize), (900, 600)] {
-        let trace = TraceSpec::fb_like(ports, coflows).seed(5).generate();
+    // scenario diversity: the paper's homogeneous 1 Gbps testbeds plus a
+    // mixed 1/10/40 Gbps fabric (TraceSpec::mixed_rate) at 900 ports
+    let scenarios = [(150usize, 200usize, false), (900, 600, false), (900, 600, true)];
+    for (ports, coflows, mixed) in scenarios {
+        let spec = if mixed {
+            TraceSpec::mixed_rate(ports, coflows)
+        } else {
+            TraceSpec::fb_like(ports, coflows)
+        };
+        let trace = spec.clone().seed(5).generate();
+        let fabric_label = if mixed { "mixed-1-10-40" } else { "homogeneous" };
         let mut world = world_from_trace(&trace);
+        world.fabric = spec.fabric();
         // activate everything at once — worst-case order/allocate input
         world.active = (0..trace.coflows.len()).collect();
         let mut core = PhilaeCore::new(cfg.clone());
@@ -76,7 +87,7 @@ fn main() {
         let grants = scratch.grants().len();
         let visited = scratch.visited();
         println!(
-            "{ports} ports / {coflows} active coflows ({} grants, {} visited):",
+            "{ports} ports ({fabric_label}) / {coflows} active coflows ({} grants, {} visited):",
             grants, visited
         );
         println!(
@@ -121,6 +132,7 @@ fn main() {
         rows.push(Row {
             ports,
             coflows,
+            fabric: fabric_label,
             full_order_us: full_order * 1e6,
             full_alloc_us: full_alloc * 1e6,
             inc_order_us: inc_order * 1e6,
@@ -140,13 +152,14 @@ fn main() {
         let combined_full = r.full_order_us + r.full_alloc_us;
         let combined_inc = r.inc_order_us + r.inc_alloc_us;
         json.push_str(&format!(
-            "    {{\"ports\": {}, \"active_coflows\": {}, \"grants\": {}, \"visited\": {},\n      \
+            "    {{\"ports\": {}, \"active_coflows\": {}, \"fabric\": \"{}\", \"grants\": {}, \"visited\": {},\n      \
              \"full\": {{\"order_us\": {:.3}, \"alloc_us\": {:.3}}},\n      \
              \"incremental\": {{\"order_us\": {:.3}, \"alloc_us\": {:.3}}},\n      \
              \"order_alloc_speedup\": {:.3},\n      \
              \"aalo\": {{\"full_us\": {:.3}, \"incremental_us\": {:.3}}}}}{}\n",
             r.ports,
             r.coflows,
+            r.fabric,
             r.grants,
             r.visited,
             r.full_order_us,
@@ -168,7 +181,8 @@ fn main() {
             let mut batch = BatchFeatures::new(&engine.manifest);
             for row in 0..engine.manifest.c {
                 let sizes: Vec<f64> = (0..10).map(|i| 1e6 * (i + row + 1) as f64).collect();
-                batch.set_row(row, &sizes, 1000 + row, 5e6, &[row % 512, 1024 + row % 512], row as u64);
+                let ports = [row % 512, 1024 + row % 512];
+                batch.set_row(row, &sizes, 1000 + row, 5e6, &ports, row as u64);
             }
             let (min_s, mean_s) = common::time_it(30, || engine.score(&batch, 0.5).unwrap());
             println!(

@@ -1,0 +1,136 @@
+//! §Perf bench of the **sharded allocation pipeline**: `allocate_into`
+//! wall time vs shard count at 900 and 5000 ports, against the serial
+//! baseline, with every sharded result asserted bit-identical to serial.
+//!
+//! Emits machine-readable `BENCH_shard.json` at the repo root (allocation
+//! µs per shard count per fabric size) so the scaling trajectory is
+//! tracked across PRs.
+//!
+//! `cargo bench --bench bench_shard`
+
+mod common;
+
+use philae::coordinator::philae::PhilaeCore;
+use philae::coordinator::{rate, Plan, SchedulerConfig};
+use philae::sim::world_from_trace;
+use philae::trace::TraceSpec;
+
+struct ShardPoint {
+    shards: usize,
+    us: f64,
+}
+
+struct Row {
+    ports: usize,
+    coflows: usize,
+    grants: usize,
+    ops_visited: usize,
+    serial_us: f64,
+    points: Vec<ShardPoint>,
+}
+
+fn main() {
+    common::banner("shard", "sharded allocate_into scaling (µs vs shard count)");
+    let cfg = SchedulerConfig::default();
+    let iters = common::iters(10);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut shard_counts = vec![1usize, 2, 4, 8];
+    if !shard_counts.contains(&cores) {
+        shard_counts.push(cores);
+    }
+    shard_counts.sort_unstable();
+    shard_counts.dedup();
+    println!("cores: {cores} | shard settings: {shard_counts:?} | iters: {iters}\n");
+
+    let mut rows: Vec<Row> = Vec::new();
+    for (ports, coflows) in [(900usize, 600usize), (5000, 1500)] {
+        let trace = TraceSpec::fb_like(ports, coflows).seed(5).generate();
+        let mut world = world_from_trace(&trace);
+        // worst case: every coflow active and estimated at once
+        world.active = (0..trace.coflows.len()).collect();
+        let mut core = PhilaeCore::new(cfg.clone());
+        for cid in 0..trace.coflows.len() {
+            core.handle_arrival(cid, &mut world);
+            world.coflows[cid].phase = philae::coflow::CoflowPhase::Running;
+            world.coflows[cid].est_size = Some(world.coflows[cid].total_bytes);
+        }
+        let mut plan = Plan::default();
+        core.order_full_into(&world, &mut plan);
+
+        // serial baseline (warmed scratch)
+        let mut serial = rate::AllocScratch::new();
+        rate::allocate_into(&world.fabric, &world.flows, &world.coflows, &plan, &mut serial);
+        let (serial_s, _) = common::time_it(iters, || {
+            rate::allocate_into(&world.fabric, &world.flows, &world.coflows, &plan, &mut serial)
+        });
+        println!(
+            "{} ports / {} coflows / {} flows ({} grants, {} visited):",
+            ports,
+            coflows,
+            trace.flows.len(),
+            serial.grants().len(),
+            serial.visited()
+        );
+        println!("  serial          {:>10.1} µs", serial_s * 1e6);
+
+        let mut points = Vec::new();
+        for &s in &shard_counts {
+            let mut scratch = rate::AllocScratch::new();
+            scratch.set_shards(s);
+            rate::allocate_into(&world.fabric, &world.flows, &world.coflows, &plan, &mut scratch);
+            assert_eq!(
+                scratch.grants(),
+                serial.grants(),
+                "sharded S={s} diverged from serial"
+            );
+            assert_eq!(scratch.visited(), serial.visited(), "visited diverged at S={s}");
+            let (t, _) = common::time_it(iters, || {
+                rate::allocate_into(
+                    &world.fabric,
+                    &world.flows,
+                    &world.coflows,
+                    &plan,
+                    &mut scratch,
+                )
+            });
+            println!(
+                "  S={s:<2} sharded    {:>10.1} µs ({:.2}x vs serial)",
+                t * 1e6,
+                serial_s / t.max(1e-12)
+            );
+            points.push(ShardPoint { shards: s, us: t * 1e6 });
+        }
+        rows.push(Row {
+            ports,
+            coflows,
+            grants: serial.grants().len(),
+            ops_visited: serial.visited(),
+            serial_us: serial_s * 1e6,
+            points,
+        });
+        println!();
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"shard\",\n  \"iters\": ");
+    json.push_str(&iters.to_string());
+    json.push_str(&format!(",\n  \"cores\": {cores},\n  \"configs\": [\n"));
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"ports\": {}, \"active_coflows\": {}, \"grants\": {}, \"visited\": {},\n      \
+             \"serial_alloc_us\": {:.3},\n      \"sharded\": [",
+            r.ports, r.coflows, r.grants, r.ops_visited, r.serial_us
+        ));
+        for (j, p) in r.points.iter().enumerate() {
+            json.push_str(&format!(
+                "{{\"shards\": {}, \"alloc_us\": {:.3}, \"speedup_vs_serial\": {:.3}}}{}",
+                p.shards,
+                p.us,
+                r.serial_us / p.us.max(1e-9),
+                if j + 1 < r.points.len() { ", " } else { "" }
+            ));
+        }
+        json.push_str(&format!("]}}{}\n", if i + 1 < rows.len() { "," } else { "" }));
+    }
+    json.push_str("  ]\n}\n");
+    common::write_json("BENCH_shard.json", &json);
+}

@@ -8,7 +8,7 @@ mod common;
 
 use philae::coordinator::{SchedulerConfig, SchedulerKind};
 use philae::metrics::SpeedupRow;
-use philae::sim::Simulation;
+use philae::sim::{SimConfig, Simulation};
 use philae::trace::TraceSpec;
 
 fn main() {
@@ -33,6 +33,21 @@ fn main() {
     let pw = Simulation::run(&wide, SchedulerKind::Philae, &cfg);
     println!("paper:    wide-only P50 1.05x P90 2.14x avg 1.49x");
     println!("measured: wide-only {}", SpeedupRow::from_ccts(&aw.ccts, &pw.ccts));
+
+    // Scenario diversity: the same workload on a mixed 1/10/40 Gbps fabric
+    // (no paper counterpart — heterogeneous clusters are a robustness
+    // check: the speedup must survive NIC-generation skew).
+    let mixed_spec = TraceSpec::mixed_rate(150, 526);
+    let mixed_trace = mixed_spec.clone().with_load_factor(4.0).seed(42).generate();
+    let mixed_cfg = SimConfig { fabric: Some(mixed_spec.fabric()), ..SimConfig::default() };
+    let mut am = SchedulerKind::Aalo.build(&mixed_trace, &cfg);
+    let amr = Simulation::run_with(&mixed_trace, am.as_mut(), &cfg, &mixed_cfg);
+    let mut pm = SchedulerKind::Philae.build(&mixed_trace, &cfg);
+    let pmr = Simulation::run_with(&mixed_trace, pm.as_mut(), &cfg, &mixed_cfg);
+    println!(
+        "measured: mixed-1/10/40-gbps {}",
+        SpeedupRow::from_ccts(&amr.ccts, &pmr.ccts)
+    );
 
     // Simulation throughput (perf tracking for §Perf).
     let (min_s, mean_s) = common::time_it(3, || {

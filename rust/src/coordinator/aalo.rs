@@ -193,6 +193,10 @@ impl Scheduler for AaloScheduler {
                 self.sorted[w] = (q, qs, cid);
                 w += 1;
                 plan.entries.push(OrderEntry::grouped(cid, q));
+            } else if self.seen[cid] != scan {
+                // departed coflow: reset the sentinel so a later re-entry
+                // with an unchanged key is re-inserted, not skipped
+                self.cached[cid] = (usize::MAX, 0);
             }
         }
         self.sorted.truncate(w);

@@ -122,6 +122,47 @@ impl Reaction {
     }
 }
 
+/// One coalesced batch of same-instant scheduler events — the unit of
+/// **batched admission**: the engine (and the live service) applies all
+/// physical state updates of an instant first, then hands the scheduler one
+/// batch and pays **one** order repair + **one** allocation for it, instead
+/// of one reallocation per admit (the per-event regime the §4.3 deadline
+/// model charges separately).
+///
+/// The buffers are caller-owned and reused across instants (cleared, never
+/// reallocated in steady state).
+#[derive(Debug, Clone, Default)]
+pub struct EventBatch {
+    /// Coflows that arrived at this instant, in arrival order (already
+    /// admitted to `world.active`).
+    pub arrivals: Vec<CoflowId>,
+    /// Flow-completion reports in delivery order; the flag marks reports
+    /// that complete their whole coflow (the coflow-completion event is
+    /// delivered right after that report, exactly once per coflow).
+    pub flow_reports: Vec<(FlowId, bool)>,
+    /// A periodic δ tick fell on this instant.
+    pub tick: bool,
+}
+
+impl EventBatch {
+    /// Empty the batch, keeping buffer capacity for reuse.
+    pub fn clear(&mut self) {
+        self.arrivals.clear();
+        self.flow_reports.clear();
+        self.tick = false;
+    }
+
+    /// `true` if the batch carries no event at all.
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty() && self.flow_reports.is_empty() && !self.tick
+    }
+
+    /// Number of events in the batch.
+    pub fn len(&self) -> usize {
+        self.arrivals.len() + self.flow_reports.len() + usize::from(self.tick)
+    }
+}
+
 /// The scheduler interface shared by the simulator and the live service.
 pub trait Scheduler: Send {
     fn name(&self) -> String;
@@ -147,6 +188,31 @@ pub trait Scheduler: Send {
     /// Periodic tick (only called when `tick_interval` is `Some`).
     fn on_tick(&mut self, _world: &mut World) -> Reaction {
         Reaction::None
+    }
+
+    /// Deliver one coalesced [`EventBatch`] (batched admission). The
+    /// default implementation replays the per-event hooks in the batch's
+    /// delivery order — arrivals, then flow reports (each followed by its
+    /// coflow-completion event when flagged), then the tick — and merges
+    /// their reactions, so every scheduler is batch-capable out of the box.
+    /// Schedulers may override it to repair their order structures once per
+    /// batch instead of once per event.
+    fn on_batch(&mut self, batch: &EventBatch, world: &mut World) -> Reaction {
+        let mut reaction = Reaction::None;
+        for &cid in &batch.arrivals {
+            reaction = reaction.merge(self.on_arrival(cid, world));
+        }
+        for &(fid, coflow_done) in &batch.flow_reports {
+            reaction = reaction.merge(self.on_flow_complete(fid, world));
+            if coflow_done {
+                let cid = world.flows[fid].coflow;
+                reaction = reaction.merge(self.on_coflow_complete(cid, world));
+            }
+        }
+        if batch.tick {
+            reaction = reaction.merge(self.on_tick(world));
+        }
+        reaction
     }
 
     /// Write the scheduling plan into `plan` (cleared first): priority
@@ -360,6 +426,22 @@ mod tests {
         assert_eq!(cfg.pilots_for(400), 4);
         assert_eq!(cfg.pilots_for(5000), 10); // capped at pilot_max
         assert_eq!(cfg.pilots_for(0), 0);
+    }
+
+    #[test]
+    fn event_batch_buffers() {
+        let mut b = EventBatch::default();
+        assert!(b.is_empty());
+        assert_eq!(b.len(), 0);
+        b.arrivals.push(3);
+        b.flow_reports.push((7, true));
+        b.tick = true;
+        assert!(!b.is_empty());
+        assert_eq!(b.len(), 3);
+        let cap = b.arrivals.capacity();
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.arrivals.capacity(), cap, "clear must keep capacity");
     }
 
     #[test]

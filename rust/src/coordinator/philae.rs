@@ -263,16 +263,23 @@ impl PhilaeCore {
     }
 
     /// Record a completion report. Returns `SampleComplete` exactly once per
-    /// coflow — when its last pilot finishes while still `Piloting`.
+    /// coflow — when its last outstanding pilot finishes.
+    ///
+    /// The sampling gate is `pilots_left > 0` (internal state keyed only on
+    /// the delivery sequence), **not** the coflow's phase: under batched
+    /// admission all physical completions of an instant land before any
+    /// report is delivered, so a sibling flow may already have flipped the
+    /// coflow to `Done` — the pilot's sample must still count exactly as it
+    /// does under per-event delivery.
     pub fn record_completion(&mut self, fid: FlowId, world: &mut World) -> CompletionOutcome {
         let flow = world.flows[fid];
         let cid = flow.coflow;
         self.ensure(cid);
         self.done_bytes[cid] += flow.size;
         self.flows_done[cid] += 1;
-        if flow.pilot && world.coflows[cid].phase == CoflowPhase::Piloting {
+        if flow.pilot && self.pilots_left[cid] > 0 {
             self.pilot_sizes[cid].push(flow.size);
-            self.pilots_left[cid] = self.pilots_left[cid].saturating_sub(1);
+            self.pilots_left[cid] -= 1;
             if self.pilots_left[cid] == 0 {
                 return CompletionOutcome::SampleComplete(self.pilot_sizes[cid].clone());
             }
@@ -345,6 +352,18 @@ impl PhilaeCore {
         let mut plan = Plan::default();
         self.order_impl(world, Some(scores), &mut plan);
         plan
+    }
+
+    /// Like [`order_with_scores`](Self::order_with_scores) but writes into
+    /// a caller-owned reused plan, so the scored path keeps the plan
+    /// buffer alive across events like the native path does.
+    pub fn order_with_scores_into(
+        &self,
+        world: &World,
+        scores: &std::collections::HashMap<CoflowId, f64>,
+        plan: &mut Plan,
+    ) {
+        self.order_impl(world, Some(scores), plan);
     }
 
     /// Build the four-lane priority order incrementally (see module docs),
@@ -487,6 +506,10 @@ impl PhilaeCore {
                 cache.express[w] = (seq, cid);
                 w += 1;
                 plan.entries.push(OrderEntry::all(cid));
+            } else if cache.seen[cid] != scan {
+                // departed coflow: clear its lane so a later re-entry is
+                // re-inserted, not skipped as already-cached
+                cache.lane[cid] = Lane::Absent;
             }
         }
         cache.express.truncate(w);
@@ -498,6 +521,8 @@ impl PhilaeCore {
                 cache.piloting[w] = (seq, cid);
                 w += 1;
                 plan.entries.push(OrderEntry::pilots(cid));
+            } else if cache.seen[cid] != scan {
+                cache.lane[cid] = Lane::Absent;
             }
         }
         cache.piloting.truncate(w);
@@ -508,6 +533,8 @@ impl PhilaeCore {
                 cache.scheduled[w] = (score, seq, cid);
                 w += 1;
                 plan.entries.push(OrderEntry::all(cid));
+            } else if cache.seen[cid] != scan {
+                cache.lane[cid] = Lane::Absent;
             }
         }
         cache.scheduled.truncate(w);
@@ -614,7 +641,11 @@ impl Scheduler for PhilaeScheduler {
                 let cid = world.flows[fid].coflow;
                 let n = world.coflows[cid].flows.len();
                 world.coflows[cid].est_size = Some(Self::estimate(&samples, n));
-                world.coflows[cid].phase = CoflowPhase::Running;
+                // a coflow whose sample completes with its own last report
+                // is already Done — never resurrect its phase
+                if world.coflows[cid].finished_at.is_none() {
+                    world.coflows[cid].phase = CoflowPhase::Running;
+                }
                 Reaction::Reallocate
             }
             // Completion frees port capacity; Philae's rate calculation is

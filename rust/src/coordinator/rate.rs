@@ -34,10 +34,53 @@
 //! [`allocate`] and [`apply`] remain as thin compatibility wrappers that
 //! build the scratch per call; the simulator engine, the live service, and
 //! the benches all thread a persistent scratch through instead.
+//!
+//! ## Sharded allocation pipeline (5k+ port fabrics)
+//!
+//! [`allocate_into`] is also a **port-sharded parallel pipeline**, selected
+//! per scratch via [`AllocScratch::set_shards`]. The key observation is
+//! that the serial greedy is a *per-port dependency chain*: a flow's grant
+//! depends only on the residuals of its two ports, which depend only on the
+//! grants of earlier-in-plan flows on those same ports. Any execution that
+//! respects the per-port order — regardless of how flows interleave across
+//! ports — reproduces the serial outcome **bit for bit**, because every
+//! port residual is produced by the identical sequence of f64 operations.
+//!
+//! The pipeline exploits that in four phases:
+//!
+//! 1. **Bucket** — one serial walk of the plan emits each runnable flow as
+//!    an op and assigns it a *DAG level* (`1 + max(level of the previous op
+//!    on its src uplink, on its dst downlink)`). Ops in the same level
+//!    touch pairwise-disjoint ports by construction. Each op is then
+//!    bucketed by `(level, src-shard)`, where ports are partitioned into
+//!    `S` contiguous shards.
+//! 2. **Grant (parallel)** — `S` workers under [`std::thread::scope`]
+//!    sweep the levels in lockstep (a spin barrier per level). Worker `s`
+//!    owns shard `s`'s slice of the capacity ledger: it grants every op
+//!    whose src port lies in its shard — intra-shard flows touch only its
+//!    own slice; cross-shard flows additionally debit the remote downlink,
+//!    which is safe and exact because ports are disjoint within a level.
+//!    Port residuals and group budgets live in f64-bit atomic tables.
+//! 3. **Merge (serial, deterministic)** — a replay walk over the ops in
+//!    original plan order rebuilds the canonical grants list (including
+//!    the budgeted/backfill duplicate-grant merge), the `visited` counter,
+//!    and the serial path's all-ports-saturated early exit, so every
+//!    observable output is bit-identical to the serial path for **any**
+//!    shard count.
+//! 4. The stamped grant tables are filled as in the serial path, so
+//!    [`AllocScratch::was_granted`]/[`AllocScratch::granted_rate`] work
+//!    unchanged.
+//!
+//! `S = 1` (the default) bypasses the pipeline entirely and runs the
+//! serial loop — there is no behavioral difference, only a wall-clock one.
+//! The sharded path pays one `thread::scope` spawn per call, so it wins
+//! only on large fabrics (see `benches/bench_shard.rs`, which emits
+//! `BENCH_shard.json`: allocation µs vs shard count at 900/5000 ports).
 
 use crate::coflow::{CoflowState, FlowState};
 use crate::fabric::{CapacityLedger, Fabric};
 use crate::{CoflowId, FlowId, EPS};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 /// Which of a coflow's flows an order entry admits — Philae's lanes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -128,6 +171,108 @@ impl Allocation {
     }
 }
 
+/// Pass-1 (budgeted) ops carry this bit in [`ShardOp::entry`].
+const BUDGETED_BIT: u32 = 1 << 31;
+
+/// One emitted candidate flow of the sharded pipeline: the flow, its ports,
+/// and the plan entry it was admitted under (high bit = budgeted pass).
+#[derive(Debug, Clone, Copy, Default)]
+struct ShardOp {
+    fid: u32,
+    src: u32,
+    dst: u32,
+    entry: u32,
+}
+
+/// Contiguous port → shard mapping (balanced, monotone).
+#[inline]
+fn port_shard(p: usize, nports: usize, shards: usize) -> usize {
+    p * shards / nports
+}
+
+/// Sense-reversing spin barrier for the per-level lockstep of the shard
+/// workers. Levels are short (one op per port at most), so spinning beats
+/// a futex park/unpark by a wide margin.
+struct SpinBarrier {
+    arrived: AtomicUsize,
+    generation: AtomicUsize,
+    total: usize,
+}
+
+impl SpinBarrier {
+    fn new(total: usize) -> Self {
+        SpinBarrier {
+            arrived: AtomicUsize::new(0),
+            generation: AtomicUsize::new(0),
+            total,
+        }
+    }
+
+    fn wait(&self) {
+        let gen = self.generation.load(Ordering::Acquire);
+        if self.arrived.fetch_add(1, Ordering::AcqRel) + 1 == self.total {
+            self.arrived.store(0, Ordering::Relaxed);
+            self.generation.store(gen.wrapping_add(1), Ordering::Release);
+        } else {
+            // Short pure spin (levels are tiny), then yield so a
+            // descheduled peer doesn't cost a whole scheduling quantum.
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::Acquire) == gen {
+                if spins < 1 << 14 {
+                    std::hint::spin_loop();
+                    spins += 1;
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+/// Reusable state of the sharded pipeline. All tables grow to the
+/// high-water mark and are reused; the atomic f64-bit tables are the port
+/// slices the shard workers share.
+#[derive(Debug, Default)]
+struct ShardState {
+    /// Emitted ops in serial plan order (pass-major).
+    ops: Vec<ShardOp>,
+    /// Next free DAG level per uplink/downlink (reset per call).
+    next_up: Vec<u32>,
+    next_down: Vec<u32>,
+    /// Per-op bucket key: `level * shards + src_shard`.
+    keys: Vec<u32>,
+    /// Counting-sort prefix table over the `(level, shard)` buckets
+    /// (`bucket_start[b]..bucket_start[b+1]` indexes into `order`).
+    bucket_start: Vec<u32>,
+    bucket_cursor: Vec<u32>,
+    /// Op indices sorted by `(level, src-shard, plan order)`.
+    order: Vec<u32>,
+    /// Port residuals / group budgets as f64 bits (workers share these).
+    up_bits: Vec<AtomicU64>,
+    down_bits: Vec<AtomicU64>,
+    budget_up_bits: Vec<AtomicU64>,
+    budget_down_bits: Vec<AtomicU64>,
+    /// Per-op grant as f64 bits (0.0 = gated / nothing granted).
+    grant_bits: Vec<AtomicU64>,
+    /// Level count of the current round.
+    levels: usize,
+}
+
+/// Scratch state is transient per call, so a cloned scratch just starts
+/// cold (atomics are not `Clone`).
+impl Clone for ShardState {
+    fn clone(&self) -> Self {
+        ShardState::default()
+    }
+}
+
+/// Grow an atomic f64-bit table to `n` slots.
+fn grow_bits(v: &mut Vec<AtomicU64>, n: usize) {
+    if v.len() < n {
+        v.resize_with(n, || AtomicU64::new(0));
+    }
+}
+
 /// Reusable workspace for [`allocate_into`]/[`apply_grants`]. Construct once
 /// (cheap, empty) and thread through every allocation; all internal tables
 /// grow to the working-set high-water mark and are then reused without
@@ -151,11 +296,30 @@ pub struct AllocScratch {
     grants: Vec<(FlowId, f64)>,
     /// Flows inspected by the last [`allocate_into`].
     visited: usize,
+    /// Worker shard count for [`allocate_into`]; 0/1 = serial path.
+    shards: usize,
+    /// Sharded-pipeline tables (unused while `shards <= 1`).
+    shard: ShardState,
 }
 
 impl AllocScratch {
     pub fn new() -> Self {
         AllocScratch { ledger: CapacityLedger::empty(), ..Default::default() }
+    }
+
+    /// Set the number of port shards (worker threads) [`allocate_into`]
+    /// uses. `0`/`1` selects the serial path. Results are bit-identical for
+    /// every setting (see the module docs); only wall time differs — the
+    /// parallel path pays a `thread::scope` spawn per call and wins on
+    /// large fabrics only.
+    pub fn set_shards(&mut self, shards: usize) {
+        self.shards = shards;
+    }
+
+    /// Configured shard count (≥ 1).
+    #[inline]
+    pub fn shards(&self) -> usize {
+        self.shards.max(1)
     }
 
     /// Grants of the last allocation round, in priority order.
@@ -195,13 +359,18 @@ impl AllocScratch {
 /// Allocate rates for `plan` (entries highest priority first) against
 /// `fabric`, writing the result into `scratch` (see
 /// [`AllocScratch::grants`]). Zero heap allocation once the scratch tables
-/// have reached their high-water size.
+/// have reached their high-water size (serial path; the sharded path
+/// additionally spawns its scoped workers per call).
 ///
 /// Two passes when bandwidth groups are present: pass 1 walks entries in
 /// priority order with each grouped claim capped by its group's per-port
 /// budget (`weight × port capacity`); pass 2 backfills the leftovers in the
 /// same priority order without budgets (work conservation). Group-free
 /// plans collapse to the single greedy pass.
+///
+/// With [`AllocScratch::set_shards`] ≥ 2 the port-sharded parallel pipeline
+/// runs instead; its results (grants, visited count, stamped grant tables)
+/// are bit-identical to the serial path (module docs).
 pub fn allocate_into(
     fabric: &Fabric,
     flows: &[FlowState],
@@ -210,7 +379,6 @@ pub fn allocate_into(
     scratch: &mut AllocScratch,
 ) {
     scratch.epoch += 1;
-    let epoch = scratch.epoch;
     if scratch.grant_epoch.len() < flows.len() {
         scratch.grant_epoch.resize(flows.len(), 0);
         scratch.grant_slot.resize(flows.len(), 0);
@@ -222,6 +390,35 @@ pub fn allocate_into(
     let has_groups = plan.entries.iter().any(|e| e.group.is_some())
         && plan.group_weights.iter().any(|&w| w > 0.0);
 
+    // Clamp to the machine: more spinning workers than cores turns the
+    // per-level barriers into scheduler-quantum stalls. Results are
+    // bit-identical for every shard count, so clamping is free. The floor
+    // of 2 keeps the parallel machinery exercisable (tests) even on
+    // single-core boxes — the barrier's yield fallback bounds that cost.
+    let shards = if scratch.shards >= 2 {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        scratch.shards.min(fabric.num_ports).min(hw.max(2))
+    } else {
+        1
+    };
+    if shards >= 2 && !plan.entries.is_empty() {
+        allocate_sharded(fabric, flows, coflows, plan, scratch, has_groups, shards);
+    } else {
+        allocate_serial(fabric, flows, coflows, plan, scratch, has_groups);
+    }
+}
+
+/// The serial greedy walk — the reference semantics every other path must
+/// reproduce bit for bit.
+fn allocate_serial(
+    fabric: &Fabric,
+    flows: &[FlowState],
+    coflows: &[CoflowState],
+    plan: &Plan,
+    scratch: &mut AllocScratch,
+    has_groups: bool,
+) {
+    let epoch = scratch.epoch;
     // Per-group per-port budgets (pass 1 only), flattened groups-major.
     let nports = fabric.num_ports;
     if has_groups {
@@ -309,6 +506,245 @@ pub fn allocate_into(
     }
 }
 
+/// The port-sharded parallel pipeline (module docs): bucket → parallel
+/// level-lockstep grant → deterministic serial merge. Bit-identical to
+/// [`allocate_serial`] for any shard count.
+fn allocate_sharded(
+    fabric: &Fabric,
+    flows: &[FlowState],
+    coflows: &[CoflowState],
+    plan: &Plan,
+    scratch: &mut AllocScratch,
+    has_groups: bool,
+    shards: usize,
+) {
+    let nports = fabric.num_ports;
+    let epoch = scratch.epoch;
+    let passes: &[bool] = if has_groups { &[true, false] } else { &[false] };
+
+    // ---- phase 1: bucket — one serial walk of the plan emits the runnable
+    // flows as ops, in exactly the order the serial path would visit them.
+    let st = &mut scratch.shard;
+    st.ops.clear();
+    for &budgeted in passes {
+        let pass_bit = if budgeted { BUDGETED_BIT } else { 0 };
+        for (ei, e) in plan.entries.iter().enumerate() {
+            for &fid in &coflows[e.coflow].active_list {
+                let f = &flows[fid];
+                if f.done() {
+                    continue;
+                }
+                match e.filter {
+                    FlowFilter::All => {}
+                    FlowFilter::PilotsOnly if !f.pilot => continue,
+                    FlowFilter::NonPilots if f.pilot => continue,
+                    _ => {}
+                }
+                st.ops.push(ShardOp {
+                    fid: fid as u32,
+                    src: f.src as u32,
+                    dst: f.dst as u32,
+                    entry: ei as u32 | pass_bit,
+                });
+            }
+        }
+    }
+    let nops = st.ops.len();
+    if nops == 0 {
+        return;
+    }
+
+    // ---- phase 1b: DAG levels + counting sort by (level, src-shard).
+    // Ops in one level touch pairwise-disjoint ports, so they can execute
+    // concurrently without reordering any port's operation sequence.
+    if st.next_up.len() < nports {
+        st.next_up.resize(nports, 0);
+        st.next_down.resize(nports, 0);
+    }
+    st.next_up[..nports].fill(0);
+    st.next_down[..nports].fill(0);
+    if st.keys.len() < nops {
+        st.keys.resize(nops, 0);
+    }
+    let mut max_level = 0u32;
+    for i in 0..nops {
+        let op = st.ops[i];
+        let (s, d) = (op.src as usize, op.dst as usize);
+        let lvl = st.next_up[s].max(st.next_down[d]);
+        st.next_up[s] = lvl + 1;
+        st.next_down[d] = lvl + 1;
+        max_level = max_level.max(lvl);
+        st.keys[i] = lvl * shards as u32 + port_shard(s, nports, shards) as u32;
+    }
+    let levels = max_level as usize + 1;
+    st.levels = levels;
+    let nbuckets = levels * shards;
+    if st.bucket_start.len() < nbuckets + 1 {
+        st.bucket_start.resize(nbuckets + 1, 0);
+        st.bucket_cursor.resize(nbuckets + 1, 0);
+    }
+    st.bucket_start[..nbuckets + 1].fill(0);
+    for i in 0..nops {
+        st.bucket_start[st.keys[i] as usize + 1] += 1;
+    }
+    for b in 0..nbuckets {
+        st.bucket_start[b + 1] += st.bucket_start[b];
+    }
+    st.bucket_cursor[..nbuckets + 1].copy_from_slice(&st.bucket_start[..nbuckets + 1]);
+    if st.order.len() < nops {
+        st.order.resize(nops, 0);
+    }
+    for i in 0..nops {
+        let k = st.keys[i] as usize;
+        let pos = st.bucket_cursor[k] as usize;
+        st.bucket_cursor[k] += 1;
+        st.order[pos] = i as u32;
+    }
+
+    // ---- phase 2 setup: shared residual/budget tables as f64 bits.
+    grow_bits(&mut st.up_bits, nports);
+    grow_bits(&mut st.down_bits, nports);
+    for p in 0..nports {
+        st.up_bits[p].store(fabric.up_capacity[p].to_bits(), Ordering::Relaxed);
+        st.down_bits[p].store(fabric.down_capacity[p].to_bits(), Ordering::Relaxed);
+    }
+    if has_groups {
+        let wsum: f64 = plan.group_weights.iter().sum();
+        let need = plan.group_weights.len() * nports;
+        grow_bits(&mut st.budget_up_bits, need);
+        grow_bits(&mut st.budget_down_bits, need);
+        for (g, &w) in plan.group_weights.iter().enumerate() {
+            let frac = w / wsum;
+            for p in 0..nports {
+                st.budget_up_bits[g * nports + p]
+                    .store((fabric.up_capacity[p] * frac).to_bits(), Ordering::Relaxed);
+                st.budget_down_bits[g * nports + p]
+                    .store((fabric.down_capacity[p] * frac).to_bits(), Ordering::Relaxed);
+            }
+        }
+    }
+    grow_bits(&mut st.grant_bits, nops);
+
+    // ---- phase 2: parallel grant — S shard workers sweep the levels in
+    // lockstep; every op's slot in grant_bits is written exactly once.
+    {
+        let st: &ShardState = st;
+        let barrier = SpinBarrier::new(shards);
+        std::thread::scope(|scope| {
+            for w in 1..shards {
+                let barrier = &barrier;
+                scope.spawn(move || shard_worker(st, plan, w, shards, nports, barrier));
+            }
+            shard_worker(st, plan, 0, shards, nports, &barrier);
+        });
+    }
+
+    // ---- phase 3: deterministic merge — replay the ops in plan order
+    // against the (freshly reset) ledger to rebuild the canonical grants
+    // list, the visited count, and the serial early exit.
+    let mut open_up = fabric.up_capacity.iter().filter(|&&c| c > EPS).count();
+    let mut open_down = fabric.down_capacity.iter().filter(|&&c| c > EPS).count();
+    for i in 0..nops {
+        if open_up == 0 || open_down == 0 {
+            break;
+        }
+        scratch.visited += 1;
+        let granted = f64::from_bits(scratch.shard.grant_bits[i].load(Ordering::Relaxed));
+        if granted > EPS {
+            let op = scratch.shard.ops[i];
+            let (src, dst) = (op.src as usize, op.dst as usize);
+            // same claim arithmetic as the serial path (granted ≤ residual
+            // by construction, so the clamp is a bit-exact no-op)
+            scratch.ledger.claim(src, dst, granted);
+            let fid = op.fid as usize;
+            if scratch.grant_epoch[fid] == epoch {
+                scratch.grants[scratch.grant_slot[fid] as usize].1 += granted;
+            } else {
+                scratch.grant_epoch[fid] = epoch;
+                scratch.grant_slot[fid] = scratch.grants.len() as u32;
+                scratch.grants.push((fid, granted));
+            }
+            if scratch.ledger.up_left(src) <= EPS {
+                open_up -= 1;
+            }
+            if scratch.ledger.down_left(dst) <= EPS {
+                open_down -= 1;
+            }
+        }
+    }
+}
+
+/// One shard worker of the parallel grant phase: processes, level by level,
+/// the ops whose src port falls in shard `w`. Within a level all ports are
+/// distinct across *all* ops, so the relaxed atomic loads/stores are
+/// data-race-free by construction; the barrier publishes each level's
+/// stores to the next.
+fn shard_worker(
+    st: &ShardState,
+    plan: &Plan,
+    w: usize,
+    shards: usize,
+    nports: usize,
+    barrier: &SpinBarrier,
+) {
+    for lvl in 0..st.levels {
+        let b = lvl * shards + w;
+        let lo = st.bucket_start[b] as usize;
+        let hi = st.bucket_start[b + 1] as usize;
+        for &opi in &st.order[lo..hi] {
+            let opi = opi as usize;
+            let op = st.ops[opi];
+            let (src, dst) = (op.src as usize, op.dst as usize);
+            let up = f64::from_bits(st.up_bits[src].load(Ordering::Relaxed));
+            let down = f64::from_bits(st.down_bits[dst].load(Ordering::Relaxed));
+            // serial gate: both residual directions must exceed EPS
+            if up.max(0.0) <= EPS || down.max(0.0) <= EPS {
+                st.grant_bits[opi].store(0, Ordering::Relaxed);
+                continue;
+            }
+            let budgeted = op.entry & BUDGETED_BIT != 0;
+            let group = plan.entries[(op.entry & !BUDGETED_BIT) as usize].group;
+            let want = if budgeted {
+                match group {
+                    Some(g) => {
+                        let bu = f64::from_bits(
+                            st.budget_up_bits[g * nports + src].load(Ordering::Relaxed),
+                        );
+                        let bd = f64::from_bits(
+                            st.budget_down_bits[g * nports + dst].load(Ordering::Relaxed),
+                        );
+                        bu.min(bd).max(0.0)
+                    }
+                    None => f64::INFINITY,
+                }
+            } else {
+                f64::INFINITY
+            };
+            if want <= EPS {
+                st.grant_bits[opi].store(0, Ordering::Relaxed);
+                continue;
+            }
+            // CapacityLedger::claim, bit for bit
+            let available = up.min(down).max(0.0);
+            let granted = want.min(available).max(0.0);
+            st.up_bits[src].store((up - granted).to_bits(), Ordering::Relaxed);
+            st.down_bits[dst].store((down - granted).to_bits(), Ordering::Relaxed);
+            if granted > EPS && budgeted {
+                if let Some(g) = group {
+                    let bup = &st.budget_up_bits[g * nports + src];
+                    let bu = f64::from_bits(bup.load(Ordering::Relaxed));
+                    bup.store((bu - granted).to_bits(), Ordering::Relaxed);
+                    let bdn = &st.budget_down_bits[g * nports + dst];
+                    let bd = f64::from_bits(bdn.load(Ordering::Relaxed));
+                    bdn.store((bd - granted).to_bits(), Ordering::Relaxed);
+                }
+            }
+            st.grant_bits[opi].store(granted.to_bits(), Ordering::Relaxed);
+        }
+        barrier.wait();
+    }
+}
+
 /// Compatibility wrapper: allocate with a fresh scratch and return an owned
 /// [`Allocation`]. Prefer [`allocate_into`] with a persistent
 /// [`AllocScratch`] on hot paths.
@@ -350,10 +786,10 @@ pub fn apply_grants(
     for e in &plan.entries {
         for &fid in &coflows[e.coflow].active_list {
             let f = &mut flows[fid];
-            if !f.alloc_mark && f.rate.abs() > EPS {
-                changed += 1;
-                f.rate = 0.0;
-            } else if !f.alloc_mark {
+            if !f.alloc_mark {
+                if f.rate.abs() > EPS {
+                    changed += 1;
+                }
                 f.rate = 0.0;
             }
         }
@@ -541,6 +977,103 @@ mod tests {
         allocate_into(&fabric, &flows, &coflows, &empty, &mut scratch);
         assert!(!scratch.was_granted(0));
         assert_eq!(scratch.grants().len(), 0);
+    }
+
+    /// Run `plan` through the serial path and through every shard count,
+    /// asserting bit-identical outputs (the in-module smoke version of
+    /// `tests/shard_equivalence.rs`).
+    fn assert_sharded_matches_serial(
+        fabric: &Fabric,
+        flows: &[FlowState],
+        coflows: &[CoflowState],
+        plan: &Plan,
+    ) {
+        let mut serial = AllocScratch::new();
+        allocate_into(fabric, flows, coflows, plan, &mut serial);
+        for s in [1usize, 2, 3, 4, 8] {
+            let mut sharded = AllocScratch::new();
+            sharded.set_shards(s);
+            // twice: the reused tables must stay exact across rounds
+            for round in 0..2 {
+                allocate_into(fabric, flows, coflows, plan, &mut sharded);
+                assert_eq!(
+                    sharded.grants().len(),
+                    serial.grants().len(),
+                    "S={s} round {round}: grant count"
+                );
+                for (a, b) in sharded.grants().iter().zip(serial.grants()) {
+                    assert_eq!(a.0, b.0, "S={s}: flow id");
+                    assert_eq!(a.1.to_bits(), b.1.to_bits(), "S={s}: rate bits for flow {}", a.0);
+                }
+                assert_eq!(sharded.visited(), serial.visited(), "S={s}: visited");
+                for f in 0..flows.len() {
+                    assert_eq!(sharded.was_granted(f), serial.was_granted(f), "S={s}: flow {f}");
+                    assert_eq!(
+                        sharded.granted_rate(f).to_bits(),
+                        serial.granted_rate(f).to_bits(),
+                        "S={s}: rate of flow {f}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_matches_serial_strict_priority() {
+        let fabric = Fabric::homogeneous(6, 100.0);
+        let (flows, coflows) = setup(&[
+            (0, 1, 10.0),
+            (0, 2, 10.0),
+            (2, 1, 10.0),
+            (3, 4, 10.0),
+            (5, 0, 10.0),
+            (4, 5, 10.0),
+        ]);
+        assert_sharded_matches_serial(&fabric, &flows, &coflows, &entries(6));
+    }
+
+    #[test]
+    fn sharded_matches_serial_with_groups_and_backfill() {
+        let fabric = Fabric::homogeneous(4, 90.0);
+        let (flows, coflows) =
+            setup(&[(0, 1, 10.0), (0, 1, 10.0), (2, 3, 10.0), (1, 2, 10.0)]);
+        let plan = Plan {
+            entries: vec![
+                OrderEntry::grouped(0, 0),
+                OrderEntry::grouped(1, 1),
+                OrderEntry::grouped(2, 0),
+                OrderEntry::all(3),
+            ],
+            group_weights: vec![2.0, 1.0],
+        };
+        assert_sharded_matches_serial(&fabric, &flows, &coflows, &plan);
+    }
+
+    #[test]
+    fn sharded_matches_serial_on_saturating_chain() {
+        // 1000 flows hammering one pair: the early-exit/visited bookkeeping
+        // must match the serial break behavior exactly.
+        let fabric = Fabric::homogeneous(2, 100.0);
+        let (flows, coflows) =
+            setup(&(0..1000).map(|_| (0, 1, 1.0)).collect::<Vec<_>>());
+        assert_sharded_matches_serial(&fabric, &flows, &coflows, &entries(1000));
+    }
+
+    #[test]
+    fn sharded_handles_zero_capacity_ports() {
+        let fabric = Fabric {
+            num_ports: 4,
+            up_capacity: vec![100.0, 0.0, 50.0, 100.0],
+            down_capacity: vec![100.0, 100.0, 0.0, 25.0],
+        };
+        let (flows, coflows) = setup(&[
+            (1, 0, 10.0), // dead uplink
+            (0, 2, 10.0), // dead downlink
+            (2, 3, 10.0),
+            (3, 1, 10.0),
+            (0, 3, 10.0),
+        ]);
+        assert_sharded_matches_serial(&fabric, &flows, &coflows, &entries(5));
     }
 
     #[test]

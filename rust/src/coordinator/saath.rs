@@ -203,6 +203,10 @@ impl Scheduler for SaathScheduler {
                 self.sorted[w] = (q, cont, seq, cid);
                 w += 1;
                 plan.entries.push(OrderEntry::grouped(cid, q));
+            } else if self.seen[cid] != scan {
+                // departed coflow: reset the sentinel so a later re-entry
+                // with an unchanged queue is re-inserted, not skipped
+                self.cached_queue[cid] = usize::MAX;
             }
         }
         self.sorted.truncate(w);

@@ -34,6 +34,32 @@ impl Fabric {
     pub fn gbps(n: usize) -> Self {
         Self::homogeneous(n, GBPS)
     }
+
+    /// Heterogeneous fabric from explicit per-port uplink/downlink
+    /// capacities (bytes/sec). Models mixed-NIC clusters (e.g. 1/10/40
+    /// Gbps generations side by side); ports with zero capacity are legal
+    /// and simply never granted.
+    pub fn heterogeneous(ups: Vec<f64>, downs: Vec<f64>) -> Self {
+        assert_eq!(
+            ups.len(),
+            downs.len(),
+            "uplink/downlink capacity vectors must cover the same ports"
+        );
+        Fabric {
+            num_ports: ups.len(),
+            up_capacity: ups,
+            down_capacity: downs,
+        }
+    }
+
+    /// Mixed-generation fabric: port `p` gets `gbps_cycle[p % len]` Gbps
+    /// symmetric up/down. The deterministic cycling keeps scenarios
+    /// reproducible without threading an RNG through fabric construction.
+    pub fn mixed_gbps(n: usize, gbps_cycle: &[f64]) -> Self {
+        assert!(!gbps_cycle.is_empty(), "need at least one line rate");
+        let caps: Vec<f64> = (0..n).map(|p| gbps_cycle[p % gbps_cycle.len()] * GBPS).collect();
+        Self::heterogeneous(caps.clone(), caps)
+    }
 }
 
 /// A mutable view of remaining port capacity used while building one rate
@@ -234,6 +260,31 @@ mod tests {
         load.release_up(0);
         assert_eq!(load.up_coflows[0], 0);
         assert_eq!(load.occ_epoch, 5);
+    }
+
+    #[test]
+    fn heterogeneous_constructor() {
+        let f = Fabric::heterogeneous(vec![10.0, 20.0], vec![30.0, 40.0]);
+        assert_eq!(f.num_ports, 2);
+        assert_eq!(f.up_capacity, vec![10.0, 20.0]);
+        assert_eq!(f.down_capacity, vec![30.0, 40.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn heterogeneous_rejects_mismatched_lengths() {
+        Fabric::heterogeneous(vec![1.0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn mixed_gbps_cycles_rates() {
+        let f = Fabric::mixed_gbps(5, &[1.0, 10.0, 40.0]);
+        assert_eq!(f.num_ports, 5);
+        assert_eq!(f.up_capacity[0], crate::GBPS);
+        assert_eq!(f.up_capacity[1], 10.0 * crate::GBPS);
+        assert_eq!(f.up_capacity[2], 40.0 * crate::GBPS);
+        assert_eq!(f.up_capacity[3], crate::GBPS);
+        assert_eq!(f.up_capacity, f.down_capacity);
     }
 
     #[test]

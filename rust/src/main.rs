@@ -174,6 +174,7 @@ fn main() -> anyhow::Result<()> {
                 ),
                 engine_dir: flags.get_opt("artifacts").map(Into::into),
                 port_rate: philae::GBPS,
+                alloc_shards: flags.get("shards", 1usize).map_err(anyhow::Error::msg)?,
             };
             let report = run_service(&t, &svc)?;
             println!(

@@ -1,4 +1,12 @@
 //! The coordinator thread, the agent threads, and the trace replayer.
+//!
+//! The coordinator uses **batched admission**: every wake-up drains the
+//! whole input queue — coflow registrations, teardown ops, and agent
+//! completion reports alike — applies all of them to the world, and then
+//! runs **one** order repair + rate allocation for the burst (previously
+//! each registration triggered its own reallocation). Allocation itself
+//! can run the port-sharded parallel pipeline via
+//! [`ServiceConfig::alloc_shards`].
 
 use super::ops::{CoflowOp, OpsHandle};
 use crate::agents::{AgentMsg, AgentSim, CoordMsg};
@@ -40,6 +48,10 @@ pub struct ServiceConfig {
     pub engine_dir: Option<PathBuf>,
     /// Port line rate in bytes per *simulated* second.
     pub port_rate: f64,
+    /// Worker shards for `rate::allocate_into` (0/1 = serial; the sharded
+    /// pipeline is bit-identical and pays off on multi-thousand port
+    /// fabrics).
+    pub alloc_shards: usize,
 }
 
 impl Default for ServiceConfig {
@@ -51,6 +63,7 @@ impl Default for ServiceConfig {
             delta_wall: Duration::from_millis(8),
             engine_dir: None,
             port_rate: crate::GBPS,
+            alloc_shards: 1,
         }
     }
 }
@@ -133,6 +146,26 @@ struct AgentHandle {
     tx: mpsc::Sender<CoordMsg>,
 }
 
+/// What a drained input batch requires of the coordinator afterwards.
+#[derive(Debug, Clone, Copy, Default)]
+struct DrainOutcome {
+    /// Something changed that affects rates (event-triggered policies
+    /// reallocate; periodic ones wait for their tick).
+    need_realloc: bool,
+    /// Reallocate regardless of policy (explicit coflow teardown must free
+    /// its rates immediately rather than at the next tick).
+    force_realloc: bool,
+}
+
+impl DrainOutcome {
+    fn merge(self, other: DrainOutcome) -> DrainOutcome {
+        DrainOutcome {
+            need_realloc: self.need_realloc || other.need_realloc,
+            force_realloc: self.force_realloc || other.force_realloc,
+        }
+    }
+}
+
 struct Coordinator {
     cfg: ServiceConfig,
     world: World,
@@ -211,7 +244,11 @@ impl Coordinator {
             port_refs: Vec::new(),
             port_refs_down: Vec::new(),
             plan: Plan::default(),
-            scratch: rate::AllocScratch::new(),
+            scratch: {
+                let mut s = rate::AllocScratch::new();
+                s.set_shards(cfg.alloc_shards);
+                s
+            },
             last_rates: HashMap::new(),
             cached_scores: HashMap::new(),
             scores_dirty: true,
@@ -300,59 +337,23 @@ impl Coordinator {
             }
             let wait = next_tick.saturating_duration_since(Instant::now());
             match input_rx.recv_timeout(wait) {
-                Ok(Input::Op(op)) => match op {
-                    CoflowOp::Register { record, reply } => {
-                        let cid = self.register(&record);
-                        let _ = reply.send(cid);
-                        if self.philae.is_some() {
-                            self.reallocate(); // event-triggered
-                        }
-                    }
-                    CoflowOp::Deregister { coflow } => {
-                        self.deregister(coflow);
-                        self.reallocate();
-                    }
-                    CoflowOp::Update { coflow, record } => {
-                        self.deregister(coflow);
-                        let _ = self.register(&record);
-                        self.reallocate();
-                    }
-                    CoflowOp::Seal => {
-                        self.sealed = true;
-                    }
-                },
-                Ok(Input::Agent(msg)) => {
+                // Batched admission: drain *everything* queued — coflow ops
+                // (register/deregister/update) and agent messages alike —
+                // into one batch, then pay a single order repair +
+                // allocation for the whole burst instead of one
+                // reallocation per admit.
+                Ok(first) => {
                     let t0 = Instant::now();
-                    let mut need_realloc = self.handle_agent_msg(msg);
-                    // drain whatever else is queued, batched
+                    let mut outcome = self.handle_input(first);
                     while let Ok(next) = input_rx.try_recv() {
-                        match next {
-                            Input::Agent(m) => need_realloc |= self.handle_agent_msg(m),
-                            Input::Op(op) => {
-                                // requeue ops through the normal path
-                                match op {
-                                    CoflowOp::Register { record, reply } => {
-                                        let cid = self.register(&record);
-                                        let _ = reply.send(cid);
-                                        need_realloc = true;
-                                    }
-                                    CoflowOp::Deregister { coflow } => {
-                                        self.deregister(coflow);
-                                        need_realloc = true;
-                                    }
-                                    CoflowOp::Update { coflow, record } => {
-                                        self.deregister(coflow);
-                                        let _ = self.register(&record);
-                                        need_realloc = true;
-                                    }
-                                    CoflowOp::Seal => self.sealed = true,
-                                }
-                            }
-                        }
+                        outcome = outcome.merge(self.handle_input(next));
                     }
                     self.iv_recv += t0.elapsed().as_secs_f64();
-                    if need_realloc && self.philae.is_some() {
-                        self.reallocate(); // event-triggered
+                    // Philae reallocates on any event; periodic (Aalo)
+                    // pipelines flush at the δ tick, except for explicit
+                    // coflow teardown, which frees rates immediately.
+                    if (outcome.need_realloc && self.philae.is_some()) || outcome.force_realloc {
+                        self.reallocate();
                     }
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -559,6 +560,38 @@ impl Coordinator {
         self.world.active.retain(|&x| x != cid);
     }
 
+    /// Apply one queued input to the world. Part of the batched-admission
+    /// drain: no reallocation happens here — the caller reallocates once
+    /// after the whole queue is drained.
+    fn handle_input(&mut self, input: Input) -> DrainOutcome {
+        match input {
+            Input::Op(op) => match op {
+                CoflowOp::Register { record, reply } => {
+                    let cid = self.register(&record);
+                    let _ = reply.send(cid);
+                    DrainOutcome { need_realloc: true, force_realloc: false }
+                }
+                CoflowOp::Deregister { coflow } => {
+                    self.deregister(coflow);
+                    DrainOutcome { need_realloc: true, force_realloc: true }
+                }
+                CoflowOp::Update { coflow, record } => {
+                    self.deregister(coflow);
+                    let _ = self.register(&record);
+                    DrainOutcome { need_realloc: true, force_realloc: true }
+                }
+                CoflowOp::Seal => {
+                    self.sealed = true;
+                    DrainOutcome::default()
+                }
+            },
+            Input::Agent(msg) => DrainOutcome {
+                need_realloc: self.handle_agent_msg(msg),
+                force_realloc: false,
+            },
+        }
+    }
+
     /// Returns true if the message warrants an (event-triggered) realloc.
     fn handle_agent_msg(&mut self, msg: AgentMsg) -> bool {
         match msg {
@@ -693,12 +726,11 @@ impl Coordinator {
                     self.cached_scores = self.engine_scores();
                     self.scores_dirty = false;
                 }
-                let p = self
-                    .philae
-                    .as_ref()
-                    .unwrap()
-                    .order_with_scores(&self.world, &self.cached_scores);
-                self.plan = p;
+                self.philae.as_ref().unwrap().order_with_scores_into(
+                    &self.world,
+                    &self.cached_scores,
+                    &mut self.plan,
+                );
             } else {
                 let mut ph = self.philae.take().unwrap();
                 ph.order_into(&self.world, &mut self.plan);

@@ -14,16 +14,57 @@
 //! * [`rate::allocate_into`] runs against an engine-owned
 //!   [`rate::AllocScratch`]: reusable capacity ledger, reused grants
 //!   buffer, and epoch-stamped dense per-flow tables that replace the old
-//!   per-event `HashMap`s and O(G²) grant dedup.
+//!   per-event `HashMap`s and O(G²) grant dedup. With
+//!   [`SimConfig::alloc_shards`] ≥ 2 the allocation runs through the
+//!   port-sharded parallel pipeline (bit-identical results; see
+//!   `coordinator/rate.rs`).
 //! * The engine's own bookkeeping (`running` set, per-coflow `rate_sum`
 //!   integrator) uses the same pattern: swap buffers plus an epoch-stamped
 //!   dirty list, cleared in O(changed) rather than O(total).
+//!
+//! ## Batched admission
+//!
+//! All events that fall on one instant — arrivals, flow-completion
+//! reports, the δ tick — are coalesced into a single reused
+//! [`EventBatch`]: the engine applies every physical state update first
+//! (admission bookkeeping, flow/coflow completion, port releases), then
+//! delivers the whole batch through one [`Scheduler::on_batch`] call and
+//! pays **one** order repair plus **one** allocation for it. The §4.3
+//! deadline model therefore charges a burst of simultaneous events as one
+//! rate calculation — the per-event regime (one reallocation per admit) is
+//! kept behind [`SimConfig::per_event_admission`], and
+//! `rust/tests/cct_equivalence.rs` pins the two modes to bit-identical
+//! CCTs on the FB-like scenarios (with and without report jitter).
+//!
+//! Semantics of a batch: its events are *simultaneous*, so hooks observe
+//! the world with **all** of the instant's physical updates applied,
+//! whereas per-event mode imposes one specific interleaving (hooks between
+//! updates). The two can differ only when an arrival coincides with a
+//! completion within the same EPS instant, or two coflows arrive at the
+//! exact same timestamp, *and* the scheduler's hook reads cross-coflow
+//! state such as `PortLoad` (Philae's pilot placement). Arrival times are
+//! continuous, so such coincidences are measure-zero in generated traces —
+//! the equivalence tests pin seeds where none occur; completion ties
+//! (common, since sibling flows share sizes and rates) are exactly
+//! reproduced because completion hooks read only flow-local and
+//! scheduler-internal state.
+//!
+//! ## Completion events
+//!
+//! Scheduled completions live in an indexed min-heap
+//! ([`crate::sim::CompletionHeap`]): one entry per running flow, rate
+//! changes *reschedule* in place and stalls *remove*, so the old
+//! epoch-stamped lazy deletion (and its unbounded stale-entry growth plus
+//! the `2·nf` up-front reservation) is gone entirely.
 //!
 //! [`SimConfig::full_recompute`] forces [`Scheduler::order_full_into`] — the
 //! from-scratch oracle path — instead; `rust/tests/cct_equivalence.rs`
 //! asserts the two produce bit-identical per-coflow CCTs.
 
-use crate::coordinator::{rate, Plan, Reaction, Scheduler, SchedulerConfig, SchedulerKind, World};
+use super::heap::CompletionHeap;
+use crate::coordinator::{
+    rate, EventBatch, Plan, Reaction, Scheduler, SchedulerConfig, SchedulerKind, World,
+};
 use crate::coflow::{CoflowState, FlowState};
 use crate::fabric::{Fabric, PortLoad};
 use crate::metrics::{IntervalStats, MessageCostModel, RunningStat};
@@ -50,6 +91,19 @@ pub struct SimConfig {
     /// [`Scheduler::order_into`]. Slower; exists so equivalence tests can
     /// pin the incremental engine to the reference behavior bit-for-bit.
     pub full_recompute: bool,
+    /// Deliver events one hook call at a time (the legacy per-event
+    /// admission regime) instead of coalescing same-instant events into one
+    /// [`EventBatch`]. Exists so equivalence tests can pin batched
+    /// admission to the per-event behavior; leave `false` on hot paths.
+    pub per_event_admission: bool,
+    /// Worker shards for [`rate::allocate_into`]; `0`/`1` = serial. The
+    /// sharded pipeline is bit-identical and pays off on multi-thousand
+    /// port fabrics (see `benches/bench_shard.rs`).
+    pub alloc_shards: usize,
+    /// Fabric override (e.g. [`Fabric::heterogeneous`] mixed-NIC
+    /// clusters); `None` = homogeneous at `port_rate`. Must cover exactly
+    /// the trace's port count.
+    pub fabric: Option<Fabric>,
 }
 
 impl Default for SimConfig {
@@ -60,6 +114,9 @@ impl Default for SimConfig {
             costs: MessageCostModel::default(),
             max_sim_time: 0.0,
             full_recompute: false,
+            per_event_admission: false,
+            alloc_shards: 1,
+            fabric: None,
         }
     }
 }
@@ -105,10 +162,16 @@ impl SimResult {
 /// Build the initial [`World`] for a trace (exposed for scheduler unit
 /// tests).
 pub fn world_from_trace(trace: &Trace) -> World {
-    world_with_rate(trace, crate::GBPS)
+    world_with_fabric(trace, Fabric::homogeneous(trace.num_ports, crate::GBPS))
 }
 
-fn world_with_rate(trace: &Trace, port_rate: f64) -> World {
+/// Build the initial [`World`] with an explicit (possibly heterogeneous)
+/// fabric; its port count must match the trace.
+pub fn world_with_fabric(trace: &Trace, fabric: Fabric) -> World {
+    assert_eq!(
+        fabric.num_ports, trace.num_ports,
+        "fabric port count must match the trace"
+    );
     let mut flows: Vec<FlowState> = trace
         .flows
         .iter()
@@ -132,16 +195,15 @@ fn world_with_rate(trace: &Trace, port_rate: f64) -> World {
         now: 0.0,
         flows,
         coflows,
-        fabric: Fabric::homogeneous(trace.num_ports, port_rate),
+        fabric,
         load: PortLoad::new(trace.num_ports),
         active: Vec::new(),
     }
 }
 
-/// Min-heap entry: (time, flow, epoch). Epoch invalidates stale entries
-/// after a rate change.
+/// Min-heap entry of the delayed-report queue: (report time, flow).
 #[derive(PartialEq)]
-struct Ev(Time, FlowId, u64);
+struct Ev(Time, FlowId);
 impl Eq for Ev {}
 impl PartialOrd for Ev {
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
@@ -150,10 +212,7 @@ impl PartialOrd for Ev {
 }
 impl Ord for Ev {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0
-            .total_cmp(&other.0)
-            .then(self.1.cmp(&other.1))
-            .then(self.2.cmp(&other.2))
+        self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
     }
 }
 
@@ -189,12 +248,18 @@ struct Engine {
     /// Arrival order (by time) of coflow ids.
     arrivals: Vec<(Time, CoflowId)>,
     next_arrival: usize,
-    /// Flow-completion event heap.
-    completions: BinaryHeap<Reverse<Ev>>,
+    /// Scheduled flow completions: one indexed entry per running flow
+    /// (reschedule on rate change, remove on stall — no stale entries).
+    completions: CompletionHeap,
     /// Delayed completion *reports* (jitter model): (report time, flow).
     reports: BinaryHeap<Reverse<Ev>>,
-    /// Per-flow epoch for heap invalidation.
-    epoch: Vec<u64>,
+    /// Same-instant events coalesced for one `Scheduler::on_batch` call
+    /// (reused buffers; see the module docs).
+    batch: EventBatch,
+    /// Deliver events per hook call instead (equivalence testing).
+    per_event: bool,
+    /// Reused buffer of flows that physically completed this instant.
+    completed: Vec<FlowId>,
     /// Flows currently holding a non-zero rate.
     running: Vec<FlowId>,
     /// Spare buffer swapped with `running` on each reallocation so the new
@@ -249,21 +314,29 @@ struct Totals {
 
 impl Engine {
     fn new(trace: &Trace, cfg: &SchedulerConfig, sim_cfg: &SimConfig) -> Self {
-        let world = world_with_rate(trace, sim_cfg.port_rate);
+        let fabric = sim_cfg
+            .fabric
+            .clone()
+            .unwrap_or_else(|| Fabric::homogeneous(trace.num_ports, sim_cfg.port_rate));
+        let world = world_with_fabric(trace, fabric);
         let mut arrivals: Vec<(Time, CoflowId)> =
             trace.coflows.iter().map(|c| (c.arrival, c.id)).collect();
         arrivals.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         let nf = world.flows.len();
         let nc = world.coflows.len();
+        let mut scratch = rate::AllocScratch::new();
+        scratch.set_shards(sim_cfg.alloc_shards);
         Engine {
             world,
             arrivals,
             next_arrival: 0,
-            // Reserve for one in-flight completion event per flow plus
-            // rate-change churn so steady-state pushes rarely reallocate.
-            completions: BinaryHeap::with_capacity(2 * nf + 64),
+            // Bounded at one live entry per running flow — no 2·nf slack
+            // for stale entries needed anymore.
+            completions: CompletionHeap::with_flow_capacity(nf),
             reports: BinaryHeap::with_capacity(64),
-            epoch: vec![0; nf],
+            batch: EventBatch::default(),
+            per_event: sim_cfg.per_event_admission,
+            completed: Vec::new(),
             running: Vec::new(),
             running_spare: Vec::new(),
             rate_sum: vec![0.0; nc],
@@ -271,7 +344,7 @@ impl Engine {
             rate_dirty_stamp: vec![0; nc],
             rate_dirty_epoch: 0,
             plan: Plan::default(),
-            scratch: rate::AllocScratch::new(),
+            scratch,
             full_recompute: sim_cfg.full_recompute,
             port_refs: (0..nc).map(|_| None).collect(),
             reports_pending: vec![0; nc],
@@ -304,18 +377,10 @@ impl Engine {
             if self.next_arrival < self.arrivals.len() {
                 t_next = t_next.min(self.arrivals[self.next_arrival].0);
             }
-            while let Some(Reverse(Ev(t, f, e))) = self.completions.peek() {
-                // NB: discard on finished_at (not done()): a flow can cross
-                // the EPS completion threshold by float slop before its
-                // scheduled event; the event must still fire to stamp it.
-                if self.epoch[*f] != *e || self.world.flows[*f].finished_at.is_some() {
-                    self.completions.pop();
-                } else {
-                    t_next = t_next.min(*t);
-                    break;
-                }
+            if let Some((t, _)) = self.completions.peek() {
+                t_next = t_next.min(t);
             }
-            if let Some(Reverse(Ev(t, _, _))) = self.reports.peek() {
+            if let Some(Reverse(Ev(t, _))) = self.reports.peek() {
                 t_next = t_next.min(*t);
             }
             if let Some(nt) = next_tick {
@@ -336,7 +401,11 @@ impl Engine {
             // ---- interval accounting boundary ----
             self.roll_intervals();
 
+            // Everything due at this instant is either dispatched through
+            // the per-event hooks (legacy mode) or collected into the
+            // reused batch and delivered via one `on_batch` call below.
             let mut reaction = Reaction::None;
+            self.batch.clear();
 
             // ---- arrivals ----
             while self.next_arrival < self.arrivals.len()
@@ -345,7 +414,11 @@ impl Engine {
                 let (_, cid) = self.arrivals[self.next_arrival];
                 self.next_arrival += 1;
                 self.admit(cid);
-                reaction = reaction.merge(sched.on_arrival(cid, &mut self.world));
+                if self.per_event {
+                    reaction = reaction.merge(sched.on_arrival(cid, &mut self.world));
+                } else {
+                    self.batch.arrivals.push(cid);
+                }
                 if next_tick.is_none() {
                     if let Some(iv) = tick {
                         next_tick = Some(self.world.now + iv);
@@ -354,36 +427,44 @@ impl Engine {
             }
 
             // ---- physical flow completions ----
-            let mut completed: Vec<FlowId> = Vec::new();
-            while let Some(Reverse(Ev(t, f, e))) = self.completions.peek() {
-                if *t <= self.world.now + EPS {
-                    let (f, e) = (*f, *e);
+            // NB: fire on the scheduled time even if the flow crossed the
+            // EPS completion threshold early by float slop — the event is
+            // what stamps `finished_at`.
+            self.completed.clear();
+            while let Some((t, f)) = self.completions.peek() {
+                if t <= self.world.now + EPS {
                     self.completions.pop();
-                    if self.epoch[f] == e && self.world.flows[f].finished_at.is_none() {
-                        completed.push(f);
-                    }
+                    debug_assert!(self.world.flows[f].finished_at.is_none());
+                    self.completed.push(f);
                 } else {
                     break;
                 }
             }
-            for f in completed {
+            for idx in 0..self.completed.len() {
+                let f = self.completed[idx];
                 self.complete_flow(f);
                 let cid = self.world.flows[f].coflow;
                 self.reports_pending[cid] += 1;
                 if self.jitter > 0.0 {
                     let d: f64 = self.rng.uniform(0.0, self.jitter);
-                    self.reports.push(Reverse(Ev(self.world.now + d, f, 0)));
-                } else {
+                    self.reports.push(Reverse(Ev(self.world.now + d, f)));
+                } else if self.per_event {
                     reaction = reaction.merge(self.deliver_report(f, sched));
+                } else {
+                    self.queue_report(f);
                 }
             }
 
             // ---- delayed completion reports ----
-            while let Some(Reverse(Ev(t, f, _))) = self.reports.peek() {
+            while let Some(Reverse(Ev(t, f))) = self.reports.peek() {
                 if *t <= self.world.now + EPS {
                     let f = *f;
                     self.reports.pop();
-                    reaction = reaction.merge(self.deliver_report(f, sched));
+                    if self.per_event {
+                        reaction = reaction.merge(self.deliver_report(f, sched));
+                    } else {
+                        self.queue_report(f);
+                    }
                 } else {
                     break;
                 }
@@ -398,7 +479,11 @@ impl Engine {
                     tick_updates = self.active_agents as u64;
                     self.iv_updates += tick_updates;
                     self.totals.update_msgs += tick_updates;
-                    reaction = reaction.merge(sched.on_tick(&mut self.world));
+                    if self.per_event {
+                        reaction = reaction.merge(sched.on_tick(&mut self.world));
+                    } else {
+                        self.batch.tick = true;
+                    }
                     ticked = true;
                     let mut t = nt;
                     while t <= self.world.now + EPS {
@@ -409,6 +494,15 @@ impl Engine {
                 if self.world.active.is_empty() {
                     next_tick = Some(self.world.now + iv);
                 }
+            }
+
+            // ---- batched delivery: one scheduler call per instant ----
+            if !self.per_event && !self.batch.is_empty() {
+                // move the batch out for the call, then hand the buffers
+                // back for reuse (no allocation either way)
+                let batch = std::mem::take(&mut self.batch);
+                reaction = reaction.merge(sched.on_batch(&batch, &mut self.world));
+                self.batch = batch;
             }
 
             // ---- reallocate ----
@@ -535,7 +629,7 @@ impl Engine {
             fl.rate = 0.0;
             fl.finished_at = Some(now);
         }
-        self.epoch[f] += 1;
+        self.completions.remove(f); // no-op when fired via pop()
         let fl = self.world.flows[f];
         let cid = fl.coflow;
         self.running.retain(|&x| x != f);
@@ -590,9 +684,10 @@ impl Engine {
         }
     }
 
-    /// Deliver a (possibly delayed) completion report to the scheduler.
-    /// Counts one agent→coordinator update message (Philae's only update
-    /// type; Aalo additionally gets tick-time byte updates).
+    /// Deliver a (possibly delayed) completion report to the scheduler —
+    /// the per-event admission path. Counts one agent→coordinator update
+    /// message (Philae's only update type; Aalo additionally gets tick-time
+    /// byte updates).
     fn deliver_report(&mut self, f: FlowId, sched: &mut dyn Scheduler) -> Reaction {
         self.iv_updates += 1;
         self.totals.update_msgs += 1;
@@ -609,6 +704,25 @@ impl Engine {
             reaction = reaction.merge(sched.on_coflow_complete(cid, &mut self.world));
         }
         reaction
+    }
+
+    /// Batched-admission counterpart of [`deliver_report`](Self::deliver_report):
+    /// performs the identical engine bookkeeping (update accounting,
+    /// exactly-once coflow completion) but queues the report into the batch
+    /// instead of invoking the scheduler — `on_batch` replays the hooks in
+    /// this same order afterwards.
+    fn queue_report(&mut self, f: FlowId) {
+        self.iv_updates += 1;
+        self.totals.update_msgs += 1;
+        let cid = self.world.flows[f].coflow;
+        self.reports_pending[cid] -= 1;
+        let coflow_done = self.world.coflows[cid].done()
+            && self.reports_pending[cid] == 0
+            && !self.coflow_delivered[cid];
+        if coflow_done {
+            self.coflow_delivered[cid] = true;
+        }
+        self.batch.flow_reports.push((f, coflow_done));
     }
 
     /// Recompute the priority order and rates; measured as coordinator
@@ -657,7 +771,7 @@ impl Engine {
                 && self.world.flows[f].rate != 0.0
             {
                 self.world.flows[f].rate = 0.0;
-                self.epoch[f] += 1;
+                self.completions.remove(f);
                 changed += 1;
             }
         }
@@ -670,10 +784,9 @@ impl Engine {
             let old_rate = self.world.flows[f].rate;
             if (old_rate - r).abs() > EPS {
                 self.world.flows[f].rate = r;
-                self.epoch[f] += 1;
                 changed += 1;
                 let due = now + self.world.flows[f].remaining() / r;
-                self.completions.push(Reverse(Ev(due, f, self.epoch[f])));
+                self.completions.set(f, due);
             }
             self.running.push(f);
             let cid = self.world.flows[f].coflow;
@@ -904,5 +1017,61 @@ mod tests {
         let b = Simulation::run(&trace, SchedulerKind::Philae, &cfg);
         assert_eq!(a.ccts, b.ccts);
         assert_eq!(a.rate_calcs, b.rate_calcs);
+    }
+
+    #[test]
+    fn heterogeneous_fabric_scales_completion_times() {
+        // same 125 MB flow on a 1 Gbps pair vs a 40 Gbps pair
+        let trace = Trace::from_records(
+            4,
+            vec![
+                TraceRecord::uniform(1, 0.0, vec![0], vec![1], 125.0),
+                TraceRecord::uniform(2, 0.0, vec![2], vec![3], 125.0),
+            ],
+        );
+        let fabric = Fabric::mixed_gbps(4, &[1.0, 1.0, 40.0, 40.0]);
+        let cfg = SchedulerConfig::default();
+        let sim_cfg = SimConfig { fabric: Some(fabric), ..SimConfig::default() };
+        let mut sched = SchedulerKind::Philae.build(&trace, &cfg);
+        let res = Simulation::run_with(&trace, sched.as_mut(), &cfg, &sim_cfg);
+        assert!((res.ccts[0] - 1.0).abs() < 1e-6, "1 Gbps cct {}", res.ccts[0]);
+        assert!(
+            (res.ccts[1] - 1.0 / 40.0).abs() < 1e-6,
+            "40 Gbps cct {}",
+            res.ccts[1]
+        );
+    }
+
+    #[test]
+    fn batched_and_per_event_admission_agree_on_tiny_trace() {
+        let trace = TraceSpec::tiny(10, 25).seed(9).generate();
+        let cfg = SchedulerConfig::default();
+        for &kind in &[SchedulerKind::Philae, SchedulerKind::Aalo] {
+            let base = SimConfig { account_delta: Some(1e18), ..SimConfig::default() };
+            let mut s1 = kind.build(&trace, &cfg);
+            let batched = Simulation::run_with(&trace, s1.as_mut(), &cfg, &base);
+            let per_event_cfg = SimConfig { per_event_admission: true, ..base };
+            let mut s2 = kind.build(&trace, &cfg);
+            let per_event = Simulation::run_with(&trace, s2.as_mut(), &cfg, &per_event_cfg);
+            assert_eq!(batched.ccts, per_event.ccts, "{kind:?}");
+            assert_eq!(batched.rate_calcs, per_event.rate_calcs, "{kind:?}");
+            assert_eq!(batched.update_msgs, per_event.update_msgs, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_allocation_in_engine_matches_serial() {
+        let trace = TraceSpec::tiny(12, 30).seed(4).generate();
+        let cfg = SchedulerConfig::default();
+        let base = SimConfig { account_delta: Some(1e18), ..SimConfig::default() };
+        let mut s1 = SchedulerKind::Philae.build(&trace, &cfg);
+        let serial = Simulation::run_with(&trace, s1.as_mut(), &cfg, &base);
+        for shards in [2usize, 4] {
+            let sharded_cfg = SimConfig { alloc_shards: shards, ..base.clone() };
+            let mut s2 = SchedulerKind::Philae.build(&trace, &cfg);
+            let sharded = Simulation::run_with(&trace, s2.as_mut(), &cfg, &sharded_cfg);
+            assert_eq!(serial.ccts, sharded.ccts, "S={shards}");
+            assert_eq!(serial.rate_msgs, sharded.rate_msgs, "S={shards}");
+        }
     }
 }

@@ -1,0 +1,228 @@
+//! Position-indexed min-heap for flow-completion events.
+//!
+//! The engine's old completion queue was a plain `BinaryHeap` with
+//! epoch-stamped lazy deletion: every rate change pushed a fresh entry and
+//! left the stale one behind until it bubbled to the top, so the heap was
+//! reserved at `2·nf` and could still grow past it under churn. This heap
+//! keeps **at most one entry per flow** (a dense `flow → slot` position
+//! map): a rate change *reschedules* the existing entry in place
+//! (`O(log n)` sift) and a stall/completion *removes* it, so the live size
+//! is bounded by the number of running flows and stale entries simply
+//! cannot exist.
+//!
+//! Ordering is `(due time, flow id)` under `f64::total_cmp` — a total,
+//! deterministic order, so event replay is bit-reproducible.
+
+use crate::{FlowId, Time};
+
+/// Min-heap of `(due, flow)` with O(1) membership and O(log n)
+/// insert/reschedule/remove. All storage is reused; `pos` grows once to the
+/// flow-table size and the heap vector to the running-flow high-water mark.
+#[derive(Debug, Clone, Default)]
+pub struct CompletionHeap {
+    heap: Vec<(Time, FlowId)>,
+    /// `flow → heap slot + 1`; 0 = not queued.
+    pos: Vec<u32>,
+}
+
+impl CompletionHeap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-size the position map for `num_flows` flows so steady-state
+    /// operation never reallocates it.
+    pub fn with_flow_capacity(num_flows: usize) -> Self {
+        CompletionHeap { heap: Vec::new(), pos: vec![0; num_flows] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// `true` if `f` currently has a scheduled completion.
+    pub fn contains(&self, f: FlowId) -> bool {
+        self.pos.get(f).copied().unwrap_or(0) != 0
+    }
+
+    /// Earliest `(due, flow)` without removing it.
+    #[inline]
+    pub fn peek(&self) -> Option<(Time, FlowId)> {
+        self.heap.first().copied()
+    }
+
+    /// Remove and return the earliest `(due, flow)`.
+    pub fn pop(&mut self) -> Option<(Time, FlowId)> {
+        let top = *self.heap.first()?;
+        self.pos[top.1] = 0;
+        let last = self.heap.pop().expect("non-empty");
+        if !self.heap.is_empty() {
+            self.heap[0] = last;
+            self.pos[last.1] = 1;
+            self.sift_down(0);
+        }
+        Some(top)
+    }
+
+    /// Schedule (or reschedule) flow `f` to complete at `due`.
+    pub fn set(&mut self, f: FlowId, due: Time) {
+        if f >= self.pos.len() {
+            self.pos.resize(f + 1, 0);
+        }
+        let slot = self.pos[f];
+        if slot == 0 {
+            self.heap.push((due, f));
+            let i = self.heap.len() - 1;
+            self.pos[f] = i as u32 + 1;
+            self.sift_up(i);
+        } else {
+            let i = slot as usize - 1;
+            self.heap[i].0 = due;
+            self.sift_up(i);
+            self.sift_down(i);
+        }
+    }
+
+    /// Drop flow `f`'s scheduled completion (no-op if absent).
+    pub fn remove(&mut self, f: FlowId) {
+        let slot = match self.pos.get(f) {
+            Some(&s) if s != 0 => s as usize - 1,
+            _ => return,
+        };
+        self.pos[f] = 0;
+        let last = self.heap.pop().expect("non-empty: f was queued");
+        if slot < self.heap.len() {
+            self.heap[slot] = last;
+            self.pos[last.1] = slot as u32 + 1;
+            self.sift_up(slot);
+            self.sift_down(slot);
+        }
+    }
+
+    #[inline]
+    fn less(a: (Time, FlowId), b: (Time, FlowId)) -> bool {
+        a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)) == std::cmp::Ordering::Less
+    }
+
+    #[inline]
+    fn swap(&mut self, a: usize, b: usize) {
+        self.heap.swap(a, b);
+        self.pos[self.heap[a].1] = a as u32 + 1;
+        self.pos[self.heap[b].1] = b as u32 + 1;
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if Self::less(self.heap[i], self.heap[parent]) {
+                self.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let l = 2 * i + 1;
+            if l >= self.heap.len() {
+                break;
+            }
+            let r = l + 1;
+            let mut m = l;
+            if r < self.heap.len() && Self::less(self.heap[r], self.heap[l]) {
+                m = r;
+            }
+            if Self::less(self.heap[m], self.heap[i]) {
+                self.swap(i, m);
+                i = m;
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(h: &mut CompletionHeap) -> Vec<(Time, FlowId)> {
+        let mut out = Vec::new();
+        while let Some(e) = h.pop() {
+            out.push(e);
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_time_then_id_order() {
+        let mut h = CompletionHeap::new();
+        h.set(2, 3.0);
+        h.set(0, 1.0);
+        h.set(1, 3.0);
+        h.set(3, 2.0);
+        assert_eq!(h.peek(), Some((1.0, 0)));
+        assert_eq!(drain(&mut h), vec![(1.0, 0), (2.0, 3), (3.0, 1), (3.0, 2)]);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn set_reschedules_in_place() {
+        let mut h = CompletionHeap::new();
+        h.set(0, 5.0);
+        h.set(1, 2.0);
+        h.set(0, 1.0); // move earlier
+        assert_eq!(h.len(), 2, "reschedule must not duplicate");
+        assert_eq!(h.peek(), Some((1.0, 0)));
+        h.set(0, 9.0); // move later
+        assert_eq!(h.len(), 2);
+        assert_eq!(drain(&mut h), vec![(2.0, 1), (9.0, 0)]);
+    }
+
+    #[test]
+    fn remove_is_exact_and_tolerant() {
+        let mut h = CompletionHeap::with_flow_capacity(8);
+        for f in 0..6 {
+            h.set(f, (6 - f) as f64);
+        }
+        h.remove(3);
+        h.remove(3); // double remove: no-op
+        h.remove(7); // never queued: no-op
+        assert!(!h.contains(3));
+        assert_eq!(h.len(), 5);
+        let order = drain(&mut h);
+        assert_eq!(order, vec![(1.0, 5), (2.0, 4), (4.0, 2), (5.0, 1), (6.0, 0)]);
+    }
+
+    #[test]
+    fn randomized_against_reference_sort() {
+        use crate::util::Rng;
+        let mut rng = Rng::seed_from_u64(99);
+        let mut h = CompletionHeap::new();
+        let mut reference: Vec<(Time, FlowId)> = Vec::new();
+        for step in 0..2000 {
+            let f = rng.below(64);
+            match rng.below(3) {
+                0 | 1 => {
+                    let t = rng.uniform(0.0, 100.0);
+                    reference.retain(|e| e.1 != f);
+                    reference.push((t, f));
+                    h.set(f, t);
+                }
+                _ => {
+                    reference.retain(|e| e.1 != f);
+                    h.remove(f);
+                }
+            }
+            assert_eq!(h.len(), reference.len(), "step {step}");
+        }
+        reference.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        assert_eq!(drain(&mut h), reference);
+    }
+}

@@ -13,5 +13,7 @@
 //! regenerate Tables 3/4/6.
 
 mod engine;
+mod heap;
 
-pub use engine::{world_from_trace, SimConfig, SimResult, Simulation};
+pub use engine::{world_from_trace, world_with_fabric, SimConfig, SimResult, Simulation};
+pub use heap::CompletionHeap;

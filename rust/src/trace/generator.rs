@@ -18,6 +18,7 @@
 //! expressed directly.
 
 use super::{Trace, TraceRecord};
+use crate::fabric::Fabric;
 use crate::{Time, MB};
 use crate::util::Rng;
 
@@ -53,6 +54,10 @@ pub struct TraceSpec {
     pub classes: Vec<CoflowClass>,
     /// RNG seed.
     pub rng_seed: u64,
+    /// Per-port line-rate pattern in Gbps, cycled across ports (see
+    /// [`TraceSpec::fabric`]); empty = homogeneous 1 Gbps. Models
+    /// mixed-NIC-generation clusters (e.g. 1/10/40 Gbps side by side).
+    pub port_gbps_cycle: Vec<f64>,
 }
 
 impl TraceSpec {
@@ -106,6 +111,28 @@ impl TraceSpec {
                 },
             ],
             rng_seed: 42,
+            port_gbps_cycle: Vec::new(),
+        }
+    }
+
+    /// Mixed-rate scenario: the FB-like workload on a heterogeneous fabric
+    /// cycling 1/1/10/40 Gbps NICs across the ports — half the cluster on
+    /// the old generation, the rest split across two upgrades. Pair with
+    /// [`TraceSpec::fabric`] when building the simulation.
+    pub fn mixed_rate(num_ports: usize, num_coflows: usize) -> Self {
+        let mut spec = Self::fb_like(num_ports, num_coflows);
+        spec.port_gbps_cycle = vec![1.0, 1.0, 10.0, 40.0];
+        spec
+    }
+
+    /// The fabric this scenario runs on: heterogeneous per
+    /// `port_gbps_cycle`, or the paper's homogeneous 1 Gbps testbed when
+    /// the cycle is empty.
+    pub fn fabric(&self) -> Fabric {
+        if self.port_gbps_cycle.is_empty() {
+            Fabric::gbps(self.num_ports)
+        } else {
+            Fabric::mixed_gbps(self.num_ports, &self.port_gbps_cycle)
         }
     }
 
@@ -161,8 +188,11 @@ impl TraceSpec {
                 };
             }
             let class = self.pick_class(&mut rng, total_w);
-            let nm = rng.range_inclusive(class.mappers.0.min(self.num_ports), class.mappers.1.min(self.num_ports)).max(1);
-            let nr = rng.range_inclusive(class.reducers.0.min(self.num_ports), class.reducers.1.min(self.num_ports)).max(1);
+            let cap = self.num_ports;
+            let (m0, m1) = (class.mappers.0.min(cap), class.mappers.1.min(cap));
+            let (r0, r1) = (class.reducers.0.min(cap), class.reducers.1.min(cap));
+            let nm = rng.range_inclusive(m0, m1).max(1);
+            let nr = rng.range_inclusive(r0, r1).max(1);
             let mappers = rng.sample_distinct(self.num_ports, nm);
             let reducer_ports = rng.sample_distinct(self.num_ports, nr);
             // Draw a size per (reducer) aggregated over mappers so the
@@ -213,7 +243,9 @@ mod tests {
             assert_eq!(x, y);
         }
         let c = TraceSpec::fb_like(50, 40).seed(10).generate();
-        assert!(a.flows.len() != c.flows.len() || a.flows.iter().zip(c.flows.iter()).any(|(x, y)| x != y));
+        let diverged = a.flows.len() != c.flows.len()
+            || a.flows.iter().zip(c.flows.iter()).any(|(x, y)| x != y);
+        assert!(diverged);
     }
 
     #[test]
@@ -270,6 +302,22 @@ mod tests {
             skews[skews.len() / 2]
         };
         assert!(avg_skew(&hi) > avg_skew(&lo) * 2.0);
+    }
+
+    #[test]
+    fn mixed_rate_scenario_builds_heterogeneous_fabric() {
+        let spec = TraceSpec::mixed_rate(10, 20);
+        let f = spec.fabric();
+        assert_eq!(f.num_ports, 10);
+        assert_eq!(f.up_capacity[0], crate::GBPS);
+        assert_eq!(f.up_capacity[2], 10.0 * crate::GBPS);
+        assert_eq!(f.up_capacity[3], 40.0 * crate::GBPS);
+        // the trace itself is unchanged workload-wise
+        let t = spec.generate();
+        assert_eq!(t.coflows.len(), 20);
+        // homogeneous default stays the paper's 1 Gbps testbed
+        let homo = TraceSpec::fb_like(10, 20).fabric();
+        assert!(homo.up_capacity.iter().all(|&c| c == crate::GBPS));
     }
 
     #[test]

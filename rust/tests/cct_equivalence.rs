@@ -1,7 +1,10 @@
 //! End-to-end equivalence of the incremental reallocation engine: simulated
 //! CCTs must be **bit-identical** between the incremental order path
 //! (`Scheduler::order_into`, the default) and the from-scratch oracle path
-//! (`SimConfig::full_recompute`), across the hot-path bench scenarios.
+//! (`SimConfig::full_recompute`), across the hot-path bench scenarios and
+//! **all nine scheduler kinds**; and between **batched admission** (the
+//! default coalesced `EventBatch` delivery) and the legacy per-event
+//! admission (`SimConfig::per_event_admission`).
 
 use philae::coordinator::{SchedulerConfig, SchedulerKind};
 use philae::sim::{SimConfig, Simulation};
@@ -67,13 +70,80 @@ fn aalo_ccts_bit_identical_900_ports() {
 
 #[test]
 fn remaining_schedulers_bit_identical_on_small_trace() {
+    // philae and aalo get the dedicated large-scenario tests above; this
+    // covers the other seven of the nine kinds.
     for &kind in &[
         SchedulerKind::Saath,
         SchedulerKind::Fifo,
         SchedulerKind::Scf,
         SchedulerKind::Sebf,
         SchedulerKind::PhilaeLcb,
+        SchedulerKind::PhilaeEc1,
+        SchedulerKind::PhilaeEcMulti,
     ] {
         assert_bit_identical(50, 60, kind);
     }
+}
+
+/// Batched admission (one coalesced `on_batch` + one allocation per
+/// instant) must reproduce the per-event admission history bit for bit.
+/// `jitter` > 0 additionally exercises delayed, reordered completion
+/// reports — the path `queue_report`'s precomputed coflow-done flag is
+/// specifically designed for.
+fn assert_batched_equals_per_event(
+    ports: usize,
+    coflows: usize,
+    kind: SchedulerKind,
+    jitter: f64,
+) {
+    let trace = TraceSpec::fb_like(ports, coflows).seed(5).generate();
+    let mut cfg = SchedulerConfig::default();
+    cfg.report_jitter = jitter;
+    cfg.dynamics_seed = 17;
+    // Neutralize the measured-wall-time deadline coupling, as above.
+    let base = SimConfig { account_delta: Some(1e18), ..SimConfig::default() };
+
+    let mut batched_sched = kind.build(&trace, &cfg);
+    let batched = Simulation::run_with(&trace, batched_sched.as_mut(), &cfg, &base);
+
+    let per_event_cfg = SimConfig { per_event_admission: true, ..base };
+    let mut per_event_sched = kind.build(&trace, &cfg);
+    let per_event = Simulation::run_with(&trace, per_event_sched.as_mut(), &cfg, &per_event_cfg);
+
+    assert_eq!(batched.ccts.len(), per_event.ccts.len());
+    for (i, (a, b)) in batched.ccts.iter().zip(per_event.ccts.iter()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{kind:?} {ports}p/{coflows}c: coflow {i} CCT {a} != {b} (batched vs per-event)"
+        );
+    }
+    assert_eq!(batched.rate_calcs, per_event.rate_calcs, "{kind:?}: reallocation counts");
+    assert_eq!(batched.rate_msgs, per_event.rate_msgs, "{kind:?}: rate message counts");
+    assert_eq!(batched.update_msgs, per_event.update_msgs, "{kind:?}: update counts");
+    assert_eq!(
+        batched.makespan.to_bits(),
+        per_event.makespan.to_bits(),
+        "{kind:?}: makespan"
+    );
+}
+
+#[test]
+fn philae_batched_admission_cct_equivalent_150_ports() {
+    assert_batched_equals_per_event(150, 200, SchedulerKind::Philae, 0.0);
+}
+
+#[test]
+fn aalo_batched_admission_cct_equivalent_150_ports() {
+    assert_batched_equals_per_event(150, 200, SchedulerKind::Aalo, 0.0);
+}
+
+#[test]
+fn philae_batched_admission_cct_equivalent_under_report_jitter() {
+    assert_batched_equals_per_event(60, 80, SchedulerKind::Philae, 0.05);
+}
+
+#[test]
+fn aalo_batched_admission_cct_equivalent_under_report_jitter() {
+    assert_batched_equals_per_event(60, 80, SchedulerKind::Aalo, 0.05);
 }

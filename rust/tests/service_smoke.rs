@@ -15,6 +15,7 @@ fn svc(kind: SchedulerKind) -> ServiceConfig {
         delta_wall: Duration::from_millis(8),
         engine_dir: None,
         port_rate: philae::GBPS,
+        alloc_shards: 1,
     }
 }
 

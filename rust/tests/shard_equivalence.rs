@@ -1,0 +1,171 @@
+//! Property test of the sharded allocation pipeline: for randomized
+//! fabrics (heterogeneous, including dead ports), flow/coflow layouts, and
+//! plans (lane filters, bandwidth groups, duplicate entries), allocation
+//! under `S ∈ {1, 2, 4, 8}` shards must be **bit-identical** to the serial
+//! allocator — grants, visited count, and the stamped grant-table queries —
+//! and stay bit-identical across scratch reuse.
+
+use philae::coflow::{CoflowState, FlowState};
+use philae::coordinator::rate::{self, AllocScratch, FlowFilter, OrderEntry, Plan};
+use philae::fabric::Fabric;
+use philae::util::{prop, Rng};
+
+struct Case {
+    fabric: Fabric,
+    flows: Vec<FlowState>,
+    coflows: Vec<CoflowState>,
+    plan: Plan,
+}
+
+fn random_case(rng: &mut Rng) -> Case {
+    let nports = rng.range_inclusive(2, 24);
+    let cap = |rng: &mut Rng| {
+        if rng.chance(0.1) {
+            0.0 // dead direction
+        } else {
+            rng.uniform(10.0, 1000.0)
+        }
+    };
+    let ups: Vec<f64> = (0..nports).map(|_| cap(rng)).collect();
+    let downs: Vec<f64> = (0..nports).map(|_| cap(rng)).collect();
+    let fabric = Fabric::heterogeneous(ups, downs);
+
+    let ncoflows = rng.range_inclusive(1, 10);
+    let mut flows: Vec<FlowState> = Vec::new();
+    let mut coflows: Vec<CoflowState> = Vec::new();
+    for cid in 0..ncoflows {
+        let nf = rng.range_inclusive(1, 30);
+        let mut ids = Vec::with_capacity(nf);
+        let mut total = 0.0;
+        for _ in 0..nf {
+            let fid = flows.len();
+            let src = rng.below(nports);
+            let dst = rng.below(nports);
+            let size = rng.uniform(1.0, 500.0);
+            let mut f = FlowState::new(fid, cid, src, dst, size);
+            f.pilot = rng.chance(0.2);
+            if rng.chance(0.15) {
+                f.sent = size; // already finished
+            }
+            flows.push(f);
+            ids.push(fid);
+            total += size;
+        }
+        coflows.push(CoflowState::new(cid, 0.0, ids, total, cid as u64));
+    }
+
+    // Random priority order over the coflows, occasionally with duplicate
+    // entries (exercises the cross-pass duplicate-grant merge).
+    let mut order: Vec<usize> = (0..ncoflows).collect();
+    for i in (1..order.len()).rev() {
+        let j = rng.below(i + 1);
+        order.swap(i, j);
+    }
+    let grouped = rng.chance(0.5);
+    let ngroups = if grouped { rng.range_inclusive(1, 3) } else { 0 };
+    let mut plan = Plan::default();
+    if grouped {
+        plan.group_weights = (0..ngroups).map(|_| rng.uniform(0.5, 4.0)).collect();
+    }
+    for &cid in &order {
+        let filter = match rng.below(4) {
+            0 => FlowFilter::PilotsOnly,
+            1 => FlowFilter::NonPilots,
+            _ => FlowFilter::All,
+        };
+        let group = if grouped && rng.chance(0.7) { Some(rng.below(ngroups)) } else { None };
+        plan.entries.push(OrderEntry { coflow: cid, filter, group });
+        if rng.chance(0.15) {
+            // duplicate entry for the same coflow, different lane
+            plan.entries.push(OrderEntry { coflow: cid, filter: FlowFilter::All, group });
+        }
+    }
+    Case { fabric, flows, coflows, plan }
+}
+
+#[test]
+fn sharded_allocation_bit_identical_to_serial() {
+    prop::for_all(96, |rng| {
+        let case = random_case(rng);
+        let mut serial = AllocScratch::new();
+        rate::allocate_into(&case.fabric, &case.flows, &case.coflows, &case.plan, &mut serial);
+
+        for shards in [1usize, 2, 4, 8] {
+            let mut sharded = AllocScratch::new();
+            sharded.set_shards(shards);
+            // two rounds: table reuse must not perturb the result
+            for round in 0..2 {
+                rate::allocate_into(
+                    &case.fabric,
+                    &case.flows,
+                    &case.coflows,
+                    &case.plan,
+                    &mut sharded,
+                );
+                assert_eq!(
+                    sharded.grants().len(),
+                    serial.grants().len(),
+                    "S={shards} round {round}: grant count"
+                );
+                for (a, b) in sharded.grants().iter().zip(serial.grants()) {
+                    assert_eq!(a.0, b.0, "S={shards} round {round}: flow order");
+                    assert_eq!(
+                        a.1.to_bits(),
+                        b.1.to_bits(),
+                        "S={shards} round {round}: rate bits of flow {}",
+                        a.0
+                    );
+                }
+                assert_eq!(
+                    sharded.visited(),
+                    serial.visited(),
+                    "S={shards} round {round}: visited"
+                );
+                for f in 0..case.flows.len() {
+                    assert_eq!(
+                        sharded.was_granted(f),
+                        serial.was_granted(f),
+                        "S={shards}: was_granted({f})"
+                    );
+                    assert_eq!(
+                        sharded.granted_rate(f).to_bits(),
+                        serial.granted_rate(f).to_bits(),
+                        "S={shards}: granted_rate({f})"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn sharded_allocation_never_oversubscribes_ports() {
+    prop::for_all(48, |rng| {
+        let case = random_case(rng);
+        let mut scratch = AllocScratch::new();
+        scratch.set_shards(4);
+        rate::allocate_into(&case.fabric, &case.flows, &case.coflows, &case.plan, &mut scratch);
+        let mut up = vec![0.0f64; case.fabric.num_ports];
+        let mut down = vec![0.0f64; case.fabric.num_ports];
+        for &(fid, r) in scratch.grants() {
+            assert!(r > 0.0, "non-positive grant for flow {fid}");
+            assert!(!case.flows[fid].done(), "grant to a finished flow {fid}");
+            up[case.flows[fid].src] += r;
+            down[case.flows[fid].dst] += r;
+        }
+        for p in 0..case.fabric.num_ports {
+            assert!(
+                up[p] <= case.fabric.up_capacity[p] + 1e-6,
+                "uplink {p} oversubscribed: {} > {}",
+                up[p],
+                case.fabric.up_capacity[p]
+            );
+            assert!(
+                down[p] <= case.fabric.down_capacity[p] + 1e-6,
+                "downlink {p} oversubscribed: {} > {}",
+                down[p],
+                case.fabric.down_capacity[p]
+            );
+        }
+    });
+}
