@@ -73,6 +73,7 @@ fn main() -> anyhow::Result<()> {
         engine_dir: artifacts,
         port_rate: philae::GBPS,
         alloc_shards: 1,
+        coordinators: 1,
     };
 
     let philae_run = run_service(&trace, &base)?;

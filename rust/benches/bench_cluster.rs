@@ -1,0 +1,182 @@
+//! §Perf bench of **multi-coordinator sharding**: full end-to-end
+//! simulations through [`Simulation::run_cluster`] at K ∈ {1, 2, 4, 8}
+//! coordinator shards on 900- and 5000-port FB-like fabrics, against the
+//! single-coordinator baseline.
+//!
+//! Reported per (fabric, K): end-to-end **events/sec** (arrivals + update
+//! messages + rate calculations over sim wall time) and the mean
+//! **allocation µs per scheduling round** (measured order+allocate wall
+//! time / rounds). K=1 is asserted **bit-identical** to the
+//! single-coordinator path (same CCTs, same event counts) — the cluster
+//! plumbing may cost wall time but must not change behavior.
+//!
+//! Emits machine-readable `BENCH_cluster.json` at the repo root; CI runs a
+//! 1-iteration smoke and `bench_gate` tracks the K=1 overhead ratio
+//! against `ci/bench_baseline.json`.
+//!
+//! `cargo bench --bench bench_cluster`
+
+mod common;
+
+use philae::coordinator::{SchedulerConfig, SchedulerKind};
+use philae::sim::{SimConfig, SimResult, Simulation};
+use philae::trace::TraceSpec;
+
+struct KPoint {
+    k: usize,
+    wall_s: f64,
+    events_per_sec: f64,
+    alloc_us_mean: f64,
+    rate_calcs: u64,
+}
+
+struct Row {
+    ports: usize,
+    coflows: usize,
+    flows: usize,
+    single_wall_s: f64,
+    single_events_per_sec: f64,
+    points: Vec<KPoint>,
+}
+
+fn events(res: &SimResult, arrivals: usize) -> f64 {
+    arrivals as f64 + res.update_msgs as f64 + res.rate_calcs as f64
+}
+
+fn main() {
+    common::banner(
+        "cluster",
+        "multi-coordinator sharding: events/sec and allocation µs vs K",
+    );
+    let cfg = SchedulerConfig::default();
+    // full simulations are heavy — default to few iterations; CI smoke
+    // uses PHILAE_BENCH_ITERS=1
+    let iters = common::iters(3);
+    // Philae only: event-triggered (no δ ticks), so the §4.3 deadline
+    // model never couples measured wall time into the event history and
+    // K=1 is bit-comparable to the single-coordinator run.
+    let kind = SchedulerKind::Philae;
+    let ks = [1usize, 2, 4, 8];
+    println!("iters: {iters} | scheduler: {}\n", kind.as_str());
+
+    let mut rows: Vec<Row> = Vec::new();
+    for (ports, coflows) in [(900usize, 600usize), (5000, 800)] {
+        let trace = TraceSpec::fb_like(ports, coflows).seed(5).generate();
+        let base = SimConfig::default();
+
+        // single-coordinator baseline
+        let mut single_res = None;
+        let (single_wall, _) = common::time_it(iters, || {
+            let mut sched = kind.build(&trace, &cfg);
+            let r = Simulation::run_with(&trace, sched.as_mut(), &cfg, &base);
+            single_res = Some(r);
+        });
+        let single = single_res.expect("baseline ran");
+        let single_eps = events(&single, trace.coflows.len()) / single_wall.max(1e-9);
+        println!(
+            "{} ports / {} coflows / {} flows:",
+            ports,
+            coflows,
+            trace.flows.len()
+        );
+        println!(
+            "  single          {:>8.3} s wall | {:>10.0} events/s | {} rate calcs",
+            single_wall, single_eps, single.rate_calcs
+        );
+
+        let mut points = Vec::new();
+        for &k in &ks {
+            let sim_cfg = SimConfig { coordinators: k, ..SimConfig::default() };
+            let mut res_slot = None;
+            let (wall, _) = common::time_it(iters, || {
+                let r = Simulation::run_cluster(&trace, kind, &cfg, &sim_cfg);
+                res_slot = Some(r);
+            });
+            let res = res_slot.expect("cluster ran");
+            if k == 1 {
+                // the K=1 cluster is a pass-through: bit-identical history
+                assert_eq!(res.ccts.len(), single.ccts.len());
+                for (i, (a, b)) in res.ccts.iter().zip(single.ccts.iter()).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "K=1 cluster CCT diverged from single coordinator at coflow {i}"
+                    );
+                }
+                assert_eq!(res.rate_calcs, single.rate_calcs, "K=1 rate-calc count");
+                assert_eq!(res.update_msgs, single.update_msgs, "K=1 update count");
+            } else {
+                // K>1 trades schedule quality for coordinator scalability —
+                // but everything must still finish
+                assert!(
+                    res.ccts.iter().all(|c| c.is_finite() && *c > 0.0),
+                    "K={k}: unfinished coflows"
+                );
+            }
+            let eps = events(&res, trace.coflows.len()) / wall.max(1e-9);
+            let alloc_us = if res.rate_calcs > 0 {
+                res.rate_calc_wall_s / res.rate_calcs as f64 * 1e6
+            } else {
+                0.0
+            };
+            println!(
+                "  K={k:<2} cluster    {:>8.3} s wall | {:>10.0} events/s | {:>8.2} µs/round ({:.2}x events/s vs single)",
+                wall,
+                eps,
+                alloc_us,
+                eps / single_eps.max(1e-9)
+            );
+            points.push(KPoint {
+                k,
+                wall_s: wall,
+                events_per_sec: eps,
+                alloc_us_mean: alloc_us,
+                rate_calcs: res.rate_calcs,
+            });
+        }
+        rows.push(Row {
+            ports,
+            coflows,
+            flows: trace.flows.len(),
+            single_wall_s: single_wall,
+            single_events_per_sec: single_eps,
+            points,
+        });
+        println!();
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"cluster\",\n  \"iters\": ");
+    json.push_str(&iters.to_string());
+    json.push_str(",\n  \"configs\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"ports\": {}, \"coflows\": {}, \"flows\": {},\n      \
+             \"single\": {{\"wall_s\": {:.6}, \"events_per_sec\": {:.3}}},\n      \
+             \"k1_events_ratio_vs_single\": {:.4},\n      \"cluster\": [",
+            r.ports,
+            r.coflows,
+            r.flows,
+            r.single_wall_s,
+            r.single_events_per_sec,
+            r.points
+                .first()
+                .map(|p| p.events_per_sec / r.single_events_per_sec.max(1e-9))
+                .unwrap_or(0.0)
+        ));
+        for (j, p) in r.points.iter().enumerate() {
+            json.push_str(&format!(
+                "{{\"k\": {}, \"wall_s\": {:.6}, \"events_per_sec\": {:.3}, \
+                 \"alloc_us_mean\": {:.3}, \"rate_calcs\": {}}}{}",
+                p.k,
+                p.wall_s,
+                p.events_per_sec,
+                p.alloc_us_mean,
+                p.rate_calcs,
+                if j + 1 < r.points.len() { ", " } else { "" }
+            ));
+        }
+        json.push_str(&format!("]}}{}\n", if i + 1 < rows.len() { "," } else { "" }));
+    }
+    json.push_str("  ]\n}\n");
+    common::write_json("BENCH_cluster.json", &json);
+}

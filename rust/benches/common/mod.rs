@@ -3,7 +3,12 @@
 
 use std::time::Instant;
 
+// Each bench target compiles its own copy of this module and uses a
+// subset of the helpers; CI lints benches with `-D warnings`, so the
+// unused copies must not trip dead_code.
+
 /// Time `f` over `iters` runs; returns (min_s, mean_s).
+#[allow(dead_code)]
 pub fn time_it<T>(iters: usize, mut f: impl FnMut() -> T) -> (f64, f64) {
     assert!(iters > 0);
     let mut times = Vec::with_capacity(iters);
@@ -19,6 +24,7 @@ pub fn time_it<T>(iters: usize, mut f: impl FnMut() -> T) -> (f64, f64) {
 
 /// Iteration count: `default`, overridable via `PHILAE_BENCH_ITERS` (CI
 /// smoke runs set it to 2 so hot-path regressions fail loudly but fast).
+#[allow(dead_code)]
 pub fn iters(default: usize) -> usize {
     std::env::var("PHILAE_BENCH_ITERS")
         .ok()
@@ -28,6 +34,7 @@ pub fn iters(default: usize) -> usize {
 }
 
 /// Standard bench banner.
+#[allow(dead_code)]
 pub fn banner(name: &str, what: &str) {
     println!("=== bench {name} — {what} ===");
 }

@@ -1,0 +1,318 @@
+//! CI bench-regression gate.
+//!
+//! Compares freshly emitted `BENCH_*.json` files against the committed
+//! baseline `ci/bench_baseline.json` and exits non-zero when any tracked
+//! metric regresses by more than the tolerance. A missing bench file or a
+//! missing metric path is a **failure**, not a skip — a silently absent
+//! bench artifact must never pass the gate.
+//!
+//! The baseline deliberately tracks **machine-normalized ratios** (e.g.
+//! incremental-vs-full speedup, sharded-vs-serial speedup, cluster-K1 vs
+//! single events/sec) rather than absolute microseconds: CI runners vary
+//! wildly across generations, but a ratio of two measurements taken on the
+//! same box in the same job is comparable across runners. Baseline values
+//! are conservative floors; tighten them as the trajectory accumulates.
+//!
+//! Baseline format (parsed with the in-crate JSON reader — no serde):
+//!
+//! ```json
+//! {
+//!   "tolerance": 0.25,
+//!   "metrics": [
+//!     {"name": "...", "file": "BENCH_hotpath.json",
+//!      "path": "configs.0.order_alloc_speedup",
+//!      "better": "higher", "value": 1.0, "tolerance": 0.25}
+//!   ]
+//! }
+//! ```
+//!
+//! `path` is a dot-separated walk; numeric segments index arrays. The
+//! per-metric `tolerance` (optional) overrides the file-level one.
+//!
+//! ```text
+//! bench_gate --baseline ../ci/bench_baseline.json --dir ..
+//! ```
+
+use philae::util::json::JsonValue;
+use std::path::{Path, PathBuf};
+
+/// Walk a dot-separated path (`configs.0.speedup`) through a JSON value.
+fn lookup<'a>(root: &'a JsonValue, path: &str) -> Option<&'a JsonValue> {
+    let mut cur = root;
+    for seg in path.split('.') {
+        cur = match cur {
+            JsonValue::Array(items) => items.get(seg.parse::<usize>().ok()?)?,
+            JsonValue::Object(_) => cur.get(seg)?,
+            _ => return None,
+        };
+    }
+    Some(cur)
+}
+
+/// One tracked metric from the baseline file.
+#[derive(Debug, Clone)]
+struct Metric {
+    name: String,
+    file: String,
+    path: String,
+    higher_is_better: bool,
+    value: f64,
+    tolerance: f64,
+}
+
+/// A metric's verdict: `Ok(fresh_value)` or an explanation.
+fn check(metric: &Metric, fresh: f64) -> Result<(), String> {
+    if metric.higher_is_better {
+        let floor = metric.value * (1.0 - metric.tolerance);
+        if fresh < floor {
+            return Err(format!(
+                "{} regressed: {fresh:.4} < floor {floor:.4} (baseline {:.4}, tolerance {:.0}%)",
+                metric.name,
+                metric.value,
+                metric.tolerance * 100.0
+            ));
+        }
+    } else {
+        let ceil = metric.value * (1.0 + metric.tolerance);
+        if fresh > ceil {
+            return Err(format!(
+                "{} regressed: {fresh:.4} > ceiling {ceil:.4} (baseline {:.4}, tolerance {:.0}%)",
+                metric.name,
+                metric.value,
+                metric.tolerance * 100.0
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn parse_baseline(doc: &JsonValue) -> Result<Vec<Metric>, String> {
+    let default_tol = doc
+        .get("tolerance")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.25);
+    let JsonValue::Array(items) = doc
+        .get("metrics")
+        .ok_or("baseline has no \"metrics\" array")?
+    else {
+        return Err("\"metrics\" is not an array".into());
+    };
+    let mut out = Vec::new();
+    for (i, m) in items.iter().enumerate() {
+        let get_str = |key: &str| -> Result<String, String> {
+            m.get(key)
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| format!("metric {i}: missing string field {key:?}"))
+        };
+        let better = get_str("better")?;
+        if better != "higher" && better != "lower" {
+            return Err(format!("metric {i}: \"better\" must be higher|lower, got {better:?}"));
+        }
+        out.push(Metric {
+            name: get_str("name")?,
+            file: get_str("file")?,
+            path: get_str("path")?,
+            higher_is_better: better == "higher",
+            value: m
+                .get("value")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("metric {i}: missing numeric \"value\""))?,
+            tolerance: m
+                .get("tolerance")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(default_tol),
+        });
+    }
+    Ok(out)
+}
+
+fn run(baseline_path: &Path, dir: &Path) -> Result<usize, String> {
+    let text = std::fs::read_to_string(baseline_path)
+        .map_err(|e| format!("cannot read baseline {}: {e}", baseline_path.display()))?;
+    let doc = JsonValue::parse(&text).map_err(|e| format!("baseline parse error: {e}"))?;
+    let metrics = parse_baseline(&doc)?;
+    if metrics.is_empty() {
+        return Err("baseline tracks no metrics — the gate would be vacuous".into());
+    }
+
+    // parse each referenced bench file once
+    let mut docs: Vec<(String, JsonValue)> = Vec::new();
+    for m in &metrics {
+        if docs.iter().any(|(f, _)| f == &m.file) {
+            continue;
+        }
+        let p = dir.join(&m.file);
+        let text = std::fs::read_to_string(&p)
+            .map_err(|e| format!("bench artifact {} missing or unreadable: {e}", p.display()))?;
+        let v = JsonValue::parse(&text).map_err(|e| format!("{}: parse error: {e}", m.file))?;
+        docs.push((m.file.clone(), v));
+    }
+
+    let mut failures: Vec<String> = Vec::new();
+    println!("bench gate: {} tracked metrics", metrics.len());
+    for m in &metrics {
+        let doc = &docs.iter().find(|(f, _)| f == &m.file).unwrap().1;
+        match lookup(doc, &m.path).and_then(|v| v.as_f64()) {
+            None => failures.push(format!(
+                "{}: path {:?} not found (or not a number) in {}",
+                m.name, m.path, m.file
+            )),
+            Some(fresh) => {
+                let verdict = check(m, fresh);
+                let mark = if verdict.is_ok() { "ok  " } else { "FAIL" };
+                println!(
+                    "  [{mark}] {:<46} fresh {:>10.4} | baseline {:>10.4} ({})",
+                    m.name,
+                    fresh,
+                    m.value,
+                    if m.higher_is_better { "higher is better" } else { "lower is better" }
+                );
+                if let Err(e) = verdict {
+                    failures.push(e);
+                }
+            }
+        }
+    }
+    if failures.is_empty() {
+        Ok(metrics.len())
+    } else {
+        Err(failures.join("\n"))
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut baseline = PathBuf::from("ci/bench_baseline.json");
+    let mut dir = PathBuf::from(".");
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--baseline" if i + 1 < args.len() => {
+                baseline = PathBuf::from(&args[i + 1]);
+                i += 2;
+            }
+            "--dir" if i + 1 < args.len() => {
+                dir = PathBuf::from(&args[i + 1]);
+                i += 2;
+            }
+            other => {
+                eprintln!("usage: bench_gate [--baseline <json>] [--dir <bench-artifact-dir>]");
+                eprintln!("unexpected argument {other:?}");
+                std::process::exit(2);
+            }
+        }
+    }
+    match run(&baseline, &dir) {
+        Ok(n) => println!("bench gate passed ({n} metrics within tolerance)"),
+        Err(e) => {
+            eprintln!("bench gate FAILED:\n{e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_walks_objects_and_arrays() {
+        let doc = JsonValue::parse(
+            r#"{"configs": [{"speedup": 2.5}, {"nested": {"x": [1, 2, 3]}}]}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            lookup(&doc, "configs.0.speedup").and_then(|v| v.as_f64()),
+            Some(2.5)
+        );
+        assert_eq!(
+            lookup(&doc, "configs.1.nested.x.2").and_then(|v| v.as_f64()),
+            Some(3.0)
+        );
+        assert!(lookup(&doc, "configs.5.speedup").is_none());
+        assert!(lookup(&doc, "configs.0.missing").is_none());
+    }
+
+    fn metric(better_higher: bool, value: f64, tol: f64) -> Metric {
+        Metric {
+            name: "m".into(),
+            file: "f".into(),
+            path: "p".into(),
+            higher_is_better: better_higher,
+            value,
+            tolerance: tol,
+        }
+    }
+
+    #[test]
+    fn higher_is_better_floors() {
+        let m = metric(true, 2.0, 0.25);
+        assert!(check(&m, 2.4).is_ok());
+        assert!(check(&m, 1.51).is_ok()); // within 25 %
+        assert!(check(&m, 1.49).is_err()); // beyond 25 %
+    }
+
+    #[test]
+    fn lower_is_better_ceilings() {
+        let m = metric(false, 100.0, 0.25);
+        assert!(check(&m, 80.0).is_ok());
+        assert!(check(&m, 124.0).is_ok());
+        assert!(check(&m, 126.0).is_err());
+    }
+
+    #[test]
+    fn baseline_parsing_and_validation() {
+        let doc = JsonValue::parse(
+            r#"{"tolerance": 0.2, "metrics": [
+                {"name": "a", "file": "F.json", "path": "x.0", "better": "higher", "value": 1.5},
+                {"name": "b", "file": "F.json", "path": "y", "better": "lower", "value": 9.0,
+                 "tolerance": 0.5}
+            ]}"#,
+        )
+        .unwrap();
+        let ms = parse_baseline(&doc).unwrap();
+        assert_eq!(ms.len(), 2);
+        assert!(ms[0].higher_is_better);
+        assert_eq!(ms[0].tolerance, 0.2); // file-level default
+        assert_eq!(ms[1].tolerance, 0.5); // per-metric override
+        let bad = JsonValue::parse(
+            r#"{"metrics": [{"name": "a", "file": "F", "path": "x", "better": "sideways",
+                             "value": 1.0}]}"#,
+        )
+        .unwrap();
+        assert!(parse_baseline(&bad).is_err());
+    }
+
+    #[test]
+    fn end_to_end_gate_on_temp_files() {
+        let dir = std::env::temp_dir().join(format!("bench_gate_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("BENCH_x.json"),
+            r#"{"configs": [{"speedup": 2.0}]}"#,
+        )
+        .unwrap();
+        let baseline = dir.join("baseline.json");
+        std::fs::write(
+            &baseline,
+            r#"{"tolerance": 0.25, "metrics": [
+                {"name": "x speedup", "file": "BENCH_x.json",
+                 "path": "configs.0.speedup", "better": "higher", "value": 1.0}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(run(&baseline, &dir).is_ok());
+        // a regression beyond tolerance fails
+        std::fs::write(
+            dir.join("BENCH_x.json"),
+            r#"{"configs": [{"speedup": 0.5}]}"#,
+        )
+        .unwrap();
+        assert!(run(&baseline, &dir).is_err());
+        // a missing artifact fails (never silently passes)
+        std::fs::remove_file(dir.join("BENCH_x.json")).unwrap();
+        assert!(run(&baseline, &dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -203,6 +203,19 @@ impl Scheduler for AaloScheduler {
         plan.group_weights.clone_from(&self.weights);
     }
 
+    /// Cluster migration: the handoff ships the coordinator's last byte
+    /// aggregate, and the coflow keeps the queue it earned — the default
+    /// `on_arrival` would reset it to Q0, a priority *upgrade* for a large
+    /// half-sent coflow. It enters the back of its queue's FIFO on the new
+    /// shard (fresh `queue_seq`, the deterministic tie-break).
+    fn on_coflow_attach(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
+        self.ensure(cid);
+        self.bytes_seen[cid] = world.coflows[cid].bytes_sent;
+        self.queue_seq[cid] = self.next_queue_seq;
+        self.next_queue_seq += 1;
+        Reaction::Reallocate
+    }
+
     /// From-scratch oracle rebuild (see trait docs).
     fn order_full_into(&mut self, world: &World, plan: &mut Plan) {
         let mut coflows: Vec<(usize, u64, CoflowId)> = world

@@ -71,7 +71,12 @@ pub fn bootstrap(samples: &[Bytes], b: usize, seed: u64) -> (f64, f64) {
 
 /// Lower confidence bound `mean − k·σ_bootstrap`, floored at a small
 /// positive value so a wildly uncertain coflow isn't treated as size ~0.
-pub fn lcb_estimate(samples: &[Bytes], num_flows: usize, cfg: &SchedulerConfig, cid: CoflowId) -> Bytes {
+pub fn lcb_estimate(
+    samples: &[Bytes],
+    num_flows: usize,
+    cfg: &SchedulerConfig,
+    cid: CoflowId,
+) -> Bytes {
     let (mean, sigma) = bootstrap(
         samples,
         cfg.bootstrap_resamples,
@@ -171,6 +176,29 @@ impl Scheduler for PhilaeErrCorrScheduler {
 
     fn order_full_into(&mut self, world: &World, plan: &mut Plan) {
         self.core.order_full_into(world, plan);
+    }
+
+    /// Cluster migration: rebuild the sampling core from completed-flow
+    /// facts (see [`PhilaeCore::adopt`]) and restart the error-correction
+    /// bookkeeping from the reconstructed pilot sample. The correction
+    /// round counter restarts too — the new shard may re-run a round it
+    /// cannot know already happened, which only refreshes the estimate
+    /// with strictly more data (documented approximation).
+    fn on_coflow_attach(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
+        self.ensure(cid);
+        if let Some(samples) = self.core.adopt(cid, world) {
+            // sample completed in the migration window (see
+            // `PhilaeCore::adopt`): estimate now, with this variant's LCB
+            let n = world.coflows[cid].flows.len();
+            world.coflows[cid].est_size = Some(lcb_estimate(&samples, n, &self.cfg, cid));
+            if world.coflows[cid].finished_at.is_none() {
+                world.coflows[cid].phase = CoflowPhase::Running;
+            }
+        }
+        self.pilot_sample[cid] = self.core.pilot_sizes(cid).to_vec();
+        self.post_est[cid].clear();
+        self.rounds_done[cid] = 0;
+        Reaction::Reallocate
     }
 }
 

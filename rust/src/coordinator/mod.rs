@@ -23,6 +23,7 @@
 //!   (bootstrap lower-confidence-bound, one-round, multi-round).
 
 pub mod aalo;
+pub mod cluster;
 pub mod errcorr;
 pub mod fifo;
 pub mod philae;
@@ -32,6 +33,7 @@ pub mod scf;
 pub mod sebf;
 
 pub use aalo::AaloScheduler;
+pub use cluster::{ClusterConfig, CoordinatorCluster};
 pub use errcorr::{ErrCorrMode, PhilaeErrCorrScheduler};
 pub use fifo::FifoScheduler;
 pub use philae::PhilaeScheduler;
@@ -188,6 +190,27 @@ pub trait Scheduler: Send {
     /// Periodic tick (only called when `tick_interval` is `Some`).
     fn on_tick(&mut self, _world: &mut World) -> Reaction {
         Reaction::None
+    }
+
+    /// Multi-coordinator support: `cid` is being **migrated away** to
+    /// another coordinator shard — stop tracking it. The default treats it
+    /// like a completed coflow, which is sufficient for every in-tree
+    /// scheduler: their incremental order caches drop coflows that stop
+    /// appearing in the active scan (stamp mismatch) and self-heal on the
+    /// next `order_into`.
+    fn on_coflow_detach(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
+        self.on_coflow_complete(cid, world)
+    }
+
+    /// Multi-coordinator support: **adopt** `cid` mid-flight from another
+    /// shard, reconstructing whatever learning state this scheduler keeps
+    /// per coflow. The default treats it as a fresh arrival — correct for
+    /// schedulers whose order keys derive entirely from the world (FIFO,
+    /// SEBF, SCF). Schedulers with per-coflow learning state (Philae's
+    /// sampling machine, Aalo's seen-bytes, Saath's queue) override this so
+    /// migration neither resets a coflow's earned priority nor re-pilots it.
+    fn on_coflow_attach(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
+        self.on_arrival(cid, world)
     }
 
     /// Deliver one coalesced [`EventBatch`] (batched admission). The

@@ -152,6 +152,11 @@ pub struct PhilaeCore {
     pub cfg: SchedulerConfig,
     /// Completed pilot sizes per coflow.
     pilot_sizes: Vec<Vec<Bytes>>,
+    /// Flow ids already counted into `pilot_sizes` (per coflow) — makes
+    /// sample recording idempotent per flow, so a report replayed after a
+    /// cluster migration reconstructed the sample (see
+    /// [`PhilaeCore::adopt`]) cannot duplicate a measurement.
+    pilot_sampled: Vec<Vec<FlowId>>,
     /// Outstanding (unfinished) pilot count per coflow.
     pilots_left: Vec<usize>,
     /// Bytes of *completed* flows per coflow — Philae's view of progress
@@ -168,6 +173,7 @@ impl PhilaeCore {
         PhilaeCore {
             cfg,
             pilot_sizes: Vec::new(),
+            pilot_sampled: Vec::new(),
             pilots_left: Vec::new(),
             done_bytes: Vec::new(),
             flows_done: Vec::new(),
@@ -178,6 +184,7 @@ impl PhilaeCore {
     fn ensure(&mut self, cid: CoflowId) {
         if cid >= self.pilot_sizes.len() {
             self.pilot_sizes.resize(cid + 1, Vec::new());
+            self.pilot_sampled.resize(cid + 1, Vec::new());
             self.pilots_left.resize(cid + 1, 0);
             self.done_bytes.resize(cid + 1, 0.0);
             self.flows_done.resize(cid + 1, 0);
@@ -277,7 +284,10 @@ impl PhilaeCore {
         self.ensure(cid);
         self.done_bytes[cid] += flow.size;
         self.flows_done[cid] += 1;
-        if flow.pilot && self.pilots_left[cid] > 0 {
+        // per-flow idempotence: a report replayed after a migration's
+        // adopt() already counted this pilot must not re-enter the sample
+        if flow.pilot && self.pilots_left[cid] > 0 && !self.pilot_sampled[cid].contains(&fid) {
+            self.pilot_sampled[cid].push(fid);
             self.pilot_sizes[cid].push(flow.size);
             self.pilots_left[cid] -= 1;
             if self.pilots_left[cid] == 0 {
@@ -330,6 +340,71 @@ impl PhilaeCore {
     /// Completed-flow count for `cid`.
     pub fn flows_done(&self, cid: CoflowId) -> usize {
         self.flows_done.get(cid).copied().unwrap_or(0)
+    }
+
+    /// Cluster migration: adopt `cid` mid-flight from another coordinator
+    /// shard, reconstructing the learning state this core would hold had it
+    /// owned the coflow since arrival. Everything is rebuilt from
+    /// *completed-flow facts* — exactly the information the coflow's
+    /// completion reports carried (sizes are only read off finished flows),
+    /// so the handoff grants no clairvoyance:
+    ///
+    /// * `flows_done` / `done_bytes` from the finished flows;
+    /// * the pilot sample from the finished pilots;
+    /// * `pilots_left` from the outstanding pilots — unless the source
+    ///   shard already completed the sample (the estimate is set), in which
+    ///   case it is pinned to 0 so `SampleComplete` can never fire twice.
+    ///
+    /// Returns `Some(sample)` when the reconstructed sample is already
+    /// complete but the coflow carries **no estimate yet** — the window
+    /// where the last pilot finished physically while its (jittered)
+    /// report was still in flight to the source shard at migration time.
+    /// That report will replay against *this* core with the pilot gate
+    /// already closed, so the attach hook must estimate from the returned
+    /// sample immediately or the coflow would stay unestimated forever.
+    ///
+    /// Replay safety: adoption records which pilot flows it counted
+    /// (`pilot_sampled`), and `record_completion` is idempotent per flow —
+    /// a done-but-unreported pilot's replayed report cannot re-enter the
+    /// sample, while a genuinely outstanding pilot's report still
+    /// completes it. Replayed reports may still re-count `done_bytes` /
+    /// `flows_done` the adoption already counted; the score clamps the
+    /// done fraction at 1, so that distortion is bounded and transient.
+    ///
+    /// The incremental order cache needs no repair: the coflow simply
+    /// starts appearing in this core's active scans and is inserted as
+    /// `Absent → lane` on the next `order_into`.
+    pub fn adopt(&mut self, cid: CoflowId, world: &World) -> Option<Vec<Bytes>> {
+        self.ensure(cid);
+        let c = &world.coflows[cid];
+        let mut done_bytes = 0.0;
+        let mut done_count = 0;
+        for &f in &c.flows {
+            if world.flows[f].done() {
+                done_bytes += world.flows[f].size;
+                done_count += 1;
+            }
+        }
+        self.done_bytes[cid] = done_bytes;
+        self.flows_done[cid] = done_count;
+        self.pilot_sizes[cid].clear();
+        self.pilot_sampled[cid].clear();
+        let mut outstanding = 0;
+        for &f in &c.pilots {
+            if world.flows[f].done() {
+                let size = world.flows[f].size;
+                self.pilot_sizes[cid].push(size);
+                self.pilot_sampled[cid].push(f);
+            } else {
+                outstanding += 1;
+            }
+        }
+        self.pilots_left[cid] = if c.est_size.is_some() { 0 } else { outstanding };
+        if c.est_size.is_none() && outstanding == 0 && !self.pilot_sizes[cid].is_empty() {
+            Some(self.pilot_sizes[cid].clone())
+        } else {
+            None
+        }
     }
 
     /// Completed pilot sizes recorded so far for `cid` (feature marshalling
@@ -661,6 +736,22 @@ impl Scheduler for PhilaeScheduler {
     fn order_full_into(&mut self, world: &World, plan: &mut Plan) {
         self.core.order_full_into(world, plan);
     }
+
+    /// Cluster migration: rebuild the sampling state from completed-flow
+    /// facts instead of re-piloting (the default `on_arrival` would mark a
+    /// fresh pilot set that can never complete). A sample that completed
+    /// in the migration window (see [`PhilaeCore::adopt`]) is estimated
+    /// right here — its `SampleComplete` can no longer fire.
+    fn on_coflow_attach(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
+        if let Some(samples) = self.core.adopt(cid, world) {
+            let n = world.coflows[cid].flows.len();
+            world.coflows[cid].est_size = Some(Self::estimate(&samples, n));
+            if world.coflows[cid].finished_at.is_none() {
+                world.coflows[cid].phase = CoflowPhase::Running;
+            }
+        }
+        Reaction::Reallocate
+    }
 }
 
 #[cfg(test)]
@@ -877,6 +968,61 @@ mod tests {
         // occupancy change forces the rebuild path
         w.load.occupy_up(0);
         check(&mut core, &w);
+    }
+
+    #[test]
+    fn adopt_rebuilds_learning_state_from_completed_flows() {
+        let mut w = world_with(&[&[(0, 4, 10.0), (1, 5, 30.0), (2, 6, 50.0), (3, 7, 70.0)]]);
+        let mut cfg = SchedulerConfig::default();
+        cfg.pilot_min = 2;
+        cfg.pilot_max = 2;
+        let mut src = PhilaeCore::new(cfg.clone());
+        src.handle_arrival(0, &mut w);
+        let pilots = w.coflows[0].pilots.clone();
+        assert_eq!(pilots.len(), 2);
+        // one pilot and one non-pilot finished on the source shard
+        w.flows[pilots[0]].sent = w.flows[pilots[0]].size;
+        w.flows[pilots[0]].finished_at = Some(1.0);
+        src.record_completion(pilots[0], &mut w);
+        let non_pilot = (0..4).find(|f| !w.flows[*f].pilot).unwrap();
+        w.flows[non_pilot].sent = w.flows[non_pilot].size;
+        w.flows[non_pilot].finished_at = Some(1.5);
+        src.record_completion(non_pilot, &mut w);
+
+        // a fresh core adopts mid-sample: the outstanding pilot still gates
+        let mut dst = PhilaeCore::new(cfg.clone());
+        assert!(dst.adopt(0, &w).is_none(), "sample is still outstanding");
+        assert_eq!(dst.flows_done(0), 2);
+        assert_eq!(dst.done_bytes(0), w.flows[pilots[0]].size + w.flows[non_pilot].size);
+        assert_eq!(dst.pilot_sizes(0).to_vec(), vec![w.flows[pilots[0]].size]);
+        // a replay of the already-counted pilot's report (its delivery was
+        // in flight at migration time) must NOT re-enter the sample
+        assert_eq!(dst.record_completion(pilots[0], &mut w), CompletionOutcome::Normal);
+        assert_eq!(dst.pilot_sizes(0).len(), 1, "replayed pilot duplicated the sample");
+        // finishing the second pilot on the adopter completes the sample
+        w.flows[pilots[1]].sent = w.flows[pilots[1]].size;
+        w.flows[pilots[1]].finished_at = Some(2.0);
+        match dst.record_completion(pilots[1], &mut w) {
+            CompletionOutcome::SampleComplete(s) => assert_eq!(s.len(), 2),
+            o => panic!("expected SampleComplete, got {o:?}"),
+        }
+
+        // adopting after every pilot finished but before the estimate was
+        // set (the in-flight-report migration window) hands the completed
+        // sample to the adopter for immediate estimation
+        let mut dst3 = PhilaeCore::new(cfg.clone());
+        match dst3.adopt(0, &w) {
+            Some(s) => assert_eq!(s.len(), 2),
+            None => panic!("expected the completed sample at adopt time"),
+        }
+
+        // adopting an already-estimated coflow must never re-fire the
+        // sample: the pilot gate is pinned to zero, so even a pilot's
+        // report stays Normal
+        w.coflows[0].est_size = Some(160.0);
+        let mut dst2 = PhilaeCore::new(cfg);
+        assert!(dst2.adopt(0, &w).is_none());
+        assert_eq!(dst2.record_completion(pilots[1], &mut w), CompletionOutcome::Normal);
     }
 
     #[test]

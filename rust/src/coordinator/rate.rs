@@ -190,6 +190,19 @@ fn port_shard(p: usize, nports: usize, shards: usize) -> usize {
     p * shards / nports
 }
 
+/// Default allocator worker-shard count for config defaults
+/// ([`crate::sim::SimConfig`], [`crate::service::ServiceConfig`]):
+/// `PHILAE_TEST_SHARDS` when set (the CI matrix leg uses it to drive the
+/// whole test suite through the sharded pipeline), else 1 (serial). Safe to
+/// override globally — results are bit-identical for every shard count.
+pub fn env_test_shards() -> usize {
+    std::env::var("PHILAE_TEST_SHARDS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
+}
+
 /// Sense-reversing spin barrier for the per-level lockstep of the shard
 /// workers. Levels are short (one op per port at most), so spinning beats
 /// a futex park/unpark by a wide margin.

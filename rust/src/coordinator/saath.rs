@@ -213,6 +213,14 @@ impl Scheduler for SaathScheduler {
         plan.group_weights.clone_from(&self.weights);
     }
 
+    /// Cluster migration: keep the queue the coflow earned from its longest
+    /// finished flow (`world.coflows[cid].queue` travels with the world; the
+    /// default `on_arrival` would reset it to Q0). The incremental order
+    /// cache needs no repair — the coflow is inserted on the next scan.
+    fn on_coflow_attach(&mut self, _cid: CoflowId, _world: &mut World) -> Reaction {
+        Reaction::Reallocate
+    }
+
     /// From-scratch oracle rebuild (see trait docs).
     fn order_full_into(&mut self, world: &World, plan: &mut Plan) {
         let mut coflows: Vec<(usize, f64, u64, CoflowId)> = world

@@ -31,21 +31,10 @@
 //! println!("avg CCT speedup: {:.2}x", aalo.avg_cct() / philae.avg_cct());
 //! ```
 
-// CI runs clippy with `-D warnings`. The hot paths here deliberately use
-// explicit indexed loops (split borrows across struct fields, stamped dense
-// tables, swap-removal) and config structs with many knobs; keep the lint
-// budget on correctness classes rather than these idiom preferences.
-#![allow(
-    clippy::needless_range_loop,
-    clippy::too_many_arguments,
-    clippy::collapsible_if,
-    clippy::collapsible_else_if,
-    clippy::field_reassign_with_default,
-    clippy::manual_range_contains,
-    clippy::type_complexity,
-    clippy::len_without_is_empty,
-    clippy::new_without_default
-)]
+// CI runs clippy with `-D warnings` over --all-targets. The idiom
+// allowances (explicit indexed loops for split borrows, many-knob config
+// structs, …) live in Cargo.toml's `[lints.clippy]` table — the single
+// source that also covers tests and benches.
 
 pub mod agents;
 pub mod analysis;

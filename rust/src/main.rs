@@ -12,7 +12,7 @@
 use philae::coordinator::{SchedulerConfig, SchedulerKind};
 use philae::metrics::SpeedupRow;
 use philae::service::{run_service, ServiceConfig};
-use philae::sim::Simulation;
+use philae::sim::{SimConfig, SimResult, Simulation};
 use philae::trace::{Trace, TraceSpec};
 use std::collections::HashMap;
 use std::time::Duration;
@@ -30,6 +30,8 @@ COMMON FLAGS:
   --seed <n>           generator seed                   [default: 42]
   --wide-only          keep only wide coflows (Table 2 row 2)
   --replicate <k>      replicate k× across ports (900-port derivation)
+  --coordinators <k>   coordinator shards with leased capacity  [default: 1]
+  --shards <s>         allocator worker shards (sim/serve)      [default: 1]
 
 sim:      --scheduler <name>                            [default: philae]
 compare:  --baseline <name> --candidate <name>          [default: aalo vs philae]
@@ -106,6 +108,27 @@ fn build_trace(flags: &Flags) -> anyhow::Result<Trace> {
     Ok(t)
 }
 
+/// Run one simulation honoring `--coordinators`/`--shards`: K ≥ 2 routes
+/// through the multi-coordinator cluster, K = 1 through the single path
+/// (the cluster's K=1 is bit-identical, but the direct path skips the
+/// frontend indirection entirely).
+fn run_sim(
+    trace: &philae::trace::Trace,
+    kind: SchedulerKind,
+    cfg: &SchedulerConfig,
+    flags: &Flags,
+) -> anyhow::Result<SimResult> {
+    let coordinators = flags.get("coordinators", 1usize).map_err(anyhow::Error::msg)?;
+    let alloc_shards = flags.get("shards", 1usize).map_err(anyhow::Error::msg)?;
+    let sim_cfg = SimConfig { coordinators, alloc_shards, ..SimConfig::default() };
+    if coordinators > 1 {
+        Ok(Simulation::run_cluster(trace, kind, cfg, &sim_cfg))
+    } else {
+        let mut sched = kind.build(trace, cfg);
+        Ok(Simulation::run_with(trace, sched.as_mut(), cfg, &sim_cfg))
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else {
@@ -124,10 +147,12 @@ fn main() -> anyhow::Result<()> {
             let kind: SchedulerKind = flags
                 .get("scheduler", SchedulerKind::Philae)
                 .map_err(anyhow::Error::msg)?;
-            let res = Simulation::run(&t, kind, &cfg);
+            let coordinators = flags.get("coordinators", 1usize).map_err(anyhow::Error::msg)?;
+            let res = run_sim(&t, kind, &cfg, &flags)?;
             println!(
-                "{}: {} coflows on {} ports | avg CCT {:.3}s | makespan {:.1}s | rate calcs {} | updates {}",
+                "{} (K={}): {} coflows on {} ports | avg CCT {:.3}s | makespan {:.1}s | rate calcs {} | updates {}",
                 res.scheduler,
+                coordinators.max(1),
                 t.coflows.len(),
                 t.num_ports,
                 res.avg_cct(),
@@ -144,8 +169,8 @@ fn main() -> anyhow::Result<()> {
             let candidate: SchedulerKind = flags
                 .get("candidate", SchedulerKind::Philae)
                 .map_err(anyhow::Error::msg)?;
-            let base = Simulation::run(&t, baseline, &cfg);
-            let cand = Simulation::run(&t, candidate, &cfg);
+            let base = run_sim(&t, baseline, &cfg, &flags)?;
+            let cand = run_sim(&t, candidate, &cfg, &flags)?;
             let row = SpeedupRow::from_ccts(&base.ccts, &cand.ccts);
             println!(
                 "{} vs {} on {} coflows / {} ports:",
@@ -175,6 +200,7 @@ fn main() -> anyhow::Result<()> {
                 engine_dir: flags.get_opt("artifacts").map(Into::into),
                 port_rate: philae::GBPS,
                 alloc_shards: flags.get("shards", 1usize).map_err(anyhow::Error::msg)?,
+                coordinators: flags.get("coordinators", 1usize).map_err(anyhow::Error::msg)?,
             };
             let report = run_service(&t, &svc)?;
             println!(

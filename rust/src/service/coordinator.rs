@@ -1,17 +1,37 @@
-//! The coordinator thread, the agent threads, and the trace replayer.
+//! The coordinator thread(s), the agent threads, and the trace replayer.
 //!
 //! The coordinator uses **batched admission**: every wake-up drains the
-//! whole input queue — coflow registrations, teardown ops, and agent
-//! completion reports alike — applies all of them to the world, and then
-//! runs **one** order repair + rate allocation for the burst (previously
-//! each registration triggered its own reallocation). Allocation itself
-//! can run the port-sharded parallel pipeline via
-//! [`ServiceConfig::alloc_shards`].
+//! whole input channel — coflow registrations, teardown ops, and agent
+//! completion reports alike — routes each item to its owning **coordinator
+//! shard**'s input queue, and then runs a single drain-then-reallocate
+//! cycle per shard: all of a shard's queued reports are applied to the
+//! world first, then that shard pays **one** order repair + rate
+//! allocation for the burst. Allocation itself can run the port-sharded
+//! parallel pipeline via [`ServiceConfig::alloc_shards`].
+//!
+//! ## Multi-coordinator sharding ([`ServiceConfig::coordinators`])
+//!
+//! With K > 1 the service runs K independent scheduler instances
+//! (Philae's sampling core or Aalo's queue machine), mirroring
+//! `coordinator/cluster.rs`: a SplitMix64 router assigns each registered
+//! coflow to a home shard, every shard schedules only its own coflows over
+//! a **leased** per-port capacity slice, and a periodic reconciliation
+//! round (every [`SERVICE_RECONCILE_INTERVALS`] δ intervals) rebalances the
+//! leases by demand-weighted water-filling
+//! ([`crate::coordinator::cluster::water_fill_port`]) and migrates coflows
+//! away from saturated shards (Philae rebuilds the sampling state from
+//! completed-flow facts via `PhilaeCore::adopt`; Aalo keeps the queue the
+//! coflow earned). Per-port lease sums always equal the fabric capacity,
+//! so the union of the K allocations stays feasible. A schedule message to
+//! an agent carries that agent's rates across *all* shards, so "comply
+//! with the last schedule" can never stall another shard's flows.
+//! `coordinators == 1` is the classic single-coordinator service.
 
 use super::ops::{CoflowOp, OpsHandle};
 use crate::agents::{AgentMsg, AgentSim, CoordMsg};
 use crate::coflow::{CoflowPhase, CoflowState, FlowState};
 use crate::coordinator::{
+    cluster,
     philae::{CompletionOutcome, PhilaeCore},
     rate, AaloScheduler, Plan, Scheduler, SchedulerConfig, SchedulerKind, World,
 };
@@ -21,11 +41,26 @@ use crate::runtime::{BatchFeatures, Engine};
 use crate::trace::{Trace, TraceRecord};
 use crate::{CoflowId, FlowId, PortId, Time};
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::thread;
 use std::time::{Duration, Instant};
+
+/// Owner sentinel: coflow not (or no longer) assigned to a shard.
+const NO_OWNER: u32 = u32::MAX;
+
+/// Reconciliation period of the live service, in δ intervals (K > 1 only).
+pub const SERVICE_RECONCILE_INTERVALS: u64 = 8;
+
+/// Lease floor fraction (see `coordinator/cluster.rs`): a shard is never
+/// leased less than this equal-split slice of a port, so arrivals between
+/// reconciliations cannot starve.
+const LEASE_FLOOR_FRAC: f64 = 0.05;
+
+/// Migration bounds per reconciliation round (match the sim cluster).
+const MAX_MIGRATIONS_PER_ROUND: usize = 4;
+const IMBALANCE_THRESHOLD: f64 = 1.5;
 
 /// Everything the coordinator thread receives, merged onto one channel
 /// (std mpsc has no select).
@@ -52,6 +87,8 @@ pub struct ServiceConfig {
     /// pipeline is bit-identical and pays off on multi-thousand port
     /// fabrics).
     pub alloc_shards: usize,
+    /// Coordinator shards K (module docs); 0/1 = single coordinator.
+    pub coordinators: usize,
 }
 
 impl Default for ServiceConfig {
@@ -63,7 +100,8 @@ impl Default for ServiceConfig {
             delta_wall: Duration::from_millis(8),
             engine_dir: None,
             port_rate: crate::GBPS,
-            alloc_shards: 1,
+            alloc_shards: rate::env_test_shards(),
+            coordinators: 1,
         }
     }
 }
@@ -90,6 +128,10 @@ pub struct ServiceReport {
     /// Whether scoring ran through the PJRT engine.
     pub used_engine: bool,
     pub wall_seconds: f64,
+    /// Coflow migrations between coordinator shards (K > 1 only).
+    pub migrations: u64,
+    /// Reconciliation rounds performed (K > 1 only).
+    pub reconciliations: u64,
 }
 
 impl ServiceReport {
@@ -146,31 +188,39 @@ struct AgentHandle {
     tx: mpsc::Sender<CoordMsg>,
 }
 
-/// What a drained input batch requires of the coordinator afterwards.
-#[derive(Debug, Clone, Copy, Default)]
-struct DrainOutcome {
-    /// Something changed that affects rates (event-triggered policies
-    /// reallocate; periodic ones wait for their tick).
+/// One live coordinator shard: its scheduler instance, owned coflows,
+/// capacity lease, input queue, and reusable scheduling workspace.
+struct SvcShard {
+    philae: Option<PhilaeCore>,
+    aalo: Option<AaloScheduler>,
+    /// Owned coflows in admission order (swapped into `world.active`
+    /// around every scheduler call).
+    active: Vec<CoflowId>,
+    /// Leased per-port capacity slice (Σ over shards == fabric per port).
+    lease: Fabric,
+    /// Queued agent messages awaiting this shard's drain cycle.
+    pending: VecDeque<AgentMsg>,
+    /// Reused scheduling plan (see `Scheduler::order_into`).
+    plan: Plan,
+    /// Reused allocation workspace shared with the simulator's hot path.
+    scratch: rate::AllocScratch,
+    /// Last rates this shard flushed, for the per-agent schedule diff.
+    last_rates: HashMap<FlowId, f64>,
+    /// Observed remaining-bytes demand per port (reconciliation scratch).
+    demand_up: Vec<f64>,
+    demand_down: Vec<f64>,
+    /// Something changed that affects this shard's rates.
     need_realloc: bool,
-    /// Reallocate regardless of policy (explicit coflow teardown must free
-    /// its rates immediately rather than at the next tick).
+    /// Reallocate regardless of policy (explicit teardown frees rates now).
     force_realloc: bool,
-}
-
-impl DrainOutcome {
-    fn merge(self, other: DrainOutcome) -> DrainOutcome {
-        DrainOutcome {
-            need_realloc: self.need_realloc || other.need_realloc,
-            force_realloc: self.force_realloc || other.force_realloc,
-        }
-    }
 }
 
 struct Coordinator {
     cfg: ServiceConfig,
     world: World,
-    philae: Option<PhilaeCore>,
-    aalo: Option<AaloScheduler>,
+    shards: Vec<SvcShard>,
+    /// Coflow → owning shard (`NO_OWNER` = unassigned / completed).
+    owner: Vec<u32>,
     engine: Option<Engine>,
     batch: Option<BatchFeatures>,
     agents: Vec<AgentHandle>,
@@ -178,11 +228,6 @@ struct Coordinator {
     agent_threads: Vec<thread::JoinHandle<()>>,
     port_refs: Vec<Vec<(PortId, usize)>>, // per coflow: (src port, active refs)
     port_refs_down: Vec<Vec<(PortId, usize)>>,
-    /// Reused scheduling plan (see `Scheduler::order_into`).
-    plan: Plan,
-    /// Reused allocation workspace shared with the simulator's hot path.
-    scratch: rate::AllocScratch,
-    last_rates: HashMap<FlowId, f64>,
     /// Cached PJRT scores; refreshed only when the estimated set changes
     /// (new estimate / coflow completion / arrival), not per event — one
     /// scorer batch costs ~ms, reallocs happen per completion report.
@@ -191,6 +236,15 @@ struct Coordinator {
     sealed: bool,
     seq: u64,
     start: Instant,
+    leases_ready: bool,
+    intervals_seen: u64,
+    migrations: u64,
+    reconciliations: u64,
+    /// Reused water-fill workspaces (see `coordinator/cluster.rs`).
+    wf_demand: Vec<f64>,
+    wf_out: Vec<f64>,
+    wf_scratch: Vec<(f64, usize)>,
+    demand_total: Vec<f64>,
     // measured accounting
     stats: IntervalStats,
     rate_calc: RunningStat,
@@ -222,20 +276,43 @@ impl Coordinator {
             load: PortLoad::new(num_ports),
             active: Vec::new(),
         };
-        let philae = matches!(cfg.kind, SchedulerKind::Philae)
-            .then(|| PhilaeCore::new(cfg.sched.clone()));
-        let aalo =
-            matches!(cfg.kind, SchedulerKind::Aalo).then(|| AaloScheduler::new(cfg.sched.clone()));
+        let is_philae = matches!(cfg.kind, SchedulerKind::Philae);
+        let is_aalo = matches!(cfg.kind, SchedulerKind::Aalo);
         anyhow::ensure!(
-            philae.is_some() || aalo.is_some(),
+            is_philae || is_aalo,
             "service mode supports philae and aalo (got {:?})",
             cfg.kind
         );
+        let k = cfg.coordinators.max(1);
+        let shards: Vec<SvcShard> = (0..k)
+            .map(|_| SvcShard {
+                philae: is_philae.then(|| PhilaeCore::new(cfg.sched.clone())),
+                aalo: is_aalo.then(|| AaloScheduler::new(cfg.sched.clone())),
+                active: Vec::new(),
+                lease: Fabric {
+                    num_ports: 0,
+                    up_capacity: Vec::new(),
+                    down_capacity: Vec::new(),
+                },
+                pending: VecDeque::new(),
+                plan: Plan::default(),
+                scratch: {
+                    let mut s = rate::AllocScratch::new();
+                    s.set_shards(cfg.alloc_shards);
+                    s
+                },
+                last_rates: HashMap::new(),
+                demand_up: Vec::new(),
+                demand_down: Vec::new(),
+                need_realloc: false,
+                force_realloc: false,
+            })
+            .collect();
         Ok(Coordinator {
             cfg: cfg.clone(),
             world,
-            philae,
-            aalo,
+            shards,
+            owner: Vec::new(),
             engine,
             batch,
             agents: Vec::new(),
@@ -243,18 +320,19 @@ impl Coordinator {
             agent_threads: Vec::new(),
             port_refs: Vec::new(),
             port_refs_down: Vec::new(),
-            plan: Plan::default(),
-            scratch: {
-                let mut s = rate::AllocScratch::new();
-                s.set_shards(cfg.alloc_shards);
-                s
-            },
-            last_rates: HashMap::new(),
             cached_scores: HashMap::new(),
             scores_dirty: true,
             sealed: false,
             seq: 0,
             start: Instant::now(),
+            leases_ready: false,
+            intervals_seen: 0,
+            migrations: 0,
+            reconciliations: 0,
+            wf_demand: vec![0.0; k],
+            wf_out: vec![0.0; k],
+            wf_scratch: Vec::with_capacity(k),
+            demand_total: vec![0.0; k],
             stats: IntervalStats::default(),
             rate_calc: RunningStat::default(),
             rate_send: RunningStat::default(),
@@ -273,7 +351,7 @@ impl Coordinator {
 
     fn spawn_agents(&mut self) {
         let n = self.world.fabric.num_ports;
-        let aalo_updates = self.aalo.is_some();
+        let aalo_updates = self.shards[0].aalo.is_some();
         for port in 0..n {
             let (tx, rx) = mpsc::channel::<CoordMsg>();
             let up = self.input_tx.clone();
@@ -337,23 +415,41 @@ impl Coordinator {
             }
             let wait = next_tick.saturating_duration_since(Instant::now());
             match input_rx.recv_timeout(wait) {
-                // Batched admission: drain *everything* queued — coflow ops
-                // (register/deregister/update) and agent messages alike —
-                // into one batch, then pay a single order repair +
-                // allocation for the whole burst instead of one
-                // reallocation per admit.
+                // Batched admission: drain *everything* queued. Coflow ops
+                // apply immediately (they change the world's shape); agent
+                // messages are routed to their owning shard's input queue.
+                // Then each shard runs one drain-then-reallocate cycle for
+                // the whole burst instead of one reallocation per report.
                 Ok(first) => {
                     let t0 = Instant::now();
-                    let mut outcome = self.handle_input(first);
+                    self.route_input(first);
                     while let Ok(next) = input_rx.try_recv() {
-                        outcome = outcome.merge(self.handle_input(next));
+                        self.route_input(next);
+                    }
+                    // single drain cycle per shard
+                    for s in 0..self.shards.len() {
+                        loop {
+                            let Some(msg) = self.shards[s].pending.pop_front() else {
+                                break;
+                            };
+                            if self.handle_agent_msg(s, msg) {
+                                self.shards[s].need_realloc = true;
+                            }
+                        }
                     }
                     self.iv_recv += t0.elapsed().as_secs_f64();
                     // Philae reallocates on any event; periodic (Aalo)
                     // pipelines flush at the δ tick, except for explicit
                     // coflow teardown, which frees rates immediately.
-                    if (outcome.need_realloc && self.philae.is_some()) || outcome.force_realloc {
-                        self.reallocate();
+                    for s in 0..self.shards.len() {
+                        let event_triggered = self.shards[s].philae.is_some();
+                        let go = (self.shards[s].need_realloc && event_triggered)
+                            || self.shards[s].force_realloc;
+                        self.shards[s].need_realloc = false;
+                        self.shards[s].force_realloc = false;
+                        if go {
+                            self.reallocate_shard(s);
+                        }
                     }
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -378,7 +474,7 @@ impl Coordinator {
             .map(|c| c.cct().unwrap_or(f64::NAN))
             .collect();
         Ok(ServiceReport {
-            scheduler: if self.philae.is_some() {
+            scheduler: if self.shards[0].philae.is_some() {
                 "philae".into()
             } else {
                 "aalo".into()
@@ -396,18 +492,94 @@ impl Coordinator {
             rate_calcs: self.rate_calcs,
             used_engine: self.engine.is_some(),
             wall_seconds: self.start.elapsed().as_secs_f64(),
+            migrations: self.migrations,
+            reconciliations: self.reconciliations,
         })
     }
 
-    /// δ interval boundary: Aalo's periodic pipeline; interval accounting
-    /// for everyone.
+    /// Apply one queued input: coflow ops immediately, agent messages onto
+    /// the owning shard's queue (drained by the per-shard cycle).
+    fn route_input(&mut self, input: Input) {
+        match input {
+            Input::Op(op) => match op {
+                CoflowOp::Register { record, reply } => {
+                    let cid = self.register(&record);
+                    let _ = reply.send(cid);
+                    let s = self.owner[cid] as usize;
+                    self.shards[s].need_realloc = true;
+                }
+                CoflowOp::Deregister { coflow } => {
+                    let s = self.owner_of(coflow);
+                    self.deregister(coflow);
+                    if let Some(s) = s {
+                        self.shards[s].need_realloc = true;
+                        self.shards[s].force_realloc = true;
+                    }
+                }
+                CoflowOp::Update { coflow, record } => {
+                    let s_old = self.owner_of(coflow);
+                    self.deregister(coflow);
+                    let cid = self.register(&record);
+                    let s_new = self.owner[cid] as usize;
+                    self.shards[s_new].need_realloc = true;
+                    self.shards[s_new].force_realloc = true;
+                    if let Some(s) = s_old {
+                        self.shards[s].need_realloc = true;
+                        self.shards[s].force_realloc = true;
+                    }
+                }
+                CoflowOp::Seal => {
+                    self.sealed = true;
+                }
+            },
+            Input::Agent(msg) => {
+                let coflow = match &msg {
+                    AgentMsg::FlowComplete { coflow, .. } => *coflow,
+                    AgentMsg::ByteUpdate { coflow, .. } => *coflow,
+                };
+                // late messages for completed/deregistered coflows route to
+                // shard 0 — they are counted and dropped by the handler
+                let s = self.owner_of(coflow).unwrap_or(0);
+                self.shards[s].pending.push_back(msg);
+            }
+        }
+    }
+
+    fn owner_of(&self, cid: CoflowId) -> Option<usize> {
+        match self.owner.get(cid).copied() {
+            Some(o) if o != NO_OWNER => Some(o as usize),
+            _ => None,
+        }
+    }
+
+    /// δ interval boundary: Aalo's periodic pipeline per shard, periodic
+    /// cross-shard reconciliation, interval accounting for everyone.
     fn on_interval(&mut self) {
-        if self.aalo.is_some() {
-            if !self.world.active.is_empty() {
-                let mut aalo = self.aalo.take().unwrap();
-                aalo.on_tick(&mut self.world);
-                self.aalo = Some(aalo);
-                self.reallocate(); // Aalo flushes rates every interval
+        self.intervals_seen += 1;
+        if self.shards.len() > 1
+            && self.intervals_seen % SERVICE_RECONCILE_INTERVALS == 0
+            && !self.world.active.is_empty()
+        {
+            self.reconcile();
+            // leases moved: every shard's last allocation is stale
+            for s in 0..self.shards.len() {
+                self.reallocate_shard(s);
+            }
+        }
+        if self.shards[0].aalo.is_some() {
+            for s in 0..self.shards.len() {
+                if self.shards[s].active.is_empty() {
+                    continue;
+                }
+                {
+                    let sh = &mut self.shards[s];
+                    std::mem::swap(&mut self.world.active, &mut sh.active);
+                    if let Some(aalo) = sh.aalo.as_mut() {
+                        aalo.on_tick(&mut self.world);
+                    }
+                    std::mem::swap(&mut self.world.active, &mut sh.active);
+                }
+                self.reallocate_shard(s); // Aalo flushes rates every interval
             }
         }
         let busy =
@@ -438,8 +610,49 @@ impl Coordinator {
         self.start.elapsed().as_secs_f64() * self.cfg.time_scale
     }
 
-    /// Register a coflow: extend the world, notify src agents, run the
-    /// scheduler's arrival hook.
+    /// Initialize the per-shard leases to an exact equal split (K=1: the
+    /// whole fabric). Demand-weighted rebalancing happens at reconcile.
+    fn ensure_leases(&mut self) {
+        if self.leases_ready {
+            return;
+        }
+        let k = self.shards.len();
+        let np = self.world.fabric.num_ports;
+        for sh in &mut self.shards {
+            sh.lease.num_ports = np;
+            sh.lease.up_capacity.clear();
+            sh.lease.up_capacity.resize(np, 0.0);
+            sh.lease.down_capacity.clear();
+            sh.lease.down_capacity.resize(np, 0.0);
+        }
+        self.wf_demand[..k].fill(0.0);
+        for p in 0..np {
+            cluster::water_fill_port(
+                self.world.fabric.up_capacity[p],
+                &self.wf_demand[..k],
+                LEASE_FLOOR_FRAC,
+                &mut self.wf_out[..k],
+                &mut self.wf_scratch,
+            );
+            for s in 0..k {
+                self.shards[s].lease.up_capacity[p] = self.wf_out[s];
+            }
+            cluster::water_fill_port(
+                self.world.fabric.down_capacity[p],
+                &self.wf_demand[..k],
+                LEASE_FLOOR_FRAC,
+                &mut self.wf_out[..k],
+                &mut self.wf_scratch,
+            );
+            for s in 0..k {
+                self.shards[s].lease.down_capacity[p] = self.wf_out[s];
+            }
+        }
+        self.leases_ready = true;
+    }
+
+    /// Register a coflow: extend the world, assign a home shard, notify src
+    /// agents, run the shard scheduler's arrival hook.
     fn register(&mut self, rec: &TraceRecord) -> CoflowId {
         let cid = self.world.coflows.len();
         let now = self.sim_now();
@@ -471,6 +684,15 @@ impl Coordinator {
         self.world.coflows.push(c);
         self.world.active.push(cid);
 
+        // shard assignment (hash router, same as the sim cluster)
+        let k = self.shards.len();
+        let s = (cluster::route_hash(cid) % k as u64) as usize;
+        if self.owner.len() <= cid {
+            self.owner.resize(cid + 1, NO_OWNER);
+        }
+        self.owner[cid] = s as u32;
+        self.shards[s].active.push(cid);
+
         // port refs + load
         let mut up: Vec<(PortId, usize)> = Vec::new();
         let mut down: Vec<(PortId, usize)> = Vec::new();
@@ -497,14 +719,18 @@ impl Coordinator {
         self.port_refs_down.push(down);
 
         self.scores_dirty = true;
-        // scheduler arrival hooks (Philae marks pilots here)
-        if let Some(mut ph) = self.philae.take() {
-            ph.handle_arrival(cid, &mut self.world);
-            self.philae = Some(ph);
-        }
-        if let Some(mut aalo) = self.aalo.take() {
-            aalo.on_arrival(cid, &mut self.world);
-            self.aalo = Some(aalo);
+        // shard scheduler arrival hooks (Philae marks pilots here), run
+        // against the shard's partition view
+        {
+            let sh = &mut self.shards[s];
+            std::mem::swap(&mut self.world.active, &mut sh.active);
+            if let Some(ph) = sh.philae.as_mut() {
+                ph.handle_arrival(cid, &mut self.world);
+            }
+            if let Some(aalo) = sh.aalo.as_mut() {
+                aalo.on_arrival(cid, &mut self.world);
+            }
+            std::mem::swap(&mut self.world.active, &mut sh.active);
         }
 
         // ship flows to their src agents
@@ -530,7 +756,9 @@ impl Coordinator {
         for f in flow_ids {
             if !self.world.flows[f].done() {
                 self.world.flows[f].finished_at = Some(now);
-                self.last_rates.remove(&f);
+                for sh in &mut self.shards {
+                    sh.last_rates.remove(&f);
+                }
                 let fl = self.world.flows[f];
                 self.world.load.up_bytes[fl.src] =
                     (self.world.load.up_bytes[fl.src] - fl.size).max(0.0);
@@ -558,42 +786,15 @@ impl Coordinator {
         c.finished_at = Some(now);
         c.phase = CoflowPhase::Done;
         self.world.active.retain(|&x| x != cid);
-    }
-
-    /// Apply one queued input to the world. Part of the batched-admission
-    /// drain: no reallocation happens here — the caller reallocates once
-    /// after the whole queue is drained.
-    fn handle_input(&mut self, input: Input) -> DrainOutcome {
-        match input {
-            Input::Op(op) => match op {
-                CoflowOp::Register { record, reply } => {
-                    let cid = self.register(&record);
-                    let _ = reply.send(cid);
-                    DrainOutcome { need_realloc: true, force_realloc: false }
-                }
-                CoflowOp::Deregister { coflow } => {
-                    self.deregister(coflow);
-                    DrainOutcome { need_realloc: true, force_realloc: true }
-                }
-                CoflowOp::Update { coflow, record } => {
-                    self.deregister(coflow);
-                    let _ = self.register(&record);
-                    DrainOutcome { need_realloc: true, force_realloc: true }
-                }
-                CoflowOp::Seal => {
-                    self.sealed = true;
-                    DrainOutcome::default()
-                }
-            },
-            Input::Agent(msg) => DrainOutcome {
-                need_realloc: self.handle_agent_msg(msg),
-                force_realloc: false,
-            },
+        if let Some(s) = self.owner_of(cid) {
+            self.shards[s].active.retain(|&x| x != cid);
+            self.owner[cid] = NO_OWNER;
         }
     }
 
-    /// Returns true if the message warrants an (event-triggered) realloc.
-    fn handle_agent_msg(&mut self, msg: AgentMsg) -> bool {
+    /// Apply one agent message to the world (shard `s` owns the coflow).
+    /// Returns true if it warrants an (event-triggered) realloc.
+    fn handle_agent_msg(&mut self, s: usize, msg: AgentMsg) -> bool {
         match msg {
             AgentMsg::FlowComplete { flow, coflow, size, .. } => {
                 self.iv_updates += 1;
@@ -608,7 +809,7 @@ impl Coordinator {
                     fl.rate = 0.0;
                     fl.finished_at = Some(now);
                 }
-                self.last_rates.remove(&flow);
+                self.shards[s].last_rates.remove(&flow);
                 let fl = self.world.flows[flow];
                 self.world.load.up_bytes[fl.src] =
                     (self.world.load.up_bytes[fl.src] - size).max(0.0);
@@ -634,7 +835,7 @@ impl Coordinator {
                     self.world.load.release_down(fl.dst);
                 }
                 // learning hooks (Philae's sampling state machine)
-                if let Some(mut ph) = self.philae.take() {
+                if let Some(mut ph) = self.shards[s].philae.take() {
                     if let CompletionOutcome::SampleComplete(samples) =
                         ph.record_completion(flow, &mut self.world)
                     {
@@ -644,7 +845,7 @@ impl Coordinator {
                         self.world.coflows[coflow].phase = CoflowPhase::Running;
                         self.scores_dirty = true;
                     }
-                    self.philae = Some(ph);
+                    self.shards[s].philae = Some(ph);
                 }
                 let pos = self.world.flows[flow].active_pos;
                 {
@@ -663,15 +864,25 @@ impl Coordinator {
                         }
                     }
                 }
-                let c = &mut self.world.coflows[coflow];
-                c.active_flows = c.active_flows.saturating_sub(1);
-                if size > c.max_finished_flow {
-                    c.max_finished_flow = size;
+                let mut coflow_finished = false;
+                {
+                    let c = &mut self.world.coflows[coflow];
+                    c.active_flows = c.active_flows.saturating_sub(1);
+                    if size > c.max_finished_flow {
+                        c.max_finished_flow = size;
+                    }
+                    if c.active_flows == 0 && c.finished_at.is_none() {
+                        c.finished_at = Some(now);
+                        c.phase = CoflowPhase::Done;
+                        coflow_finished = true;
+                    }
                 }
-                if c.active_flows == 0 && c.finished_at.is_none() {
-                    c.finished_at = Some(now);
-                    c.phase = CoflowPhase::Done;
+                if coflow_finished {
                     self.world.active.retain(|&x| x != coflow);
+                    if let Some(o) = self.owner_of(coflow) {
+                        self.shards[o].active.retain(|&x| x != coflow);
+                        self.owner[coflow] = NO_OWNER;
+                    }
                     self.scores_dirty = true;
                 }
                 true
@@ -713,100 +924,289 @@ impl Coordinator {
         crate::runtime::native_estimate(samples, nflows as f64)
     }
 
-    /// Compute the priority order (through the PJRT scorer when loaded),
-    /// allocate rates, and push per-agent schedules. Shares the incremental
-    /// order path and the [`rate::AllocScratch`] workspace with the
-    /// simulator's hot loop — the coordinator thread allocates nothing per
-    /// event in the native-scoring steady state.
-    fn reallocate(&mut self) {
+    /// Compute shard `s`'s priority order (through the PJRT scorer when
+    /// loaded), allocate rates against its lease, and push per-agent
+    /// schedules. Shares the incremental order path and the
+    /// [`rate::AllocScratch`] workspace with the simulator's hot loop.
+    fn reallocate_shard(&mut self, s: usize) {
+        self.ensure_leases();
         let t0 = Instant::now();
-        if self.philae.is_some() {
-            if self.engine.is_some() {
-                if self.scores_dirty {
-                    self.cached_scores = self.engine_scores();
-                    self.scores_dirty = false;
-                }
-                self.philae.as_ref().unwrap().order_with_scores_into(
-                    &self.world,
-                    &self.cached_scores,
-                    &mut self.plan,
-                );
-            } else {
-                let mut ph = self.philae.take().unwrap();
-                ph.order_into(&self.world, &mut self.plan);
-                self.philae = Some(ph);
-            }
-        } else if let Some(mut aalo) = self.aalo.take() {
-            aalo.order_into(&self.world, &mut self.plan);
-            self.aalo = Some(aalo);
-        } else {
-            self.plan.clear();
+        if self.shards[s].philae.is_some() && self.engine.is_some() && self.scores_dirty {
+            self.cached_scores = self.engine_scores();
+            self.scores_dirty = false;
         }
-        rate::allocate_into(
-            &self.world.fabric,
-            &self.world.flows,
-            &self.world.coflows,
-            &self.plan,
-            &mut self.scratch,
-        );
+        {
+            let sh = &mut self.shards[s];
+            std::mem::swap(&mut self.world.active, &mut sh.active);
+            if let Some(ph) = sh.philae.as_mut() {
+                if self.engine.is_some() {
+                    ph.order_with_scores_into(&self.world, &self.cached_scores, &mut sh.plan);
+                } else {
+                    ph.order_into(&self.world, &mut sh.plan);
+                }
+            } else if let Some(aalo) = sh.aalo.as_mut() {
+                aalo.order_into(&self.world, &mut sh.plan);
+            } else {
+                sh.plan.clear();
+            }
+            std::mem::swap(&mut self.world.active, &mut sh.active);
+            rate::allocate_into(
+                &sh.lease,
+                &self.world.flows,
+                &self.world.coflows,
+                &sh.plan,
+                &mut sh.scratch,
+            );
+        }
         let calc = t0.elapsed().as_secs_f64();
         self.iv_calc += calc;
         self.iv_rate_calcs += 1;
         self.rate_calcs += 1;
 
-        // diff against last flushed rates, group by src agent — lookups go
-        // through the scratch's stamped grant table, so no per-call rate map
-        // is built
+        // diff this shard's grants against its last flushed rates to find
+        // the agents whose schedule changed
         let t1 = Instant::now();
         let mut dirty_agents: Vec<PortId> = Vec::new();
-        for &(f, r) in self.scratch.grants() {
-            let prev = self.last_rates.get(&f).copied().unwrap_or(0.0);
-            if (prev - r).abs() > crate::EPS {
-                let a = self.world.flows[f].src;
-                if !dirty_agents.contains(&a) {
-                    dirty_agents.push(a);
+        {
+            let sh = &self.shards[s];
+            for &(f, r) in sh.scratch.grants() {
+                let prev = sh.last_rates.get(&f).copied().unwrap_or(0.0);
+                if (prev - r).abs() > crate::EPS {
+                    let a = self.world.flows[f].src;
+                    if !dirty_agents.contains(&a) {
+                        dirty_agents.push(a);
+                    }
+                }
+            }
+            for (&f, _) in sh.last_rates.iter() {
+                if !sh.scratch.was_granted(f) && !self.world.flows[f].done() {
+                    let a = self.world.flows[f].src;
+                    if !dirty_agents.contains(&a) {
+                        dirty_agents.push(a);
+                    }
                 }
             }
         }
-        for (&f, _) in self.last_rates.iter() {
-            if !self.scratch.was_granted(f) && !self.world.flows[f].done() {
-                let a = self.world.flows[f].src;
-                if !dirty_agents.contains(&a) {
-                    dirty_agents.push(a);
-                }
-            }
-        }
-        // a schedule message carries *all* rates for that agent so "comply
-        // with the last schedule" stays consistent
+        // a schedule message carries *all* rates for that agent — across
+        // every shard's latest allocation — so "comply with the last
+        // schedule" stays consistent and never stalls another shard's
+        // flows. Only the coflow's *current* owner contributes a flow's
+        // rate: after a migration the old owner's scratch still lists the
+        // flow until its next recompute, and a stale duplicate would
+        // otherwise win at the agent (last entry applies). One pass over
+        // all shards' grants buckets them by agent (O(grants), not
+        // O(dirty_agents × grants)).
+        let mut per_agent: HashMap<PortId, Vec<(FlowId, f64)>> = HashMap::new();
         for &agent in &dirty_agents {
-            let rates: Vec<(FlowId, f64)> = self
-                .scratch
-                .grants()
-                .iter()
-                .filter(|&&(f, _)| self.world.flows[f].src == agent)
-                .copied()
-                .collect();
+            per_agent.insert(agent, Vec::new());
+        }
+        for (si, sh) in self.shards.iter().enumerate() {
+            for &(f, r) in sh.scratch.grants() {
+                let fl = &self.world.flows[f];
+                if fl.done() || self.owner_of(fl.coflow) != Some(si) {
+                    continue;
+                }
+                if let Some(rates) = per_agent.get_mut(&fl.src) {
+                    rates.push((f, r));
+                }
+            }
+        }
+        for &agent in &dirty_agents {
+            let rates = per_agent.remove(&agent).unwrap_or_default();
             let _ = self.agents[agent].tx.send(CoordMsg::NewSchedule { rates });
             self.iv_rate_msgs += 1;
             self.rate_msgs += 1;
         }
-        self.last_rates.clear();
-        self.last_rates
-            .extend(self.scratch.grants().iter().copied());
+        {
+            let sh = &mut self.shards[s];
+            sh.last_rates.clear();
+            for &(f, r) in sh.scratch.grants() {
+                sh.last_rates.insert(f, r);
+            }
+        }
         self.iv_send += t1.elapsed().as_secs_f64();
     }
 
-    /// Batch the scheduled coflows through the PJRT scorer.
+    /// Cross-shard reconciliation (K > 1): observe per-shard demand,
+    /// migrate coflows away from saturated shards, and water-fill the
+    /// capacity leases (see `coordinator/cluster.rs` — same policy and
+    /// tie-breaks as the simulator's cluster).
+    fn reconcile(&mut self) {
+        let k = self.shards.len();
+        let np = self.world.fabric.num_ports;
+        self.ensure_leases();
+        for s in 0..k {
+            let sh = &mut self.shards[s];
+            if sh.demand_up.len() < np {
+                sh.demand_up.resize(np, 0.0);
+                sh.demand_down.resize(np, 0.0);
+            }
+            sh.demand_up[..np].fill(0.0);
+            sh.demand_down[..np].fill(0.0);
+            let mut total = 0.0;
+            for i in 0..sh.active.len() {
+                let cid = sh.active[i];
+                let c = &self.world.coflows[cid];
+                if c.done() {
+                    continue;
+                }
+                for &f in &c.active_list {
+                    let fl = &self.world.flows[f];
+                    let rem = fl.remaining();
+                    sh.demand_up[fl.src] += rem;
+                    sh.demand_down[fl.dst] += rem;
+                    total += rem;
+                }
+            }
+            self.demand_total[s] = total;
+        }
+        // migrate while the heaviest shard saturates its share
+        let mut moves = 0;
+        while moves < MAX_MIGRATIONS_PER_ROUND {
+            let mut smax = 0;
+            let mut smin = 0;
+            for s in 1..k {
+                if self.demand_total[s] > self.demand_total[smax] {
+                    smax = s;
+                }
+                if self.demand_total[s] < self.demand_total[smin] {
+                    smin = s;
+                }
+            }
+            let mean = self.demand_total[..k].iter().sum::<f64>() / k as f64;
+            if smax == smin
+                || self.shards[smax].active.len() < 2
+                || self.demand_total[smax] <= IMBALANCE_THRESHOLD * mean
+            {
+                break;
+            }
+            let mut victim: Option<(f64, CoflowId)> = None;
+            for i in 0..self.shards[smax].active.len() {
+                let cid = self.shards[smax].active[i];
+                let c = &self.world.coflows[cid];
+                if c.done() {
+                    continue;
+                }
+                let rem: f64 = c
+                    .active_list
+                    .iter()
+                    .map(|&f| self.world.flows[f].remaining())
+                    .sum();
+                if rem <= 0.0 {
+                    continue;
+                }
+                let take = match victim {
+                    None => true,
+                    Some((vr, vc)) => rem < vr || (rem == vr && cid < vc),
+                };
+                if take {
+                    victim = Some((rem, cid));
+                }
+            }
+            let Some((rem, cid)) = victim else { break };
+            self.migrate(cid, smax, smin);
+            self.demand_total[smax] -= rem;
+            self.demand_total[smin] += rem;
+            moves += 1;
+        }
+        // water-fill the leases from the (post-migration) demand
+        for p in 0..np {
+            for s in 0..k {
+                self.wf_demand[s] = self.shards[s].demand_up[p];
+            }
+            cluster::water_fill_port(
+                self.world.fabric.up_capacity[p],
+                &self.wf_demand[..k],
+                LEASE_FLOOR_FRAC,
+                &mut self.wf_out[..k],
+                &mut self.wf_scratch,
+            );
+            for s in 0..k {
+                self.shards[s].lease.up_capacity[p] = self.wf_out[s];
+            }
+            for s in 0..k {
+                self.wf_demand[s] = self.shards[s].demand_down[p];
+            }
+            cluster::water_fill_port(
+                self.world.fabric.down_capacity[p],
+                &self.wf_demand[..k],
+                LEASE_FLOOR_FRAC,
+                &mut self.wf_out[..k],
+                &mut self.wf_scratch,
+            );
+            for s in 0..k {
+                self.shards[s].lease.down_capacity[p] = self.wf_out[s];
+            }
+        }
+        self.reconciliations += 1;
+    }
+
+    /// Move `cid` from shard `from` to shard `to`: ownership, queued
+    /// demand, flushed-rate bookkeeping, and the scheduler attach hook
+    /// (Philae rebuilds its sampling state from completed-flow facts;
+    /// Aalo keeps the coflow's earned queue and seen bytes).
+    fn migrate(&mut self, cid: CoflowId, from: usize, to: usize) {
+        debug_assert_ne!(from, to);
+        // hand the coflow's per-port demand to the receiver
+        for i in 0..self.world.coflows[cid].active_list.len() {
+            let f = self.world.coflows[cid].active_list[i];
+            let fl = self.world.flows[f];
+            let rem = fl.remaining();
+            self.shards[from].demand_up[fl.src] =
+                (self.shards[from].demand_up[fl.src] - rem).max(0.0);
+            self.shards[from].demand_down[fl.dst] =
+                (self.shards[from].demand_down[fl.dst] - rem).max(0.0);
+            self.shards[to].demand_up[fl.src] += rem;
+            self.shards[to].demand_down[fl.dst] += rem;
+        }
+        // flushed-rate entries travel with the coflow so neither shard's
+        // next diff spuriously stalls or restarts its flows
+        let flow_ids = self.world.coflows[cid].flows.clone();
+        for f in flow_ids {
+            if let Some(r) = self.shards[from].last_rates.remove(&f) {
+                self.shards[to].last_rates.insert(f, r);
+            }
+        }
+        self.shards[from].active.retain(|&x| x != cid);
+        self.owner[cid] = to as u32;
+        self.shards[to].active.push(cid);
+        let mut completed_sample: Option<Vec<f64>> = None;
+        {
+            let sh = &mut self.shards[to];
+            std::mem::swap(&mut self.world.active, &mut sh.active);
+            if let Some(ph) = sh.philae.as_mut() {
+                completed_sample = ph.adopt(cid, &self.world);
+            }
+            if let Some(aalo) = sh.aalo.as_mut() {
+                aalo.on_coflow_attach(cid, &mut self.world);
+            }
+            std::mem::swap(&mut self.world.active, &mut sh.active);
+        }
+        if let Some(samples) = completed_sample {
+            // the sample completed while its last report was in flight at
+            // migration time (see `PhilaeCore::adopt`): estimate now
+            let n = self.world.coflows[cid].flows.len();
+            let est = self.engine_estimate(&samples, n, cid);
+            self.world.coflows[cid].est_size = Some(est);
+            if self.world.coflows[cid].finished_at.is_none() {
+                self.world.coflows[cid].phase = CoflowPhase::Running;
+            }
+            self.scores_dirty = true;
+        }
+        self.migrations += 1;
+    }
+
+    /// Batch the scheduled coflows through the PJRT scorer. Each coflow's
+    /// sampling features come from its owning shard's Philae core.
     fn engine_scores(&mut self) -> HashMap<CoflowId, f64> {
         let mut out = HashMap::new();
-        let (engine, batch, philae) = match (
-            self.engine.as_ref(),
-            self.batch.as_mut(),
-            self.philae.as_ref(),
-        ) {
-            (Some(e), Some(b), Some(p)) => (e, b, p),
+        let (engine, batch) = match (self.engine.as_ref(), self.batch.as_mut()) {
+            (Some(e), Some(b)) => (e, b),
             _ => return out,
         };
+        if self.shards[0].philae.is_none() {
+            return out;
+        }
         let half_p = batch.p / 2;
         let cands: Vec<CoflowId> = self
             .world
@@ -832,6 +1232,9 @@ impl Coordinator {
                         ports.push(half_p + p.min(half_p - 1));
                     }
                 }
+                let owner = self.owner.get(cid).copied().unwrap_or(NO_OWNER);
+                let shard = if owner == NO_OWNER { 0 } else { owner as usize };
+                let philae = self.shards[shard].philae.as_ref().expect("philae shards");
                 batch.set_row(
                     row,
                     philae.pilot_sizes(cid),

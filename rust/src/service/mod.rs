@@ -14,5 +14,7 @@
 mod coordinator;
 mod ops;
 
-pub use coordinator::{run_service, Input, ServiceConfig, ServiceReport};
+pub use coordinator::{
+    run_service, Input, ServiceConfig, ServiceReport, SERVICE_RECONCILE_INTERVALS,
+};
 pub use ops::{CoflowOp, OpsHandle};

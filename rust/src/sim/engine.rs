@@ -60,10 +60,23 @@
 //! [`SimConfig::full_recompute`] forces [`Scheduler::order_full_into`] — the
 //! from-scratch oracle path — instead; `rust/tests/cct_equivalence.rs`
 //! asserts the two produce bit-identical per-coflow CCTs.
+//!
+//! ## Coordinator frontends (multi-coordinator sharding)
+//!
+//! The loop itself is generic over a [`CoordFrontend`]: the classic path is
+//! `SingleCoord` (one scheduler plus the frontend-owned reused plan and
+//! allocation scratch — the zero-allocation hot path, unchanged), and
+//! [`Simulation::run_cluster`] drives the same loop through a
+//! [`CoordinatorCluster`] that partitions coflows across
+//! [`SimConfig::coordinators`] shards with leased per-port capacity and
+//! periodic demand-weighted reconciliation (`coordinator/cluster.rs`). K=1
+//! through the cluster is a pass-through pinned bit-identical to
+//! `SingleCoord` by the equivalence suite.
 
 use super::heap::CompletionHeap;
 use crate::coordinator::{
-    rate, EventBatch, Plan, Reaction, Scheduler, SchedulerConfig, SchedulerKind, World,
+    rate, CoordinatorCluster, EventBatch, Plan, Reaction, Scheduler, SchedulerConfig,
+    SchedulerKind, World,
 };
 use crate::coflow::{CoflowState, FlowState};
 use crate::fabric::{Fabric, PortLoad};
@@ -100,6 +113,13 @@ pub struct SimConfig {
     /// sharded pipeline is bit-identical and pays off on multi-thousand
     /// port fabrics (see `benches/bench_shard.rs`).
     pub alloc_shards: usize,
+    /// Coordinator shards K for the multi-coordinator cluster path
+    /// ([`Simulation::run_cluster`]): active coflows are partitioned across
+    /// K independent coordinator instances, each scheduling over a leased
+    /// per-port capacity slice with periodic demand-weighted reconciliation
+    /// (see `coordinator/cluster.rs`). `0`/`1` = the single-coordinator
+    /// path; K=1 through the cluster is bit-identical to it.
+    pub coordinators: usize,
     /// Fabric override (e.g. [`Fabric::heterogeneous`] mixed-NIC
     /// clusters); `None` = homogeneous at `port_rate`. Must cover exactly
     /// the trace's port count.
@@ -115,7 +135,10 @@ impl Default for SimConfig {
             max_sim_time: 0.0,
             full_recompute: false,
             per_event_admission: false,
-            alloc_shards: 1,
+            // PHILAE_TEST_SHARDS lets the CI matrix drive every sim-backed
+            // test through the sharded allocator (bit-identical by design).
+            alloc_shards: rate::env_test_shards(),
+            coordinators: 1,
             fabric: None,
         }
     }
@@ -201,6 +224,134 @@ pub fn world_with_fabric(trace: &Trace, fabric: Fabric) -> World {
     }
 }
 
+/// The engine's view of "the coordinator side": either one scheduler
+/// driving a frontend-owned reused plan/scratch pair ([`SingleCoord`], the
+/// pre-cluster hot path verbatim), or a [`CoordinatorCluster`] of K shards.
+/// Both consume the same event vocabulary and expose the grants of the
+/// last [`compute`](CoordFrontend::compute) round for the engine to apply.
+pub(crate) trait CoordFrontend {
+    fn name(&self) -> String;
+    fn tick_interval(&self) -> Option<Time>;
+    fn on_arrival(&mut self, cid: CoflowId, world: &mut World) -> Reaction;
+    fn on_flow_complete(&mut self, fid: FlowId, world: &mut World) -> Reaction;
+    fn on_coflow_complete(&mut self, cid: CoflowId, world: &mut World) -> Reaction;
+    fn on_tick(&mut self, world: &mut World) -> Reaction;
+    fn on_batch(&mut self, batch: &EventBatch, world: &mut World) -> Reaction;
+    /// Recompute the schedule (order + allocation); `full` selects the
+    /// from-scratch oracle ordering.
+    fn compute(&mut self, world: &mut World, full: bool);
+    /// `(flow, rate)` grants of the last compute round.
+    fn grants(&self) -> &[(FlowId, f64)];
+    /// Whether `fid` holds a grant from the last compute round.
+    fn was_granted(&self, fid: FlowId) -> bool;
+}
+
+/// Single-coordinator frontend: one scheduler, one reused plan, one reused
+/// allocation scratch — exactly the engine-owned buffers of the
+/// zero-allocation hot path, now living beside the scheduler they serve.
+struct SingleCoord<'a> {
+    sched: &'a mut dyn Scheduler,
+    plan: Plan,
+    scratch: rate::AllocScratch,
+}
+
+impl CoordFrontend for SingleCoord<'_> {
+    fn name(&self) -> String {
+        self.sched.name()
+    }
+
+    fn tick_interval(&self) -> Option<Time> {
+        self.sched.tick_interval()
+    }
+
+    fn on_arrival(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
+        self.sched.on_arrival(cid, world)
+    }
+
+    fn on_flow_complete(&mut self, fid: FlowId, world: &mut World) -> Reaction {
+        self.sched.on_flow_complete(fid, world)
+    }
+
+    fn on_coflow_complete(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
+        self.sched.on_coflow_complete(cid, world)
+    }
+
+    fn on_tick(&mut self, world: &mut World) -> Reaction {
+        self.sched.on_tick(world)
+    }
+
+    fn on_batch(&mut self, batch: &EventBatch, world: &mut World) -> Reaction {
+        self.sched.on_batch(batch, world)
+    }
+
+    fn compute(&mut self, world: &mut World, full: bool) {
+        if full {
+            self.sched.order_full_into(world, &mut self.plan);
+        } else {
+            self.sched.order_into(world, &mut self.plan);
+        }
+        rate::allocate_into(
+            &world.fabric,
+            &world.flows,
+            &world.coflows,
+            &self.plan,
+            &mut self.scratch,
+        );
+    }
+
+    fn grants(&self) -> &[(FlowId, f64)] {
+        self.scratch.grants()
+    }
+
+    fn was_granted(&self, fid: FlowId) -> bool {
+        self.scratch.was_granted(fid)
+    }
+}
+
+/// The K-shard cluster drives the same engine loop (see
+/// `coordinator/cluster.rs`; K=1 is a bit-identical pass-through).
+impl CoordFrontend for CoordinatorCluster {
+    fn name(&self) -> String {
+        CoordinatorCluster::name(self)
+    }
+
+    fn tick_interval(&self) -> Option<Time> {
+        CoordinatorCluster::tick_interval(self)
+    }
+
+    fn on_arrival(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
+        CoordinatorCluster::on_arrival(self, cid, world)
+    }
+
+    fn on_flow_complete(&mut self, fid: FlowId, world: &mut World) -> Reaction {
+        CoordinatorCluster::on_flow_complete(self, fid, world)
+    }
+
+    fn on_coflow_complete(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
+        CoordinatorCluster::on_coflow_complete(self, cid, world)
+    }
+
+    fn on_tick(&mut self, world: &mut World) -> Reaction {
+        CoordinatorCluster::on_tick(self, world)
+    }
+
+    fn on_batch(&mut self, batch: &EventBatch, world: &mut World) -> Reaction {
+        CoordinatorCluster::on_batch(self, batch, world)
+    }
+
+    fn compute(&mut self, world: &mut World, full: bool) {
+        CoordinatorCluster::compute(self, world, full)
+    }
+
+    fn grants(&self) -> &[(FlowId, f64)] {
+        CoordinatorCluster::grants(self)
+    }
+
+    fn was_granted(&self, fid: FlowId) -> bool {
+        CoordinatorCluster::was_granted(self, fid)
+    }
+}
+
 /// Min-heap entry of the delayed-report queue: (report time, flow).
 #[derive(PartialEq)]
 struct Ev(Time, FlowId);
@@ -232,14 +383,56 @@ impl Simulation {
         Self::run_with(trace, sched.as_mut(), cfg, &SimConfig::default())
     }
 
-    /// Full-control entry point.
+    /// Full-control entry point (single coordinator).
     pub fn run_with(
         trace: &Trace,
         sched: &mut dyn Scheduler,
         cfg: &SchedulerConfig,
         sim_cfg: &SimConfig,
     ) -> SimResult {
-        Engine::new(trace, cfg, sim_cfg).run(sched)
+        let mut front = SingleCoord {
+            sched,
+            plan: Plan::default(),
+            scratch: {
+                let mut s = rate::AllocScratch::new();
+                s.set_shards(sim_cfg.alloc_shards);
+                s
+            },
+        };
+        Engine::new(trace, cfg, sim_cfg).run(&mut front)
+    }
+
+    /// Run through the multi-coordinator cluster with
+    /// K = [`SimConfig::coordinators`] shards of `kind`. K=1 is pinned
+    /// bit-identical to [`Simulation::run_with`] by
+    /// `rust/tests/cct_equivalence.rs`.
+    pub fn run_cluster(
+        trace: &Trace,
+        kind: SchedulerKind,
+        cfg: &SchedulerConfig,
+        sim_cfg: &SimConfig,
+    ) -> SimResult {
+        let mut cluster = CoordinatorCluster::with_coordinators(
+            sim_cfg.coordinators.max(1),
+            kind,
+            trace,
+            cfg,
+        );
+        Self::run_with_cluster(trace, &mut cluster, cfg, sim_cfg)
+    }
+
+    /// Cluster entry point with a caller-built [`CoordinatorCluster`]
+    /// (custom [`crate::coordinator::ClusterConfig`] — reconciliation
+    /// period, migration bounds, invariant validation). The cluster's own
+    /// shard count is used; [`SimConfig::coordinators`] is ignored here.
+    pub fn run_with_cluster(
+        trace: &Trace,
+        cluster: &mut CoordinatorCluster,
+        cfg: &SchedulerConfig,
+        sim_cfg: &SimConfig,
+    ) -> SimResult {
+        cluster.set_alloc_shards(sim_cfg.alloc_shards);
+        Engine::new(trace, cfg, sim_cfg).run(cluster)
     }
 }
 
@@ -272,10 +465,6 @@ struct Engine {
     /// Epoch-stamped membership for `rate_dirty` (O(1) dedup, no clearing).
     rate_dirty_stamp: Vec<u64>,
     rate_dirty_epoch: u64,
-    /// Reused scheduling plan written by `Scheduler::order_into`.
-    plan: Plan,
-    /// Reused allocation workspace (see `rate::AllocScratch`).
-    scratch: rate::AllocScratch,
     /// Use the from-scratch oracle order path (equivalence testing).
     full_recompute: bool,
     port_refs: Vec<Option<PortRefs>>,
@@ -324,8 +513,6 @@ impl Engine {
         arrivals.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         let nf = world.flows.len();
         let nc = world.coflows.len();
-        let mut scratch = rate::AllocScratch::new();
-        scratch.set_shards(sim_cfg.alloc_shards);
         Engine {
             world,
             arrivals,
@@ -343,8 +530,6 @@ impl Engine {
             rate_dirty: Vec::with_capacity(nc),
             rate_dirty_stamp: vec![0; nc],
             rate_dirty_epoch: 0,
-            plan: Plan::default(),
-            scratch,
             full_recompute: sim_cfg.full_recompute,
             port_refs: (0..nc).map(|_| None).collect(),
             reports_pending: vec![0; nc],
@@ -366,9 +551,9 @@ impl Engine {
         }
     }
 
-    fn run(mut self, sched: &mut dyn Scheduler) -> SimResult {
+    fn run<F: CoordFrontend>(mut self, front: &mut F) -> SimResult {
         let wall_start = Instant::now();
-        let tick = sched.tick_interval();
+        let tick = front.tick_interval();
         let mut next_tick: Option<Time> = None;
 
         loop {
@@ -415,7 +600,7 @@ impl Engine {
                 self.next_arrival += 1;
                 self.admit(cid);
                 if self.per_event {
-                    reaction = reaction.merge(sched.on_arrival(cid, &mut self.world));
+                    reaction = reaction.merge(front.on_arrival(cid, &mut self.world));
                 } else {
                     self.batch.arrivals.push(cid);
                 }
@@ -449,7 +634,7 @@ impl Engine {
                     let d: f64 = self.rng.uniform(0.0, self.jitter);
                     self.reports.push(Reverse(Ev(self.world.now + d, f)));
                 } else if self.per_event {
-                    reaction = reaction.merge(self.deliver_report(f, sched));
+                    reaction = reaction.merge(self.deliver_report(f, front));
                 } else {
                     self.queue_report(f);
                 }
@@ -461,7 +646,7 @@ impl Engine {
                     let f = *f;
                     self.reports.pop();
                     if self.per_event {
-                        reaction = reaction.merge(self.deliver_report(f, sched));
+                        reaction = reaction.merge(self.deliver_report(f, front));
                     } else {
                         self.queue_report(f);
                     }
@@ -480,7 +665,7 @@ impl Engine {
                     self.iv_updates += tick_updates;
                     self.totals.update_msgs += tick_updates;
                     if self.per_event {
-                        reaction = reaction.merge(sched.on_tick(&mut self.world));
+                        reaction = reaction.merge(front.on_tick(&mut self.world));
                     } else {
                         self.batch.tick = true;
                     }
@@ -501,13 +686,13 @@ impl Engine {
                 // move the batch out for the call, then hand the buffers
                 // back for reuse (no allocation either way)
                 let batch = std::mem::take(&mut self.batch);
-                reaction = reaction.merge(sched.on_batch(&batch, &mut self.world));
+                reaction = reaction.merge(front.on_batch(&batch, &mut self.world));
                 self.batch = batch;
             }
 
             // ---- reallocate ----
             if reaction == Reaction::Reallocate {
-                let (calc_s, changed) = self.reallocate(sched);
+                let (calc_s, changed) = self.reallocate(front);
                 // Deadline model (§4.3): if this tick's coordinator work —
                 // ingesting updates, recalculating, pushing new rates —
                 // exceeds δ, the coordinator overruns into the next interval
@@ -536,7 +721,7 @@ impl Engine {
             .map(|c| c.cct().unwrap_or(f64::NAN))
             .collect();
         SimResult {
-            scheduler: sched.name(),
+            scheduler: front.name(),
             ccts,
             makespan: self.world.now,
             intervals: self.stats.clone(),
@@ -688,10 +873,10 @@ impl Engine {
     /// the per-event admission path. Counts one agent→coordinator update
     /// message (Philae's only update type; Aalo additionally gets tick-time
     /// byte updates).
-    fn deliver_report(&mut self, f: FlowId, sched: &mut dyn Scheduler) -> Reaction {
+    fn deliver_report<F: CoordFrontend>(&mut self, f: FlowId, front: &mut F) -> Reaction {
         self.iv_updates += 1;
         self.totals.update_msgs += 1;
-        let mut reaction = sched.on_flow_complete(f, &mut self.world);
+        let mut reaction = front.on_flow_complete(f, &mut self.world);
         let cid = self.world.flows[f].coflow;
         // Deliver the coflow-completion event exactly once — with the last
         // of its completion reports (under jitter these can be reordered).
@@ -701,7 +886,7 @@ impl Engine {
             && !self.coflow_delivered[cid]
         {
             self.coflow_delivered[cid] = true;
-            reaction = reaction.merge(sched.on_coflow_complete(cid, &mut self.world));
+            reaction = reaction.merge(front.on_coflow_complete(cid, &mut self.world));
         }
         reaction
     }
@@ -731,20 +916,9 @@ impl Engine {
     /// Zero steady-state heap allocation: the plan, the allocation scratch,
     /// the running set, and the dirty list are all engine-owned reusable
     /// buffers (see the module docs).
-    fn reallocate(&mut self, sched: &mut dyn Scheduler) -> (f64, u64) {
+    fn reallocate<F: CoordFrontend>(&mut self, front: &mut F) -> (f64, u64) {
         let t0 = Instant::now();
-        if self.full_recompute {
-            sched.order_full_into(&self.world, &mut self.plan);
-        } else {
-            sched.order_into(&self.world, &mut self.plan);
-        }
-        rate::allocate_into(
-            &self.world.fabric,
-            &self.world.flows,
-            &self.world.coflows,
-            &self.plan,
-            &mut self.scratch,
-        );
+        front.compute(&mut self.world, self.full_recompute);
         let calc_s = t0.elapsed().as_secs_f64();
         self.totals.rate_calc_wall_s += calc_s;
         self.totals.rate_calcs += 1;
@@ -766,7 +940,7 @@ impl Engine {
                 self.rate_dirty_stamp[cid] = de;
                 self.rate_dirty.push(cid);
             }
-            if !self.scratch.was_granted(f)
+            if !front.was_granted(f)
                 && !self.world.flows[f].done()
                 && self.world.flows[f].rate != 0.0
             {
@@ -779,8 +953,8 @@ impl Engine {
         // spare buffer takes over as the new list.
         std::mem::swap(&mut self.running, &mut self.running_spare);
         self.running.clear();
-        for idx in 0..self.scratch.grants().len() {
-            let (f, r) = self.scratch.grants()[idx];
+        for idx in 0..front.grants().len() {
+            let (f, r) = front.grants()[idx];
             let old_rate = self.world.flows[f].rate;
             if (old_rate - r).abs() > EPS {
                 self.world.flows[f].rate = r;
@@ -1056,6 +1230,39 @@ mod tests {
             assert_eq!(batched.ccts, per_event.ccts, "{kind:?}");
             assert_eq!(batched.rate_calcs, per_event.rate_calcs, "{kind:?}");
             assert_eq!(batched.update_msgs, per_event.update_msgs, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn cluster_k1_run_matches_single_coordinator() {
+        let trace = TraceSpec::tiny(10, 25).seed(9).generate();
+        let cfg = SchedulerConfig::default();
+        let base = SimConfig { account_delta: Some(1e18), ..SimConfig::default() };
+        for &kind in &[SchedulerKind::Philae, SchedulerKind::Aalo] {
+            let mut s = kind.build(&trace, &cfg);
+            let single = Simulation::run_with(&trace, s.as_mut(), &cfg, &base);
+            let ccfg = SimConfig { coordinators: 1, ..base.clone() };
+            let clustered = Simulation::run_cluster(&trace, kind, &cfg, &ccfg);
+            assert_eq!(single.ccts, clustered.ccts, "{kind:?}");
+            assert_eq!(single.rate_calcs, clustered.rate_calcs, "{kind:?}");
+            assert_eq!(single.rate_msgs, clustered.rate_msgs, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn cluster_k2_completes_every_coflow() {
+        let trace = TraceSpec::tiny(10, 25).seed(9).generate();
+        let cfg = SchedulerConfig::default();
+        for &kind in &[SchedulerKind::Philae, SchedulerKind::Aalo] {
+            let ccfg = SimConfig {
+                coordinators: 2,
+                account_delta: Some(1e18),
+                ..SimConfig::default()
+            };
+            let res = Simulation::run_cluster(&trace, kind, &cfg, &ccfg);
+            for (i, &cct) in res.ccts.iter().enumerate() {
+                assert!(cct.is_finite() && cct > 0.0, "{kind:?}: coflow {i} unfinished");
+            }
         }
     }
 

@@ -2,9 +2,14 @@
 //! CCTs must be **bit-identical** between the incremental order path
 //! (`Scheduler::order_into`, the default) and the from-scratch oracle path
 //! (`SimConfig::full_recompute`), across the hot-path bench scenarios and
-//! **all nine scheduler kinds**; and between **batched admission** (the
+//! **all nine scheduler kinds**; between **batched admission** (the
 //! default coalesced `EventBatch` delivery) and the legacy per-event
-//! admission (`SimConfig::per_event_admission`).
+//! admission (`SimConfig::per_event_admission`); and between the
+//! **multi-coordinator cluster at K=1** (`Simulation::run_cluster`) and
+//! the single-coordinator path — which makes this whole suite the oracle
+//! for the cluster plumbing. K ∈ {2, 4} intentionally trades schedule
+//! quality for coordinator scalability and is CCT-*bounded* rather than
+//! pinned.
 
 use philae::coordinator::{SchedulerConfig, SchedulerKind};
 use philae::sim::{SimConfig, Simulation};
@@ -126,6 +131,103 @@ fn assert_batched_equals_per_event(
         per_event.makespan.to_bits(),
         "{kind:?}: makespan"
     );
+}
+
+/// The multi-coordinator cluster with K=1 is a transparent pass-through:
+/// the whole event history must be bit-identical to the single path.
+fn assert_cluster_k1_bit_identical(ports: usize, coflows: usize, kind: SchedulerKind) {
+    let trace = TraceSpec::fb_like(ports, coflows).seed(5).generate();
+    let cfg = SchedulerConfig::default();
+    let base = SimConfig { account_delta: Some(1e18), ..SimConfig::default() };
+
+    let mut sched = kind.build(&trace, &cfg);
+    let single = Simulation::run_with(&trace, sched.as_mut(), &cfg, &base);
+
+    let cluster_cfg = SimConfig { coordinators: 1, ..base };
+    let clustered = Simulation::run_cluster(&trace, kind, &cfg, &cluster_cfg);
+
+    assert_eq!(single.ccts.len(), clustered.ccts.len());
+    for (i, (a, b)) in single.ccts.iter().zip(clustered.ccts.iter()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{kind:?} {ports}p/{coflows}c: coflow {i} CCT {a} != {b} (single vs cluster K=1)"
+        );
+    }
+    assert_eq!(single.rate_calcs, clustered.rate_calcs, "{kind:?}: reallocation counts");
+    assert_eq!(single.rate_msgs, clustered.rate_msgs, "{kind:?}: rate message counts");
+    assert_eq!(single.update_msgs, clustered.update_msgs, "{kind:?}: update counts");
+    assert_eq!(
+        single.makespan.to_bits(),
+        clustered.makespan.to_bits(),
+        "{kind:?}: makespan"
+    );
+}
+
+#[test]
+fn philae_cluster_k1_bit_identical_150_ports() {
+    assert_cluster_k1_bit_identical(150, 200, SchedulerKind::Philae);
+}
+
+#[test]
+fn aalo_cluster_k1_bit_identical_150_ports() {
+    assert_cluster_k1_bit_identical(150, 200, SchedulerKind::Aalo);
+}
+
+/// K > 1 partitions coflows across shards with leased capacity — schedule
+/// quality may drop (a shard only spends its lease and only orders its own
+/// coflows), but every coflow must finish and the average CCT must stay
+/// within a small factor of the single coordinator's.
+fn assert_cluster_cct_bounded(ports: usize, coflows: usize, kind: SchedulerKind, k: usize) {
+    let trace = TraceSpec::fb_like(ports, coflows).seed(5).generate();
+    let cfg = SchedulerConfig::default();
+    let base = SimConfig { account_delta: Some(1e18), ..SimConfig::default() };
+
+    let mut sched = kind.build(&trace, &cfg);
+    let single = Simulation::run_with(&trace, sched.as_mut(), &cfg, &base);
+
+    let cluster_cfg = SimConfig { coordinators: k, ..base };
+    let clustered = Simulation::run_cluster(&trace, kind, &cfg, &cluster_cfg);
+
+    for (i, &cct) in clustered.ccts.iter().enumerate() {
+        assert!(
+            cct.is_finite() && cct > 0.0,
+            "{kind:?} K={k}: coflow {i} never finished (cct {cct})"
+        );
+    }
+    let ratio = clustered.avg_cct() / single.avg_cct();
+    assert!(
+        ratio <= 5.0,
+        "{kind:?} K={k}: avg CCT blew up {ratio:.2}x over the single coordinator \
+         ({:.4}s vs {:.4}s)",
+        clustered.avg_cct(),
+        single.avg_cct()
+    );
+    let makespan_ratio = clustered.makespan / single.makespan;
+    assert!(
+        makespan_ratio <= 5.0,
+        "{kind:?} K={k}: makespan blew up {makespan_ratio:.2}x"
+    );
+}
+
+#[test]
+fn philae_cluster_k2_cct_bounded_150_ports() {
+    assert_cluster_cct_bounded(150, 200, SchedulerKind::Philae, 2);
+}
+
+#[test]
+fn philae_cluster_k4_cct_bounded_150_ports() {
+    assert_cluster_cct_bounded(150, 200, SchedulerKind::Philae, 4);
+}
+
+#[test]
+fn aalo_cluster_k2_cct_bounded_150_ports() {
+    assert_cluster_cct_bounded(150, 200, SchedulerKind::Aalo, 2);
+}
+
+#[test]
+fn aalo_cluster_k4_cct_bounded_150_ports() {
+    assert_cluster_cct_bounded(150, 200, SchedulerKind::Aalo, 4);
 }
 
 #[test]

@@ -2,20 +2,38 @@
 //! a small trace end to end, coflow ops (register/deregister/update) behave,
 //! and the measured interval accounting is sane.
 
-use philae::coordinator::{SchedulerConfig, SchedulerKind};
+use philae::coordinator::SchedulerKind;
 use philae::service::{run_service, ServiceConfig};
 use philae::trace::TraceSpec;
-use std::time::Duration;
 
 fn svc(kind: SchedulerKind) -> ServiceConfig {
+    // `..default()` keeps `alloc_shards` on `rate::env_test_shards()`, so
+    // the PHILAE_TEST_SHARDS CI leg drives the live service through the
+    // sharded allocator too.
     ServiceConfig {
         kind,
-        sched: SchedulerConfig::default(),
         time_scale: 200.0, // fast replay: tiny traces finish in < 2 s wall
-        delta_wall: Duration::from_millis(8),
-        engine_dir: None,
-        port_rate: philae::GBPS,
-        alloc_shards: 1,
+        ..ServiceConfig::default()
+    }
+}
+
+#[test]
+fn multi_coordinator_service_completes_trace() {
+    // K = 2 coordinator shards with leased capacity: every coflow must
+    // still finish, for both the event-triggered (Philae) and the
+    // periodic (Aalo) pipelines.
+    for kind in [SchedulerKind::Philae, SchedulerKind::Aalo] {
+        let trace = TraceSpec::tiny(8, 14).seed(21).generate();
+        let cfg = ServiceConfig { coordinators: 2, ..svc(kind) };
+        let report = run_service(&trace, &cfg).expect("sharded service run");
+        assert_eq!(report.ccts.len(), trace.coflows.len());
+        for (i, &cct) in report.ccts.iter().enumerate() {
+            assert!(
+                cct.is_finite() && cct > 0.0,
+                "{kind:?} K=2: coflow {i} unfinished: {cct}"
+            );
+        }
+        assert!(report.rate_calcs > 0);
     }
 }
 
