@@ -1,0 +1,189 @@
+//! §Deadline bench: the SLO workload family end to end.
+//!
+//! Sweeps deadline **tightness** (deadline = tightness × ideal CCT,
+//! `trace::DeadlineModel`) over FB-like fabrics at 150 and 900 ports under
+//! elevated load, and runs the deadline-aware `dcoflow` scheduler against
+//! the deadline-blind family (philae, aalo, sebf, scf). Reported per
+//! (fabric, tightness, scheduler): **deadline-met ratio**, **goodput
+//! ratio** (bytes of met-SLO coflows), and avg CCT; `dcoflow` additionally
+//! reports its admission counters.
+//!
+//! The headline assertion mirrors the PR's acceptance bar: at tight SLOs
+//! (tightness ≤ 2×) `dcoflow` must beat deadline-blind SCF on met ratio —
+//! admission control plus EDF beats shortest-first exactly where a
+//! mis-scheduled coflow means a missed SLO rather than a longer tail.
+//!
+//! Simulated results only (account δ neutralized), so the emitted
+//! `BENCH_deadline.json` is machine-independent and deterministic;
+//! `bench_gate` tracks conservative met-ratio floors from
+//! `ci/bench_baseline.json`.
+//!
+//! `cargo bench --bench bench_deadline`
+
+mod common;
+
+use philae::coordinator::{SchedulerConfig, SchedulerKind};
+use philae::sim::{SimConfig, SimResult, Simulation};
+use philae::trace::{DeadlineModel, TraceSpec};
+
+const TIGHTNESS: [f64; 3] = [1.2, 2.0, 4.0];
+const KINDS: [SchedulerKind; 5] = [
+    SchedulerKind::Dcoflow,
+    SchedulerKind::Philae,
+    SchedulerKind::Aalo,
+    SchedulerKind::Sebf,
+    SchedulerKind::Scf,
+];
+
+struct Cell {
+    kind: SchedulerKind,
+    met_ratio: f64,
+    goodput_ratio: f64,
+    avg_cct: f64,
+    admitted: u64,
+    rejected: u64,
+    expired: u64,
+}
+
+struct SweepPoint {
+    tightness: f64,
+    cells: Vec<Cell>,
+}
+
+struct Row {
+    ports: usize,
+    coflows: usize,
+    points: Vec<SweepPoint>,
+}
+
+fn met_of(points: &[Cell], kind: SchedulerKind) -> f64 {
+    points
+        .iter()
+        .find(|c| c.kind == kind)
+        .map(|c| c.met_ratio)
+        .unwrap_or(f64::NAN)
+}
+
+fn main() {
+    common::banner(
+        "deadline",
+        "SLO workloads: deadline-met ratio vs tightness, dcoflow vs deadline-blind",
+    );
+    let cfg = SchedulerConfig::default();
+    // The sweep is deterministic (no wall-time coupling): iterations only
+    // smooth wall time, so one pass is enough even locally.
+    let iters = common::iters(1);
+    // Neutralize the §4.3 tick-latency model so met ratios are
+    // machine-independent (same reasoning as tests/cct_equivalence.rs).
+    let sim_cfg = SimConfig { account_delta: Some(1e18), ..SimConfig::default() };
+    println!("iters: {iters} | tightness sweep: {TIGHTNESS:?}\n");
+
+    let mut rows: Vec<Row> = Vec::new();
+    for (ports, coflows, load) in [(150usize, 400usize, 2.0f64), (900, 400, 2.0)] {
+        println!("{ports} ports / {coflows} coflows (load ×{load}):");
+        let mut points = Vec::new();
+        for &tightness in &TIGHTNESS {
+            let trace = TraceSpec::fb_like(ports, coflows)
+                .with_load_factor(load)
+                .seed(5)
+                .with_deadlines(DeadlineModel { tightness, spread: 0.5, coverage: 1.0 })
+                .generate();
+            let mut cells = Vec::new();
+            for &kind in &KINDS {
+                let mut res: Option<SimResult> = None;
+                let _ = common::time_it(iters, || {
+                    let mut sched = kind.build(&trace, &cfg);
+                    res = Some(Simulation::run_with(&trace, sched.as_mut(), &cfg, &sim_cfg));
+                });
+                let res = res.expect("sim ran");
+                let dl = &res.deadline;
+                println!(
+                    "  t={tightness:<4} {:<16} met {:>6.1}% | goodput {:>6.1}% | avg CCT {:>8.3}s{}",
+                    kind.as_str(),
+                    100.0 * dl.met_ratio(),
+                    100.0 * dl.goodput_ratio(),
+                    res.avg_cct(),
+                    if kind == SchedulerKind::Dcoflow {
+                        format!(
+                            " | admitted {} rejected {} expired {}",
+                            dl.admitted, dl.rejected, dl.expired
+                        )
+                    } else {
+                        String::new()
+                    }
+                );
+                cells.push(Cell {
+                    kind,
+                    met_ratio: dl.met_ratio(),
+                    goodput_ratio: dl.goodput_ratio(),
+                    avg_cct: res.avg_cct(),
+                    admitted: dl.admitted,
+                    rejected: dl.rejected,
+                    expired: dl.expired,
+                });
+            }
+            // acceptance bar: deadline-aware beats deadline-blind SCF on
+            // met ratio wherever SLOs are tight
+            if tightness <= 2.0 {
+                let dc = met_of(&cells, SchedulerKind::Dcoflow);
+                let scf = met_of(&cells, SchedulerKind::Scf);
+                assert!(
+                    dc > scf,
+                    "{ports}p t={tightness}: dcoflow met ratio {dc:.4} \
+                     must strictly exceed deadline-blind scf {scf:.4}"
+                );
+            }
+            points.push(SweepPoint { tightness, cells });
+        }
+        rows.push(Row { ports, coflows, points });
+        println!();
+    }
+
+    // ---- machine-readable JSON ----
+    let mut json = String::from("{\n  \"bench\": \"deadline\",\n  \"configs\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"ports\": {}, \"coflows\": {}, \"sweep\": [\n",
+            r.ports, r.coflows
+        ));
+        for (j, p) in r.points.iter().enumerate() {
+            let dc = met_of(&p.cells, SchedulerKind::Dcoflow);
+            let scf = met_of(&p.cells, SchedulerKind::Scf);
+            json.push_str(&format!("      {{\"tightness\": {}, ", p.tightness));
+            for field in ["met_ratio", "goodput_ratio", "avg_cct"] {
+                json.push_str(&format!("\"{field}\": {{"));
+                for (k, c) in p.cells.iter().enumerate() {
+                    let v = match field {
+                        "met_ratio" => c.met_ratio,
+                        "goodput_ratio" => c.goodput_ratio,
+                        _ => c.avg_cct,
+                    };
+                    json.push_str(&format!(
+                        "\"{}\": {:.6}{}",
+                        c.kind.as_str(),
+                        v,
+                        if k + 1 < p.cells.len() { ", " } else { "" }
+                    ));
+                }
+                json.push_str("}, ");
+            }
+            let dcoflow = p
+                .cells
+                .iter()
+                .find(|c| c.kind == SchedulerKind::Dcoflow)
+                .expect("dcoflow cell");
+            json.push_str(&format!(
+                "\"dcoflow_admission\": {{\"admitted\": {}, \"rejected\": {}, \"expired\": {}}}, \
+                 \"dcoflow_met_minus_scf\": {:.6}}}{}\n",
+                dcoflow.admitted,
+                dcoflow.rejected,
+                dcoflow.expired,
+                dc - scf,
+                if j + 1 < r.points.len() { "," } else { "" }
+            ));
+        }
+        json.push_str(&format!("    ]}}{}\n", if i + 1 < rows.len() { "," } else { "" }));
+    }
+    json.push_str("  ]\n}\n");
+    common::write_json("BENCH_deadline.json", &json);
+}

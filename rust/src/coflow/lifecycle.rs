@@ -93,6 +93,10 @@ impl FlowState {
 pub struct CoflowState {
     pub id: CoflowId,
     pub arrival: Time,
+    /// Optional completion deadline (absolute seconds). Carried from the
+    /// trace's SLO column; deadline-aware schedulers (EDF keys, DCoflow
+    /// admission) read it, deadline-blind ones ignore it entirely.
+    pub deadline: Option<Time>,
     pub phase: CoflowPhase,
     /// Flow ids of this coflow.
     pub flows: Vec<FlowId>,
@@ -132,6 +136,7 @@ impl CoflowState {
         CoflowState {
             id,
             arrival,
+            deadline: None,
             phase: CoflowPhase::Running,
             active_list: flows.clone(),
             flows,
@@ -162,6 +167,13 @@ impl CoflowState {
     /// CCT if finished.
     pub fn cct(&self) -> Option<Time> {
         self.finished_at.map(|t| t - self.arrival)
+    }
+
+    /// SLO outcome: `None` for best-effort coflows, `Some(true)` iff the
+    /// coflow finished by its deadline (unfinished counts as missed).
+    pub fn met_deadline(&self) -> Option<bool> {
+        self.deadline
+            .map(|d| self.finished_at.is_some_and(|t| t <= d + EPS))
     }
 }
 
@@ -198,5 +210,17 @@ mod tests {
         assert_eq!(c.est_remaining(), Some(50.0));
         c.bytes_sent = 200.0; // estimate undershoot: clamp at 0
         assert_eq!(c.est_remaining(), Some(0.0));
+    }
+
+    #[test]
+    fn deadline_outcome() {
+        let mut c = CoflowState::new(0, 1.0, vec![0], 10.0, 0);
+        assert_eq!(c.met_deadline(), None); // best-effort
+        c.deadline = Some(3.0);
+        assert_eq!(c.met_deadline(), Some(false)); // unfinished = missed
+        c.finished_at = Some(2.5);
+        assert_eq!(c.met_deadline(), Some(true));
+        c.finished_at = Some(3.5);
+        assert_eq!(c.met_deadline(), Some(false));
     }
 }

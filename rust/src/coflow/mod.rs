@@ -37,6 +37,10 @@ pub struct CoflowSpec {
     pub external_id: u64,
     /// Arrival time (seconds).
     pub arrival: Time,
+    /// Optional completion deadline (absolute seconds, same clock as
+    /// `arrival`) — the SLO the deadline workload family schedules
+    /// against. `None` = best-effort coflow.
+    pub deadline: Option<Time>,
     /// Flow ids (dense range into the trace flow table).
     pub flows: Vec<FlowId>,
     /// Distinct sender ports.
@@ -134,6 +138,7 @@ mod tests {
             id: 0,
             external_id: 0,
             arrival: 0.0,
+            deadline: None,
             flows: vec![0, 1, 2],
             senders: vec![0, 1],
             receivers: vec![2, 3],

@@ -10,19 +10,33 @@
 //! boundaries, from the byte counts the coordinator has *seen* (updates can
 //! be lost with `update_loss_prob`, the Table 5 network-error knob).
 
-use super::{OrderEntry, Plan, Reaction, Scheduler, SchedulerConfig, World};
+use super::{EventBatch, OrderEntry, Plan, Reaction, Scheduler, SchedulerConfig, World};
 use crate::{Bytes, CoflowId, FlowId, Time};
 use crate::util::Rng;
 
-/// Binary-search insert into the sorted `(queue, qseq, cid)` order.
-fn insert_key(v: &mut Vec<(usize, u64, CoflowId)>, key: (usize, u64, CoflowId)) {
-    super::insert_sorted(v, key, |a, b| a.cmp(b));
+/// Sorted-order key: `(queue, deadline key, qseq, cid)`. The deadline key
+/// is `+∞` outside [`DeadlineMode::Secondary`]
+/// (`crate::coordinator::DeadlineMode`), so the default order is the
+/// classic D-CLAS `(queue, qseq)`.
+type AaloKey = (usize, f64, u64, CoflowId);
+
+#[inline]
+fn cmp_key(a: &AaloKey, b: &AaloKey) -> std::cmp::Ordering {
+    a.0.cmp(&b.0)
+        .then(a.1.total_cmp(&b.1))
+        .then(a.2.cmp(&b.2))
+        .then(a.3.cmp(&b.3))
+}
+
+/// Binary-search insert into the sorted order.
+fn insert_key(v: &mut Vec<AaloKey>, key: AaloKey) {
+    super::insert_sorted(v, key, cmp_key);
 }
 
 /// Remove `key` from the sorted order (defensive linear fallback on a
 /// stale key; no-op if the coflow is absent entirely).
-fn remove_key(v: &mut Vec<(usize, u64, CoflowId)>, key: (usize, u64, CoflowId)) {
-    super::remove_sorted(v, &key, |a, b| a.cmp(b), |e| e.2 == key.2);
+fn remove_key(v: &mut Vec<AaloKey>, key: AaloKey) {
+    super::remove_sorted(v, &key, cmp_key, |e| e.3 == key.3);
 }
 
 pub struct AaloScheduler {
@@ -42,10 +56,11 @@ pub struct AaloScheduler {
     rng: Rng,
     /// Exponentially decaying D-CLAS group weights (static per config).
     weights: Vec<f64>,
-    /// Incrementally maintained order, sorted by `(queue, qseq, cid)`;
-    /// repaired around the single coflow whose queue position changed
-    /// instead of re-sorting all active coflows per event.
-    sorted: Vec<(usize, u64, CoflowId)>,
+    /// Incrementally maintained order, sorted by
+    /// `(queue, deadline key, qseq, cid)`; repaired around the single
+    /// coflow whose queue position changed instead of re-sorting all
+    /// active coflows per event.
+    sorted: Vec<AaloKey>,
     /// Cached `(queue, qseq)` key per coflow (`usize::MAX` = absent).
     cached: Vec<(usize, u64)>,
     /// Scan stamps for dropping departed coflows at emit time.
@@ -120,6 +135,31 @@ impl Scheduler for AaloScheduler {
         Reaction::Reallocate
     }
 
+    /// Batch-aware delivery (the ROADMAP "batch-aware order repair" item):
+    /// handle the coalesced instant in one pass instead of one virtual
+    /// hook dispatch per event. Flow/coflow-completion reports carry no
+    /// Aalo state (queue positions only move at δ ticks), so the whole
+    /// report list folds into a single `Reallocate`; arrivals and the tick
+    /// run their usual hooks, and the sorted `(queue, deadline key, qseq)`
+    /// order is repaired **once per batch** by the engine's single
+    /// `order_into` call that follows. Pinned bit-identical to the
+    /// per-event path in `rust/tests/cct_equivalence.rs`.
+    fn on_batch(&mut self, batch: &EventBatch, world: &mut World) -> Reaction {
+        let mut reaction = Reaction::None;
+        for &cid in &batch.arrivals {
+            reaction = reaction.merge(self.on_arrival(cid, world));
+        }
+        if !batch.flow_reports.is_empty() {
+            // on_flow_complete and the default on_coflow_complete both
+            // react with Reallocate and mutate nothing
+            reaction = reaction.merge(Reaction::Reallocate);
+        }
+        if batch.tick {
+            reaction = reaction.merge(self.on_tick(world));
+        }
+        reaction
+    }
+
     /// δ tick: ingest byte updates (possibly lossy), demote coflows whose
     /// seen-bytes crossed their queue threshold. Aalo recomputes rates
     /// every interval regardless (the engine charges it for that).
@@ -162,10 +202,13 @@ impl Scheduler for AaloScheduler {
     /// backfilled in the same order (work conservation), so low queues can
     /// still run when high queues are idle.
     ///
-    /// Incremental: the `(queue, qseq, cid)` order persists across events;
-    /// each call repairs only the coflows whose queue position moved (a
-    /// demotion or a new arrival) and compacts out departed coflows while
-    /// emitting — no per-event sort or allocation in steady state.
+    /// Incremental: the `(queue, deadline key, qseq, cid)` order persists
+    /// across events; each call repairs only the coflows whose queue
+    /// position moved (a demotion or a new arrival) and compacts out
+    /// departed coflows while emitting — no per-event sort or allocation
+    /// in steady state. The deadline key is static per coflow (`+∞`
+    /// outside `DeadlineMode::Secondary`), so `(queue, qseq)` remains a
+    /// complete change detector.
     fn order_into(&mut self, world: &World, plan: &mut Plan) {
         self.scan = self.scan.wrapping_add(1);
         let scan = self.scan;
@@ -176,21 +219,25 @@ impl Scheduler for AaloScheduler {
             }
             self.ensure(cid);
             self.seen[cid] = scan;
+            // the deadline key is static per coflow, so the cached
+            // (queue, qseq) pair remains a complete change detector
+            let dk = self.cfg.deadline_mode.key(world.coflows[cid].deadline);
             let key = (world.coflows[cid].queue, self.queue_seq[cid]);
             if self.cached[cid] != key {
                 if self.cached[cid].0 != usize::MAX {
-                    remove_key(&mut self.sorted, (self.cached[cid].0, self.cached[cid].1, cid));
+                    let old = (self.cached[cid].0, dk, self.cached[cid].1, cid);
+                    remove_key(&mut self.sorted, old);
                 }
-                insert_key(&mut self.sorted, (key.0, key.1, cid));
+                insert_key(&mut self.sorted, (key.0, dk, key.1, cid));
                 self.cached[cid] = key;
             }
         }
         plan.clear();
         let mut w = 0;
         for r in 0..self.sorted.len() {
-            let (q, qs, cid) = self.sorted[r];
+            let (q, dk, qs, cid) = self.sorted[r];
             if self.seen[cid] == scan && self.cached[cid] == (q, qs) {
-                self.sorted[w] = (q, qs, cid);
+                self.sorted[w] = (q, dk, qs, cid);
                 w += 1;
                 plan.entries.push(OrderEntry::grouped(cid, q));
             } else if self.seen[cid] != scan {
@@ -218,19 +265,20 @@ impl Scheduler for AaloScheduler {
 
     /// From-scratch oracle rebuild (see trait docs).
     fn order_full_into(&mut self, world: &World, plan: &mut Plan) {
-        let mut coflows: Vec<(usize, u64, CoflowId)> = world
+        let mut coflows: Vec<AaloKey> = world
             .active
             .iter()
             .filter(|&&cid| !world.coflows[cid].done())
             .map(|&cid| {
                 let qseq = self.queue_seq.get(cid).copied().unwrap_or(0);
-                (world.coflows[cid].queue, qseq, cid)
+                let dk = self.cfg.deadline_mode.key(world.coflows[cid].deadline);
+                (world.coflows[cid].queue, dk, qseq, cid)
             })
             .collect();
-        coflows.sort_unstable();
+        coflows.sort_unstable_by(cmp_key);
         plan.clear();
         plan.entries
-            .extend(coflows.into_iter().map(|(q, _, cid)| OrderEntry::grouped(cid, q)));
+            .extend(coflows.into_iter().map(|(q, _, _, cid)| OrderEntry::grouped(cid, q)));
         // exponentially decaying weights across the K queues
         plan.group_weights.clear();
         plan.group_weights
@@ -334,6 +382,34 @@ mod tests {
         w.coflows[1].finished_at = Some(1.0);
         w.active.retain(|&c| c != 1);
         check(&mut a, &w);
+    }
+
+    #[test]
+    fn secondary_deadline_key_orders_within_queue() {
+        use crate::coordinator::DeadlineMode;
+        let mut w = world2();
+        w.coflows[0].deadline = Some(9.0);
+        w.coflows[1].deadline = Some(3.0);
+        // Ignore: FIFO within the queue, deadlines invisible
+        let mut a = AaloScheduler::new(SchedulerConfig::default());
+        a.on_arrival(0, &mut w);
+        a.on_arrival(1, &mut w);
+        let order = a.order(&w);
+        assert_eq!(order.entries[0].coflow, 0);
+        // Secondary: same queue, earlier deadline first despite later qseq
+        let mut cfg = SchedulerConfig::default();
+        cfg.deadline_mode = DeadlineMode::Secondary;
+        let mut b = AaloScheduler::new(cfg);
+        b.on_arrival(0, &mut w);
+        b.on_arrival(1, &mut w);
+        let order = b.order(&w);
+        assert_eq!(order.entries[0].coflow, 1);
+        // incremental matches the oracle under the secondary key
+        let mut full = Plan::default();
+        b.order_full_into(&w, &mut full);
+        let mut inc = Plan::default();
+        b.order_into(&w, &mut inc);
+        assert_eq!(inc.entries, full.entries);
     }
 
     #[test]

@@ -80,7 +80,10 @@
 //! and per-round allocation cost vs K at 900 and 5000 ports in
 //! `BENCH_cluster.json`.
 
-use super::{rate, EventBatch, Plan, Reaction, Scheduler, SchedulerConfig, SchedulerKind, World};
+use super::{
+    rate, AdmissionStats, EventBatch, Plan, Reaction, Scheduler, SchedulerConfig, SchedulerKind,
+    World,
+};
 use crate::fabric::Fabric;
 use crate::trace::Trace;
 use crate::{CoflowId, FlowId, Time};
@@ -308,6 +311,22 @@ impl CoordinatorCluster {
     /// Reconciliation rounds performed so far.
     pub fn reconciliations(&self) -> u64 {
         self.reconciliations
+    }
+
+    /// Aggregate admission-control counters across the K shards (`None`
+    /// when the policy performs no deadline admission). Counters are
+    /// per-decision, so a migrated coflow re-admitted by its new shard
+    /// counts on both.
+    pub fn admission_stats(&self) -> Option<AdmissionStats> {
+        let mut acc = AdmissionStats::default();
+        let mut any = false;
+        for sh in &self.shards {
+            if let Some(a) = sh.sched.admission_stats() {
+                acc.merge(&a);
+                any = true;
+            }
+        }
+        any.then_some(acc)
     }
 
     /// Current owner shard of `cid` (K ≥ 2 only; `None` when unassigned,

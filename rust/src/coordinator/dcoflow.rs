@@ -1,0 +1,591 @@
+//! Deadline-aware coflow scheduling: admission control + EDF.
+//!
+//! DCoflow-style scheduler (after *DCoflow: coflow scheduling with
+//! deadlines in the cloud*, arXiv 2205.01229; deadline-met evaluation
+//! methodology per Qiu/Stein/Zhong, arXiv 1603.07981). Where every other
+//! policy in this crate minimizes average CCT, this one maximizes the
+//! **deadline-met ratio** of SLO-carrying coflows:
+//!
+//! 1. **Admission control** — on arrival, a deadline coflow is feasibility
+//!    tested against the *remaining reservable capacity* of every port it
+//!    touches: finishing `bytes_p` through port `p` by deadline `D` needs a
+//!    sustained rate of `bytes_p / (D − now)`, and the test admits iff that
+//!    rate fits under the port capacity minus the rates already reserved by
+//!    admitted, unfinished coflows. On admit, the rates are **reserved**
+//!    (the coflow's feasibility certificate); later arrivals can only claim
+//!    what is left, so an admission can never invalidate an earlier one —
+//!    `rust/tests/deadline_admission.rs` property-tests that certificate.
+//! 2. **EDF among admitted** — admitted coflows are ordered
+//!    earliest-deadline-first, ties broken by **laxity** (admission-time
+//!    slack minus the coflow's ideal bottleneck CCT — the coflow with less
+//!    room to spare goes first), then FIFO. Rate allocation stays the
+//!    greedy work-conserving max-min of [`super::rate`], which front-loads
+//!    each admitted coflow at least as fast as its reserved constant-rate
+//!    schedule.
+//! 3. **Rejection / expiry → background** — a coflow that fails the test
+//!    is *rejected up front* and scheduled at background priority (behind
+//!    every admitted and best-effort coflow), so it can only soak up
+//!    leftover capacity and never delays an admitted coflow; an admitted
+//!    coflow that nevertheless misses its deadline is *expired*: its
+//!    reservation is released and it drops to the same background lane.
+//!    Best-effort coflows (no deadline) are admitted without a
+//!    reservation and run after all SLO coflows in FIFO order, so on a
+//!    deadline-free trace this scheduler degenerates to FIFO.
+//!
+//! Reservations are released when a coflow completes, expires, or is
+//! migrated away ([`Scheduler::on_coflow_detach`]); a migrated-in coflow is
+//! re-admitted from its *remaining* bytes and slack
+//! ([`Scheduler::on_coflow_attach`]), so cluster migration keeps the
+//! certificate meaningful on the new shard. Note that under
+//! multi-coordinator sharding each shard admission-tests against the full
+//! fabric capacity while allocating within its lease — conservative
+//! deployments should budget headroom (looser tightness); lease-aware
+//! admission is a ROADMAP follow-on.
+//!
+//! Like SEBF/SCF, this is a **clairvoyant** policy: the admission test
+//! reads true remaining flow sizes (DCoflow assumes known volumes). The
+//! sampling question — whether Philae-style learned sizes can drive the
+//! same admission test — is exactly what `benches/bench_deadline.rs`
+//! probes by sweeping deadline tightness across this scheduler and the
+//! deadline-blind family.
+//!
+//! Ordering is rebuilt per reallocation into reused scratch buffers (the
+//! SEBF/SCF regime: zero steady-state allocation, no incremental repair —
+//! the admitted set changes on every admission/expiry anyway);
+//! `order_full_into` is therefore identical to `order_into` by
+//! construction.
+
+use super::{AdmissionStats, OrderEntry, Plan, Reaction, Scheduler, World};
+use crate::{Bytes, CoflowId, FlowId, PortId, Time, EPS};
+
+/// Where a coflow stands with the admission controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionState {
+    /// Not yet seen by the admission test.
+    #[default]
+    Unknown,
+    /// Best-effort (no deadline): scheduled after all SLO coflows, FIFO.
+    BestEffort,
+    /// Deadline coflow that passed the feasibility test (reservation held
+    /// until completion, expiry, or migration).
+    Admitted,
+    /// Deadline coflow rejected up front (background lane).
+    Rejected,
+    /// Admitted coflow that missed its deadline (demoted to background).
+    Expired,
+}
+
+/// Relative tolerance of the per-port feasibility comparison (reservation
+/// sums accumulate float dust as coflows come and go).
+const RESERVE_SLACK: f64 = 1e-9;
+
+pub struct DcoflowScheduler {
+    /// Schedule rejected/expired coflows at background priority (the
+    /// default, work-conserving). `false` drops them from the plan
+    /// entirely — the property-test hook proving rejected coflows never
+    /// block admitted ones.
+    background: bool,
+    /// Per-coflow admission state.
+    state: Vec<AdmissionState>,
+    /// Admission-time laxity (slack − ideal CCT), the EDF tie-break.
+    laxity: Vec<f64>,
+    /// Reserved rate per uplink/downlink across admitted coflows.
+    reserved_up: Vec<f64>,
+    reserved_down: Vec<f64>,
+    /// Per-coflow committed reservations (released exactly once).
+    res_up: Vec<Vec<(PortId, f64)>>,
+    res_down: Vec<Vec<(PortId, f64)>>,
+    /// Admitted coflows with live reservations (completion/expiry watch).
+    tracked: Vec<CoflowId>,
+    admitted: u64,
+    rejected: u64,
+    expired: u64,
+    /// Reused per-admission port-aggregation tables: dense per-port byte
+    /// sums plus touched lists for O(flows) reset (the
+    /// `Trace::assign_deadlines` pattern — no per-flow linear scans on
+    /// wide coflows).
+    acc_up: Vec<Bytes>,
+    acc_down: Vec<Bytes>,
+    touched_up: Vec<PortId>,
+    touched_down: Vec<PortId>,
+    /// Reused order buffers: (deadline, laxity, seq, cid) EDF lane and
+    /// (seq, cid) background lane.
+    edf: Vec<(f64, f64, u64, CoflowId)>,
+    bg: Vec<(u64, CoflowId)>,
+}
+
+impl Default for DcoflowScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DcoflowScheduler {
+    pub fn new() -> Self {
+        DcoflowScheduler {
+            background: true,
+            state: Vec::new(),
+            laxity: Vec::new(),
+            reserved_up: Vec::new(),
+            reserved_down: Vec::new(),
+            res_up: Vec::new(),
+            res_down: Vec::new(),
+            tracked: Vec::new(),
+            admitted: 0,
+            rejected: 0,
+            expired: 0,
+            acc_up: Vec::new(),
+            acc_down: Vec::new(),
+            touched_up: Vec::new(),
+            touched_down: Vec::new(),
+            edf: Vec::new(),
+            bg: Vec::new(),
+        }
+    }
+
+    /// Disable the background lane: rejected/expired coflows are dropped
+    /// from the plan instead of backfilling leftovers (test hook — see the
+    /// module docs).
+    pub fn without_background(mut self) -> Self {
+        self.background = false;
+        self
+    }
+
+    /// Admission state of `cid`.
+    pub fn status_of(&self, cid: CoflowId) -> AdmissionState {
+        self.state.get(cid).copied().unwrap_or_default()
+    }
+
+    /// Rate currently reserved on uplink `p` by admitted coflows.
+    pub fn reserved_up(&self, p: PortId) -> f64 {
+        self.reserved_up.get(p).copied().unwrap_or(0.0)
+    }
+
+    /// Rate currently reserved on downlink `p` by admitted coflows.
+    pub fn reserved_down(&self, p: PortId) -> f64 {
+        self.reserved_down.get(p).copied().unwrap_or(0.0)
+    }
+
+    fn ensure(&mut self, cid: CoflowId) {
+        if cid >= self.state.len() {
+            self.state.resize(cid + 1, AdmissionState::Unknown);
+            self.laxity.resize(cid + 1, f64::INFINITY);
+            self.res_up.resize(cid + 1, Vec::new());
+            self.res_down.resize(cid + 1, Vec::new());
+        }
+    }
+
+    fn ensure_ports(&mut self, np: usize) {
+        if self.reserved_up.len() < np {
+            self.reserved_up.resize(np, 0.0);
+            self.reserved_down.resize(np, 0.0);
+            self.acc_up.resize(np, 0.0);
+            self.acc_down.resize(np, 0.0);
+        }
+    }
+
+    /// Release `cid`'s reservation (idempotent: the per-coflow lists are
+    /// cleared on first release, keeping their capacity).
+    fn release(&mut self, cid: CoflowId) {
+        for i in 0..self.res_up[cid].len() {
+            let (p, r) = self.res_up[cid][i];
+            self.reserved_up[p] = (self.reserved_up[p] - r).max(0.0);
+        }
+        self.res_up[cid].clear();
+        for i in 0..self.res_down[cid].len() {
+            let (p, r) = self.res_down[cid][i];
+            self.reserved_down[p] = (self.reserved_down[p] - r).max(0.0);
+        }
+        self.res_down[cid].clear();
+    }
+
+    /// Sweep tracked reservations: release completed coflows (counting a
+    /// late finish as expired) and demote admitted coflows whose deadline
+    /// passed without completion.
+    fn purge(&mut self, world: &World) {
+        let mut i = 0;
+        while i < self.tracked.len() {
+            let cid = self.tracked[i];
+            let c = &world.coflows[cid];
+            if c.done() {
+                self.release(cid);
+                if c.met_deadline() == Some(false) {
+                    self.state[cid] = AdmissionState::Expired;
+                    self.expired += 1;
+                }
+                self.tracked.swap_remove(i);
+            } else if c.deadline.is_some_and(|d| world.now > d + EPS) {
+                self.release(cid);
+                self.state[cid] = AdmissionState::Expired;
+                self.expired += 1;
+                self.tracked.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Run the admission test for a coflow not yet classified. Reads the
+    /// coflow's *remaining* bytes (so re-admission after a migration uses
+    /// what is actually left) and commits the reservation on success.
+    fn consider(&mut self, cid: CoflowId, world: &World) {
+        self.ensure(cid);
+        self.ensure_ports(world.fabric.num_ports);
+        if self.state[cid] != AdmissionState::Unknown {
+            return;
+        }
+        let c = &world.coflows[cid];
+        let Some(d) = c.deadline else {
+            self.state[cid] = AdmissionState::BestEffort;
+            return;
+        };
+        let slack = d - world.now;
+        // dense per-port byte sums, reset in O(touched) afterwards
+        for &f in &c.active_list {
+            let fl = &world.flows[f];
+            let rem = fl.remaining();
+            if rem <= 0.0 {
+                continue;
+            }
+            if self.acc_up[fl.src] == 0.0 {
+                self.touched_up.push(fl.src);
+            }
+            self.acc_up[fl.src] += rem;
+            if self.acc_down[fl.dst] == 0.0 {
+                self.touched_down.push(fl.dst);
+            }
+            self.acc_down[fl.dst] += rem;
+        }
+        let mut ideal: Time = 0.0;
+        for &p in &self.touched_up {
+            ideal = ideal.max(self.acc_up[p] / world.fabric.up_capacity[p].max(1.0));
+        }
+        for &p in &self.touched_down {
+            ideal = ideal.max(self.acc_down[p] / world.fabric.down_capacity[p].max(1.0));
+        }
+        let feasible = slack > EPS
+            && self.touched_up.iter().all(|&p| {
+                self.reserved_up[p] + self.acc_up[p] / slack
+                    <= world.fabric.up_capacity[p] * (1.0 + RESERVE_SLACK)
+            })
+            && self.touched_down.iter().all(|&p| {
+                self.reserved_down[p] + self.acc_down[p] / slack
+                    <= world.fabric.down_capacity[p] * (1.0 + RESERVE_SLACK)
+            });
+        if feasible {
+            for i in 0..self.touched_up.len() {
+                let p = self.touched_up[i];
+                let r = self.acc_up[p] / slack;
+                self.reserved_up[p] += r;
+                self.res_up[cid].push((p, r));
+            }
+            for i in 0..self.touched_down.len() {
+                let p = self.touched_down[i];
+                let r = self.acc_down[p] / slack;
+                self.reserved_down[p] += r;
+                self.res_down[cid].push((p, r));
+            }
+            self.laxity[cid] = slack - ideal;
+            self.state[cid] = AdmissionState::Admitted;
+            self.tracked.push(cid);
+            self.admitted += 1;
+        } else {
+            self.state[cid] = AdmissionState::Rejected;
+            self.rejected += 1;
+        }
+        // reset the dense tables for the next admission
+        for i in 0..self.touched_up.len() {
+            let p = self.touched_up[i];
+            self.acc_up[p] = 0.0;
+        }
+        self.touched_up.clear();
+        for i in 0..self.touched_down.len() {
+            let p = self.touched_down[i];
+            self.acc_down[p] = 0.0;
+        }
+        self.touched_down.clear();
+    }
+}
+
+impl Scheduler for DcoflowScheduler {
+    fn name(&self) -> String {
+        "dcoflow".into()
+    }
+
+    fn admission_stats(&self) -> Option<AdmissionStats> {
+        Some(AdmissionStats {
+            admitted: self.admitted,
+            rejected: self.rejected,
+            expired: self.expired,
+        })
+    }
+
+    fn on_arrival(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
+        self.purge(world);
+        self.consider(cid, world);
+        Reaction::Reallocate
+    }
+
+    fn on_flow_complete(&mut self, _fid: FlowId, _world: &mut World) -> Reaction {
+        // completion frees port capacity for lower-priority lanes; the
+        // reservation sweep runs in `order_into` right before reallocation
+        Reaction::Reallocate
+    }
+
+    fn on_coflow_complete(&mut self, _cid: CoflowId, world: &mut World) -> Reaction {
+        self.purge(world);
+        Reaction::Reallocate
+    }
+
+    /// Cluster migration away: hand the reservation back and forget the
+    /// verdict so the adopting shard re-runs admission from the coflow's
+    /// remaining bytes.
+    fn on_coflow_detach(&mut self, cid: CoflowId, _world: &mut World) -> Reaction {
+        self.ensure(cid);
+        self.release(cid);
+        if let Some(i) = self.tracked.iter().position(|&x| x == cid) {
+            self.tracked.swap_remove(i);
+        }
+        self.state[cid] = AdmissionState::Unknown;
+        Reaction::Reallocate
+    }
+
+    /// Cluster migration in: re-admit from remaining bytes and remaining
+    /// slack against this shard's reservation book.
+    fn on_coflow_attach(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
+        self.ensure(cid);
+        self.state[cid] = AdmissionState::Unknown;
+        self.purge(world);
+        self.consider(cid, world);
+        Reaction::Reallocate
+    }
+
+    /// EDF plan over the admitted set, best-effort FIFO behind it, then
+    /// the background lane (rejected + expired, FIFO). Rebuilt per call
+    /// into reused buffers — zero steady-state allocation; identical to
+    /// `order_full_into` by construction.
+    fn order_into(&mut self, world: &World, plan: &mut Plan) {
+        self.purge(world);
+        self.edf.clear();
+        self.bg.clear();
+        for idx in 0..world.active.len() {
+            let cid = world.active[idx];
+            let c = &world.coflows[cid];
+            if c.done() {
+                continue;
+            }
+            self.consider(cid, world); // no-op for already-classified coflows
+            match self.state[cid] {
+                AdmissionState::Admitted => {
+                    let d = c.deadline.unwrap_or(f64::INFINITY);
+                    self.edf.push((d, self.laxity[cid], c.seq, cid));
+                }
+                AdmissionState::BestEffort => {
+                    self.edf.push((f64::INFINITY, f64::INFINITY, c.seq, cid));
+                }
+                AdmissionState::Rejected | AdmissionState::Expired => {
+                    self.bg.push((c.seq, cid));
+                }
+                AdmissionState::Unknown => unreachable!("consider() classifies every coflow"),
+            }
+        }
+        self.edf.sort_unstable_by(|a, b| {
+            a.0.total_cmp(&b.0)
+                .then(a.1.total_cmp(&b.1))
+                .then(a.2.cmp(&b.2))
+                .then(a.3.cmp(&b.3))
+        });
+        self.bg.sort_unstable();
+        plan.clear();
+        plan.entries
+            .extend(self.edf.iter().map(|&(_, _, _, cid)| OrderEntry::all(cid)));
+        if self.background {
+            plan.entries
+                .extend(self.bg.iter().map(|&(_, cid)| OrderEntry::all(cid)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coflow::{CoflowState, FlowState};
+    use crate::fabric::{Fabric, PortLoad};
+
+    /// World with one flow per coflow: (src, dst, size, deadline).
+    fn world_with(defs: &[(usize, usize, f64, Option<f64>)]) -> World {
+        let mut flows = Vec::new();
+        let mut coflows = Vec::new();
+        for (cid, &(src, dst, size, deadline)) in defs.iter().enumerate() {
+            flows.push(FlowState::new(cid, cid, src, dst, size));
+            let mut c = CoflowState::new(cid, 0.0, vec![cid], size, cid as u64);
+            c.deadline = deadline;
+            c.senders = vec![src];
+            c.receivers = vec![dst];
+            coflows.push(c);
+        }
+        World {
+            now: 0.0,
+            flows,
+            coflows,
+            fabric: Fabric::homogeneous(4, 100.0),
+            load: PortLoad::new(4),
+            active: (0..defs.len()).collect(),
+        }
+    }
+
+    fn arrive_all(s: &mut DcoflowScheduler, w: &mut World) {
+        for cid in 0..w.coflows.len() {
+            s.on_arrival(cid, w);
+        }
+    }
+
+    #[test]
+    fn admits_while_reservations_fit_then_rejects() {
+        // port capacity 100; A needs 80/1s = 80, B needs 50/2s = 25:
+        // 80 + 25 > 100 on the shared uplink → B rejected
+        let mut w = world_with(&[
+            (0, 1, 80.0, Some(1.0)),
+            (0, 2, 50.0, Some(2.0)),
+            (2, 3, 50.0, Some(2.0)), // disjoint ports: admitted
+        ]);
+        let mut s = DcoflowScheduler::new();
+        arrive_all(&mut s, &mut w);
+        assert_eq!(s.status_of(0), AdmissionState::Admitted);
+        assert_eq!(s.status_of(1), AdmissionState::Rejected);
+        assert_eq!(s.status_of(2), AdmissionState::Admitted);
+        assert!((s.reserved_up(0) - 80.0).abs() < 1e-9);
+        let stats = s.admission_stats().unwrap();
+        assert_eq!((stats.admitted, stats.rejected, stats.expired), (2, 1, 0));
+    }
+
+    #[test]
+    fn edf_orders_admitted_before_best_effort_before_background() {
+        let mut w = world_with(&[
+            (0, 1, 10.0, None),            // best-effort, seq 0
+            (1, 2, 10.0, Some(5.0)),       // admitted, later deadline
+            (2, 3, 10.0, Some(2.0)),       // admitted, earliest deadline
+            (0, 2, 1000.0, Some(0.00001)), // infeasible → rejected
+        ]);
+        let mut s = DcoflowScheduler::new();
+        arrive_all(&mut s, &mut w);
+        let plan = s.order(&w);
+        let order: Vec<_> = plan.entries.iter().map(|e| e.coflow).collect();
+        assert_eq!(order, vec![2, 1, 0, 3]);
+    }
+
+    #[test]
+    fn laxity_breaks_deadline_ties() {
+        // same deadline; coflow 1 has more bytes → smaller laxity → first
+        let mut w = world_with(&[(0, 1, 10.0, Some(4.0)), (2, 3, 200.0, Some(4.0))]);
+        let mut s = DcoflowScheduler::new();
+        arrive_all(&mut s, &mut w);
+        let plan = s.order(&w);
+        assert_eq!(plan.entries[0].coflow, 1);
+        assert_eq!(plan.entries[1].coflow, 0);
+    }
+
+    #[test]
+    fn expiry_demotes_once_and_releases_the_reservation() {
+        let mut w = world_with(&[(0, 1, 80.0, Some(1.0))]);
+        let mut s = DcoflowScheduler::new();
+        arrive_all(&mut s, &mut w);
+        assert!((s.reserved_up(0) - 80.0).abs() < 1e-9);
+        w.now = 2.0; // deadline passed, coflow unfinished
+        let plan = s.order(&w);
+        assert_eq!(s.status_of(0), AdmissionState::Expired);
+        assert_eq!(s.admission_stats().unwrap().expired, 1);
+        assert_eq!(s.reserved_up(0), 0.0, "expiry must free the reservation");
+        // still scheduled, at background priority
+        assert_eq!(plan.entries.len(), 1);
+        // a second sweep must not double-count
+        let _ = s.order(&w);
+        assert_eq!(s.admission_stats().unwrap().expired, 1);
+    }
+
+    #[test]
+    fn completion_releases_and_late_finish_counts_expired() {
+        let mut w = world_with(&[(0, 1, 80.0, Some(1.0)), (2, 3, 80.0, Some(1.0))]);
+        let mut s = DcoflowScheduler::new();
+        arrive_all(&mut s, &mut w);
+        // coflow 0 finishes in time; coflow 1 finishes late
+        w.now = 0.9;
+        for (cid, t) in [(0usize, 0.9), (1usize, 1.5)] {
+            w.flows[cid].sent = w.flows[cid].size;
+            w.flows[cid].finished_at = Some(t);
+            w.coflows[cid].active_list.clear();
+            w.coflows[cid].active_flows = 0;
+            w.coflows[cid].finished_at = Some(t);
+        }
+        w.active.clear();
+        s.on_coflow_complete(0, &mut w);
+        s.on_coflow_complete(1, &mut w);
+        assert_eq!(s.status_of(0), AdmissionState::Admitted); // met
+        assert_eq!(s.status_of(1), AdmissionState::Expired); // late
+        assert_eq!(s.reserved_up(0), 0.0);
+        assert_eq!(s.reserved_up(2), 0.0);
+        assert_eq!(s.admission_stats().unwrap().expired, 1);
+    }
+
+    #[test]
+    fn released_capacity_readmits_later_arrivals() {
+        let mut w = world_with(&[
+            (0, 1, 80.0, Some(1.0)),
+            (0, 2, 80.0, Some(2.0)), // would need 40 on uplink 0: 80+40 > 100
+        ]);
+        let mut s = DcoflowScheduler::new();
+        s.on_arrival(0, &mut w);
+        // coflow 0 completes before coflow 1 arrives
+        w.flows[0].sent = 80.0;
+        w.flows[0].finished_at = Some(0.5);
+        w.coflows[0].active_list.clear();
+        w.coflows[0].active_flows = 0;
+        w.coflows[0].finished_at = Some(0.5);
+        w.active.retain(|&c| c != 0);
+        w.now = 0.5;
+        s.on_arrival(1, &mut w);
+        assert_eq!(s.status_of(1), AdmissionState::Admitted);
+    }
+
+    #[test]
+    fn detach_then_attach_readmits_from_remaining_bytes() {
+        let mut w = world_with(&[(0, 1, 80.0, Some(1.0))]);
+        let mut s = DcoflowScheduler::new();
+        arrive_all(&mut s, &mut w);
+        s.on_coflow_detach(0, &mut w);
+        assert_eq!(s.status_of(0), AdmissionState::Unknown);
+        assert_eq!(s.reserved_up(0), 0.0);
+        // half the bytes moved; re-admission reserves remaining/slack
+        w.flows[0].sent = 40.0;
+        w.now = 0.5;
+        let mut t = DcoflowScheduler::new();
+        t.on_coflow_attach(0, &mut w);
+        assert_eq!(t.status_of(0), AdmissionState::Admitted);
+        assert!((t.reserved_up(0) - 40.0 / 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn without_background_drops_rejected_from_the_plan() {
+        let mut w = world_with(&[
+            (0, 1, 80.0, Some(1.0)),
+            (0, 2, 1000.0, Some(1.0)), // rejected
+        ]);
+        let mut s = DcoflowScheduler::new().without_background();
+        arrive_all(&mut s, &mut w);
+        let plan = s.order(&w);
+        assert_eq!(plan.entries.len(), 1);
+        assert_eq!(plan.entries[0].coflow, 0);
+    }
+
+    #[test]
+    fn deadline_free_trace_degenerates_to_fifo() {
+        let mut w = world_with(&[(0, 1, 10.0, None), (2, 3, 500.0, None), (1, 2, 1.0, None)]);
+        let mut s = DcoflowScheduler::new();
+        arrive_all(&mut s, &mut w);
+        let plan = s.order(&w);
+        let order: Vec<_> = plan.entries.iter().map(|e| e.coflow).collect();
+        assert_eq!(order, vec![0, 1, 2], "no SLOs → arrival order");
+        let stats = s.admission_stats().unwrap();
+        assert_eq!((stats.admitted, stats.rejected, stats.expired), (0, 0, 0));
+    }
+}

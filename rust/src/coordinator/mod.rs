@@ -21,9 +21,15 @@
 //!   flow, contention-aware intra-queue order, all-or-none grouping.
 //! * [`errcorr`] — the §2.2 error-correction variants of Philae
 //!   (bootstrap lower-confidence-bound, one-round, multi-round).
+//! * [`DcoflowScheduler`] — deadline-aware (DCoflow-style, arXiv
+//!   2205.01229): reservation-based admission control plus
+//!   earliest-deadline-first ordering; rejected/expired coflows drop to
+//!   background priority. [`DeadlineMode`] additionally lets the
+//!   deadline-blind policies use SLO deadlines as a secondary order key.
 
 pub mod aalo;
 pub mod cluster;
+pub mod dcoflow;
 pub mod errcorr;
 pub mod fifo;
 pub mod philae;
@@ -34,6 +40,7 @@ pub mod sebf;
 
 pub use aalo::AaloScheduler;
 pub use cluster::{ClusterConfig, CoordinatorCluster};
+pub use dcoflow::{AdmissionState, DcoflowScheduler};
 pub use errcorr::{ErrCorrMode, PhilaeErrCorrScheduler};
 pub use fifo::FifoScheduler;
 pub use philae::PhilaeScheduler;
@@ -165,9 +172,71 @@ impl EventBatch {
     }
 }
 
+/// How a deadline-blind policy treats per-coflow SLO deadlines.
+///
+/// [`DeadlineMode::Secondary`] threads the deadline in as a **secondary
+/// order key**: wherever the policy's own key ties (same Philae score, same
+/// Aalo queue, same SEBF/SCF remaining bytes), the earlier deadline wins
+/// before the FIFO sequence does. Coflows without a deadline key as `+∞`,
+/// so on a deadline-free trace `Secondary` is **bit-identical** to
+/// [`DeadlineMode::Ignore`] (pinned in `rust/tests/cct_equivalence.rs`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum DeadlineMode {
+    /// Ignore deadlines entirely (the pre-SLO behavior; the default).
+    #[default]
+    Ignore,
+    /// Use the deadline as a secondary sort key before the FIFO tie-break.
+    Secondary,
+}
+
+impl DeadlineMode {
+    /// The order key this mode derives from a coflow's deadline: the
+    /// absolute deadline under [`DeadlineMode::Secondary`], `+∞` otherwise
+    /// (and for best-effort coflows), so `Ignore` orders are untouched.
+    #[inline]
+    pub fn key(self, deadline: Option<Time>) -> f64 {
+        match self {
+            DeadlineMode::Secondary => deadline.unwrap_or(f64::INFINITY),
+            DeadlineMode::Ignore => f64::INFINITY,
+        }
+    }
+}
+
+/// Admission-control counters of a deadline-aware scheduler
+/// ([`DcoflowScheduler`]); surfaced through
+/// [`Scheduler::admission_stats`] into sim results and the live-service
+/// report. Counters count **admission decisions** — under cluster
+/// migration a coflow re-admitted by its new shard counts again.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdmissionStats {
+    /// Deadline coflows that passed the feasibility test.
+    pub admitted: u64,
+    /// Deadline coflows rejected up front (scheduled at background
+    /// priority instead).
+    pub rejected: u64,
+    /// Admitted coflows that nevertheless missed their deadline and were
+    /// demoted to background priority.
+    pub expired: u64,
+}
+
+impl AdmissionStats {
+    /// Accumulate another shard's counters (cluster aggregation).
+    pub fn merge(&mut self, other: &AdmissionStats) {
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
+        self.expired += other.expired;
+    }
+}
+
 /// The scheduler interface shared by the simulator and the live service.
 pub trait Scheduler: Send {
     fn name(&self) -> String;
+
+    /// Admission-control counters, for schedulers that perform deadline
+    /// admission ([`DcoflowScheduler`]); `None` for everyone else.
+    fn admission_stats(&self) -> Option<AdmissionStats> {
+        None
+    }
 
     /// `Some(δ)` if the policy needs a periodic tick (Aalo's scheduling
     /// interval); Philae is event-triggered and returns `None`.
@@ -289,6 +358,9 @@ pub enum SchedulerKind {
     PhilaeEc1,
     /// Philae + LCB + error correction until completion (§2.2 variant 3).
     PhilaeEcMulti,
+    /// Deadline-aware DCoflow-style: reservation admission control +
+    /// earliest-deadline-first with laxity tie-breaks.
+    Dcoflow,
 }
 
 impl SchedulerKind {
@@ -298,9 +370,14 @@ impl SchedulerKind {
         match self {
             SchedulerKind::Philae => Box::new(PhilaeScheduler::new(cfg.clone())),
             SchedulerKind::Aalo => Box::new(AaloScheduler::new(cfg.clone())),
-            SchedulerKind::Sebf => Box::new(SebfScheduler::new(trace)),
-            SchedulerKind::Scf => Box::new(ScfScheduler::new(trace)),
+            SchedulerKind::Sebf => {
+                Box::new(SebfScheduler::new(trace).with_deadline_mode(cfg.deadline_mode))
+            }
+            SchedulerKind::Scf => {
+                Box::new(ScfScheduler::new(trace).with_deadline_mode(cfg.deadline_mode))
+            }
             SchedulerKind::Fifo => Box::new(FifoScheduler::new()),
+            SchedulerKind::Dcoflow => Box::new(DcoflowScheduler::new()),
             SchedulerKind::Saath => Box::new(SaathScheduler::new(cfg.clone())),
             SchedulerKind::PhilaeLcb => {
                 Box::new(PhilaeErrCorrScheduler::new(cfg.clone(), ErrCorrMode::LcbOnly))
@@ -326,6 +403,7 @@ impl SchedulerKind {
             SchedulerKind::PhilaeLcb => "philae-lcb",
             SchedulerKind::PhilaeEc1 => "philae-ec1",
             SchedulerKind::PhilaeEcMulti => "philae-ec-multi",
+            SchedulerKind::Dcoflow => "dcoflow",
         }
     }
 
@@ -340,6 +418,7 @@ impl SchedulerKind {
             SchedulerKind::PhilaeLcb,
             SchedulerKind::PhilaeEc1,
             SchedulerKind::PhilaeEcMulti,
+            SchedulerKind::Dcoflow,
         ]
     }
 }
@@ -404,6 +483,11 @@ pub struct SchedulerConfig {
     pub report_jitter: Time,
     /// Seed for the dynamics above (varied across the 5 runs of Table 5).
     pub dynamics_seed: u64,
+    // ---- deadline (SLO) workloads ----
+    /// How deadline-blind policies (Philae, Aalo, SEBF, SCF) treat
+    /// per-coflow deadlines; see [`DeadlineMode`]. The default (`Ignore`)
+    /// keeps their pre-SLO behavior bit for bit.
+    pub deadline_mode: DeadlineMode,
 }
 
 impl Default for SchedulerConfig {
@@ -424,6 +508,7 @@ impl Default for SchedulerConfig {
             update_loss_prob: 0.0,
             report_jitter: 0.0,
             dynamics_seed: 0,
+            deadline_mode: DeadlineMode::default(),
         }
     }
 }
@@ -472,6 +557,21 @@ mod tests {
         assert_eq!(Reaction::None.merge(Reaction::None), Reaction::None);
         assert_eq!(Reaction::None.merge(Reaction::Reallocate), Reaction::Reallocate);
         assert_eq!(Reaction::Reallocate.merge(Reaction::None), Reaction::Reallocate);
+    }
+
+    #[test]
+    fn deadline_mode_keys() {
+        assert_eq!(DeadlineMode::Ignore.key(Some(3.0)), f64::INFINITY);
+        assert_eq!(DeadlineMode::Ignore.key(None), f64::INFINITY);
+        assert_eq!(DeadlineMode::Secondary.key(Some(3.0)), 3.0);
+        assert_eq!(DeadlineMode::Secondary.key(None), f64::INFINITY);
+    }
+
+    #[test]
+    fn admission_stats_merge() {
+        let mut a = AdmissionStats { admitted: 1, rejected: 2, expired: 3 };
+        a.merge(&AdmissionStats { admitted: 10, rejected: 20, expired: 30 });
+        assert_eq!(a, AdmissionStats { admitted: 11, rejected: 22, expired: 33 });
     }
 
     #[test]

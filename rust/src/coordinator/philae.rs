@@ -22,7 +22,10 @@
 //!
 //! The lanes are **persistent sorted structures**, not per-event rebuilds:
 //! express and pilot are seq-ordered FIFO vectors, the scheduled lane is a
-//! vector sorted by `(score, seq)`. Each [`PhilaeCore::order_into`] call
+//! vector sorted by `(score, deadline key, seq)` — the deadline key is the
+//! coflow's SLO deadline under
+//! [`DeadlineMode::Secondary`](crate::coordinator::DeadlineMode) and `+∞`
+//! otherwise, so the default order is the classic `(score, seq)`. Each [`PhilaeCore::order_into`] call
 //! lazily validates the cache against the world — a coflow whose estimate,
 //! completed-flow count, or lane changed is repaired by a binary-search
 //! remove/insert of just that coflow; a port-occupancy change (tracked by
@@ -32,7 +35,7 @@
 //! sort-free. [`PhilaeCore::order_full_into`] keeps the from-scratch
 //! rebuild as the equivalence oracle: both paths emit bit-identical plans.
 
-use super::{OrderEntry, Plan, Reaction, Scheduler, SchedulerConfig, World};
+use super::{EventBatch, OrderEntry, Plan, Reaction, Scheduler, SchedulerConfig, World};
 use crate::coflow::{CoflowPhase, CoflowState};
 use crate::{Bytes, CoflowId, FlowId};
 
@@ -65,8 +68,11 @@ struct OrderCache {
     express: Vec<(u64, CoflowId)>,
     /// Pilot lane entries, sorted by `(seq, cid)`.
     piloting: Vec<(u64, CoflowId)>,
-    /// Scheduled lane entries, sorted by `(score, seq)`.
-    scheduled: Vec<(f64, u64, CoflowId)>,
+    /// Scheduled lane entries, sorted by `(score, deadline key, seq)` —
+    /// the deadline key is `+∞` unless `DeadlineMode::Secondary` is on
+    /// (see [`crate::coordinator::DeadlineMode`]), so the default order is
+    /// exactly the pre-SLO `(score, seq)`.
+    scheduled: Vec<(f64, f64, u64, CoflowId)>,
     /// Current lane per coflow.
     lane: Vec<Lane>,
     /// Cached scheduled-lane score per coflow (the removal key).
@@ -118,11 +124,15 @@ fn est_bits(c: &CoflowState) -> u64 {
     c.est_size.unwrap_or(f64::INFINITY).to_bits()
 }
 
-/// Scheduled-lane comparator: ascending `(score, seq)` — seq is unique per
-/// coflow, so the order is total and insert/remove positions are unique.
+/// Scheduled-lane comparator: ascending `(score, deadline key, seq)` —
+/// seq is unique per coflow, so the order is total and insert/remove
+/// positions are unique. The deadline key is `+∞` outside
+/// `DeadlineMode::Secondary`, collapsing to the classic `(score, seq)`.
 #[inline]
-fn cmp_scored(a: &(f64, u64, CoflowId), b: &(f64, u64, CoflowId)) -> std::cmp::Ordering {
-    a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
+fn cmp_scored(a: &(f64, f64, u64, CoflowId), b: &(f64, f64, u64, CoflowId)) -> std::cmp::Ordering {
+    a.0.total_cmp(&b.0)
+        .then(a.1.total_cmp(&b.1))
+        .then(a.2.cmp(&b.2))
 }
 
 /// Binary-search insert into a `(seq, cid)` FIFO lane.
@@ -136,13 +146,25 @@ fn remove_seq(v: &mut Vec<(u64, CoflowId)>, seq: u64, cid: CoflowId) {
 }
 
 /// Binary-search insert into the scheduled lane.
-fn insert_scored(v: &mut Vec<(f64, u64, CoflowId)>, score: f64, seq: u64, cid: CoflowId) {
-    super::insert_sorted(v, (score, seq, cid), cmp_scored);
+fn insert_scored(
+    v: &mut Vec<(f64, f64, u64, CoflowId)>,
+    score: f64,
+    dkey: f64,
+    seq: u64,
+    cid: CoflowId,
+) {
+    super::insert_sorted(v, (score, dkey, seq, cid), cmp_scored);
 }
 
 /// Remove from the scheduled lane by its cached key (no-op if absent).
-fn remove_scored(v: &mut Vec<(f64, u64, CoflowId)>, score: f64, seq: u64, cid: CoflowId) {
-    super::remove_sorted(v, &(score, seq, cid), cmp_scored, |e| e.2 == cid);
+fn remove_scored(
+    v: &mut Vec<(f64, f64, u64, CoflowId)>,
+    score: f64,
+    dkey: f64,
+    seq: u64,
+    cid: CoflowId,
+) {
+    super::remove_sorted(v, &(score, dkey, seq, cid), cmp_scored, |e| e.3 == cid);
 }
 
 /// Sampling/learning state shared by default Philae and the §2.2
@@ -463,6 +485,8 @@ impl PhilaeCore {
                     continue; // unstamped → dropped at emit
                 }
                 let seq = c.seq;
+                // static per coflow, so the cached removal key is exact
+                let dk = self.cfg.deadline_mode.key(c.deadline);
                 let desired = self.desired_lane(world, c);
                 self.cache.seen[cid] = scan;
                 let current = self.cache.lane[cid];
@@ -474,6 +498,7 @@ impl PhilaeCore {
                         Lane::Scheduled => remove_scored(
                             &mut self.cache.scheduled,
                             self.cache.score[cid],
+                            dk,
                             seq,
                             cid,
                         ),
@@ -488,7 +513,7 @@ impl PhilaeCore {
                             self.cache.est_bits[cid] = est_bits(c);
                             self.cache.done_count[cid] =
                                 self.flows_done.get(cid).copied().unwrap_or(0);
-                            insert_scored(&mut self.cache.scheduled, s, seq, cid);
+                            insert_scored(&mut self.cache.scheduled, s, dk, seq, cid);
                         }
                     }
                     self.cache.lane[cid] = desired;
@@ -499,6 +524,7 @@ impl PhilaeCore {
                         remove_scored(
                             &mut self.cache.scheduled,
                             self.cache.score[cid],
+                            dk,
                             seq,
                             cid,
                         );
@@ -506,7 +532,7 @@ impl PhilaeCore {
                         self.cache.score[cid] = s;
                         self.cache.est_bits[cid] = eb;
                         self.cache.done_count[cid] = dc;
-                        insert_scored(&mut self.cache.scheduled, s, seq, cid);
+                        insert_scored(&mut self.cache.scheduled, s, dk, seq, cid);
                     }
                 }
             }
@@ -556,7 +582,8 @@ impl PhilaeCore {
                     self.cache.score[cid] = s;
                     self.cache.est_bits[cid] = est_bits(c);
                     self.cache.done_count[cid] = self.flows_done.get(cid).copied().unwrap_or(0);
-                    self.cache.scheduled.push((s, c.seq, cid));
+                    let dk = self.cfg.deadline_mode.key(c.deadline);
+                    self.cache.scheduled.push((s, dk, c.seq, cid));
                 }
             }
         }
@@ -603,9 +630,9 @@ impl PhilaeCore {
         cache.piloting.truncate(w);
         w = 0;
         for r in 0..cache.scheduled.len() {
-            let (score, seq, cid) = cache.scheduled[r];
+            let (score, dkey, seq, cid) = cache.scheduled[r];
             if cache.seen[cid] == scan && cache.lane[cid] == Lane::Scheduled {
-                cache.scheduled[w] = (score, seq, cid);
+                cache.scheduled[w] = (score, dkey, seq, cid);
                 w += 1;
                 plan.entries.push(OrderEntry::all(cid));
             } else if cache.seen[cid] != scan {
@@ -636,7 +663,7 @@ impl PhilaeCore {
     ) {
         let mut express: Vec<CoflowId> = Vec::new();
         let mut piloting: Vec<CoflowId> = Vec::new();
-        let mut scheduled: Vec<(f64, u64, CoflowId)> = Vec::new();
+        let mut scheduled: Vec<(f64, f64, u64, CoflowId)> = Vec::new();
         for &cid in &world.active {
             let c = &world.coflows[cid];
             if c.done() {
@@ -650,7 +677,8 @@ impl PhilaeCore {
                 let s = scores
                     .and_then(|m| m.get(&cid).copied())
                     .unwrap_or_else(|| self.score(world, cid));
-                scheduled.push((s, c.seq, cid));
+                let dk = self.cfg.deadline_mode.key(c.deadline);
+                scheduled.push((s, dk, c.seq, cid));
             }
         }
         // (seq, cid) is the same total key the incremental lanes maintain,
@@ -669,7 +697,7 @@ impl PhilaeCore {
         for &cid in &piloting {
             plan.entries.push(OrderEntry::pilots(cid));
         }
-        for &(_, _, cid) in &scheduled {
+        for &(_, _, _, cid) in &scheduled {
             plan.entries.push(OrderEntry::all(cid));
         }
         // Backfill lane: the unestimated coflows' non-pilot flows.
@@ -727,6 +755,45 @@ impl Scheduler for PhilaeScheduler {
             // event-triggered, and completions are events (Table 1).
             CompletionOutcome::Normal => Reaction::Reallocate,
         }
+    }
+
+    /// Batch-aware delivery (the ROADMAP "batch-aware order repair" item):
+    /// one tight pass over the coalesced instant instead of one virtual
+    /// hook dispatch per event. Every Philae hook reacts with
+    /// `Reallocate`, so the batch's reaction is computed once; the sampling
+    /// state machine sees the reports in exactly the delivery order the
+    /// default replay would have used, and the four-lane order structure is
+    /// repaired **once per batch** by the engine's single `order_into`
+    /// call that follows (no intermediate emits can occur). Pinned
+    /// bit-identical to the per-event path in
+    /// `rust/tests/cct_equivalence.rs`.
+    fn on_batch(&mut self, batch: &EventBatch, world: &mut World) -> Reaction {
+        for &cid in &batch.arrivals {
+            self.core.handle_arrival(cid, world);
+        }
+        for &(fid, _coflow_done) in &batch.flow_reports {
+            if let CompletionOutcome::SampleComplete(samples) =
+                self.core.record_completion(fid, world)
+            {
+                let cid = world.flows[fid].coflow;
+                let n = world.coflows[cid].flows.len();
+                world.coflows[cid].est_size = Some(Self::estimate(&samples, n));
+                if world.coflows[cid].finished_at.is_none() {
+                    world.coflows[cid].phase = CoflowPhase::Running;
+                }
+            }
+        }
+        let mut reaction = if batch.arrivals.is_empty() && batch.flow_reports.is_empty() {
+            Reaction::None
+        } else {
+            Reaction::Reallocate
+        };
+        if batch.tick {
+            // Philae is event-triggered (no δ tick); kept for exactness
+            // with the default replay should a tick ever be routed here.
+            reaction = reaction.merge(self.on_tick(world));
+        }
+        reaction
     }
 
     fn order_into(&mut self, world: &World, plan: &mut Plan) {
@@ -1023,6 +1090,36 @@ mod tests {
         let mut dst2 = PhilaeCore::new(cfg);
         assert!(dst2.adopt(0, &w).is_none());
         assert_eq!(dst2.record_completion(pilots[1], &mut w), CompletionOutcome::Normal);
+    }
+
+    #[test]
+    fn secondary_deadline_key_breaks_score_ties() {
+        use crate::coordinator::DeadlineMode;
+        let mk = || {
+            let mut w = world_with(&[&[(0, 4, 10.0)], &[(1, 5, 10.0)]]);
+            for cid in 0..2 {
+                w.coflows[cid].phase = CoflowPhase::Running;
+                w.coflows[cid].est_size = Some(10.0); // identical scores
+            }
+            w.coflows[0].deadline = Some(9.0);
+            w.coflows[1].deadline = Some(3.0);
+            w
+        };
+        // Ignore (default): deadlines invisible, FIFO seq breaks the tie
+        let w = mk();
+        let mut core = PhilaeCore::new(SchedulerConfig::default());
+        let order = core.order(&w);
+        assert_eq!(order.entries, vec![OrderEntry::all(0), OrderEntry::all(1)]);
+        // Secondary: the earlier deadline wins the tie despite a later seq
+        let mut cfg = SchedulerConfig::default();
+        cfg.deadline_mode = DeadlineMode::Secondary;
+        let mut core2 = PhilaeCore::new(cfg);
+        let order2 = core2.order(&w);
+        assert_eq!(order2.entries, vec![OrderEntry::all(1), OrderEntry::all(0)]);
+        // incremental path agrees with the from-scratch oracle
+        let mut full = Plan::default();
+        core2.order_full_into(&w, &mut full);
+        assert_eq!(order2.entries, full.entries);
     }
 
     #[test]

@@ -6,15 +6,18 @@
 //! Philae's sampling approximates; the gap between Philae and SCF is the
 //! cost of learning.
 
-use super::{OrderEntry, Plan, Reaction, Scheduler, World};
+use super::{DeadlineMode, OrderEntry, Plan, Reaction, Scheduler, World};
 use crate::trace::Trace;
 use crate::{Bytes, CoflowId, FlowId};
 
 pub struct ScfScheduler {
     total_bytes: Vec<Bytes>,
+    /// SLO handling: `Secondary` uses the coflow deadline as a tie-break
+    /// behind remaining size (`Ignore`, the default, is deadline-blind).
+    deadline_mode: DeadlineMode,
     /// Reused sort buffer — remaining size moves with every byte sent, so
     /// the order is rebuilt per event but allocation-free in steady state.
-    scratch: Vec<(f64, u64, CoflowId)>,
+    scratch: Vec<(f64, f64, u64, CoflowId)>,
 }
 
 impl ScfScheduler {
@@ -22,8 +25,15 @@ impl ScfScheduler {
         let oracles = trace.oracles();
         ScfScheduler {
             total_bytes: oracles.iter().map(|o| o.total_bytes).collect(),
+            deadline_mode: DeadlineMode::default(),
             scratch: Vec::new(),
         }
+    }
+
+    /// Builder-style [`DeadlineMode`] (default: `Ignore`).
+    pub fn with_deadline_mode(mut self, mode: DeadlineMode) -> Self {
+        self.deadline_mode = mode;
+        self
     }
 }
 
@@ -47,14 +57,21 @@ impl Scheduler for ScfScheduler {
             if c.done() {
                 continue;
             }
-            let remaining = (self.total_bytes[cid] - c.bytes_sent).max(0.0);
-            self.scratch.push((remaining, c.seq, cid));
+            // beyond-trace cids (live-service dynamic registrations) fall
+            // back to the world's own total
+            let total = self.total_bytes.get(cid).copied().unwrap_or(c.total_bytes);
+            let remaining = (total - c.bytes_sent).max(0.0);
+            let dk = self.deadline_mode.key(c.deadline);
+            self.scratch.push((remaining, dk, c.seq, cid));
         }
-        self.scratch
-            .sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        self.scratch.sort_unstable_by(|a, b| {
+            a.0.total_cmp(&b.0)
+                .then(a.1.total_cmp(&b.1))
+                .then(a.2.cmp(&b.2))
+        });
         plan.clear();
         plan.entries
-            .extend(self.scratch.iter().map(|&(_, _, cid)| OrderEntry::all(cid)));
+            .extend(self.scratch.iter().map(|&(_, _, _, cid)| OrderEntry::all(cid)));
     }
 }
 

@@ -3,17 +3,20 @@
 //! port — the quantity that lower-bounds the coflow's completion time on a
 //! non-blocking fabric.
 
-use super::{OrderEntry, Plan, Reaction, Scheduler, World};
+use super::{DeadlineMode, OrderEntry, Plan, Reaction, Scheduler, World};
 use crate::trace::Trace;
 use crate::{Bytes, CoflowId, FlowId};
 
 pub struct SebfScheduler {
     bottleneck: Vec<Bytes>,
     total: Vec<Bytes>,
+    /// SLO handling: `Secondary` uses the coflow deadline as a tie-break
+    /// behind the bottleneck key (`Ignore`, the default, is deadline-blind).
+    deadline_mode: DeadlineMode,
     /// Reused sort buffer — the SEBF key moves with every byte sent by
     /// every coflow, so there is no stable order to repair incrementally;
     /// the rebuild at least allocates nothing in steady state.
-    scratch: Vec<(f64, u64, CoflowId)>,
+    scratch: Vec<(f64, f64, u64, CoflowId)>,
 }
 
 impl SebfScheduler {
@@ -22,21 +25,31 @@ impl SebfScheduler {
         SebfScheduler {
             bottleneck: oracles.iter().map(|o| o.bottleneck_bytes).collect(),
             total: oracles.iter().map(|o| o.total_bytes).collect(),
+            deadline_mode: DeadlineMode::default(),
             scratch: Vec::new(),
         }
+    }
+
+    /// Builder-style [`DeadlineMode`] (default: `Ignore`).
+    pub fn with_deadline_mode(mut self, mode: DeadlineMode) -> Self {
+        self.deadline_mode = mode;
+        self
     }
 
     /// Remaining effective bottleneck, approximated by scaling the static
     /// bottleneck with the coflow's remaining fraction (exact per-port
     /// tracking would cost O(width) per comparison; the approximation
-    /// preserves the ordering for the uniform-progress case).
-    fn remaining_bottleneck(&self, cid: CoflowId, sent: Bytes) -> f64 {
-        let total = self.total[cid];
+    /// preserves the ordering for the uniform-progress case). Coflows
+    /// registered after trace construction (live-service dynamic
+    /// registrations) fall back to their total size as the bottleneck
+    /// proxy.
+    fn remaining_bottleneck(&self, cid: CoflowId, total: Bytes, sent: Bytes) -> f64 {
         if total <= 0.0 {
             return 0.0;
         }
+        let bottleneck = self.bottleneck.get(cid).copied().unwrap_or(total);
         let frac_left = ((total - sent) / total).clamp(0.0, 1.0);
-        self.bottleneck[cid] * frac_left
+        bottleneck * frac_left
     }
 }
 
@@ -60,14 +73,19 @@ impl Scheduler for SebfScheduler {
             if c.done() {
                 continue;
             }
-            let key = (self.remaining_bottleneck(cid, c.bytes_sent), c.seq, cid);
+            let total = self.total.get(cid).copied().unwrap_or(c.total_bytes);
+            let dk = self.deadline_mode.key(c.deadline);
+            let key = (self.remaining_bottleneck(cid, total, c.bytes_sent), dk, c.seq, cid);
             self.scratch.push(key);
         }
-        self.scratch
-            .sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        self.scratch.sort_unstable_by(|a, b| {
+            a.0.total_cmp(&b.0)
+                .then(a.1.total_cmp(&b.1))
+                .then(a.2.cmp(&b.2))
+        });
         plan.clear();
         plan.entries
-            .extend(self.scratch.iter().map(|&(_, _, cid)| OrderEntry::all(cid)));
+            .extend(self.scratch.iter().map(|&(_, _, _, cid)| OrderEntry::all(cid)));
     }
 }
 
@@ -88,12 +106,14 @@ mod tests {
                 TraceRecord {
                     external_id: 1,
                     arrival: 0.0,
+                    deadline: None,
                     mappers: vec![0, 1, 2, 3],
                     reducers: vec![(4, 10.0e6), (5, 10.0e6), (6, 10.0e6), (7, 10.0e6)],
                 },
                 TraceRecord {
                     external_id: 2,
                     arrival: 0.0,
+                    deadline: None,
                     mappers: vec![0],
                     reducers: vec![(4, 20.0e6)],
                 },

@@ -10,10 +10,11 @@
 //! (No clap on this offline image — a small hand-rolled parser below.)
 
 use philae::coordinator::{SchedulerConfig, SchedulerKind};
+use philae::fabric::Fabric;
 use philae::metrics::SpeedupRow;
 use philae::service::{run_service, ServiceConfig};
 use philae::sim::{SimConfig, SimResult, Simulation};
-use philae::trace::{Trace, TraceSpec};
+use philae::trace::{DeadlineModel, Trace, TraceSpec};
 use std::collections::HashMap;
 use std::time::Duration;
 
@@ -30,15 +31,20 @@ COMMON FLAGS:
   --seed <n>           generator seed                   [default: 42]
   --wide-only          keep only wide coflows (Table 2 row 2)
   --replicate <k>      replicate k× across ports (900-port derivation)
+  --deadline-tightness <t>  give every coflow an SLO deadline of
+                       t × ideal CCT (uniform spread up to 1.5t); the
+                       deadline-aware scheduler is `dcoflow`
   --coordinators <k>   coordinator shards with leased capacity  [default: 1]
   --shards <s>         allocator worker shards (sim/serve)      [default: 1]
 
 sim:      --scheduler <name>                            [default: philae]
 compare:  --baseline <name> --candidate <name>          [default: aalo vs philae]
-serve:    --scheduler <philae|aalo> --artifacts <dir> --time-scale <x> --delta-ms <n>
+serve:    --scheduler <name> --artifacts <dir> --time-scale <x> --delta-ms <n>
+          (accepts every scheduler below; --artifacts drives PJRT, philae only)
 gen-trace: --out <file>
 
-schedulers: philae aalo sebf scf fifo saath philae-lcb philae-ec1 philae-ec-multi";
+schedulers: philae aalo sebf scf fifo saath philae-lcb philae-ec1
+            philae-ec-multi dcoflow";
 
 struct Flags {
     map: HashMap<String, String>,
@@ -105,6 +111,24 @@ fn build_trace(flags: &Flags) -> anyhow::Result<Trace> {
     if replicate > 1 {
         t = t.replicate(replicate);
     }
+    // SLO deadlines (applied last, so wide-only/replicate see them too via
+    // the records — or get freshly assigned ones here). Ideal CCTs are
+    // computed at the paper's 1 Gbps line rate.
+    if let Some(tight) = flags.get_opt("deadline-tightness") {
+        let tight: f64 = tight
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--deadline-tightness: {e}"))?;
+        anyhow::ensure!(
+            tight > 0.0 && tight.is_finite(),
+            "--deadline-tightness must be a positive factor, got {tight}"
+        );
+        let seed = flags.get("seed", 42u64).map_err(anyhow::Error::msg)?;
+        t.assign_deadlines(
+            &DeadlineModel::tightness(tight),
+            &Fabric::gbps(t.num_ports),
+            seed,
+        );
+    }
     Ok(t)
 }
 
@@ -160,6 +184,19 @@ fn main() -> anyhow::Result<()> {
                 res.rate_calcs,
                 res.update_msgs,
             );
+            let dl = &res.deadline;
+            if dl.with_deadline > 0 {
+                println!(
+                    "  SLO: {}/{} deadlines met ({:.1}%) | goodput {:.1}% | admitted {} rejected {} expired {}",
+                    dl.met,
+                    dl.with_deadline,
+                    100.0 * dl.met_ratio(),
+                    100.0 * dl.goodput_ratio(),
+                    dl.admitted,
+                    dl.rejected,
+                    dl.expired,
+                );
+            }
         }
         "compare" => {
             let t = build_trace(&flags)?;
@@ -184,6 +221,15 @@ fn main() -> anyhow::Result<()> {
                 "  updates: {} vs {} | rate calcs: {} vs {}",
                 cand.update_msgs, base.update_msgs, cand.rate_calcs, base.rate_calcs
             );
+            if cand.deadline.with_deadline > 0 {
+                println!(
+                    "  deadline-met: {:.1}% vs {:.1}% | goodput: {:.1}% vs {:.1}%",
+                    100.0 * cand.deadline.met_ratio(),
+                    100.0 * base.deadline.met_ratio(),
+                    100.0 * cand.deadline.goodput_ratio(),
+                    100.0 * base.deadline.goodput_ratio(),
+                );
+            }
         }
         "serve" => {
             let t = build_trace(&flags)?;
@@ -220,6 +266,17 @@ fn main() -> anyhow::Result<()> {
                 report.update_recv.mean() * 1e3,
                 report.update_recv.stddev() * 1e3,
             );
+            if report.deadline.with_deadline > 0 {
+                println!(
+                    "  SLO: {}/{} deadlines met ({:.1}%) | admitted {} rejected {} expired {}",
+                    report.deadline.met,
+                    report.deadline.with_deadline,
+                    100.0 * report.deadline.met_ratio(),
+                    report.deadline.admitted,
+                    report.deadline.rejected,
+                    report.deadline.expired,
+                );
+            }
         }
         "gen-trace" => {
             let t = build_trace(&flags)?;

@@ -1,10 +1,13 @@
 //! Metrics: percentile/CDF helpers, speedup tables, coordinator-cost
-//! accounting (Tables 3/4/6) and the shuffle-fraction JCT model (§4.2).
+//! accounting (Tables 3/4/6), the shuffle-fraction JCT model (§4.2), and
+//! deadline/SLO accounting (met ratio, goodput — `deadline`).
 
 mod counters;
+mod deadline;
 mod jct;
 
 pub use counters::{IntervalStats, MessageCostModel, ResourceUsage, RunningStat};
+pub use deadline::DeadlineStats;
 pub use jct::{jct_speedups, ShuffleFractionModel};
 
 use crate::Time;

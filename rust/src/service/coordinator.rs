@@ -26,6 +26,25 @@
 //! an agent carries that agent's rates across *all* shards, so "comply
 //! with the last schedule" can never stall another shard's flows.
 //! `coordinators == 1` is the classic single-coordinator service.
+//!
+//! ## Scheduler surface
+//!
+//! The service accepts the **full scheduler registry**
+//! ([`SchedulerKind::all`]), not just philae/aalo. Philae keeps its
+//! dedicated path (the sampling core is driven directly so the PJRT
+//! scorer can batch features); every other kind — aalo, sebf, scf, fifo,
+//! saath, the error-correction variants, and the deadline-aware `dcoflow`
+//! — runs through the generic [`Scheduler`] trait: arrival/completion
+//! hooks against the shard's partition view, `order_into` for the plan,
+//! and a per-δ `on_tick` when the policy is periodic
+//! ([`Scheduler::tick_interval`], which also gates the agents' periodic
+//! byte updates). Clairvoyant kinds (sebf/scf) build their oracle tables
+//! from the replayed trace, which registers coflows in trace order;
+//! coflows registered dynamically beyond the trace (ops channel) fall
+//! back to world-derived keys. Per-coflow SLO deadlines ride along: a
+//! registered record's deadline allowance (`deadline − arrival`) is
+//! re-anchored to the service clock, and the final report carries
+//! [`crate::metrics::DeadlineStats`].
 
 use super::ops::{CoflowOp, OpsHandle};
 use crate::agents::{AgentMsg, AgentSim, CoordMsg};
@@ -33,10 +52,10 @@ use crate::coflow::{CoflowPhase, CoflowState, FlowState};
 use crate::coordinator::{
     cluster,
     philae::{CompletionOutcome, PhilaeCore},
-    rate, AaloScheduler, Plan, Scheduler, SchedulerConfig, SchedulerKind, World,
+    rate, AdmissionStats, Plan, Scheduler, SchedulerConfig, SchedulerKind, World,
 };
 use crate::fabric::{Fabric, PortLoad};
-use crate::metrics::{IntervalStats, RunningStat};
+use crate::metrics::{DeadlineStats, IntervalStats, RunningStat};
 use crate::runtime::{BatchFeatures, Engine};
 use crate::trace::{Trace, TraceRecord};
 use crate::{CoflowId, FlowId, PortId, Time};
@@ -132,6 +151,9 @@ pub struct ServiceReport {
     pub migrations: u64,
     /// Reconciliation rounds performed (K > 1 only).
     pub reconciliations: u64,
+    /// SLO accounting (met ratio, goodput, admission counters); vacuous
+    /// on deadline-free workloads.
+    pub deadline: DeadlineStats,
 }
 
 impl ServiceReport {
@@ -160,6 +182,7 @@ pub fn run_service(trace: &Trace, cfg: &ServiceConfig) -> Result<ServiceReport> 
             TraceRecord {
                 external_id: c.external_id,
                 arrival: c.arrival,
+                deadline: c.deadline,
                 mappers: c.senders.clone(),
                 reducers,
             }
@@ -179,7 +202,7 @@ pub fn run_service(trace: &Trace, cfg: &ServiceConfig) -> Result<ServiceReport> 
         handle.seal();
     });
 
-    let report = Coordinator::new(trace.num_ports, cfg, input_tx)?.run(input_rx);
+    let report = Coordinator::new(trace, cfg, input_tx)?.run(input_rx);
     let _ = replayer.join();
     report
 }
@@ -191,8 +214,11 @@ struct AgentHandle {
 /// One live coordinator shard: its scheduler instance, owned coflows,
 /// capacity lease, input queue, and reusable scheduling workspace.
 struct SvcShard {
+    /// Philae's dedicated path: the sampling core driven directly (PJRT
+    /// feature batching needs core access the trait doesn't expose).
     philae: Option<PhilaeCore>,
-    aalo: Option<AaloScheduler>,
+    /// Every other registry kind, driven through the [`Scheduler`] trait.
+    generic: Option<Box<dyn Scheduler>>,
     /// Owned coflows in admission order (swapped into `world.active`
     /// around every scheduler call).
     active: Vec<CoflowId>,
@@ -262,7 +288,8 @@ struct Coordinator {
 }
 
 impl Coordinator {
-    fn new(num_ports: usize, cfg: &ServiceConfig, input_tx: mpsc::Sender<Input>) -> Result<Self> {
+    fn new(trace: &Trace, cfg: &ServiceConfig, input_tx: mpsc::Sender<Input>) -> Result<Self> {
+        let num_ports = trace.num_ports;
         let engine = match (&cfg.engine_dir, cfg.kind) {
             (Some(dir), SchedulerKind::Philae) => Some(Engine::load(dir)?),
             _ => None,
@@ -277,17 +304,11 @@ impl Coordinator {
             active: Vec::new(),
         };
         let is_philae = matches!(cfg.kind, SchedulerKind::Philae);
-        let is_aalo = matches!(cfg.kind, SchedulerKind::Aalo);
-        anyhow::ensure!(
-            is_philae || is_aalo,
-            "service mode supports philae and aalo (got {:?})",
-            cfg.kind
-        );
         let k = cfg.coordinators.max(1);
         let shards: Vec<SvcShard> = (0..k)
             .map(|_| SvcShard {
                 philae: is_philae.then(|| PhilaeCore::new(cfg.sched.clone())),
-                aalo: is_aalo.then(|| AaloScheduler::new(cfg.sched.clone())),
+                generic: (!is_philae).then(|| cfg.kind.build(trace, &cfg.sched)),
                 active: Vec::new(),
                 lease: Fabric {
                     num_ports: 0,
@@ -349,9 +370,29 @@ impl Coordinator {
         })
     }
 
+    /// Whether the configured policy runs a periodic δ pipeline (Aalo):
+    /// drives both the agents' byte updates and the per-interval tick.
+    fn periodic_pipeline(&self) -> bool {
+        match self.shards[0].generic.as_ref() {
+            Some(g) => g.tick_interval().is_some(),
+            None => false,
+        }
+    }
+
+    /// Event-triggered shards (Philae, and every generic kind without a δ
+    /// tick) reallocate on any queued event; periodic ones flush at the
+    /// tick.
+    fn event_triggered(&self, s: usize) -> bool {
+        match (&self.shards[s].philae, &self.shards[s].generic) {
+            (Some(_), _) => true,
+            (_, Some(g)) => g.tick_interval().is_none(),
+            _ => false,
+        }
+    }
+
     fn spawn_agents(&mut self) {
         let n = self.world.fabric.num_ports;
-        let aalo_updates = self.shards[0].aalo.is_some();
+        let periodic_updates = self.periodic_pipeline();
         for port in 0..n {
             let (tx, rx) = mpsc::channel::<CoordMsg>();
             let up = self.input_tx.clone();
@@ -368,7 +409,7 @@ impl Coordinator {
                     if let Some(s) = sim.next_completion() {
                         wait = wait.min(Duration::from_secs_f64((s / scale).max(0.0)));
                     }
-                    if aalo_updates {
+                    if periodic_updates {
                         wait = wait.min(next_tick.saturating_duration_since(now));
                     }
                     let msg = rx.recv_timeout(wait);
@@ -390,7 +431,7 @@ impl Coordinator {
                         Err(mpsc::RecvTimeoutError::Timeout) => {}
                         Err(mpsc::RecvTimeoutError::Disconnected) => break,
                     }
-                    if aalo_updates && Instant::now() >= next_tick {
+                    if periodic_updates && Instant::now() >= next_tick {
                         if sim.active_flows() > 0 {
                             for m in sim.byte_updates() {
                                 let _ = up.send(Input::Agent(m));
@@ -438,12 +479,13 @@ impl Coordinator {
                         }
                     }
                     self.iv_recv += t0.elapsed().as_secs_f64();
-                    // Philae reallocates on any event; periodic (Aalo)
-                    // pipelines flush at the δ tick, except for explicit
-                    // coflow teardown, which frees rates immediately.
+                    // Event-triggered policies (Philae, and every generic
+                    // kind without a tick interval) reallocate on any
+                    // event; periodic (Aalo) pipelines flush at the δ
+                    // tick, except for explicit coflow teardown, which
+                    // frees rates immediately.
                     for s in 0..self.shards.len() {
-                        let event_triggered = self.shards[s].philae.is_some();
-                        let go = (self.shards[s].need_realloc && event_triggered)
+                        let go = (self.shards[s].need_realloc && self.event_triggered(s))
                             || self.shards[s].force_realloc;
                         self.shards[s].need_realloc = false;
                         self.shards[s].force_realloc = false;
@@ -473,11 +515,34 @@ impl Coordinator {
             .iter()
             .map(|c| c.cct().unwrap_or(f64::NAN))
             .collect();
+        let mut deadline = DeadlineStats::default();
+        for c in &self.world.coflows {
+            deadline.record(c.deadline, c.finished_at, c.total_bytes);
+        }
+        {
+            let mut adm = AdmissionStats::default();
+            let mut any = false;
+            for sh in &self.shards {
+                if let Some(a) = sh.generic.as_ref().and_then(|g| g.admission_stats()) {
+                    adm.merge(&a);
+                    any = true;
+                }
+            }
+            if any {
+                deadline.admitted = adm.admitted;
+                deadline.rejected = adm.rejected;
+                deadline.expired = adm.expired;
+            }
+        }
         Ok(ServiceReport {
             scheduler: if self.shards[0].philae.is_some() {
                 "philae".into()
             } else {
-                "aalo".into()
+                self.shards[0]
+                    .generic
+                    .as_ref()
+                    .map(|g| g.name())
+                    .unwrap_or_else(|| "unknown".into())
             },
             ccts,
             makespan: self.start.elapsed().as_secs_f64() * self.cfg.time_scale,
@@ -494,6 +559,7 @@ impl Coordinator {
             wall_seconds: self.start.elapsed().as_secs_f64(),
             migrations: self.migrations,
             reconciliations: self.reconciliations,
+            deadline,
         })
     }
 
@@ -556,6 +622,7 @@ impl Coordinator {
     /// cross-shard reconciliation, interval accounting for everyone.
     fn on_interval(&mut self) {
         self.intervals_seen += 1;
+        self.touch_clock();
         if self.shards.len() > 1
             && self.intervals_seen % SERVICE_RECONCILE_INTERVALS == 0
             && !self.world.active.is_empty()
@@ -566,7 +633,7 @@ impl Coordinator {
                 self.reallocate_shard(s);
             }
         }
-        if self.shards[0].aalo.is_some() {
+        if self.periodic_pipeline() {
             for s in 0..self.shards.len() {
                 if self.shards[s].active.is_empty() {
                     continue;
@@ -574,12 +641,12 @@ impl Coordinator {
                 {
                     let sh = &mut self.shards[s];
                     std::mem::swap(&mut self.world.active, &mut sh.active);
-                    if let Some(aalo) = sh.aalo.as_mut() {
-                        aalo.on_tick(&mut self.world);
+                    if let Some(g) = sh.generic.as_mut() {
+                        g.on_tick(&mut self.world);
                     }
                     std::mem::swap(&mut self.world.active, &mut sh.active);
                 }
-                self.reallocate_shard(s); // Aalo flushes rates every interval
+                self.reallocate_shard(s); // periodic policies flush every δ
             }
         }
         let busy =
@@ -608,6 +675,14 @@ impl Coordinator {
 
     fn sim_now(&self) -> Time {
         self.start.elapsed().as_secs_f64() * self.cfg.time_scale
+    }
+
+    /// Advance the world's simulated clock to the service clock. Scheduler
+    /// hooks read `world.now` (Philae's aging lane, dcoflow's admission
+    /// slack and expiry sweep), so it must track `sim_now()` — a frozen
+    /// clock would make every deadline look infinitely far away.
+    fn touch_clock(&mut self) {
+        self.world.now = self.sim_now();
     }
 
     /// Initialize the per-shard leases to an exact equal split (K=1: the
@@ -655,7 +730,8 @@ impl Coordinator {
     /// agents, run the shard scheduler's arrival hook.
     fn register(&mut self, rec: &TraceRecord) -> CoflowId {
         let cid = self.world.coflows.len();
-        let now = self.sim_now();
+        self.touch_clock();
+        let now = self.world.now;
         let mut flow_ids = Vec::new();
         let mut total = 0.0;
         for &(dst, reducer_bytes) in &rec.reducers {
@@ -672,6 +748,8 @@ impl Coordinator {
         let mut c = CoflowState::new(cid, now, flow_ids.clone(), total, self.seq);
         self.seq += 1;
         c.phase = CoflowPhase::Running;
+        // re-anchor the record's deadline allowance to the service clock
+        c.deadline = rec.deadline.map(|d| now + (d - rec.arrival).max(0.0));
         c.senders = rec.mappers.clone();
         c.senders.sort_unstable();
         c.senders.dedup();
@@ -719,16 +797,16 @@ impl Coordinator {
         self.port_refs_down.push(down);
 
         self.scores_dirty = true;
-        // shard scheduler arrival hooks (Philae marks pilots here), run
-        // against the shard's partition view
+        // shard scheduler arrival hooks (Philae marks pilots, dcoflow runs
+        // its admission test here), run against the shard's partition view
         {
             let sh = &mut self.shards[s];
             std::mem::swap(&mut self.world.active, &mut sh.active);
             if let Some(ph) = sh.philae.as_mut() {
                 ph.handle_arrival(cid, &mut self.world);
             }
-            if let Some(aalo) = sh.aalo.as_mut() {
-                aalo.on_arrival(cid, &mut self.world);
+            if let Some(g) = sh.generic.as_mut() {
+                g.on_arrival(cid, &mut self.world);
             }
             std::mem::swap(&mut self.world.active, &mut sh.active);
         }
@@ -751,7 +829,8 @@ impl Coordinator {
         if cid >= self.world.coflows.len() || self.world.coflows[cid].done() {
             return;
         }
-        let now = self.sim_now();
+        self.touch_clock();
+        let now = self.world.now;
         let flow_ids = self.world.coflows[cid].flows.clone();
         for f in flow_ids {
             if !self.world.flows[f].done() {
@@ -789,6 +868,14 @@ impl Coordinator {
         if let Some(s) = self.owner_of(cid) {
             self.shards[s].active.retain(|&x| x != cid);
             self.owner[cid] = NO_OWNER;
+            // let the owning scheduler drop per-coflow state (dcoflow
+            // releases its reservation here)
+            let sh = &mut self.shards[s];
+            std::mem::swap(&mut self.world.active, &mut sh.active);
+            if let Some(g) = sh.generic.as_mut() {
+                g.on_coflow_detach(cid, &mut self.world);
+            }
+            std::mem::swap(&mut self.world.active, &mut sh.active);
         }
     }
 
@@ -802,7 +889,8 @@ impl Coordinator {
                 if flow >= self.world.flows.len() || self.world.flows[flow].done() {
                     return false;
                 }
-                let now = self.sim_now();
+                self.touch_clock();
+                let now = self.world.now;
                 {
                     let fl = &mut self.world.flows[flow];
                     fl.sent = fl.size;
@@ -885,6 +973,23 @@ impl Coordinator {
                     }
                     self.scores_dirty = true;
                 }
+                // generic-scheduler hooks, mirroring the sim engine's
+                // order: the report (and the coflow-completion event when
+                // this was the last flow) lands after all physical
+                // bookkeeping, against the shard's partition view
+                {
+                    let sh = &mut self.shards[s];
+                    if sh.generic.is_some() {
+                        std::mem::swap(&mut self.world.active, &mut sh.active);
+                        if let Some(g) = sh.generic.as_mut() {
+                            g.on_flow_complete(flow, &mut self.world);
+                            if coflow_finished {
+                                g.on_coflow_complete(coflow, &mut self.world);
+                            }
+                        }
+                        std::mem::swap(&mut self.world.active, &mut sh.active);
+                    }
+                }
                 true
             }
             AgentMsg::ByteUpdate { coflow, bytes_sent, .. } => {
@@ -930,6 +1035,7 @@ impl Coordinator {
     /// [`rate::AllocScratch`] workspace with the simulator's hot loop.
     fn reallocate_shard(&mut self, s: usize) {
         self.ensure_leases();
+        self.touch_clock();
         let t0 = Instant::now();
         if self.shards[s].philae.is_some() && self.engine.is_some() && self.scores_dirty {
             self.cached_scores = self.engine_scores();
@@ -944,8 +1050,8 @@ impl Coordinator {
                 } else {
                     ph.order_into(&self.world, &mut sh.plan);
                 }
-            } else if let Some(aalo) = sh.aalo.as_mut() {
-                aalo.order_into(&self.world, &mut sh.plan);
+            } else if let Some(g) = sh.generic.as_mut() {
+                g.order_into(&self.world, &mut sh.plan);
             } else {
                 sh.plan.clear();
             }
@@ -1168,6 +1274,18 @@ impl Coordinator {
             }
         }
         self.shards[from].active.retain(|&x| x != cid);
+        // detach hook on the source (its view no longer contains cid):
+        // dcoflow hands its reservation back, Aalo/others are a no-op
+        {
+            let sh = &mut self.shards[from];
+            if sh.generic.is_some() {
+                std::mem::swap(&mut self.world.active, &mut sh.active);
+                if let Some(g) = sh.generic.as_mut() {
+                    g.on_coflow_detach(cid, &mut self.world);
+                }
+                std::mem::swap(&mut self.world.active, &mut sh.active);
+            }
+        }
         self.owner[cid] = to as u32;
         self.shards[to].active.push(cid);
         let mut completed_sample: Option<Vec<f64>> = None;
@@ -1177,8 +1295,8 @@ impl Coordinator {
             if let Some(ph) = sh.philae.as_mut() {
                 completed_sample = ph.adopt(cid, &self.world);
             }
-            if let Some(aalo) = sh.aalo.as_mut() {
-                aalo.on_coflow_attach(cid, &mut self.world);
+            if let Some(g) = sh.generic.as_mut() {
+                g.on_coflow_attach(cid, &mut self.world);
             }
             std::mem::swap(&mut self.world.active, &mut sh.active);
         }

@@ -49,6 +49,21 @@
 //! reproduced because completion hooks read only flow-local and
 //! scheduler-internal state.
 //!
+//! ## Two unrelated "deadlines"
+//!
+//! This file talks about deadlines in two senses that must not be
+//! conflated. The **§4.3 deadline model** below is about *coordinator tick
+//! latency*: a periodic coordinator whose per-interval work exceeds δ
+//! overruns into the next interval and skips ticks (how Aalo degrades at
+//! scale, Table 4). **Per-coflow SLO deadlines** are a property of the
+//! workload ([`crate::coflow::CoflowState::deadline`], carried from the
+//! trace's optional deadline column): completion targets that
+//! deadline-aware scheduling (`coordinator/dcoflow.rs`,
+//! [`crate::coordinator::DeadlineMode`]) optimizes for and
+//! [`SimResult::deadline`] ([`crate::metrics::DeadlineStats`]) accounts.
+//! The engine itself treats SLO deadlines as pure metadata — it never
+//! gates progress on them.
+//!
 //! ## Completion events
 //!
 //! Scheduled completions live in an indexed min-heap
@@ -75,12 +90,12 @@
 
 use super::heap::CompletionHeap;
 use crate::coordinator::{
-    rate, CoordinatorCluster, EventBatch, Plan, Reaction, Scheduler, SchedulerConfig,
-    SchedulerKind, World,
+    rate, AdmissionStats, CoordinatorCluster, EventBatch, Plan, Reaction, Scheduler,
+    SchedulerConfig, SchedulerKind, World,
 };
 use crate::coflow::{CoflowState, FlowState};
 use crate::fabric::{Fabric, PortLoad};
-use crate::metrics::{IntervalStats, MessageCostModel, RunningStat};
+use crate::metrics::{DeadlineStats, IntervalStats, MessageCostModel, RunningStat};
 use crate::trace::Trace;
 use crate::{CoflowId, FlowId, Time, EPS};
 use crate::util::Rng;
@@ -167,6 +182,9 @@ pub struct SimResult {
     pub updates_per_interval: RunningStat,
     /// Wall-clock seconds the whole simulation took.
     pub sim_wall_s: f64,
+    /// SLO accounting (met ratio, goodput, admission counters); vacuous
+    /// (`with_deadline == 0`, met ratio 1.0) on deadline-free traces.
+    pub deadline: DeadlineStats,
 }
 
 impl SimResult {
@@ -206,6 +224,7 @@ pub fn world_with_fabric(trace: &Trace, fabric: Fabric) -> World {
         .map(|c| {
             let total: f64 = c.flows.iter().map(|&f| trace.flows[f].size).sum();
             let mut st = CoflowState::new(c.id, c.arrival, c.flows.clone(), total, c.id as u64);
+            st.deadline = c.deadline;
             st.senders = c.senders.clone();
             st.receivers = c.receivers.clone();
             for (i, &fid) in st.active_list.iter().enumerate() {
@@ -244,6 +263,8 @@ pub(crate) trait CoordFrontend {
     fn grants(&self) -> &[(FlowId, f64)];
     /// Whether `fid` holds a grant from the last compute round.
     fn was_granted(&self, fid: FlowId) -> bool;
+    /// Admission-control counters (deadline-aware schedulers only).
+    fn admission_stats(&self) -> Option<AdmissionStats>;
 }
 
 /// Single-coordinator frontend: one scheduler, one reused plan, one reused
@@ -306,6 +327,10 @@ impl CoordFrontend for SingleCoord<'_> {
     fn was_granted(&self, fid: FlowId) -> bool {
         self.scratch.was_granted(fid)
     }
+
+    fn admission_stats(&self) -> Option<AdmissionStats> {
+        self.sched.admission_stats()
+    }
 }
 
 /// The K-shard cluster drives the same engine loop (see
@@ -349,6 +374,10 @@ impl CoordFrontend for CoordinatorCluster {
 
     fn was_granted(&self, fid: FlowId) -> bool {
         CoordinatorCluster::was_granted(self, fid)
+    }
+
+    fn admission_stats(&self) -> Option<AdmissionStats> {
+        CoordinatorCluster::admission_stats(self)
     }
 }
 
@@ -720,6 +749,15 @@ impl Engine {
             .iter()
             .map(|c| c.cct().unwrap_or(f64::NAN))
             .collect();
+        let mut deadline = DeadlineStats::default();
+        for c in &self.world.coflows {
+            deadline.record(c.deadline, c.finished_at, c.total_bytes);
+        }
+        if let Some(a) = front.admission_stats() {
+            deadline.admitted = a.admitted;
+            deadline.rejected = a.rejected;
+            deadline.expired = a.expired;
+        }
         SimResult {
             scheduler: front.name(),
             ccts,
@@ -733,6 +771,7 @@ impl Engine {
             peak_active_flows: self.totals.peak_active_flows,
             updates_per_interval: self.stats.updates_per_interval.clone(),
             sim_wall_s: wall_start.elapsed().as_secs_f64(),
+            deadline,
         }
     }
 
@@ -1144,6 +1183,7 @@ mod tests {
             vec![TraceRecord {
                 external_id: 1,
                 arrival: 0.0,
+                deadline: None,
                 mappers: vec![0, 1],
                 reducers: vec![(2, 125.0e6), (3, 125.0e6)],
             }],

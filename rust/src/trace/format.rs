@@ -2,11 +2,17 @@
 //!
 //! ```text
 //! <num_ports> <num_coflows>
-//! <id> <arrival_ms> <num_mappers> <m1> ... <num_reducers> <r1:mb> <r2:mb> ...
+//! <id> <arrival_ms> <num_mappers> <m1> ... <num_reducers> <r1:mb> <r2:mb> ... [deadline:<ms>]
 //! ```
 //!
 //! Ports are 1-based in the file (as in the published trace) and 0-based in
 //! memory. Reducer entries are `port:size_in_MB`.
+//!
+//! The trailing `deadline:<ms>` column is **optional** per line (an SLO
+//! extension for the deadline workload family, `trace::DeadlineModel`):
+//! lines without it parse exactly as before, so every published
+//! coflow-benchmark trace stays valid, and rendering only emits the column
+//! for coflows that carry a deadline.
 
 use super::{Trace, TraceRecord};
 use crate::MB;
@@ -80,9 +86,24 @@ fn parse_record(line: &str) -> Result<TraceRecord> {
     if mappers.is_empty() || reducers.is_empty() {
         bail!("coflow {external_id} has no mappers or no reducers");
     }
+    // optional SLO column (module docs); other trailing tokens stay
+    // tolerated as before for forward compatibility
+    let mut deadline = None;
+    if let Some(tok) = it.next() {
+        if let Some(ms) = tok.strip_prefix("deadline:") {
+            let ms: f64 = ms
+                .parse()
+                .with_context(|| format!("bad deadline entry {tok:?}"))?;
+            if !ms.is_finite() || ms < 0.0 {
+                bail!("deadline must be a non-negative millisecond count, got {tok:?}");
+            }
+            deadline = Some(ms / 1000.0);
+        }
+    }
     Ok(TraceRecord {
         external_id,
         arrival: arrival_ms / 1000.0,
+        deadline,
         mappers,
         reducers,
     })
@@ -113,6 +134,9 @@ pub fn render_trace(trace: &Trace) -> String {
         out.push_str(&format!(" {}", reducers.len()));
         for (p, bytes) in reducers {
             out.push_str(&format!(" {}:{}", p + 1, bytes / MB));
+        }
+        if let Some(d) = c.deadline {
+            out.push_str(&format!(" deadline:{}", d * 1000.0));
         }
         out.push('\n');
     }
@@ -176,5 +200,28 @@ mod tests {
     fn rejects_count_mismatch() {
         let bad = "4 3\n1 0 1 1 1 2:5\n";
         assert!(parse_trace(bad).is_err());
+    }
+
+    #[test]
+    fn deadline_column_is_optional_per_line() {
+        let text = "4 2\n\
+            1 0 2 1 2 2 3:10 4:10 deadline:2500\n\
+            7 1500 1 1 1 3:5\n";
+        let t = parse_trace(text).unwrap();
+        assert_eq!(t.coflows[0].deadline, Some(2.5));
+        assert_eq!(t.coflows[1].deadline, None);
+        // round-trips: the column is re-emitted only where present
+        let rendered = render_trace(&t);
+        assert!(rendered.lines().nth(1).unwrap().contains("deadline:2500"));
+        assert!(!rendered.lines().nth(2).unwrap().contains("deadline"));
+        let t2 = parse_trace(&rendered).unwrap();
+        assert_eq!(t2.coflows[0].deadline, Some(2.5));
+        assert_eq!(t2.coflows[1].deadline, None);
+    }
+
+    #[test]
+    fn rejects_malformed_deadline() {
+        assert!(parse_trace("2 1\n1 0 1 1 1 2:5 deadline:xyz\n").is_err());
+        assert!(parse_trace("2 1\n1 0 1 1 1 2:5 deadline:-3\n").is_err());
     }
 }

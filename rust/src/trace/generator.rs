@@ -37,6 +37,33 @@ pub struct CoflowClass {
     pub flow_mb_sigma: f64,
 }
 
+/// Per-coflow completion-deadline (SLO) model, DCoflow-style (arXiv
+/// 2205.01229; evaluation methodology per Qiu/Stein/Zhong, arXiv
+/// 1603.07981): a covered coflow's deadline is its **ideal CCT** (the
+/// bottleneck bound at line rate, with zero contention) scaled by a
+/// tightness factor drawn uniformly from
+/// `[tightness, tightness × (1 + spread)]`. Tightness 1 is only reachable
+/// by a coflow alone on its ports; production SLOs are quoted as small
+/// multiples of the ideal (2× = "tight", 4×+ = "loose").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeadlineModel {
+    /// Base tightness factor multiplying the ideal CCT (≥ 1 is sane).
+    pub tightness: f64,
+    /// Uniform spread of the tightness draw (0 = deterministic factor).
+    pub spread: f64,
+    /// Fraction of coflows that carry a deadline (1.0 = every coflow).
+    pub coverage: f64,
+}
+
+impl DeadlineModel {
+    /// Model with the given base tightness and the default spread (0.5)
+    /// and full coverage.
+    pub fn tightness(tightness: f64) -> Self {
+        assert!(tightness > 0.0, "tightness must be positive");
+        DeadlineModel { tightness, spread: 0.5, coverage: 1.0 }
+    }
+}
+
 /// Generator parameters; defaults approximate the FB trace marginals.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceSpec {
@@ -58,6 +85,11 @@ pub struct TraceSpec {
     /// [`TraceSpec::fabric`]); empty = homogeneous 1 Gbps. Models
     /// mixed-NIC-generation clusters (e.g. 1/10/40 Gbps side by side).
     pub port_gbps_cycle: Vec<f64>,
+    /// Optional SLO model: when set, [`TraceSpec::generate`] assigns
+    /// per-coflow deadlines via [`crate::trace::Trace::assign_deadlines`]
+    /// against this spec's fabric. Deadline assignment uses its own RNG
+    /// stream, so the flows/arrivals are bit-identical with and without it.
+    pub deadline: Option<DeadlineModel>,
 }
 
 impl TraceSpec {
@@ -112,6 +144,7 @@ impl TraceSpec {
             ],
             rng_seed: 42,
             port_gbps_cycle: Vec::new(),
+            deadline: None,
         }
     }
 
@@ -170,6 +203,18 @@ impl TraceSpec {
         self
     }
 
+    /// Attach an SLO model (builder style) — see [`DeadlineModel`].
+    pub fn with_deadlines(mut self, model: DeadlineModel) -> Self {
+        self.deadline = Some(model);
+        self
+    }
+
+    /// Shorthand for [`TraceSpec::with_deadlines`] with
+    /// [`DeadlineModel::tightness`] (default spread, full coverage).
+    pub fn with_deadline_tightness(self, tightness: f64) -> Self {
+        self.with_deadlines(DeadlineModel::tightness(tightness))
+    }
+
     /// Generate the trace.
     pub fn generate(&self) -> Trace {
         assert!(self.num_ports >= 1, "need at least one port");
@@ -209,11 +254,16 @@ impl TraceSpec {
             records.push(TraceRecord {
                 external_id: ext as u64 + 1,
                 arrival: t,
+                deadline: None,
                 mappers,
                 reducers,
             });
         }
-        Trace::from_records(self.num_ports, records)
+        let mut trace = Trace::from_records(self.num_ports, records);
+        if let Some(model) = &self.deadline {
+            trace.assign_deadlines(model, &self.fabric(), self.rng_seed);
+        }
+        trace
     }
 
     fn pick_class(&self, rng: &mut Rng, total_w: f64) -> &CoflowClass {
@@ -327,4 +377,46 @@ mod tests {
         assert!(hot.makespan_lower_bound() < base.makespan_lower_bound());
     }
 
+    #[test]
+    fn deadline_model_does_not_perturb_the_workload() {
+        // the SLO model draws from its own RNG stream: flows and arrivals
+        // must be bit-identical with and without it
+        let plain = TraceSpec::fb_like(50, 60).seed(5).generate();
+        let slo = TraceSpec::fb_like(50, 60)
+            .seed(5)
+            .with_deadline_tightness(2.0)
+            .generate();
+        assert_eq!(plain.flows, slo.flows);
+        for (a, b) in plain.coflows.iter().zip(slo.coflows.iter()) {
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+            assert_eq!(a.flows, b.flows);
+            assert!(a.deadline.is_none());
+            let d = b.deadline.expect("full coverage assigns every coflow");
+            assert!(d > b.arrival, "deadline must lie after arrival");
+        }
+        // deterministic given the seed
+        let again = TraceSpec::fb_like(50, 60)
+            .seed(5)
+            .with_deadline_tightness(2.0)
+            .generate();
+        for (a, b) in slo.coflows.iter().zip(again.coflows.iter()) {
+            assert_eq!(a.deadline, b.deadline);
+        }
+    }
+
+    #[test]
+    fn tighter_model_yields_earlier_deadlines() {
+        let tight = TraceSpec::fb_like(40, 40)
+            .seed(3)
+            .with_deadlines(DeadlineModel { tightness: 1.2, spread: 0.0, coverage: 1.0 })
+            .generate();
+        let loose = TraceSpec::fb_like(40, 40)
+            .seed(3)
+            .with_deadlines(DeadlineModel { tightness: 4.0, spread: 0.0, coverage: 1.0 })
+            .generate();
+        for (a, b) in tight.coflows.iter().zip(loose.coflows.iter()) {
+            let (da, db) = (a.deadline.unwrap(), b.deadline.unwrap());
+            assert!(da <= db, "tightness 1.2 gave a later deadline than 4.0");
+        }
+    }
 }

@@ -17,9 +17,11 @@ mod format;
 mod generator;
 
 pub use format::{parse_trace, render_trace};
-pub use generator::{CoflowClass, TraceSpec};
+pub use generator::{CoflowClass, DeadlineModel, TraceSpec};
 
 use crate::coflow::{CoflowOracle, CoflowSpec, FlowSpec};
+use crate::fabric::Fabric;
+use crate::util::Rng;
 use crate::{Time, MB};
 use anyhow::Result;
 use std::path::Path;
@@ -60,6 +62,7 @@ impl Trace {
                 id: cid,
                 external_id: rec.external_id,
                 arrival: rec.arrival,
+                deadline: rec.deadline,
                 flows: flow_ids,
                 senders,
                 receivers,
@@ -130,8 +133,60 @@ impl Trace {
         TraceRecord {
             external_id: c.external_id,
             arrival: c.arrival,
+            deadline: c.deadline,
             mappers,
             reducers,
+        }
+    }
+
+    /// Attach per-coflow completion deadlines (SLO model, DCoflow-style —
+    /// arXiv 2205.01229): every covered coflow gets
+    /// `deadline = arrival + tightness × ideal CCT`, where the ideal CCT is
+    /// the coflow's bottleneck bound on `fabric` (max over its ports of the
+    /// bytes it must move through that port divided by the port's line
+    /// rate) and the tightness factor is drawn from `model`'s distribution.
+    /// Deadline assignment draws from its own seeded RNG, so the flows and
+    /// arrivals of the trace are **bit-identical** with and without
+    /// deadlines — deadline-blind schedulers cannot tell the difference.
+    pub fn assign_deadlines(&mut self, model: &DeadlineModel, fabric: &Fabric, seed: u64) {
+        assert_eq!(
+            fabric.num_ports, self.num_ports,
+            "deadline fabric must cover the trace's ports"
+        );
+        let mut rng = Rng::seed_from_u64(seed ^ 0xDEAD_11E5_C0F1_0035);
+        let mut up = vec![0.0f64; self.num_ports];
+        let mut down = vec![0.0f64; self.num_ports];
+        let mut touched: Vec<usize> = Vec::new();
+        for c in &mut self.coflows {
+            if !rng.chance(model.coverage) {
+                c.deadline = None;
+                continue;
+            }
+            let tightness = model.tightness * (1.0 + rng.f64() * model.spread);
+            for &fid in &c.flows {
+                let f = &self.flows[fid];
+                if up[f.src] == 0.0 {
+                    touched.push(f.src);
+                }
+                if down[f.dst] == 0.0 {
+                    touched.push(f.dst);
+                }
+                up[f.src] += f.size;
+                down[f.dst] += f.size;
+            }
+            let mut ideal: Time = 0.0;
+            for &p in c.senders.iter() {
+                ideal = ideal.max(up[p] / fabric.up_capacity[p].max(1.0));
+            }
+            for &p in c.receivers.iter() {
+                ideal = ideal.max(down[p] / fabric.down_capacity[p].max(1.0));
+            }
+            for &p in &touched {
+                up[p] = 0.0;
+                down[p] = 0.0;
+            }
+            touched.clear();
+            c.deadline = Some(c.arrival + tightness * ideal);
         }
     }
 
@@ -165,6 +220,10 @@ pub struct TraceRecord {
     pub external_id: u64,
     /// Arrival in seconds.
     pub arrival: Time,
+    /// Optional completion deadline in seconds (absolute, same clock as
+    /// `arrival`). `None` = no SLO; the trace format carries it behind an
+    /// optional `deadline:<ms>` column so deadline-free traces stay valid.
+    pub deadline: Option<Time>,
     pub mappers: Vec<usize>,
     /// (reducer port, total bytes received by that reducer).
     pub reducers: Vec<(usize, f64)>,
@@ -176,9 +235,16 @@ impl TraceRecord {
         TraceRecord {
             external_id,
             arrival,
+            deadline: None,
             mappers,
             reducers: reducer_ports.into_iter().map(|p| (p, reducer_mb * MB)).collect(),
         }
+    }
+
+    /// Builder-style deadline (absolute seconds).
+    pub fn with_deadline(mut self, deadline: Time) -> Self {
+        self.deadline = Some(deadline);
+        self
     }
 }
 
@@ -246,5 +312,35 @@ mod tests {
         assert_eq!(rec.mappers, vec![0, 1]);
         assert_eq!(rec.reducers.len(), 2);
         assert!((rec.reducers[0].1 - 10.0 * MB).abs() < 1e-3);
+        assert_eq!(rec.deadline, None);
+    }
+
+    #[test]
+    fn assign_deadlines_sets_tightness_times_bottleneck() {
+        let mut t = two_coflow_trace();
+        let fabric = crate::fabric::Fabric::gbps(4);
+        let model = DeadlineModel { tightness: 2.0, spread: 0.0, coverage: 1.0 };
+        t.assign_deadlines(&model, &fabric, 7);
+        // coflow 1: single 5 MB flow → ideal = 5 MB / 1 Gbps, arrival 1.0
+        let ideal = 5.0 * MB / crate::GBPS;
+        let d = t.coflows[1].deadline.expect("deadline assigned");
+        assert!((d - (1.0 + 2.0 * ideal)).abs() < 1e-9, "deadline {d}");
+        // coflow 0: 10 MB per reducer is the bottleneck
+        let ideal0 = 10.0 * MB / crate::GBPS;
+        let d0 = t.coflows[0].deadline.expect("deadline assigned");
+        assert!((d0 - 2.0 * ideal0).abs() < 1e-9, "deadline {d0}");
+        // deadlines survive the record round-trip (replicate/wide_only path)
+        let rec = t.record_of(&t.coflows[0]);
+        assert_eq!(rec.deadline, t.coflows[0].deadline);
+        let rebuilt = Trace::from_records(4, vec![rec]);
+        assert_eq!(rebuilt.coflows[0].deadline, t.coflows[0].deadline);
+    }
+
+    #[test]
+    fn assign_deadlines_coverage_zero_leaves_trace_slo_free() {
+        let mut t = two_coflow_trace();
+        let model = DeadlineModel { tightness: 2.0, spread: 0.5, coverage: 0.0 };
+        t.assign_deadlines(&model, &crate::fabric::Fabric::gbps(4), 7);
+        assert!(t.coflows.iter().all(|c| c.deadline.is_none()));
     }
 }

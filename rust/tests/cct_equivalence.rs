@@ -11,9 +11,9 @@
 //! quality for coordinator scalability and is CCT-*bounded* rather than
 //! pinned.
 
-use philae::coordinator::{SchedulerConfig, SchedulerKind};
-use philae::sim::{SimConfig, Simulation};
-use philae::trace::TraceSpec;
+use philae::coordinator::{DeadlineMode, SchedulerConfig, SchedulerKind};
+use philae::sim::{SimConfig, SimResult, Simulation};
+use philae::trace::{Trace, TraceSpec};
 
 fn assert_bit_identical(ports: usize, coflows: usize, kind: SchedulerKind) {
     let trace = TraceSpec::fb_like(ports, coflows).seed(5).generate();
@@ -76,7 +76,7 @@ fn aalo_ccts_bit_identical_900_ports() {
 #[test]
 fn remaining_schedulers_bit_identical_on_small_trace() {
     // philae and aalo get the dedicated large-scenario tests above; this
-    // covers the other seven of the nine kinds.
+    // covers the other eight of the ten kinds.
     for &kind in &[
         SchedulerKind::Saath,
         SchedulerKind::Fifo,
@@ -85,8 +85,70 @@ fn remaining_schedulers_bit_identical_on_small_trace() {
         SchedulerKind::PhilaeLcb,
         SchedulerKind::PhilaeEc1,
         SchedulerKind::PhilaeEcMulti,
+        SchedulerKind::Dcoflow,
     ] {
         assert_bit_identical(50, 60, kind);
+    }
+}
+
+/// Run one simulation under `cfg` variants for the deadline-off pin.
+fn run_once(trace: &Trace, kind: SchedulerKind, cfg: &SchedulerConfig) -> SimResult {
+    let base = SimConfig { account_delta: Some(1e18), ..SimConfig::default() };
+    let mut sched = kind.build(trace, cfg);
+    Simulation::run_with(trace, sched.as_mut(), cfg, &base)
+}
+
+fn assert_same_history(a: &SimResult, b: &SimResult, what: &str) {
+    assert_eq!(a.ccts.len(), b.ccts.len(), "{what}: coflow counts");
+    for (i, (x, y)) in a.ccts.iter().zip(b.ccts.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: coflow {i} CCT {x} != {y}");
+    }
+    assert_eq!(a.rate_calcs, b.rate_calcs, "{what}: reallocation counts");
+    assert_eq!(a.rate_msgs, b.rate_msgs, "{what}: rate message counts");
+    assert_eq!(a.update_msgs, b.update_msgs, "{what}: update counts");
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{what}: makespan");
+}
+
+/// Deadline-off pin (the PR's "don't perturb the existing family" bar):
+/// on a trace with **no deadlines**, the entire deadline plumbing —
+/// `DeadlineMode::Secondary` keys included — must be invisible: every
+/// scheduler's event history is bit-identical between `Ignore` and
+/// `Secondary`.
+#[test]
+fn deadline_mode_is_identity_without_deadlines() {
+    let trace = TraceSpec::fb_like(50, 60).seed(5).generate();
+    for &kind in SchedulerKind::all() {
+        let ignore = run_once(&trace, kind, &SchedulerConfig::default());
+        let mut cfg = SchedulerConfig::default();
+        cfg.deadline_mode = DeadlineMode::Secondary;
+        let secondary = run_once(&trace, kind, &cfg);
+        assert_same_history(&ignore, &secondary, kind.as_str());
+        assert_eq!(ignore.deadline.with_deadline, 0);
+        assert_eq!(ignore.deadline.met_ratio(), 1.0, "SLO-free run is vacuously met");
+    }
+}
+
+/// Deadline-*presence* pin: the SLO model assigns deadlines from its own
+/// RNG stream (flows/arrivals untouched), so every **deadline-blind**
+/// scheduler (default `Ignore` mode) must produce a bit-identical event
+/// history on the deadline-carrying twin of a trace.
+#[test]
+fn deadline_presence_is_invisible_to_blind_schedulers() {
+    let plain = TraceSpec::fb_like(50, 60).seed(5).generate();
+    let slo = TraceSpec::fb_like(50, 60)
+        .seed(5)
+        .with_deadline_tightness(2.0)
+        .generate();
+    for &kind in SchedulerKind::all() {
+        if kind == SchedulerKind::Dcoflow {
+            continue; // deadline-aware by design
+        }
+        let cfg = SchedulerConfig::default();
+        let a = run_once(&plain, kind, &cfg);
+        let b = run_once(&slo, kind, &cfg);
+        assert_same_history(&a, &b, kind.as_str());
+        // ...while the SLO accounting still sees the deadlines
+        assert_eq!(b.deadline.with_deadline, slo.coflows.len());
     }
 }
 
@@ -248,4 +310,32 @@ fn philae_batched_admission_cct_equivalent_under_report_jitter() {
 #[test]
 fn aalo_batched_admission_cct_equivalent_under_report_jitter() {
     assert_batched_equals_per_event(60, 80, SchedulerKind::Aalo, 0.05);
+}
+
+/// The deadline subsystem through the batching/cluster pipes: on a
+/// deadline-carrying trace, dcoflow's batched admission must reproduce the
+/// per-event history bit for bit, and the K=1 cluster must be a
+/// transparent pass-through (admission counters included).
+#[test]
+fn dcoflow_batched_and_cluster_k1_bit_identical_with_deadlines() {
+    let trace = TraceSpec::fb_like(60, 80)
+        .seed(5)
+        .with_deadline_tightness(2.0)
+        .generate();
+    let cfg = SchedulerConfig::default();
+    let base = SimConfig { account_delta: Some(1e18), ..SimConfig::default() };
+
+    let mut s1 = SchedulerKind::Dcoflow.build(&trace, &cfg);
+    let batched = Simulation::run_with(&trace, s1.as_mut(), &cfg, &base);
+
+    let per_event_cfg = SimConfig { per_event_admission: true, ..base.clone() };
+    let mut s2 = SchedulerKind::Dcoflow.build(&trace, &cfg);
+    let per_event = Simulation::run_with(&trace, s2.as_mut(), &cfg, &per_event_cfg);
+    assert_same_history(&batched, &per_event, "dcoflow batched vs per-event");
+    assert_eq!(batched.deadline, per_event.deadline, "SLO accounting diverged");
+
+    let cluster_cfg = SimConfig { coordinators: 1, ..base };
+    let clustered = Simulation::run_cluster(&trace, SchedulerKind::Dcoflow, &cfg, &cluster_cfg);
+    assert_same_history(&batched, &clustered, "dcoflow single vs cluster K=1");
+    assert_eq!(batched.deadline, clustered.deadline, "K=1 SLO accounting diverged");
 }

@@ -1,0 +1,225 @@
+//! Property tests of the deadline subsystem's **admission certificate**
+//! (`coordinator/dcoflow.rs`):
+//!
+//! 1. *Admitted coflows never expire* — an admitted coflow's feasibility
+//!    certificate (its reserved per-port rates fit under capacity)
+//!    continues to hold because later admissions can only claim leftover
+//!    reservation room; under EDF + work-conserving greedy allocation the
+//!    coflow then finishes by its deadline.
+//! 2. *Rejected coflows never block admitted ones* — rejected coflows hold
+//!    no reservation and sit behind every admitted coflow in the plan, so
+//!    removing them from the schedule entirely (the `without_background`
+//!    hook) must leave the admitted coflows' CCTs bit-identical.
+//!
+//! Both properties are exercised on seeded random SLO workloads and on a
+//! hand-built contention scenario, and the expiry/consistency invariants
+//! additionally run through the K=2 multi-coordinator cluster (leased
+//! capacity, hash routing, migration hooks).
+
+use philae::coordinator::{
+    AdmissionState, DcoflowScheduler, SchedulerConfig, SchedulerKind,
+};
+use philae::sim::{SimConfig, Simulation};
+use philae::trace::{DeadlineModel, Trace, TraceRecord, TraceSpec};
+use philae::{GBPS, MB};
+
+fn sim_cfg() -> SimConfig {
+    // neutralize the §4.3 wall-time tick coupling for determinism
+    SimConfig { account_delta: Some(1e18), ..SimConfig::default() }
+}
+
+fn slo_trace(ports: usize, coflows: usize, tightness: f64, seed: u64) -> Trace {
+    TraceSpec::tiny(ports, coflows)
+        .seed(seed)
+        .with_deadlines(DeadlineModel { tightness, spread: 0.5, coverage: 0.8 })
+        .generate()
+}
+
+/// Property 1: every coflow the controller admitted (and whose certificate
+/// therefore held for its whole life) finishes by its deadline.
+#[test]
+fn admitted_coflows_never_expire_single_coordinator() {
+    let cfg = SchedulerConfig::default();
+    for seed in [1u64, 2, 3, 4, 5] {
+        let trace = slo_trace(10, 16, 3.0, seed);
+        let mut sched = DcoflowScheduler::new();
+        let res = Simulation::run_with(&trace, &mut sched, &cfg, &sim_cfg());
+        let mut admitted = 0;
+        let mut rejected = 0;
+        for (cid, c) in trace.coflows.iter().enumerate() {
+            let Some(d) = c.deadline else { continue };
+            match sched.status_of(cid) {
+                AdmissionState::Admitted => {
+                    admitted += 1;
+                    let finished = c.arrival + res.ccts[cid];
+                    assert!(
+                        finished <= d + 1e-6,
+                        "seed {seed}: admitted coflow {cid} missed its deadline \
+                         (finished {finished:.4} > {d:.4})"
+                    );
+                }
+                AdmissionState::Expired => {
+                    panic!("seed {seed}: admitted coflow {cid} expired")
+                }
+                AdmissionState::Rejected => rejected += 1,
+                s => panic!("seed {seed}: deadline coflow {cid} in state {s:?}"),
+            }
+        }
+        // counters line up with the per-coflow verdicts
+        assert_eq!(res.deadline.expired, 0, "seed {seed}");
+        assert_eq!(res.deadline.admitted, admitted, "seed {seed}");
+        assert_eq!(res.deadline.rejected, rejected, "seed {seed}");
+        assert_eq!(
+            (admitted + rejected) as usize,
+            res.deadline.with_deadline,
+            "seed {seed}: every deadline coflow gets exactly one verdict"
+        );
+        // met ratio covers at least the admitted set
+        assert!(res.deadline.met as u64 >= admitted, "seed {seed}");
+        // all coflows (incl. rejected, at background priority) finish
+        assert!(res.ccts.iter().all(|c| c.is_finite() && *c > 0.0), "seed {seed}");
+    }
+}
+
+/// Property 1 under the K=2 cluster: independent per-shard admission over
+/// leased capacity (plus migration detach/attach) must still produce zero
+/// expiries on a workload with SLO headroom, and every coflow finishes.
+#[test]
+fn admitted_coflows_never_expire_two_coordinators() {
+    let cfg = SchedulerConfig::default();
+    for seed in [1u64, 2, 3] {
+        let trace = TraceSpec::tiny(12, 20)
+            .with_load_factor(0.5) // halve load: leases keep ample headroom
+            .seed(seed)
+            .with_deadlines(DeadlineModel { tightness: 6.0, spread: 0.5, coverage: 0.8 })
+            .generate();
+        let cluster_cfg = SimConfig { coordinators: 2, ..sim_cfg() };
+        let res = Simulation::run_cluster(&trace, SchedulerKind::Dcoflow, &cfg, &cluster_cfg);
+        assert_eq!(
+            res.deadline.expired, 0,
+            "seed {seed}: an admitted coflow expired under K=2"
+        );
+        assert!(
+            res.deadline.admitted >= res.deadline.met as u64 / 2,
+            "seed {seed}: admission collapsed ({} admitted, {} met)",
+            res.deadline.admitted,
+            res.deadline.met
+        );
+        assert!(res.ccts.iter().all(|c| c.is_finite() && *c > 0.0), "seed {seed}");
+    }
+}
+
+/// Property 2, deterministic scenario: B is rejected (A's reservation
+/// saturates the shared uplink); dropping B from the schedule entirely
+/// must not move A's or C's completion by a single bit.
+#[test]
+fn rejected_coflow_never_blocks_admitted_deterministic() {
+    let records = vec![
+        // A: 125 MB over (0→1), deadline 1.2 s → reserves ~0.83 Gbps
+        TraceRecord::uniform(1, 0.0, vec![0], vec![1], 125.0).with_deadline(1.2),
+        // B: same pair, needs ~0.84 Gbps by 1.5 s → rejected
+        TraceRecord::uniform(2, 0.01, vec![0], vec![1], 125.0).with_deadline(1.5),
+        // C: disjoint pair, loose deadline → admitted
+        TraceRecord::uniform(3, 0.02, vec![2], vec![3], 125.0).with_deadline(5.0),
+    ];
+    let trace = Trace::from_records(4, records);
+    let cfg = SchedulerConfig::default();
+
+    let mut bg = DcoflowScheduler::new();
+    let with_bg = Simulation::run_with(&trace, &mut bg, &cfg, &sim_cfg());
+    let mut hard = DcoflowScheduler::new().without_background();
+    let without_bg = Simulation::run_with(&trace, &mut hard, &cfg, &sim_cfg());
+
+    assert_eq!(bg.status_of(0), AdmissionState::Admitted);
+    assert_eq!(bg.status_of(1), AdmissionState::Rejected);
+    assert_eq!(bg.status_of(2), AdmissionState::Admitted);
+    // both runs must agree on the verdicts
+    for cid in 0..3 {
+        assert_eq!(bg.status_of(cid), hard.status_of(cid), "coflow {cid}");
+    }
+
+    // admitted coflows: identical to the bit with and without B running
+    for cid in [0usize, 2] {
+        assert_eq!(
+            with_bg.ccts[cid].to_bits(),
+            without_bg.ccts[cid].to_bits(),
+            "coflow {cid} perturbed by the rejected coflow"
+        );
+        let c = &trace.coflows[cid];
+        assert!(c.arrival + with_bg.ccts[cid] <= c.deadline.unwrap() + 1e-6);
+    }
+    // with the background lane, B still completes (work conservation):
+    // A finishes its 1 s of work, then B runs 0.01→... and misses 1.5 s
+    assert!(with_bg.ccts[1].is_finite());
+    assert!(
+        trace.coflows[1].arrival + with_bg.ccts[1] > 1.5,
+        "B should miss its deadline from the background lane"
+    );
+    // without the background lane, B never runs at all
+    assert!(without_bg.ccts[1].is_nan());
+    assert_eq!(with_bg.deadline.met, 2);
+    assert_eq!(with_bg.deadline.missed, 1);
+    // A exactly: 125 MB at 1 Gbps = 1 s
+    assert!((with_bg.ccts[0] - 125.0 * MB / GBPS).abs() < 1e-6);
+}
+
+/// Property 2, randomized: whenever a seeded SLO workload produces zero
+/// expiries, dropping every rejected coflow from the plan leaves all
+/// admitted/best-effort CCTs bit-identical (expiry-free guard: an expiry's
+/// *detection time* depends on background-completion events, so histories
+/// with expiries are legitimately allowed to differ).
+#[test]
+fn rejected_coflows_never_block_admitted_randomized() {
+    let cfg = SchedulerConfig::default();
+    let mut compared = 0;
+    for seed in [1u64, 2, 3, 4, 5, 6] {
+        let trace = slo_trace(8, 14, 2.0, seed);
+        let mut bg = DcoflowScheduler::new();
+        let with_bg = Simulation::run_with(&trace, &mut bg, &cfg, &sim_cfg());
+        if with_bg.deadline.expired > 0 {
+            continue;
+        }
+        let mut hard = DcoflowScheduler::new().without_background();
+        let without_bg = Simulation::run_with(&trace, &mut hard, &cfg, &sim_cfg());
+        for cid in 0..trace.coflows.len() {
+            let status = bg.status_of(cid);
+            assert_eq!(status, hard.status_of(cid), "seed {seed}: verdicts diverged");
+            if matches!(status, AdmissionState::Admitted | AdmissionState::BestEffort) {
+                assert_eq!(
+                    with_bg.ccts[cid].to_bits(),
+                    without_bg.ccts[cid].to_bits(),
+                    "seed {seed}: coflow {cid} perturbed by background traffic"
+                );
+                compared += 1;
+            }
+        }
+    }
+    assert!(compared > 0, "no expiry-free seed produced comparable runs");
+}
+
+/// The certificate itself: later admissions can never steal an earlier
+/// coflow's reserved share — the controller turns them away instead.
+#[test]
+fn later_admissions_cannot_steal_reserved_share() {
+    let records = vec![
+        // reserves 100 MB / 1 s = 0.8 of the uplink
+        TraceRecord::uniform(1, 0.0, vec![0], vec![1], 100.0).with_deadline(1.0),
+        // wants 100 MB / 2 s = 0.4 more → 1.2 > capacity → rejected
+        TraceRecord::uniform(2, 0.0, vec![0], vec![2], 100.0).with_deadline(2.0),
+        // wants 100 MB / 4.75 s ≈ 0.17 → fits in the leftover → admitted
+        TraceRecord::uniform(3, 0.25, vec![0], vec![3], 100.0).with_deadline(5.0),
+    ];
+    let trace = Trace::from_records(4, records);
+    let cfg = SchedulerConfig::default();
+    let mut sched = DcoflowScheduler::new();
+    let res = Simulation::run_with(&trace, &mut sched, &cfg, &sim_cfg());
+    assert_eq!(sched.status_of(0), AdmissionState::Admitted);
+    assert_eq!(sched.status_of(1), AdmissionState::Rejected);
+    assert_eq!(sched.status_of(2), AdmissionState::Admitted);
+    // both admitted coflows meet their deadlines
+    for cid in [0usize, 2] {
+        let c = &trace.coflows[cid];
+        assert!(c.arrival + res.ccts[cid] <= c.deadline.unwrap() + 1e-6, "coflow {cid}");
+    }
+    assert_eq!(res.deadline.expired, 0);
+}

@@ -4,7 +4,7 @@
 
 use philae::coordinator::SchedulerKind;
 use philae::service::{run_service, ServiceConfig};
-use philae::trace::TraceSpec;
+use philae::trace::{DeadlineModel, TraceSpec};
 
 fn svc(kind: SchedulerKind) -> ServiceConfig {
     // `..default()` keeps `alloc_shards` on `rate::env_test_shards()`, so
@@ -58,6 +58,47 @@ fn aalo_service_completes_and_reports_intervals() {
     assert!(report.intervals.intervals > 0, "no busy intervals recorded");
     // Aalo gets byte updates on top of completions
     assert!(report.update_msgs as usize > trace.flows.len());
+}
+
+#[test]
+fn full_scheduler_registry_completes_trace() {
+    // the serve surface accepts every registry kind, not just philae/aalo
+    for kind in [
+        SchedulerKind::Sebf,
+        SchedulerKind::Scf,
+        SchedulerKind::Fifo,
+        SchedulerKind::Saath,
+        SchedulerKind::Dcoflow,
+    ] {
+        let trace = TraceSpec::tiny(6, 8).seed(13).generate();
+        let report = run_service(&trace, &svc(kind)).expect("service run");
+        assert_eq!(report.scheduler, kind.build(&trace, &Default::default()).name());
+        for (i, &cct) in report.ccts.iter().enumerate() {
+            assert!(
+                cct.is_finite() && cct > 0.0,
+                "{kind:?}: coflow {i} unfinished: {cct}"
+            );
+        }
+        assert!(report.rate_calcs > 0, "{kind:?}");
+    }
+}
+
+#[test]
+fn dcoflow_service_reports_slo_accounting() {
+    // loose SLOs on a small trace: every coflow carries a deadline, the
+    // admission controller sees them all, and nothing expires
+    let trace = TraceSpec::tiny(6, 8)
+        .seed(14)
+        .with_deadlines(DeadlineModel { tightness: 50.0, spread: 0.5, coverage: 1.0 })
+        .generate();
+    let report = run_service(&trace, &svc(SchedulerKind::Dcoflow)).expect("service run");
+    assert_eq!(report.deadline.with_deadline, trace.coflows.len());
+    assert_eq!(
+        report.deadline.admitted + report.deadline.rejected,
+        trace.coflows.len() as u64,
+        "every deadline coflow gets a verdict"
+    );
+    assert!(report.ccts.iter().all(|c| c.is_finite() && *c > 0.0));
 }
 
 #[test]
