@@ -1,0 +1,169 @@
+//! §Robustness bench of **coordinator crash-failover**
+//! (`coordinator/recovery.rs`): what does surviving a coordinator crash
+//! cost?
+//!
+//! Four measurements:
+//!
+//! 1. **Exact-restore overhead** — a full Philae simulation that seals a
+//!    checkpoint and rebuilds the coordinator from it every N events,
+//!    asserted bit-identical to the uninterrupted run, vs the plain run's
+//!    wall time. This prices the strongest recovery mode end to end.
+//! 2. **Checkpoint / restore micro-latency** — mean milliseconds to seal a
+//!    full K-shard cluster checkpoint and to kill-and-restore one shard
+//!    from it, on a 900-port FB-like fabric mid-run. This is the latency a
+//!    live supervisor would pay per crash.
+//! 3. **Chaos CCT cost** — mean CCT of a cluster run with the chaos driver
+//!    killing shards mid-flight, as a ratio of the crash-free baseline
+//!    (higher is better; 1.0 = crashes are free). The crash model loses
+//!    learned scheduler state, never bytes in flight, so this measures the
+//!    re-learning cost alone.
+//! 4. **Live-service recovery latency** — mean wall milliseconds per
+//!    recovery (scheduler rebuild + first reallocation) in the threaded
+//!    service under injected crashes.
+//!
+//! Emits machine-readable `BENCH_recovery.json` at the repo root; CI runs
+//! a 1-iteration smoke and `bench_gate` holds conservative floors on the
+//! chaos CCT ratio and the restore overhead ratio.
+//!
+//! `cargo bench --bench bench_recovery`
+
+mod common;
+
+use philae::coordinator::{ClusterConfig, CoordinatorCluster, SchedulerConfig, SchedulerKind};
+use philae::service::{run_service, ServiceConfig};
+use philae::sim::{world_from_trace, SimConfig, Simulation};
+use philae::trace::TraceSpec;
+
+fn main() {
+    common::banner("recovery", "crash-failover: checkpoint/restore latency and chaos CCT cost");
+    let cfg = SchedulerConfig::default();
+    let iters = common::iters(3);
+    println!("iters: {iters}\n");
+
+    // ---- 1. exact-restore overhead, end to end -------------------------
+    // Philae only: event-triggered (no δ ticks), so measured wall time
+    // never couples into the event history and the restored run is
+    // bit-comparable to the plain one (same reasoning as bench_cluster).
+    let kind = SchedulerKind::Philae;
+    let trace = TraceSpec::fb_like(300, 300).seed(5).generate();
+    let sim_cfg = SimConfig::default();
+    let every = 200u64;
+
+    let mut plain_slot = None;
+    let (plain_wall, _) = common::time_it(iters, || {
+        let mut sched = kind.build(&trace, &cfg);
+        plain_slot = Some(Simulation::run_with(&trace, sched.as_mut(), &cfg, &sim_cfg));
+    });
+    let plain = plain_slot.expect("plain run");
+
+    let mut restored_slot = None;
+    let (restore_wall, _) = common::time_it(iters, || {
+        restored_slot = Some(Simulation::run_with_restore(&trace, kind, &cfg, &sim_cfg, every));
+    });
+    let (restored, restores) = restored_slot.expect("restored run");
+    assert!(restores > 0, "crash injection never fired");
+    for (i, (a, b)) in plain.ccts.iter().zip(restored.ccts.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "restored run diverged from plain at coflow {i}");
+    }
+    let wall_ratio = plain_wall / restore_wall.max(1e-9);
+    println!(
+        "exact restore  300 ports: plain {:>7.3} s | restore-every-{} {:>7.3} s ({} restores) | wall ratio {:.3}",
+        plain_wall, every, restore_wall, restores, wall_ratio
+    );
+
+    // ---- 2. checkpoint / restore micro-latency -------------------------
+    let big = TraceSpec::fb_like(900, 600).seed(5).generate();
+    let k = 4usize;
+    let mut world = world_from_trace(&big);
+    let ccfg = ClusterConfig { coordinators: k, ..ClusterConfig::default() };
+    let mut cluster = CoordinatorCluster::new(kind, &big, &cfg, ccfg);
+    for cid in 0..big.coflows.len() {
+        world.active.push(cid);
+        cluster.on_arrival(cid, &mut world);
+    }
+    cluster.compute(&mut world, false);
+
+    let reps = 10usize;
+    let mut ckpt = String::new();
+    let (_, ckpt_mean_s) = common::time_it(reps, || {
+        ckpt = cluster.checkpoint(&mut world);
+    });
+    let ckpt_bytes = ckpt.len();
+    let mut victim = 0usize;
+    let (_, restore_mean_s) = common::time_it(reps, || {
+        let restored = cluster.kill_and_restore_shard(victim, &big, &cfg, Some(&ckpt), &mut world);
+        restored.expect("restore from a self-sealed checkpoint");
+        victim = (victim + 1) % k;
+    });
+    let ckpt_ms = ckpt_mean_s * 1e3;
+    let restore_ms = restore_mean_s * 1e3;
+    println!(
+        "micro-latency  900 ports K={k}: checkpoint {:>7.3} ms ({} KiB) | shard restore {:>7.3} ms",
+        ckpt_ms,
+        ckpt_bytes / 1024,
+        restore_ms
+    );
+
+    // ---- 3. chaos CCT cost ---------------------------------------------
+    let mid = TraceSpec::fb_like(120, 200).seed(5).generate();
+    let chaos_k = 4usize;
+    let mut baseline = CoordinatorCluster::with_coordinators(chaos_k, kind, &mid, &cfg);
+    let base = Simulation::run_with_cluster(&mid, &mut baseline, &cfg, &sim_cfg);
+    let mut chaotic = CoordinatorCluster::with_coordinators(chaos_k, kind, &mid, &cfg);
+    chaotic.set_chaos(&mid, &cfg, 4, 6, 42);
+    let res = Simulation::run_with_cluster(&mid, &mut chaotic, &cfg, &sim_cfg);
+    assert!(chaotic.chaos_kills() > 0, "chaos never fired");
+    assert!(res.ccts.iter().all(|c| c.is_finite() && *c > 0.0), "unfinished under chaos");
+    let base_mean = base.ccts.iter().sum::<f64>() / base.ccts.len() as f64;
+    let chaos_mean = res.ccts.iter().sum::<f64>() / res.ccts.len() as f64;
+    let cct_ratio = base_mean / chaos_mean.max(1e-12);
+    println!(
+        "chaos CCT      120 ports K={chaos_k}: baseline mean {:>9.4} s | chaos mean {:>9.4} s ({} kills, {} ckpts) | ratio {:.3}",
+        base_mean,
+        chaos_mean,
+        chaotic.chaos_kills(),
+        chaotic.chaos_checkpoints(),
+        cct_ratio
+    );
+
+    // ---- 4. live-service recovery latency ------------------------------
+    let svc_trace = TraceSpec::tiny(10, 20).seed(21).generate();
+    let svc_cfg = ServiceConfig {
+        kind,
+        coordinators: 2,
+        time_scale: 200.0,
+        checkpoint_every: 2,
+        chaos_kill_every: 3,
+        ..ServiceConfig::default()
+    };
+    let report = run_service(&svc_trace, &svc_cfg).expect("chaos service run");
+    assert!(report.crashes_injected > 0, "service chaos never fired");
+    assert_eq!(report.recoveries, report.crashes_injected, "a crash went unrecovered");
+    let recovery_ms = report.recovery_wall.mean() * 1e3;
+    println!(
+        "service        K=2: {} crashes -> {} recoveries | {:>7.3} ms mean recovery ({} checkpoints)",
+        report.crashes_injected, report.recoveries, recovery_ms, report.checkpoints_written
+    );
+
+    // ---- machine-readable ----------------------------------------------
+    let json = format!(
+        "{{\n  \"bench\": \"recovery\",\n  \"iters\": {iters},\n  \
+         \"single\": {{\"ports\": 300, \"coflows\": 300, \"restore_every_events\": {every}, \
+         \"plain_wall_s\": {plain_wall:.6}, \"restore_wall_s\": {restore_wall:.6}, \
+         \"restores\": {restores}, \"wall_ratio_vs_plain\": {wall_ratio:.4}}},\n  \
+         \"micro\": {{\"ports\": 900, \"coflows\": 600, \"k\": {k}, \
+         \"checkpoint_ms_mean\": {ckpt_ms:.4}, \"restore_ms_mean\": {restore_ms:.4}, \
+         \"checkpoint_bytes\": {ckpt_bytes}}},\n  \
+         \"chaos\": {{\"ports\": 120, \"coflows\": 200, \"k\": {chaos_k}, \
+         \"kills\": {kills}, \"checkpoints\": {ckpts}, \
+         \"cct_ratio_vs_baseline\": {cct_ratio:.4}}},\n  \
+         \"service\": {{\"crashes\": {crashes}, \"recoveries\": {recoveries}, \
+         \"recovery_ms_mean\": {recovery_ms:.4}, \"checkpoints_written\": {cw}}}\n}}\n",
+        kills = chaotic.chaos_kills(),
+        ckpts = chaotic.chaos_checkpoints(),
+        crashes = report.crashes_injected,
+        recoveries = report.recoveries,
+        cw = report.checkpoints_written,
+    );
+    common::write_json("BENCH_recovery.json", &json);
+}

@@ -11,8 +11,8 @@
 //! be lost with `update_loss_prob`, the Table 5 network-error knob).
 
 use super::{EventBatch, OrderEntry, Plan, Reaction, Scheduler, SchedulerConfig, World};
+use crate::util::{JsonValue, Rng};
 use crate::{Bytes, CoflowId, FlowId, Time};
-use crate::util::Rng;
 
 /// Sorted-order key: `(queue, deadline key, qseq, cid)`. The deadline key
 /// is `+∞` outside [`DeadlineMode::Secondary`]
@@ -261,6 +261,68 @@ impl Scheduler for AaloScheduler {
         self.queue_seq[cid] = self.next_queue_seq;
         self.next_queue_seq += 1;
         Reaction::Reallocate
+    }
+
+    /// Durable facts: the coordinator's (possibly stale) seen-bytes view,
+    /// each coflow's FIFO position within its queue, the sequence counter,
+    /// the loss-model RNG position, and the Table 1/3 accounting counters.
+    fn export_state(&self) -> JsonValue {
+        use super::recovery::{f64_to_json, u64_to_json};
+        let mut per = std::collections::BTreeMap::new();
+        // every slot is exported: (0, 0.0) is indistinguishable from the
+        // legitimate state of the first coflow, which must still overwrite
+        // the fresh FIFO position the attach pass assigned it
+        for cid in 0..self.bytes_seen.len() {
+            let mut e = std::collections::BTreeMap::new();
+            e.insert("bytes_seen".to_string(), f64_to_json(self.bytes_seen[cid]));
+            e.insert("queue_seq".to_string(), u64_to_json(self.queue_seq[cid]));
+            per.insert(cid.to_string(), JsonValue::Object(e));
+        }
+        let mut doc = std::collections::BTreeMap::new();
+        doc.insert("coflows".to_string(), JsonValue::Object(per));
+        doc.insert("next_queue_seq".to_string(), u64_to_json(self.next_queue_seq));
+        doc.insert("updates_received".to_string(), u64_to_json(self.updates_received));
+        doc.insert("queue_moves".to_string(), u64_to_json(self.queue_moves));
+        doc.insert("rng".to_string(), u64_to_json(self.rng.state()));
+        JsonValue::Object(doc)
+    }
+
+    /// Exact restores overwrite wholesale — undoing the fresh FIFO
+    /// positions the attach pass assigned — for bit-identity with the
+    /// uninterrupted run. Stale checkpoints are ignored: entering the back
+    /// of the earned queue's FIFO is precisely the documented migration
+    /// semantics, and the attach pass already re-read the byte counts.
+    fn import_state(&mut self, state: &JsonValue, _world: &World, exact: bool) {
+        use super::recovery::{f64_from_json, u64_from_json};
+        if !exact {
+            return;
+        }
+        if let Some(per) = state.get("coflows").and_then(|v| v.as_object()) {
+            for (key, e) in per {
+                let Ok(cid) = key.parse::<CoflowId>() else {
+                    continue;
+                };
+                self.ensure(cid);
+                if let Some(b) = e.get("bytes_seen").and_then(f64_from_json) {
+                    self.bytes_seen[cid] = b;
+                }
+                if let Some(qs) = e.get("queue_seq").and_then(u64_from_json) {
+                    self.queue_seq[cid] = qs;
+                }
+            }
+        }
+        if let Some(x) = state.get("next_queue_seq").and_then(u64_from_json) {
+            self.next_queue_seq = x;
+        }
+        if let Some(x) = state.get("updates_received").and_then(u64_from_json) {
+            self.updates_received = x;
+        }
+        if let Some(x) = state.get("queue_moves").and_then(u64_from_json) {
+            self.queue_moves = x;
+        }
+        if let Some(x) = state.get("rng").and_then(u64_from_json) {
+            self.rng = Rng::from_state(x);
+        }
     }
 
     /// From-scratch oracle rebuild (see trait docs).

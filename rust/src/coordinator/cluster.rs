@@ -79,13 +79,39 @@
 //! dynamics); `benches/bench_cluster.rs` tracks the resulting events/sec
 //! and per-round allocation cost vs K at 900 and 5000 ports in
 //! `BENCH_cluster.json`.
+//!
+//! ## Crash-failover chaos
+//!
+//! A coordinator shard is soft state: everything it knows is either a
+//! durable scheduling fact (checkpointed by `coordinator/recovery.rs`) or
+//! rebuildable from the completed-flow record — the same split migration
+//! already exploits. [`CoordinatorCluster::checkpoint`] seals the K
+//! per-shard scheduler payloads;
+//! [`CoordinatorCluster::kill_and_restore_shard`] replaces one shard's
+//! scheduler with a restore (`exact = false`, the stale-merge path) while
+//! keeping the shard's *current* lease, ownership list, and in-flight
+//! batch routing — so lease conservation and unique ownership hold across
+//! the crash by construction, and only the scheduler's learned state pays
+//! the failover cost. [`set_chaos`](CoordinatorCluster::set_chaos) arms a
+//! periodic checkpoint + randomized shard-kill driver inside
+//! [`compute`](CoordinatorCluster::compute) so the existing engine loop
+//! (`Simulation::run_with_cluster`) doubles as the chaos harness;
+//! `tests/chaos_recovery.rs` asserts invariants and bounded CCT
+//! degradation under it. Full-cluster restores are intentionally *not*
+//! claimed bit-identical (a clean shard's last grants may outlive the
+//! checkpoint); exact-restore bit-identity is pinned on the
+//! single-coordinator path for every [`SchedulerKind`] instead.
 
+use super::recovery::{
+    checkpoint_scheduler, restore_scheduler, seal, u64_to_json, unseal, RecoveryError,
+};
 use super::{
     rate, AdmissionStats, EventBatch, Plan, Reaction, Scheduler, SchedulerConfig, SchedulerKind,
     World,
 };
 use crate::fabric::Fabric;
 use crate::trace::Trace;
+use crate::util::{JsonValue, Rng};
 use crate::{CoflowId, FlowId, Time};
 
 /// Owner sentinel: not (or no longer) assigned to any shard.
@@ -143,9 +169,29 @@ struct Shard {
     demand_down: Vec<f64>,
 }
 
+/// Periodic checkpoint + randomized shard-kill driver (module docs
+/// §Crash-failover chaos). Boxed off the hot path: `None` = chaos off.
+struct ChaosState {
+    /// Owned copies of the build inputs, so a kill can rebuild a shard's
+    /// scheduler mid-run without threading `&Trace` through the engine.
+    trace: Trace,
+    sched_cfg: SchedulerConfig,
+    rng: Rng,
+    /// Seal a full-cluster checkpoint every this many scheduling rounds
+    /// (0 = never; kills then restore by pure attach rebuild).
+    checkpoint_every: u64,
+    /// Kill-and-restore a random shard every this many rounds (0 = never).
+    kill_every: u64,
+    /// Most recent sealed checkpoint (the supervisor's in-memory copy).
+    last_ckpt: Option<String>,
+    kills: u64,
+    checkpoints: u64,
+}
+
 /// K coordinator shards over one fabric — see the module docs.
 pub struct CoordinatorCluster {
     cfg: ClusterConfig,
+    kind: SchedulerKind,
     shards: Vec<Shard>,
     /// Coflow → owning shard (`NONE` = unassigned / completed).
     owner: Vec<u32>,
@@ -167,6 +213,7 @@ pub struct CoordinatorCluster {
     demand_total: Vec<f64>,
     migrations: u64,
     reconciliations: u64,
+    chaos: Option<Box<ChaosState>>,
 }
 
 /// SplitMix64 finalizer — the coflow→shard router hash (shared with the
@@ -252,6 +299,7 @@ impl CoordinatorCluster {
             .collect();
         CoordinatorCluster {
             cfg,
+            kind,
             shards,
             owner: Vec::new(),
             dirty: vec![true; k],
@@ -266,6 +314,7 @@ impl CoordinatorCluster {
             demand_total: vec![0.0; k],
             migrations: 0,
             reconciliations: 0,
+            chaos: None,
         }
     }
 
@@ -311,6 +360,139 @@ impl CoordinatorCluster {
     /// Reconciliation rounds performed so far.
     pub fn reconciliations(&self) -> u64 {
         self.reconciliations
+    }
+
+    /// Arm the chaos driver: seal a full-cluster checkpoint every
+    /// `checkpoint_every` scheduling rounds and kill-and-restore a
+    /// uniformly random shard every `kill_every` rounds (0 disables either
+    /// leg). The driver runs inside [`compute`](Self::compute), so the
+    /// ordinary engine loop (`Simulation::run_with_cluster`) becomes the
+    /// chaos harness. K = 1 pass-through mode never reaches the driver.
+    pub fn set_chaos(
+        &mut self,
+        trace: &Trace,
+        sched_cfg: &SchedulerConfig,
+        checkpoint_every: u64,
+        kill_every: u64,
+        seed: u64,
+    ) {
+        self.chaos = Some(Box::new(ChaosState {
+            trace: trace.clone(),
+            sched_cfg: sched_cfg.clone(),
+            rng: Rng::seed_from_u64(seed),
+            checkpoint_every,
+            kill_every,
+            last_ckpt: None,
+            kills: 0,
+            checkpoints: 0,
+        }));
+    }
+
+    /// Shard kill-and-restores performed by the chaos driver.
+    pub fn chaos_kills(&self) -> u64 {
+        self.chaos.as_ref().map_or(0, |c| c.kills)
+    }
+
+    /// Checkpoints sealed by the chaos driver.
+    pub fn chaos_checkpoints(&self) -> u64 {
+        self.chaos.as_ref().map_or(0, |c| c.checkpoints)
+    }
+
+    /// Seal a full-cluster checkpoint: the K per-shard scheduler payloads
+    /// (each via [`checkpoint_scheduler`], against the shard's own active
+    /// view), the owner map, and the round counter. The sealed string is
+    /// what a supervisor would persist;
+    /// [`Self::kill_and_restore_shard`] consumes it.
+    pub fn checkpoint(&mut self, world: &mut World) -> String {
+        let mut shard_payloads = Vec::with_capacity(self.shards.len());
+        for sh in &mut self.shards {
+            std::mem::swap(&mut world.active, &mut sh.active);
+            shard_payloads.push(checkpoint_scheduler(self.kind, sh.sched.as_ref(), world));
+            std::mem::swap(&mut world.active, &mut sh.active);
+        }
+        let mut owner = Vec::with_capacity(self.owner.len());
+        for &o in &self.owner {
+            owner.push(if o == NONE { JsonValue::Null } else { JsonValue::Number(o as f64) });
+        }
+        let mut payload = std::collections::BTreeMap::new();
+        payload.insert("shards".to_string(), JsonValue::Array(shard_payloads));
+        payload.insert("owner".to_string(), JsonValue::Array(owner));
+        payload.insert("rounds".to_string(), u64_to_json(self.rounds));
+        seal(JsonValue::Object(payload))
+    }
+
+    /// Kill shard `s`'s scheduler and restore it — from its payload in the
+    /// sealed cluster checkpoint `ckpt` when one exists (the stale-merge
+    /// `exact = false` restore path: attach rebuild is primary, dcoflow
+    /// re-asserts checkpointed admission certificates), or by pure attach
+    /// rebuild when `ckpt` is `None` (a crash before the first
+    /// checkpoint). The shard's *current* lease, ownership list, and
+    /// demand observations are deliberately kept: per-port lease sums and
+    /// unique ownership — the [`check_invariants`](Self::check_invariants)
+    /// properties — therefore hold across the crash by construction.
+    pub fn kill_and_restore_shard(
+        &mut self,
+        s: usize,
+        trace: &Trace,
+        sched_cfg: &SchedulerConfig,
+        ckpt: Option<&str>,
+        world: &mut World,
+    ) -> Result<(), RecoveryError> {
+        let shard_payload = match ckpt {
+            Some(text) => {
+                let payload = unseal(text)?;
+                let shards = payload
+                    .get("shards")
+                    .and_then(|v| v.as_array())
+                    .ok_or(RecoveryError::Corrupt("cluster checkpoint lacks shards"))?;
+                shards
+                    .get(s)
+                    .cloned()
+                    .ok_or(RecoveryError::Corrupt("cluster checkpoint shard count mismatch"))?
+            }
+            None => {
+                // no checkpoint yet: a minimal payload drives the same
+                // restore path with nothing but the attach rebuild
+                let mut p = std::collections::BTreeMap::new();
+                p.insert("kind".to_string(), JsonValue::String(self.kind.as_str().to_string()));
+                p.insert("sched".to_string(), JsonValue::Null);
+                p.insert("coflows".to_string(), JsonValue::Array(Vec::new()));
+                JsonValue::Object(p)
+            }
+        };
+        let sh = &mut self.shards[s];
+        std::mem::swap(&mut world.active, &mut sh.active);
+        let restored = restore_scheduler(&shard_payload, trace, sched_cfg, world, false);
+        std::mem::swap(&mut world.active, &mut sh.active);
+        sh.sched = restored?;
+        self.dirty[s] = true;
+        Ok(())
+    }
+
+    /// One chaos step (called per scheduling round from `compute`):
+    /// checkpoint if due, then kill-and-restore a random shard if due. A
+    /// kill restores from the latest checkpoint — necessarily stale by up
+    /// to `checkpoint_every` rounds, which is exactly the staleness the
+    /// `exact = false` restore path is designed for.
+    fn run_chaos(&mut self, world: &mut World) {
+        let Some(mut chaos) = self.chaos.take() else { return };
+        if chaos.checkpoint_every > 0 && self.rounds % chaos.checkpoint_every == 0 {
+            chaos.last_ckpt = Some(self.checkpoint(world));
+            chaos.checkpoints += 1;
+        }
+        if chaos.kill_every > 0 && self.rounds % chaos.kill_every == 0 {
+            let s = (chaos.rng.next_u64() % self.shards.len() as u64) as usize;
+            self.kill_and_restore_shard(
+                s,
+                &chaos.trace,
+                &chaos.sched_cfg,
+                chaos.last_ckpt.as_deref(),
+                world,
+            )
+            .expect("restore from a self-sealed checkpoint");
+            chaos.kills += 1;
+        }
+        self.chaos = Some(chaos);
     }
 
     /// Aggregate admission-control counters across the K shards (`None`
@@ -572,6 +754,9 @@ impl CoordinatorCluster {
         self.rounds += 1;
         if self.cfg.reconcile_every > 0 && self.rounds % self.cfg.reconcile_every == 0 {
             self.reconcile(world);
+        }
+        if self.chaos.is_some() {
+            self.run_chaos(world);
         }
         let k = self.shards.len();
         for s in 0..k {
@@ -963,6 +1148,80 @@ mod tests {
         for s in 0..3 {
             assert!(!cluster.owned(s).is_empty(), "shard {s} got nothing");
         }
+    }
+
+    #[test]
+    fn shard_kill_and_restore_keeps_invariants_and_grants() {
+        let trace = TraceSpec::tiny(10, 20).seed(9).generate();
+        let cfg = SchedulerConfig::default();
+        let mut world = world_from_trace(&trace);
+        let mut cluster =
+            CoordinatorCluster::with_coordinators(3, SchedulerKind::Philae, &trace, &cfg);
+        for cid in 0..trace.coflows.len() {
+            world.active.push(cid);
+            cluster.on_arrival(cid, &mut world);
+        }
+        cluster.compute(&mut world, false);
+        let before = cluster.grants().len();
+        assert!(before > 0);
+        let ckpt = cluster.checkpoint(&mut world);
+        // kill every shard in turn, restoring each from the checkpoint
+        for s in 0..3 {
+            cluster
+                .kill_and_restore_shard(s, &trace, &cfg, Some(&ckpt), &mut world)
+                .unwrap();
+        }
+        cluster.check_invariants(&world);
+        cluster.compute(&mut world, false);
+        assert_eq!(cluster.grants().len(), before, "restored cluster lost grants");
+        // a crash before the first checkpoint: pure attach rebuild
+        cluster
+            .kill_and_restore_shard(1, &trace, &cfg, None, &mut world)
+            .unwrap();
+        cluster.check_invariants(&world);
+        cluster.compute(&mut world, false);
+        assert_eq!(cluster.grants().len(), before);
+    }
+
+    #[test]
+    fn kill_and_restore_rejects_tampered_checkpoint() {
+        let trace = TraceSpec::tiny(6, 8).seed(1).generate();
+        let cfg = SchedulerConfig::default();
+        let mut world = world_from_trace(&trace);
+        let mut cluster =
+            CoordinatorCluster::with_coordinators(2, SchedulerKind::Philae, &trace, &cfg);
+        for cid in 0..trace.coflows.len() {
+            world.active.push(cid);
+            cluster.on_arrival(cid, &mut world);
+        }
+        cluster.compute(&mut world, false);
+        let ckpt = cluster.checkpoint(&mut world).replace("philae", "phileo");
+        let err = cluster.kill_and_restore_shard(0, &trace, &cfg, Some(&ckpt), &mut world);
+        assert!(err.is_err(), "tampered checkpoint must be rejected");
+        // the failed restore must not have replaced the scheduler
+        cluster.compute(&mut world, false);
+        cluster.check_invariants(&world);
+    }
+
+    #[test]
+    fn chaos_driver_kills_and_restores_during_compute() {
+        let trace = TraceSpec::tiny(10, 20).seed(3).generate();
+        let cfg = SchedulerConfig::default();
+        let mut cfg_cluster = ClusterConfig::default();
+        cfg_cluster.coordinators = 2;
+        cfg_cluster.validate = true;
+        let mut world = world_from_trace(&trace);
+        let mut cluster = CoordinatorCluster::new(SchedulerKind::Philae, &trace, &cfg, cfg_cluster);
+        cluster.set_chaos(&trace, &cfg, 2, 3, 42);
+        for cid in 0..trace.coflows.len() {
+            world.active.push(cid);
+            cluster.on_arrival(cid, &mut world);
+            cluster.compute(&mut world, false);
+        }
+        assert!(cluster.chaos_checkpoints() > 0, "checkpoint leg never fired");
+        assert!(cluster.chaos_kills() > 0, "kill leg never fired");
+        cluster.check_invariants(&world);
+        assert!(!cluster.grants().is_empty());
     }
 
     #[test]

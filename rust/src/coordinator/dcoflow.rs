@@ -56,6 +56,7 @@
 //! construction.
 
 use super::{AdmissionStats, OrderEntry, Plan, Reaction, Scheduler, World};
+use crate::util::JsonValue;
 use crate::{Bytes, CoflowId, FlowId, PortId, Time, EPS};
 
 /// Where a coflow stands with the admission controller.
@@ -75,6 +76,27 @@ pub enum AdmissionState {
     Expired,
 }
 
+fn state_str(s: AdmissionState) -> &'static str {
+    match s {
+        AdmissionState::Unknown => "unknown",
+        AdmissionState::BestEffort => "best-effort",
+        AdmissionState::Admitted => "admitted",
+        AdmissionState::Rejected => "rejected",
+        AdmissionState::Expired => "expired",
+    }
+}
+
+fn state_from_str(s: &str) -> Option<AdmissionState> {
+    match s {
+        "unknown" => Some(AdmissionState::Unknown),
+        "best-effort" => Some(AdmissionState::BestEffort),
+        "admitted" => Some(AdmissionState::Admitted),
+        "rejected" => Some(AdmissionState::Rejected),
+        "expired" => Some(AdmissionState::Expired),
+        _ => None,
+    }
+}
+
 /// Relative tolerance of the per-port feasibility comparison (reservation
 /// sums accumulate float dust as coflows come and go).
 const RESERVE_SLACK: f64 = 1e-9;
@@ -89,6 +111,15 @@ pub struct DcoflowScheduler {
     state: Vec<AdmissionState>,
     /// Admission-time laxity (slack − ideal CCT), the EDF tie-break.
     laxity: Vec<f64>,
+    /// When a coflow entered the background lane (rejection or expiry
+    /// time; `+∞` = not in background). Drives the aging valve.
+    bg_since: Vec<Time>,
+    /// Background aging valve: a rejected/expired coflow waiting longer
+    /// than this jumps to an express lane **ahead of EDF** (FIFO by entry
+    /// time), so the background lane cannot be starved indefinitely. Large
+    /// by default — a rare safety valve, mirroring Philae's
+    /// `age_threshold`, not a scheduling feature.
+    bg_age_threshold: Time,
     /// Reserved rate per uplink/downlink across admitted coflows.
     reserved_up: Vec<f64>,
     reserved_down: Vec<f64>,
@@ -108,10 +139,12 @@ pub struct DcoflowScheduler {
     acc_down: Vec<Bytes>,
     touched_up: Vec<PortId>,
     touched_down: Vec<PortId>,
-    /// Reused order buffers: (deadline, laxity, seq, cid) EDF lane and
-    /// (seq, cid) background lane.
+    /// Reused order buffers: (deadline, laxity, seq, cid) EDF lane,
+    /// (seq, cid) background lane, and the (bg_since, seq, cid) aged
+    /// express lane the aging valve promotes into.
     edf: Vec<(f64, f64, u64, CoflowId)>,
     bg: Vec<(u64, CoflowId)>,
+    bg_aged: Vec<(f64, u64, CoflowId)>,
 }
 
 impl Default for DcoflowScheduler {
@@ -126,6 +159,8 @@ impl DcoflowScheduler {
             background: true,
             state: Vec::new(),
             laxity: Vec::new(),
+            bg_since: Vec::new(),
+            bg_age_threshold: 3600.0,
             reserved_up: Vec::new(),
             reserved_down: Vec::new(),
             res_up: Vec::new(),
@@ -140,6 +175,7 @@ impl DcoflowScheduler {
             touched_down: Vec::new(),
             edf: Vec::new(),
             bg: Vec::new(),
+            bg_aged: Vec::new(),
         }
     }
 
@@ -148,6 +184,13 @@ impl DcoflowScheduler {
     /// module docs).
     pub fn without_background(mut self) -> Self {
         self.background = false;
+        self
+    }
+
+    /// Override the background aging valve threshold (seconds of waiting
+    /// in the background lane before a coflow is promoted ahead of EDF).
+    pub fn with_bg_age_threshold(mut self, threshold: Time) -> Self {
+        self.bg_age_threshold = threshold;
         self
     }
 
@@ -170,6 +213,7 @@ impl DcoflowScheduler {
         if cid >= self.state.len() {
             self.state.resize(cid + 1, AdmissionState::Unknown);
             self.laxity.resize(cid + 1, f64::INFINITY);
+            self.bg_since.resize(cid + 1, f64::INFINITY);
             self.res_up.resize(cid + 1, Vec::new());
             self.res_down.resize(cid + 1, Vec::new());
         }
@@ -218,6 +262,7 @@ impl DcoflowScheduler {
                 self.release(cid);
                 self.state[cid] = AdmissionState::Expired;
                 self.expired += 1;
+                self.bg_since[cid] = world.now;
                 self.tracked.swap_remove(i);
             } else {
                 i += 1;
@@ -292,6 +337,7 @@ impl DcoflowScheduler {
         } else {
             self.state[cid] = AdmissionState::Rejected;
             self.rejected += 1;
+            self.bg_since[cid] = world.now;
         }
         // reset the dense tables for the next admission
         for i in 0..self.touched_up.len() {
@@ -347,6 +393,7 @@ impl Scheduler for DcoflowScheduler {
             self.tracked.swap_remove(i);
         }
         self.state[cid] = AdmissionState::Unknown;
+        self.bg_since[cid] = f64::INFINITY;
         Reaction::Reallocate
     }
 
@@ -355,6 +402,7 @@ impl Scheduler for DcoflowScheduler {
     fn on_coflow_attach(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
         self.ensure(cid);
         self.state[cid] = AdmissionState::Unknown;
+        self.bg_since[cid] = f64::INFINITY;
         self.purge(world);
         self.consider(cid, world);
         Reaction::Reallocate
@@ -364,10 +412,19 @@ impl Scheduler for DcoflowScheduler {
     /// the background lane (rejected + expired, FIFO). Rebuilt per call
     /// into reused buffers — zero steady-state allocation; identical to
     /// `order_full_into` by construction.
+    ///
+    /// The aging valve runs first: a background coflow waiting past
+    /// `bg_age_threshold` is promoted to an express lane **ahead of EDF**
+    /// (FIFO by background-entry time), bounding background starvation by
+    /// the threshold. Admitted reservations are rate certificates, not
+    /// priorities — a promoted coflow briefly outranking EDF delays but
+    /// cannot revoke an admission, the same trade Philae's express lane
+    /// makes against SJF.
     fn order_into(&mut self, world: &World, plan: &mut Plan) {
         self.purge(world);
         self.edf.clear();
         self.bg.clear();
+        self.bg_aged.clear();
         for idx in 0..world.active.len() {
             let cid = world.active[idx];
             let c = &world.coflows[cid];
@@ -384,7 +441,11 @@ impl Scheduler for DcoflowScheduler {
                     self.edf.push((f64::INFINITY, f64::INFINITY, c.seq, cid));
                 }
                 AdmissionState::Rejected | AdmissionState::Expired => {
-                    self.bg.push((c.seq, cid));
+                    if world.now - self.bg_since[cid] >= self.bg_age_threshold {
+                        self.bg_aged.push((self.bg_since[cid], c.seq, cid));
+                    } else {
+                        self.bg.push((c.seq, cid));
+                    }
                 }
                 AdmissionState::Unknown => unreachable!("consider() classifies every coflow"),
             }
@@ -396,12 +457,190 @@ impl Scheduler for DcoflowScheduler {
                 .then(a.3.cmp(&b.3))
         });
         self.bg.sort_unstable();
+        self.bg_aged
+            .sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
         plan.clear();
+        if self.background {
+            plan.entries
+                .extend(self.bg_aged.iter().map(|&(_, _, cid)| OrderEntry::all(cid)));
+        }
         plan.entries
             .extend(self.edf.iter().map(|&(_, _, _, cid)| OrderEntry::all(cid)));
         if self.background {
             plan.entries
                 .extend(self.bg.iter().map(|&(_, cid)| OrderEntry::all(cid)));
+        }
+    }
+
+    /// Durable facts: every verdict, laxity, background-entry stamp, and
+    /// committed per-port reservation, plus the tracked set and the
+    /// admission counters. The reservation book (`reserved_up/down`) is
+    /// not serialized — it is the sum of the per-coflow commitments and is
+    /// rebuilt on import.
+    fn export_state(&self) -> JsonValue {
+        use super::recovery::f64_to_json;
+        let res_list = |v: &[(PortId, f64)]| {
+            JsonValue::Array(
+                v.iter()
+                    .map(|&(p, r)| {
+                        JsonValue::Array(vec![JsonValue::Number(p as f64), f64_to_json(r)])
+                    })
+                    .collect(),
+            )
+        };
+        let mut per = std::collections::BTreeMap::new();
+        for cid in 0..self.state.len() {
+            let mut e = std::collections::BTreeMap::new();
+            e.insert(
+                "state".to_string(),
+                JsonValue::String(state_str(self.state[cid]).to_string()),
+            );
+            e.insert("laxity".to_string(), f64_to_json(self.laxity[cid]));
+            e.insert("bg_since".to_string(), f64_to_json(self.bg_since[cid]));
+            e.insert("res_up".to_string(), res_list(&self.res_up[cid]));
+            e.insert("res_down".to_string(), res_list(&self.res_down[cid]));
+            per.insert(cid.to_string(), JsonValue::Object(e));
+        }
+        let mut doc = std::collections::BTreeMap::new();
+        doc.insert("coflows".to_string(), JsonValue::Object(per));
+        doc.insert(
+            "tracked".to_string(),
+            JsonValue::Array(self.tracked.iter().map(|&c| JsonValue::Number(c as f64)).collect()),
+        );
+        doc.insert("admitted".to_string(), JsonValue::Number(self.admitted as f64));
+        doc.insert("rejected".to_string(), JsonValue::Number(self.rejected as f64));
+        doc.insert("expired".to_string(), JsonValue::Number(self.expired as f64));
+        JsonValue::Object(doc)
+    }
+
+    /// Exact restores overwrite the whole admission book (undoing the
+    /// attach path's re-admission verdicts and reservation float dust) and
+    /// rebuild `reserved_up/down` from the per-coflow commitments.
+    ///
+    /// Stale restores merge back **only the SLO certificate**: a coflow
+    /// the checkpoint had admitted with a live reservation is re-instated
+    /// as admitted with its checkpointed (larger — computed from more
+    /// remaining bytes) reservation if the attach re-admission came to a
+    /// different verdict. Over-reservation is conservative: it can only
+    /// make later admission tests stricter, never invalidate an earlier
+    /// certificate. Everything else (fresh verdicts, counters) keeps the
+    /// attach-derived state.
+    fn import_state(&mut self, state: &JsonValue, world: &World, exact: bool) {
+        use super::recovery::f64_from_json;
+        let parse_res = |v: Option<&JsonValue>| -> Vec<(PortId, f64)> {
+            v.and_then(|v| v.as_array())
+                .map(|items| {
+                    items
+                        .iter()
+                        .filter_map(|pair| {
+                            let pair = pair.as_array()?;
+                            let p = pair.first()?.as_usize()?;
+                            let r = f64_from_json(pair.get(1)?)?;
+                            Some((p, r))
+                        })
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        self.ensure_ports(world.fabric.num_ports);
+        let tracked: Vec<CoflowId> = state
+            .get("tracked")
+            .and_then(|v| v.as_array())
+            .map(|items| items.iter().filter_map(|v| v.as_usize()).collect())
+            .unwrap_or_default();
+        if exact {
+            self.state.clear();
+            self.laxity.clear();
+            self.bg_since.clear();
+            self.res_up.clear();
+            self.res_down.clear();
+            self.tracked.clear();
+            for r in self.reserved_up.iter_mut().chain(self.reserved_down.iter_mut()) {
+                *r = 0.0;
+            }
+            if let Some(per) = state.get("coflows").and_then(|v| v.as_object()) {
+                for (key, e) in per {
+                    let Ok(cid) = key.parse::<CoflowId>() else {
+                        continue;
+                    };
+                    self.ensure(cid);
+                    let st = e.get("state").and_then(|v| v.as_str());
+                    if let Some(s) = st.and_then(state_from_str) {
+                        self.state[cid] = s;
+                    }
+                    if let Some(l) = e.get("laxity").and_then(f64_from_json) {
+                        self.laxity[cid] = l;
+                    }
+                    if let Some(b) = e.get("bg_since").and_then(f64_from_json) {
+                        self.bg_since[cid] = b;
+                    }
+                    self.res_up[cid] = parse_res(e.get("res_up"));
+                    self.res_down[cid] = parse_res(e.get("res_down"));
+                    for &(p, r) in &self.res_up[cid] {
+                        if p < self.reserved_up.len() {
+                            self.reserved_up[p] += r;
+                        }
+                    }
+                    for &(p, r) in &self.res_down[cid] {
+                        if p < self.reserved_down.len() {
+                            self.reserved_down[p] += r;
+                        }
+                    }
+                }
+            }
+            self.tracked = tracked;
+            if let Some(x) = state.get("admitted").and_then(|v| v.as_f64()) {
+                self.admitted = x as u64;
+            }
+            if let Some(x) = state.get("rejected").and_then(|v| v.as_f64()) {
+                self.rejected = x as u64;
+            }
+            if let Some(x) = state.get("expired").and_then(|v| v.as_f64()) {
+                self.expired = x as u64;
+            }
+            return;
+        }
+        // stale merge: re-instate checkpointed admissions only
+        let Some(per) = state.get("coflows").and_then(|v| v.as_object()) else {
+            return;
+        };
+        for &cid in &tracked {
+            if cid >= world.coflows.len() || world.coflows[cid].done() {
+                continue; // departed since the checkpoint
+            }
+            let Some(e) = per.get(&cid.to_string()) else {
+                continue;
+            };
+            if e.get("state").and_then(|v| v.as_str()).and_then(state_from_str)
+                != Some(AdmissionState::Admitted)
+            {
+                continue;
+            }
+            self.ensure(cid);
+            if self.state[cid] == AdmissionState::Admitted {
+                continue; // attach re-admitted it; its fresh certificate stands
+            }
+            self.release(cid); // idempotent; non-admitted coflows hold none
+            self.res_up[cid] = parse_res(e.get("res_up"));
+            self.res_down[cid] = parse_res(e.get("res_down"));
+            for &(p, r) in &self.res_up[cid] {
+                if p < self.reserved_up.len() {
+                    self.reserved_up[p] += r;
+                }
+            }
+            for &(p, r) in &self.res_down[cid] {
+                if p < self.reserved_down.len() {
+                    self.reserved_down[p] += r;
+                }
+            }
+            if let Some(l) = e.get("laxity").and_then(f64_from_json) {
+                self.laxity[cid] = l;
+            }
+            self.state[cid] = AdmissionState::Admitted;
+            self.bg_since[cid] = f64::INFINITY;
+            if !self.tracked.contains(&cid) {
+                self.tracked.push(cid);
+            }
         }
     }
 }
@@ -575,6 +814,43 @@ mod tests {
         let plan = s.order(&w);
         assert_eq!(plan.entries.len(), 1);
         assert_eq!(plan.entries[0].coflow, 0);
+    }
+
+    #[test]
+    fn aging_valve_bounds_background_starvation() {
+        // coflow 0 holds a comfortable admission; coflow 1 is infeasible
+        // and lands in the background lane at t = 0
+        let defs = [
+            (0, 1, 80.0, Some(100.0)),
+            (0, 2, 1000.0, Some(0.00001)),
+        ];
+        let mut w = world_with(&defs);
+        let mut s = DcoflowScheduler::new().with_bg_age_threshold(10.0);
+        arrive_all(&mut s, &mut w);
+        assert_eq!(s.status_of(1), AdmissionState::Rejected);
+        // below the threshold: background stays behind the admitted lane
+        w.now = 5.0;
+        let plan = s.order(&w);
+        let order: Vec<_> = plan.entries.iter().map(|e| e.coflow).collect();
+        assert_eq!(order, vec![0, 1]);
+        // past the threshold: promoted ahead of EDF — waiting is bounded
+        // by the valve, so the background lane cannot starve indefinitely
+        w.now = 10.0;
+        let plan = s.order(&w);
+        let order: Vec<_> = plan.entries.iter().map(|e| e.coflow).collect();
+        assert_eq!(order, vec![1, 0]);
+        // the admission certificate survives the promotion
+        assert_eq!(s.status_of(0), AdmissionState::Admitted);
+        assert!((s.reserved_up(0) - 0.8).abs() < 1e-9);
+        // the default threshold is a rare safety valve: same scenario, no
+        // promotion within any plausible simulated horizon
+        let mut w2 = world_with(&defs);
+        let mut d = DcoflowScheduler::new();
+        arrive_all(&mut d, &mut w2);
+        w2.now = 10.0;
+        let plan = d.order(&w2);
+        let order: Vec<_> = plan.entries.iter().map(|e| e.coflow).collect();
+        assert_eq!(order, vec![0, 1]);
     }
 
     #[test]

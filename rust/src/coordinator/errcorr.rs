@@ -22,8 +22,8 @@
 use super::philae::{CompletionOutcome, PhilaeCore};
 use super::{Plan, Reaction, Scheduler, SchedulerConfig, World};
 use crate::coflow::CoflowPhase;
+use crate::util::{JsonValue, Rng};
 use crate::{Bytes, CoflowId, FlowId};
-use crate::util::Rng;
 
 /// Which §2.2 variant to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -199,6 +199,67 @@ impl Scheduler for PhilaeErrCorrScheduler {
         self.post_est[cid].clear();
         self.rounds_done[cid] = 0;
         Reaction::Reallocate
+    }
+
+    /// Durable facts: the sampling core's state plus the error-correction
+    /// bookkeeping (partial post-estimation sets, applied round counts,
+    /// and the enlarged samples the next round will re-estimate from).
+    fn export_state(&self) -> JsonValue {
+        use super::recovery::f64_to_json;
+        let mut per = std::collections::BTreeMap::new();
+        for cid in 0..self.post_est.len() {
+            let mut e = std::collections::BTreeMap::new();
+            e.insert(
+                "post_est".to_string(),
+                JsonValue::Array(self.post_est[cid].iter().map(|&b| f64_to_json(b)).collect()),
+            );
+            e.insert(
+                "rounds_done".to_string(),
+                JsonValue::Number(self.rounds_done[cid] as f64),
+            );
+            e.insert(
+                "pilot_sample".to_string(),
+                JsonValue::Array(
+                    self.pilot_sample[cid].iter().map(|&b| f64_to_json(b)).collect(),
+                ),
+            );
+            per.insert(cid.to_string(), JsonValue::Object(e));
+        }
+        let mut doc = std::collections::BTreeMap::new();
+        doc.insert("core".to_string(), self.core.export_state());
+        doc.insert("coflows".to_string(), JsonValue::Object(per));
+        JsonValue::Object(doc)
+    }
+
+    /// Exact restores overwrite wholesale (undoing the attach path's
+    /// round-counter restart). Stale checkpoints are ignored — the
+    /// documented migration semantics already restart correction from the
+    /// reconstructed sample, which only refreshes the estimate with
+    /// strictly more data.
+    fn import_state(&mut self, state: &JsonValue, _world: &World, exact: bool) {
+        use super::recovery::f64_from_json;
+        if !exact {
+            return;
+        }
+        let null = JsonValue::Null;
+        self.core.import_state_exact(state.get("core").unwrap_or(&null));
+        if let Some(per) = state.get("coflows").and_then(|v| v.as_object()) {
+            for (key, e) in per {
+                let Ok(cid) = key.parse::<CoflowId>() else {
+                    continue;
+                };
+                self.ensure(cid);
+                if let Some(v) = e.get("post_est").and_then(|v| v.as_array()) {
+                    self.post_est[cid] = v.iter().filter_map(f64_from_json).collect();
+                }
+                if let Some(n) = e.get("rounds_done").and_then(|v| v.as_usize()) {
+                    self.rounds_done[cid] = n;
+                }
+                if let Some(v) = e.get("pilot_sample").and_then(|v| v.as_array()) {
+                    self.pilot_sample[cid] = v.iter().filter_map(f64_from_json).collect();
+                }
+            }
+        }
     }
 }
 

@@ -34,6 +34,7 @@ pub mod errcorr;
 pub mod fifo;
 pub mod philae;
 pub mod rate;
+pub mod recovery;
 pub mod saath;
 pub mod scf;
 pub mod sebf;
@@ -47,6 +48,7 @@ pub use philae::PhilaeScheduler;
 pub use rate::{
     allocate, allocate_into, apply_grants, AllocScratch, Allocation, FlowFilter, OrderEntry, Plan,
 };
+pub use recovery::{checkpoint_scheduler, restore_scheduler, seal, unseal, RecoveryError};
 pub use saath::SaathScheduler;
 pub use scf::ScfScheduler;
 pub use sebf::SebfScheduler;
@@ -54,6 +56,7 @@ pub use sebf::SebfScheduler;
 use crate::coflow::{CoflowState, FlowState};
 use crate::fabric::{Fabric, PortLoad};
 use crate::trace::Trace;
+use crate::util::JsonValue;
 use crate::{CoflowId, FlowId, Time, MB};
 
 /// Binary-search insert into a vector kept sorted under `cmp` — the shared
@@ -281,6 +284,35 @@ pub trait Scheduler: Send {
     fn on_coflow_attach(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
         self.on_arrival(cid, world)
     }
+
+    /// Serialize this scheduler's **durable facts** for a crash checkpoint
+    /// (`coordinator::recovery`): everything that is *learned from events*
+    /// and cannot be rebuilt from the surviving world alone — Philae's
+    /// pilot samples, Aalo's seen bytes and FIFO sequence, dcoflow's
+    /// admission verdicts and reservations. Incremental order caches are
+    /// deliberately **not** durable: they self-heal on the next
+    /// `order_into` and are pinned equivalent to a full rebuild. The
+    /// default (`Null`) is correct for stateless/oracle schedulers.
+    fn export_state(&self) -> JsonValue {
+        JsonValue::Null
+    }
+
+    /// Overlay previously exported durable facts onto this scheduler.
+    /// Called by the restore driver **after** the `on_coflow_attach`
+    /// rebuild pass. With `exact = true` the checkpoint is from the *same*
+    /// event boundary as the restore (crash-with-warm-standby): the import
+    /// is a wholesale overwrite and is the last word — it undoes
+    /// attach-path divergence (fresh Aalo FIFO sequence, dcoflow
+    /// re-admission, Philae adopt's sample-order float sums) and makes the
+    /// restored scheduler bit-identical to the uninterrupted one. With
+    /// `exact = false` the checkpoint may be **stale** (periodic chaos
+    /// restore): the attach rebuild already recovered everything derivable
+    /// from the surviving world, so schedulers only merge back facts that
+    /// must survive a crash and are safe when stale — dcoflow re-instates
+    /// admitted verdicts (the SLO certificate) — and otherwise keep the
+    /// fresher attach-derived state. The default ignores the state
+    /// (nothing durable to restore).
+    fn import_state(&mut self, _state: &JsonValue, _world: &World, _exact: bool) {}
 
     /// Deliver one coalesced [`EventBatch`] (batched admission). The
     /// default implementation replays the per-event hooks in the batch's

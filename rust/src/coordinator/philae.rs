@@ -37,6 +37,7 @@
 
 use super::{EventBatch, OrderEntry, Plan, Reaction, Scheduler, SchedulerConfig, World};
 use crate::coflow::{CoflowPhase, CoflowState};
+use crate::util::JsonValue;
 use crate::{Bytes, CoflowId, FlowId};
 
 /// What a completion report meant to the sampling state machine.
@@ -429,6 +430,84 @@ impl PhilaeCore {
         }
     }
 
+    /// Serialize the learned sampling facts for a crash checkpoint (see
+    /// `coordinator::recovery`): per coflow, the pilot sample **in report
+    /// delivery order** (the float-sum order the estimate mean depends
+    /// on), the idempotence ledger, the outstanding pilot count, and the
+    /// completed-flow progress counters. Every slot is exported: an
+    /// all-zero live entry is still meaningful when a flow has physically
+    /// finished but its report is undelivered — [`adopt`](Self::adopt)
+    /// would count that flow, and only the checkpoint can undo it.
+    pub fn export_state(&self) -> JsonValue {
+        use super::recovery::f64_to_json;
+        let mut per = std::collections::BTreeMap::new();
+        for cid in 0..self.pilot_sizes.len() {
+            let mut e = std::collections::BTreeMap::new();
+            e.insert(
+                "pilot_sizes".to_string(),
+                JsonValue::Array(self.pilot_sizes[cid].iter().map(|&b| f64_to_json(b)).collect()),
+            );
+            e.insert(
+                "pilot_sampled".to_string(),
+                JsonValue::Array(
+                    self.pilot_sampled[cid]
+                        .iter()
+                        .map(|&f| JsonValue::Number(f as f64))
+                        .collect(),
+                ),
+            );
+            e.insert(
+                "pilots_left".to_string(),
+                JsonValue::Number(self.pilots_left[cid] as f64),
+            );
+            e.insert("done_bytes".to_string(), f64_to_json(self.done_bytes[cid]));
+            e.insert(
+                "flows_done".to_string(),
+                JsonValue::Number(self.flows_done[cid] as f64),
+            );
+            per.insert(cid.to_string(), JsonValue::Object(e));
+        }
+        let mut doc = std::collections::BTreeMap::new();
+        doc.insert("coflows".to_string(), JsonValue::Object(per));
+        JsonValue::Object(doc)
+    }
+
+    /// Wholesale overwrite from an [`export_state`](Self::export_state)
+    /// checkpoint taken at the **same** event boundary — undoes the
+    /// pilots-list sample order [`adopt`](Self::adopt) produced and
+    /// restores the delivery-order sample bit-exactly. Never call with a
+    /// stale checkpoint: a `pilots_left > 0` entry whose pilots have since
+    /// physically finished would close the sampling gate forever and
+    /// starve the coflow in the pilot lane (the restore driver passes
+    /// stale checkpoints to the attach rebuild only).
+    pub fn import_state_exact(&mut self, state: &JsonValue) {
+        use super::recovery::f64_from_json;
+        let Some(per) = state.get("coflows").and_then(|v| v.as_object()) else {
+            return;
+        };
+        for (key, e) in per {
+            let Ok(cid) = key.parse::<CoflowId>() else {
+                continue;
+            };
+            self.ensure(cid);
+            if let Some(sizes) = e.get("pilot_sizes").and_then(|v| v.as_array()) {
+                self.pilot_sizes[cid] = sizes.iter().filter_map(f64_from_json).collect();
+            }
+            if let Some(ids) = e.get("pilot_sampled").and_then(|v| v.as_array()) {
+                self.pilot_sampled[cid] = ids.iter().filter_map(|v| v.as_usize()).collect();
+            }
+            if let Some(left) = e.get("pilots_left").and_then(|v| v.as_usize()) {
+                self.pilots_left[cid] = left;
+            }
+            if let Some(b) = e.get("done_bytes").and_then(f64_from_json) {
+                self.done_bytes[cid] = b;
+            }
+            if let Some(n) = e.get("flows_done").and_then(|v| v.as_usize()) {
+                self.flows_done[cid] = n;
+            }
+        }
+    }
+
     /// Completed pilot sizes recorded so far for `cid` (feature marshalling
     /// for the PJRT scoring path).
     pub fn pilot_sizes(&self, cid: CoflowId) -> &[Bytes] {
@@ -818,6 +897,19 @@ impl Scheduler for PhilaeScheduler {
             }
         }
         Reaction::Reallocate
+    }
+
+    fn export_state(&self) -> JsonValue {
+        self.core.export_state()
+    }
+
+    /// Stale checkpoints are ignored: the adopt rebuild is strictly fresher
+    /// (see [`PhilaeCore::import_state_exact`] for the starvation hazard a
+    /// stale `pilots_left` overwrite would create).
+    fn import_state(&mut self, state: &JsonValue, _world: &World, exact: bool) {
+        if exact {
+            self.core.import_state_exact(state);
+        }
     }
 }
 

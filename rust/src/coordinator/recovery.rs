@@ -1,0 +1,441 @@
+//! Coordinator crash-failover: checkpoint, restore, and the sealed
+//! checkpoint file format.
+//!
+//! ## Why (paper §3; ROADMAP item 4)
+//!
+//! Philae's scalability argument is that sampling shrinks coordinator–agent
+//! interaction enough to track 900-node fabrics from **one** coordinator —
+//! which makes that coordinator the single point of failure. A production
+//! deployment must survive coordinator restarts without forgetting what the
+//! cluster learned (pilot samples, earned queue positions, admission
+//! verdicts), and without wedging the fabric while it recovers.
+//!
+//! ## Migration *is* recovery
+//!
+//! The multi-coordinator work (PR 3) already forced every scheduler to
+//! answer "how do I adopt a mid-flight coflow from someone else?" —
+//! [`Scheduler::on_coflow_attach`] rebuilds learning state from
+//! *completed-flow facts*: Philae re-derives its sample from finished pilot
+//! flows, Aalo re-reads earned bytes, dcoflow re-admits from remaining
+//! bytes (arXiv 2205.01229's admission test is memoryless given remaining
+//! work). A coordinator crash is simply the migration of **all** of a
+//! shard's coflows to a fresh instance of the same policy, so recovery
+//! needs no new scheduler theory: build a fresh scheduler, attach every
+//! owned coflow, then overlay the checkpoint's durable facts.
+//!
+//! ## What is durable and what self-heals
+//!
+//! Two classes of scheduler state are deliberately **not** checkpointed:
+//!
+//! * *world-derived* state (bytes sent, remaining bytes, finished flows) —
+//!   the agents' ground truth survives the coordinator and is re-read by
+//!   the attach pass;
+//! * *incremental order caches* — they are pure accelerations of
+//!   `order_full_into` (pinned equivalent in `order_equivalence.rs`) and
+//!   rebuild themselves on the next `order_into` scan.
+//!
+//! What remains is each policy's **learned/earned facts** that the world
+//! cannot reproduce: Philae's pilot sample in delivery order (the float-sum
+//! order matters for bit-exactness) and `pilots_left`, Aalo's seen bytes,
+//! FIFO queue sequence and loss-model RNG position, Saath's queue-move
+//! counter, dcoflow's admission verdicts, laxities and port reservations,
+//! errcorr's correction rounds and enlarged samples. Those go through
+//! [`Scheduler::export_state`] / [`Scheduler::import_state`].
+//!
+//! ## Restore order and bit-identity
+//!
+//! [`restore_scheduler`] runs: **build → attach every active coflow →
+//! import → overlay** (the checkpoint's per-coflow `est_size`/`phase`,
+//! which the attach pass rewrites). Import runs *after* attach so the
+//! checkpoint is the last word — it undoes the attach path's deliberate
+//! migration approximations (fresh Aalo FIFO position, dcoflow
+//! re-admission, Philae's pilots-list sample order). With a checkpoint
+//! taken at the same event boundary (`exact = true`) the restored
+//! scheduler is **bit-identical** to the uninterrupted one for all ten
+//! [`SchedulerKind`]s — `tests/chaos_recovery.rs` pins CCTs, counters and
+//! deadline verdicts to the bit. With a stale periodic checkpoint
+//! (`exact = false`, the chaos path) attach-derived facts are fresher and
+//! win; only crash-critical certificates (dcoflow's admitted verdicts and
+//! their reservations) are merged back from the checkpoint.
+//!
+//! ## File format
+//!
+//! A sealed checkpoint is a single JSON document
+//! `{"checksum": "<fnv1a64 hex>", "payload": {...}, "version": 1}` whose
+//! checksum covers the **canonical encoding** of the payload (sorted keys,
+//! shortest round-trip floats — see `util::json`), so any reader can
+//! re-serialize and verify. [`write_atomic`] publishes via
+//! write-to-sibling + rename, so a crash mid-write never leaves a torn
+//! checkpoint under the live name.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use super::{Scheduler, SchedulerConfig, SchedulerKind, World};
+use crate::coflow::CoflowPhase;
+use crate::trace::Trace;
+use crate::util::json::JsonError;
+use crate::util::JsonValue;
+
+/// Format version of sealed checkpoints.
+pub const CHECKPOINT_VERSION: f64 = 1.0;
+
+/// Why a checkpoint could not be restored.
+#[derive(Debug)]
+pub enum RecoveryError {
+    /// Structurally valid JSON, but not a usable checkpoint.
+    Corrupt(&'static str),
+    /// Not valid JSON at all.
+    Json(JsonError),
+    /// Filesystem failure reading or writing the checkpoint.
+    Io(io::Error),
+}
+
+impl fmt::Display for RecoveryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RecoveryError::Corrupt(msg) => write!(f, "corrupt checkpoint: {msg}"),
+            RecoveryError::Json(e) => write!(f, "checkpoint parse failure: {e}"),
+            RecoveryError::Io(e) => write!(f, "checkpoint io failure: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RecoveryError {}
+
+impl From<JsonError> for RecoveryError {
+    fn from(e: JsonError) -> Self {
+        RecoveryError::Json(e)
+    }
+}
+
+impl From<io::Error> for RecoveryError {
+    fn from(e: io::Error) -> Self {
+        RecoveryError::Io(e)
+    }
+}
+
+/// FNV-1a 64-bit — the checkpoint integrity hash. Not cryptographic; it
+/// guards against torn/bit-rotted files, not adversaries.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Wrap `payload` in the sealed checkpoint envelope: canonical encoding,
+/// version, and an FNV-1a checksum over the canonical payload bytes.
+pub fn seal(payload: JsonValue) -> String {
+    let mut body = String::new();
+    payload.write(&mut body);
+    let sum = fnv1a64(body.as_bytes());
+    let mut doc = BTreeMap::new();
+    doc.insert("checksum".to_string(), JsonValue::String(format!("{sum:016x}")));
+    doc.insert("version".to_string(), JsonValue::Number(CHECKPOINT_VERSION));
+    doc.insert("payload".to_string(), payload);
+    JsonValue::Object(doc).to_string()
+}
+
+/// Parse and verify a sealed checkpoint, returning its payload. The
+/// checksum is recomputed over the payload's canonical re-encoding, so
+/// verification is independent of the whitespace of the stored document.
+pub fn unseal(text: &str) -> Result<JsonValue, RecoveryError> {
+    let doc = JsonValue::parse(text)?;
+    let version = doc
+        .get("version")
+        .and_then(|v| v.as_f64())
+        .ok_or(RecoveryError::Corrupt("missing version"))?;
+    if version != CHECKPOINT_VERSION {
+        return Err(RecoveryError::Corrupt("unsupported checkpoint version"));
+    }
+    let claimed = doc
+        .get("checksum")
+        .and_then(|v| v.as_str())
+        .ok_or(RecoveryError::Corrupt("missing checksum"))?;
+    let payload = doc
+        .get("payload")
+        .ok_or(RecoveryError::Corrupt("missing payload"))?;
+    let mut body = String::new();
+    payload.write(&mut body);
+    if format!("{:016x}", fnv1a64(body.as_bytes())) != claimed {
+        return Err(RecoveryError::Corrupt("checksum mismatch"));
+    }
+    Ok(payload.clone())
+}
+
+/// Atomically publish `text` at `path`: write a `<path>.tmp` sibling, then
+/// rename over the target. A crash mid-write leaves at worst a stale tmp
+/// file; the live checkpoint name is always complete or absent.
+pub fn write_atomic(path: &Path, text: &str) -> io::Result<()> {
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = PathBuf::from(tmp_name);
+    fs::write(&tmp, text)?;
+    fs::rename(&tmp, path)
+}
+
+/// Encode an `f64` losslessly: finite values as numbers (shortest
+/// round-trip `Display`), the non-finite values — which JSON cannot carry
+/// as numbers — as the strings `"inf"` / `"-inf"` / `"nan"`.
+pub fn f64_to_json(x: f64) -> JsonValue {
+    if x.is_finite() {
+        JsonValue::Number(x)
+    } else if x.is_nan() {
+        JsonValue::String("nan".to_string())
+    } else if x > 0.0 {
+        JsonValue::String("inf".to_string())
+    } else {
+        JsonValue::String("-inf".to_string())
+    }
+}
+
+/// Decode an [`f64_to_json`]-encoded value.
+pub fn f64_from_json(v: &JsonValue) -> Option<f64> {
+    match v {
+        JsonValue::Number(n) => Some(*n),
+        JsonValue::String(s) => match s.as_str() {
+            "inf" => Some(f64::INFINITY),
+            "-inf" => Some(f64::NEG_INFINITY),
+            "nan" => Some(f64::NAN),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Encode a `u64` losslessly as a hex string (an `f64` number mantissa
+/// only covers 53 bits — RNG states and sequence stamps need all 64).
+pub fn u64_to_json(x: u64) -> JsonValue {
+    JsonValue::String(format!("{x:x}"))
+}
+
+/// Decode a [`u64_to_json`]-encoded value.
+pub fn u64_from_json(v: &JsonValue) -> Option<u64> {
+    v.as_str().and_then(|s| u64::from_str_radix(s, 16).ok())
+}
+
+fn phase_str(p: CoflowPhase) -> &'static str {
+    match p {
+        CoflowPhase::Piloting => "piloting",
+        CoflowPhase::Running => "running",
+        CoflowPhase::Done => "done",
+    }
+}
+
+fn phase_from_str(s: &str) -> Option<CoflowPhase> {
+    match s {
+        "piloting" => Some(CoflowPhase::Piloting),
+        "running" => Some(CoflowPhase::Running),
+        "done" => Some(CoflowPhase::Done),
+        _ => None,
+    }
+}
+
+/// Serialize one coordinator's durable state: the policy kind, its
+/// [`Scheduler::export_state`] facts, and the per-coflow world overlay the
+/// restore path must re-apply (the attach pass rewrites `est_size` and
+/// `phase`; `remaining` records the byte position the checkpoint was taken
+/// at, for diagnostics and staleness bounds). The view is `world.active` —
+/// callers with a partitioned view (cluster shards) swap it in first.
+pub fn checkpoint_scheduler(
+    kind: SchedulerKind,
+    sched: &dyn Scheduler,
+    world: &World,
+) -> JsonValue {
+    checkpoint_with_state(kind, sched.export_state(), world)
+}
+
+/// [`checkpoint_scheduler`] for callers that hold the exported scheduler
+/// state directly rather than a `&dyn Scheduler` (the live service drives
+/// `PhilaeCore` outside the trait so the PJRT scorer can batch features).
+pub fn checkpoint_with_state(
+    kind: SchedulerKind,
+    sched_state: JsonValue,
+    world: &World,
+) -> JsonValue {
+    let mut coflows = Vec::with_capacity(world.active.len());
+    for &cid in &world.active {
+        let c = &world.coflows[cid];
+        let remaining: f64 = c
+            .active_list
+            .iter()
+            .map(|&f| world.flows[f].remaining())
+            .sum();
+        let mut e = BTreeMap::new();
+        e.insert("id".to_string(), JsonValue::Number(cid as f64));
+        e.insert(
+            "est".to_string(),
+            match c.est_size {
+                Some(x) => f64_to_json(x),
+                None => JsonValue::Null,
+            },
+        );
+        e.insert("phase".to_string(), JsonValue::String(phase_str(c.phase).to_string()));
+        e.insert("queue".to_string(), JsonValue::Number(c.queue as f64));
+        e.insert("remaining".to_string(), f64_to_json(remaining));
+        coflows.push(JsonValue::Object(e));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("kind".to_string(), JsonValue::String(kind.as_str().to_string()));
+    doc.insert("sched".to_string(), sched_state);
+    doc.insert("coflows".to_string(), JsonValue::Array(coflows));
+    JsonValue::Object(doc)
+}
+
+/// Rebuild a coordinator from a [`checkpoint_scheduler`] payload against
+/// the surviving `world`: build a fresh scheduler, run the
+/// [`Scheduler::on_coflow_attach`] fact-rebuild for every active coflow,
+/// overlay the checkpoint's durable facts via
+/// [`Scheduler::import_state`], and (for `exact` restores) re-apply the
+/// per-coflow `est_size`/`phase`/`queue` the attach pass rewrote. See the
+/// module docs for why this order yields bit-identity on fresh checkpoints
+/// and safe self-healing on stale ones.
+pub fn restore_scheduler(
+    payload: &JsonValue,
+    trace: &Trace,
+    cfg: &SchedulerConfig,
+    world: &mut World,
+    exact: bool,
+) -> Result<Box<dyn Scheduler>, RecoveryError> {
+    let kind: SchedulerKind = payload
+        .get("kind")
+        .and_then(|v| v.as_str())
+        .ok_or(RecoveryError::Corrupt("missing scheduler kind"))?
+        .parse()
+        .map_err(|_| RecoveryError::Corrupt("unknown scheduler kind"))?;
+    let mut sched = kind.build(trace, cfg);
+    for i in 0..world.active.len() {
+        let cid = world.active[i];
+        if world.coflows[cid].done() {
+            continue; // physically complete; its pending report replays below
+        }
+        sched.on_coflow_attach(cid, world);
+    }
+    let null = JsonValue::Null;
+    let state = payload.get("sched").unwrap_or(&null);
+    sched.import_state(state, world, exact);
+    if exact {
+        if let Some(entries) = payload.get("coflows").and_then(|v| v.as_array()) {
+            for e in entries {
+                let Some(cid) = e.get("id").and_then(|v| v.as_usize()) else {
+                    continue;
+                };
+                if cid >= world.coflows.len() {
+                    continue;
+                }
+                world.coflows[cid].est_size = match e.get("est") {
+                    None | Some(JsonValue::Null) => None,
+                    Some(v) => f64_from_json(v),
+                };
+                if let Some(p) = e.get("phase").and_then(|v| v.as_str()).and_then(phase_from_str) {
+                    world.coflows[cid].phase = p;
+                }
+                if let Some(q) = e.get("queue").and_then(|v| v.as_usize()) {
+                    world.coflows[cid].queue = q;
+                }
+            }
+        }
+    }
+    Ok(sched)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_payload() -> JsonValue {
+        let mut m = BTreeMap::new();
+        m.insert("kind".to_string(), JsonValue::String("philae".to_string()));
+        m.insert("x".to_string(), JsonValue::Number(0.1 + 0.2));
+        m.insert(
+            "arr".to_string(),
+            JsonValue::Array(vec![JsonValue::Bool(true), JsonValue::Null]),
+        );
+        JsonValue::Object(m)
+    }
+
+    #[test]
+    fn seal_unseal_round_trips() {
+        let payload = sample_payload();
+        let sealed = seal(payload.clone());
+        let back = unseal(&sealed).expect("seal output must unseal");
+        assert_eq!(back, payload);
+        // sealing is deterministic (canonical writer underneath)
+        assert_eq!(sealed, seal(payload));
+    }
+
+    #[test]
+    fn unseal_rejects_tampering() {
+        let sealed = seal(sample_payload());
+        // flip a payload byte without touching the checksum header
+        let tampered = sealed.replace("\"philae\"", "\"phileo\"");
+        assert_ne!(tampered, sealed);
+        match unseal(&tampered) {
+            Err(RecoveryError::Corrupt(msg)) => assert_eq!(msg, "checksum mismatch"),
+            other => panic!("tampered checkpoint accepted: {other:?}"),
+        }
+        assert!(unseal("not json").is_err());
+        assert!(matches!(
+            unseal("{\"payload\": {}}"),
+            Err(RecoveryError::Corrupt("missing version"))
+        ));
+    }
+
+    #[test]
+    fn unseal_is_whitespace_independent() {
+        let sealed = seal(sample_payload());
+        let spaced = sealed.replace(",", ", ").replace(":", ": ");
+        assert_eq!(unseal(&spaced).unwrap(), sample_payload());
+    }
+
+    #[test]
+    fn atomic_write_publishes_whole_files_only() {
+        let dir = std::env::temp_dir().join(format!("philae_ckpt_test_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.json");
+        let sealed = seal(sample_payload());
+        write_atomic(&path, &sealed).unwrap();
+        assert_eq!(fs::read_to_string(&path).unwrap(), sealed);
+        // second write replaces atomically and leaves no tmp sibling
+        let sealed2 = seal(JsonValue::Array(vec![JsonValue::Number(1.0)]));
+        write_atomic(&path, &sealed2).unwrap();
+        assert_eq!(fs::read_to_string(&path).unwrap(), sealed2);
+        assert!(!dir.join("ckpt.json.tmp").exists());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn f64_codec_covers_non_finite() {
+        for x in [0.0, -0.0, 1.5, f64::MIN_POSITIVE, 1e300, -2.5e-9] {
+            let v = f64_to_json(x);
+            assert_eq!(f64_from_json(&v).unwrap().to_bits(), x.to_bits());
+        }
+        assert_eq!(f64_from_json(&f64_to_json(f64::INFINITY)), Some(f64::INFINITY));
+        assert_eq!(
+            f64_from_json(&f64_to_json(f64::NEG_INFINITY)),
+            Some(f64::NEG_INFINITY)
+        );
+        assert!(f64_from_json(&f64_to_json(f64::NAN)).unwrap().is_nan());
+        assert_eq!(f64_from_json(&JsonValue::Null), None);
+    }
+
+    #[test]
+    fn u64_codec_is_lossless_at_full_width() {
+        for x in [0u64, 1, u64::MAX, 0xdead_beef_cafe_f00d] {
+            assert_eq!(u64_from_json(&u64_to_json(x)), Some(x));
+        }
+    }
+
+    #[test]
+    fn fnv_known_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -12,6 +12,7 @@
 //! designs it still pays the sieving overhead Philae's sampling removes.
 
 use super::{OrderEntry, Plan, Reaction, Scheduler, SchedulerConfig, World};
+use crate::util::JsonValue;
 use crate::{Bytes, CoflowId, FlowId};
 
 /// Intra-queue comparator: `(queue, contention, seq, cid)` ascending —
@@ -219,6 +220,27 @@ impl Scheduler for SaathScheduler {
     /// cache needs no repair — the coflow is inserted on the next scan.
     fn on_coflow_attach(&mut self, _cid: CoflowId, _world: &mut World) -> Reaction {
         Reaction::Reallocate
+    }
+
+    /// The earned queue lives on the world (`CoflowState::queue`) and the
+    /// order is self-healing — the only durable fact here is the
+    /// transition counter.
+    fn export_state(&self) -> JsonValue {
+        let mut doc = std::collections::BTreeMap::new();
+        doc.insert(
+            "queue_moves".to_string(),
+            super::recovery::u64_to_json(self.queue_moves),
+        );
+        JsonValue::Object(doc)
+    }
+
+    fn import_state(&mut self, state: &JsonValue, _world: &World, exact: bool) {
+        if !exact {
+            return; // stale counter would under-report; keep the fresh zero
+        }
+        if let Some(x) = state.get("queue_moves").and_then(super::recovery::u64_from_json) {
+            self.queue_moves = x;
+        }
     }
 
     /// From-scratch oracle rebuild (see trait docs).

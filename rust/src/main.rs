@@ -9,6 +9,7 @@
 //!
 //! (No clap on this offline image — a small hand-rolled parser below.)
 
+use philae::coordinator::cluster::CoordinatorCluster;
 use philae::coordinator::{SchedulerConfig, SchedulerKind};
 use philae::fabric::Fabric;
 use philae::metrics::SpeedupRow;
@@ -36,11 +37,19 @@ COMMON FLAGS:
                        deadline-aware scheduler is `dcoflow`
   --coordinators <k>   coordinator shards with leased capacity  [default: 1]
   --shards <s>         allocator worker shards (sim/serve)      [default: 1]
+  --checkpoint-every <n>  coordinator crash-failover: checkpoint the
+                       scheduler every n events (sim, K=1: kill+restore at
+                       every checkpoint, bit-identical), every n scheduling
+                       rounds (sim, K>1), or every n δ intervals (serve)
+  --chaos <n>          kill-and-restore a random coordinator shard every n
+                       rounds (sim, K>1) / δ intervals (serve)  [default: off]
 
 sim:      --scheduler <name>                            [default: philae]
 compare:  --baseline <name> --candidate <name>          [default: aalo vs philae]
 serve:    --scheduler <name> --artifacts <dir> --time-scale <x> --delta-ms <n>
-          (accepts every scheduler below; --artifacts drives PJRT, philae only)
+          --checkpoint-dir <dir> --agent-miss <n>
+          (accepts every scheduler below; --artifacts drives PJRT, philae
+          only; --agent-miss ages silent ports out of the plan)
 gen-trace: --out <file>
 
 schedulers: philae aalo sebf scf fifo saath philae-lcb philae-ec1
@@ -135,7 +144,10 @@ fn build_trace(flags: &Flags) -> anyhow::Result<Trace> {
 /// Run one simulation honoring `--coordinators`/`--shards`: K ≥ 2 routes
 /// through the multi-coordinator cluster, K = 1 through the single path
 /// (the cluster's K=1 is bit-identical, but the direct path skips the
-/// frontend indirection entirely).
+/// frontend indirection entirely). `--checkpoint-every`/`--chaos` arm the
+/// crash-failover paths: K = 1 kills and restores the coordinator from a
+/// fresh checkpoint at every boundary (pinned bit-identical), K ≥ 2 runs
+/// the cluster chaos driver (periodic checkpoint + random shard kills).
 fn run_sim(
     trace: &philae::trace::Trace,
     kind: SchedulerKind,
@@ -144,9 +156,29 @@ fn run_sim(
 ) -> anyhow::Result<SimResult> {
     let coordinators = flags.get("coordinators", 1usize).map_err(anyhow::Error::msg)?;
     let alloc_shards = flags.get("shards", 1usize).map_err(anyhow::Error::msg)?;
+    let checkpoint_every = flags.get("checkpoint-every", 0u64).map_err(anyhow::Error::msg)?;
+    let chaos = flags.get("chaos", 0u64).map_err(anyhow::Error::msg)?;
     let sim_cfg = SimConfig { coordinators, alloc_shards, ..SimConfig::default() };
     if coordinators > 1 {
-        Ok(Simulation::run_cluster(trace, kind, cfg, &sim_cfg))
+        let mut cluster = CoordinatorCluster::with_coordinators(coordinators, kind, trace, cfg);
+        if checkpoint_every > 0 || chaos > 0 {
+            let seed = flags.get("seed", 42u64).map_err(anyhow::Error::msg)?;
+            cluster.set_chaos(trace, cfg, checkpoint_every, chaos, seed);
+        }
+        let res = Simulation::run_with_cluster(trace, &mut cluster, cfg, &sim_cfg);
+        if checkpoint_every > 0 || chaos > 0 {
+            println!(
+                "chaos: {} checkpoints sealed, {} shard kill+restores",
+                cluster.chaos_checkpoints(),
+                cluster.chaos_kills(),
+            );
+        }
+        Ok(res)
+    } else if checkpoint_every > 0 {
+        let (res, restores) =
+            Simulation::run_with_restore(trace, kind, cfg, &sim_cfg, checkpoint_every);
+        println!("crash-restore: {restores} coordinator kill+restores (exact checkpoints)");
+        Ok(res)
     } else {
         let mut sched = kind.build(trace, cfg);
         Ok(Simulation::run_with(trace, sched.as_mut(), cfg, &sim_cfg))
@@ -247,6 +279,10 @@ fn main() -> anyhow::Result<()> {
                 port_rate: philae::GBPS,
                 alloc_shards: flags.get("shards", 1usize).map_err(anyhow::Error::msg)?,
                 coordinators: flags.get("coordinators", 1usize).map_err(anyhow::Error::msg)?,
+                checkpoint_every: flags.get("checkpoint-every", 0u64).map_err(anyhow::Error::msg)?,
+                chaos_kill_every: flags.get("chaos", 0u64).map_err(anyhow::Error::msg)?,
+                checkpoint_dir: flags.get_opt("checkpoint-dir").map(Into::into),
+                agent_miss_intervals: flags.get("agent-miss", 0u64).map_err(anyhow::Error::msg)?,
             };
             let report = run_service(&t, &svc)?;
             println!(
@@ -275,6 +311,20 @@ fn main() -> anyhow::Result<()> {
                     report.deadline.admitted,
                     report.deadline.rejected,
                     report.deadline.expired,
+                );
+            }
+            if report.checkpoints_written > 0
+                || report.crashes_injected > 0
+                || report.ports_aged_out > 0
+            {
+                println!(
+                    "  recovery: {} checkpoints | {} crashes -> {} recoveries ({:.3} ms avg) | ports aged out {} / restored {}",
+                    report.checkpoints_written,
+                    report.crashes_injected,
+                    report.recoveries,
+                    report.recovery_wall.mean() * 1e3,
+                    report.ports_aged_out,
+                    report.ports_restored,
                 );
             }
         }

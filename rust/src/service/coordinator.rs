@@ -27,6 +27,29 @@
 //! with the last schedule" can never stall another shard's flows.
 //! `coordinators == 1` is the classic single-coordinator service.
 //!
+//! ## Crash-failover and the agent-loss watchdog
+//!
+//! The paper's split between a soft-state coordinator and dumb agents
+//! (§3: switches carry no coflow state, the coordinator re-derives
+//! everything from completion reports) makes the coordinator restartable
+//! by design. The supervisor leg of this module exercises that claim
+//! live: every [`ServiceConfig::checkpoint_every`] δ intervals each shard
+//! seals its durable scheduling facts through `coordinator/recovery.rs`
+//! (kept in memory, and persisted with atomic write-then-rename under
+//! [`ServiceConfig::checkpoint_dir`]); every
+//! [`ServiceConfig::chaos_kill_every`] intervals a random shard's
+//! *scheduler* is discarded and rebuilt — Philae re-adopts its sampling
+//! facts from the surviving world, generic kinds run the stale-merge
+//! restore (dcoflow re-asserts checkpointed admission certificates).
+//! Leases, coflow ownership, flushed-rate memory, and the shard's queued
+//! input all survive; the queue simply replays through the ordinary
+//! drain cycle, and agents keep moving bytes at their last complied
+//! schedule throughout. Symmetrically,
+//! [`ServiceConfig::agent_miss_intervals`] arms an agent-loss watchdog:
+//! a port whose agent stops reporting while it still has pending demand
+//! ages out of the plan (its capacity is masked from every allocation)
+//! and is restored the moment a message from it reappears.
+//!
 //! ## Scheduler surface
 //!
 //! The service accepts the **full scheduler registry**
@@ -52,12 +75,13 @@ use crate::coflow::{CoflowPhase, CoflowState, FlowState};
 use crate::coordinator::{
     cluster,
     philae::{CompletionOutcome, PhilaeCore},
-    rate, AdmissionStats, Plan, Scheduler, SchedulerConfig, SchedulerKind, World,
+    rate, recovery, AdmissionStats, Plan, Scheduler, SchedulerConfig, SchedulerKind, World,
 };
 use crate::fabric::{Fabric, PortLoad};
 use crate::metrics::{DeadlineStats, IntervalStats, RunningStat};
 use crate::runtime::{BatchFeatures, Engine};
 use crate::trace::{Trace, TraceRecord};
+use crate::util::{JsonValue, Rng};
 use crate::{CoflowId, FlowId, PortId, Time};
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
@@ -108,6 +132,27 @@ pub struct ServiceConfig {
     pub alloc_shards: usize,
     /// Coordinator shards K (module docs); 0/1 = single coordinator.
     pub coordinators: usize,
+    /// Supervisor checkpoint period in δ intervals (0 = never). Each shard
+    /// seals its durable scheduling facts (`coordinator/recovery.rs`); the
+    /// supervisor keeps the latest seal in memory and, when
+    /// [`ServiceConfig::checkpoint_dir`] is set, persists it with an
+    /// atomic write-then-rename.
+    pub checkpoint_every: u64,
+    /// Chaos: kill-and-restore a uniformly random coordinator shard's
+    /// scheduler every this many δ intervals (0 = never). Only the
+    /// coordinator brain dies — agent threads, the world record, leases,
+    /// ownership, and each shard's queued input survive and replay.
+    pub chaos_kill_every: u64,
+    /// Directory for persisted checkpoints (`shard_<s>.ckpt`); `None`
+    /// keeps them in memory only.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Agent-loss watchdog: a port whose agent has not reported for this
+    /// many δ intervals while the port still has pending demand ages out
+    /// of the plan — its capacity is masked from every shard's allocation
+    /// until the agent reappears. 0 disables the watchdog (the default:
+    /// event-triggered policies have legitimately long quiet periods, so
+    /// the threshold must be chosen against the workload).
+    pub agent_miss_intervals: u64,
 }
 
 impl Default for ServiceConfig {
@@ -121,6 +166,10 @@ impl Default for ServiceConfig {
             port_rate: crate::GBPS,
             alloc_shards: rate::env_test_shards(),
             coordinators: 1,
+            checkpoint_every: 0,
+            chaos_kill_every: 0,
+            checkpoint_dir: None,
+            agent_miss_intervals: 0,
         }
     }
 }
@@ -154,6 +203,18 @@ pub struct ServiceReport {
     /// SLO accounting (met ratio, goodput, admission counters); vacuous
     /// on deadline-free workloads.
     pub deadline: DeadlineStats,
+    /// Supervisor checkpoints sealed (all shards combined).
+    pub checkpoints_written: u64,
+    /// Chaos shard kills injected.
+    pub crashes_injected: u64,
+    /// Shard schedulers rebuilt after a kill.
+    pub recoveries: u64,
+    /// Wall seconds per recovery (scheduler rebuild + first reallocation).
+    pub recovery_wall: RunningStat,
+    /// Ports aged out of the plan by the agent-loss watchdog.
+    pub ports_aged_out: u64,
+    /// Aged-out ports whose agent reappeared and was restored.
+    pub ports_restored: u64,
 }
 
 impl ServiceReport {
@@ -271,6 +332,23 @@ struct Coordinator {
     wf_out: Vec<f64>,
     wf_scratch: Vec<(f64, usize)>,
     demand_total: Vec<f64>,
+    // crash-failover supervisor (ServiceConfig::{checkpoint_every,
+    // chaos_kill_every}); trace copy kept only when either is armed, so
+    // a killed generic scheduler can be rebuilt mid-run
+    trace_copy: Option<Trace>,
+    last_ckpts: Vec<Option<String>>,
+    chaos_rng: Rng,
+    checkpoints_written: u64,
+    crashes_injected: u64,
+    recoveries: u64,
+    recovery_wall: RunningStat,
+    // agent-loss watchdog (ServiceConfig::agent_miss_intervals)
+    port_last_seen: Vec<u64>,
+    port_alive: Vec<bool>,
+    dead_ports: usize,
+    masked_lease: Fabric,
+    ports_aged_out: u64,
+    ports_restored: u64,
     // measured accounting
     stats: IntervalStats,
     rate_calc: RunningStat,
@@ -354,6 +432,24 @@ impl Coordinator {
             wf_out: vec![0.0; k],
             wf_scratch: Vec::with_capacity(k),
             demand_total: vec![0.0; k],
+            trace_copy: (cfg.checkpoint_every > 0 || cfg.chaos_kill_every > 0)
+                .then(|| trace.clone()),
+            last_ckpts: vec![None; k],
+            chaos_rng: Rng::seed_from_u64(cfg.sched.dynamics_seed.wrapping_add(0xC4A05)),
+            checkpoints_written: 0,
+            crashes_injected: 0,
+            recoveries: 0,
+            recovery_wall: RunningStat::default(),
+            port_last_seen: vec![0; num_ports],
+            port_alive: vec![true; num_ports],
+            dead_ports: 0,
+            masked_lease: Fabric {
+                num_ports: 0,
+                up_capacity: Vec::new(),
+                down_capacity: Vec::new(),
+            },
+            ports_aged_out: 0,
+            ports_restored: 0,
             stats: IntervalStats::default(),
             rate_calc: RunningStat::default(),
             rate_send: RunningStat::default(),
@@ -560,6 +656,12 @@ impl Coordinator {
             migrations: self.migrations,
             reconciliations: self.reconciliations,
             deadline,
+            checkpoints_written: self.checkpoints_written,
+            crashes_injected: self.crashes_injected,
+            recoveries: self.recoveries,
+            recovery_wall: self.recovery_wall,
+            ports_aged_out: self.ports_aged_out,
+            ports_restored: self.ports_restored,
         })
     }
 
@@ -599,10 +701,11 @@ impl Coordinator {
                 }
             },
             Input::Agent(msg) => {
-                let coflow = match &msg {
-                    AgentMsg::FlowComplete { coflow, .. } => *coflow,
-                    AgentMsg::ByteUpdate { coflow, .. } => *coflow,
+                let (agent, coflow) = match &msg {
+                    AgentMsg::FlowComplete { agent, coflow, .. } => (*agent, *coflow),
+                    AgentMsg::ByteUpdate { agent, coflow, .. } => (*agent, *coflow),
                 };
+                self.note_agent(agent);
                 // late messages for completed/deregistered coflows route to
                 // shard 0 — they are counted and dropped by the handler
                 let s = self.owner_of(coflow).unwrap_or(0);
@@ -623,6 +726,22 @@ impl Coordinator {
     fn on_interval(&mut self) {
         self.intervals_seen += 1;
         self.touch_clock();
+        if self.cfg.checkpoint_every > 0
+            && self.intervals_seen % self.cfg.checkpoint_every == 0
+            && !self.world.coflows.is_empty()
+        {
+            self.checkpoint_shards();
+        }
+        if self.cfg.chaos_kill_every > 0
+            && self.intervals_seen % self.cfg.chaos_kill_every == 0
+            && !self.world.active.is_empty()
+        {
+            let s = (self.chaos_rng.next_u64() % self.shards.len() as u64) as usize;
+            self.kill_restore_shard(s);
+        }
+        if self.cfg.agent_miss_intervals > 0 {
+            self.sweep_agent_watchdog();
+        }
         if self.shards.len() > 1
             && self.intervals_seen % SERVICE_RECONCILE_INTERVALS == 0
             && !self.world.active.is_empty()
@@ -683,6 +802,157 @@ impl Coordinator {
     /// clock would make every deadline look infinitely far away.
     fn touch_clock(&mut self) {
         self.world.now = self.sim_now();
+    }
+
+    /// Seal every shard's durable scheduling facts (the supervisor's
+    /// periodic checkpoint). The latest seal per shard stays in memory —
+    /// the supervisor's working copy — and is additionally persisted with
+    /// an atomic write-then-rename when [`ServiceConfig::checkpoint_dir`]
+    /// is set, so an external restart never observes a torn file. A disk
+    /// write failure is tolerated: the in-memory copy stays authoritative.
+    fn checkpoint_shards(&mut self) {
+        for s in 0..self.shards.len() {
+            let sh = &mut self.shards[s];
+            std::mem::swap(&mut self.world.active, &mut sh.active);
+            let state = match (&sh.philae, &sh.generic) {
+                (Some(ph), _) => ph.export_state(),
+                (_, Some(g)) => g.export_state(),
+                _ => JsonValue::Null,
+            };
+            let payload = recovery::checkpoint_with_state(self.cfg.kind, state, &self.world);
+            std::mem::swap(&mut self.world.active, &mut sh.active);
+            let sealed = recovery::seal(payload);
+            if let Some(dir) = &self.cfg.checkpoint_dir {
+                let _ = std::fs::create_dir_all(dir);
+                let _ = recovery::write_atomic(&dir.join(format!("shard_{s}.ckpt")), &sealed);
+            }
+            self.last_ckpts[s] = Some(sealed);
+            self.checkpoints_written += 1;
+        }
+    }
+
+    /// Chaos kill: discard shard `s`'s scheduler and rebuild it against
+    /// the surviving world. Philae's dedicated path re-adopts sampling
+    /// facts per coflow (its stale checkpoint import is deliberately a
+    /// no-op — see `philae.rs`); generic kinds run the stale-merge
+    /// restore of the shard's last checkpoint, which re-asserts dcoflow
+    /// admission certificates sealed before the crash. Leases, coflow
+    /// ownership, flushed-rate memory, and the shard's queued input are
+    /// untouched — the queue replays through the ordinary drain cycle, so
+    /// no report is lost — and agent threads are never killed: flows keep
+    /// moving at the last complied schedule for the whole failover, which
+    /// is the paper's case for dumb agents and a soft-state coordinator.
+    fn kill_restore_shard(&mut self, s: usize) {
+        let t0 = Instant::now();
+        self.crashes_injected += 1;
+        self.touch_clock();
+        if self.shards[s].philae.is_some() {
+            let mut core = PhilaeCore::new(self.cfg.sched.clone());
+            let mut completed: Vec<(CoflowId, Vec<f64>)> = Vec::new();
+            {
+                let sh = &mut self.shards[s];
+                std::mem::swap(&mut self.world.active, &mut sh.active);
+                for i in 0..self.world.active.len() {
+                    let cid = self.world.active[i];
+                    if self.world.coflows[cid].done() {
+                        continue;
+                    }
+                    if let Some(samples) = core.adopt(cid, &self.world) {
+                        completed.push((cid, samples));
+                    }
+                }
+                std::mem::swap(&mut self.world.active, &mut sh.active);
+                sh.philae = Some(core);
+            }
+            for (cid, samples) in completed {
+                // the sample finished while its last report was in flight
+                // at crash time — estimate now (mirrors `migrate`)
+                let n = self.world.coflows[cid].flows.len();
+                let est = self.engine_estimate(&samples, n, cid);
+                self.world.coflows[cid].est_size = Some(est);
+                if self.world.coflows[cid].finished_at.is_none() {
+                    self.world.coflows[cid].phase = CoflowPhase::Running;
+                }
+            }
+            self.scores_dirty = true;
+        } else {
+            let trace = self.trace_copy.take().expect("chaos armed without a trace copy");
+            let payload = match self.last_ckpts[s].as_deref().map(recovery::unseal) {
+                Some(Ok(p)) => p,
+                // crash before the first checkpoint: a minimal payload
+                // drives the same restore path with only the attach rebuild
+                _ => {
+                    let mut p = std::collections::BTreeMap::new();
+                    p.insert(
+                        "kind".to_string(),
+                        JsonValue::String(self.cfg.kind.as_str().to_string()),
+                    );
+                    p.insert("sched".to_string(), JsonValue::Null);
+                    p.insert("coflows".to_string(), JsonValue::Array(Vec::new()));
+                    JsonValue::Object(p)
+                }
+            };
+            let sh = &mut self.shards[s];
+            std::mem::swap(&mut self.world.active, &mut sh.active);
+            let restored = recovery::restore_scheduler(
+                &payload,
+                &trace,
+                &self.cfg.sched,
+                &mut self.world,
+                false,
+            );
+            std::mem::swap(&mut self.world.active, &mut sh.active);
+            sh.generic = Some(restored.expect("restore from a self-sealed checkpoint"));
+            self.trace_copy = Some(trace);
+        }
+        self.reallocate_shard(s);
+        self.recoveries += 1;
+        self.recovery_wall.push(t0.elapsed().as_secs_f64());
+    }
+
+    /// Watchdog bookkeeping: any message from a port proves its agent
+    /// alive; a previously aged-out port rejoins the plan immediately.
+    fn note_agent(&mut self, port: PortId) {
+        if port >= self.port_last_seen.len() {
+            return;
+        }
+        self.port_last_seen[port] = self.intervals_seen;
+        if !self.port_alive[port] {
+            self.port_alive[port] = true;
+            self.dead_ports -= 1;
+            self.ports_restored += 1;
+            for sh in &mut self.shards {
+                sh.force_realloc = true;
+            }
+        }
+    }
+
+    /// Age out ports whose agent has stopped reporting
+    /// ([`ServiceConfig::agent_miss_intervals`]): past the miss threshold,
+    /// a port that still has pending demand is masked out of every
+    /// shard's allocation until its agent reappears. Masking frees
+    /// nothing physically — it stops the allocator from parking rate
+    /// certificates on a black hole, letting competing coflows use their
+    /// other ports' capacity.
+    fn sweep_agent_watchdog(&mut self) {
+        let mut changed = false;
+        for p in 0..self.world.fabric.num_ports {
+            if !self.port_alive[p] {
+                continue;
+            }
+            let idle = self.intervals_seen.saturating_sub(self.port_last_seen[p]);
+            if idle > self.cfg.agent_miss_intervals && self.world.load.up_bytes[p] > 0.0 {
+                self.port_alive[p] = false;
+                self.dead_ports += 1;
+                self.ports_aged_out += 1;
+                changed = true;
+            }
+        }
+        if changed {
+            for s in 0..self.shards.len() {
+                self.reallocate_shard(s);
+            }
+        }
     }
 
     /// Initialize the per-shard leases to an exact equal split (K=1: the
@@ -1056,8 +1326,25 @@ impl Coordinator {
                 sh.plan.clear();
             }
             std::mem::swap(&mut self.world.active, &mut sh.active);
+            // agent-loss masking: an aged-out port contributes no capacity
+            let lease: &Fabric = if self.dead_ports > 0 {
+                self.masked_lease.num_ports = sh.lease.num_ports;
+                self.masked_lease.up_capacity.clear();
+                self.masked_lease.up_capacity.extend_from_slice(&sh.lease.up_capacity);
+                self.masked_lease.down_capacity.clear();
+                self.masked_lease.down_capacity.extend_from_slice(&sh.lease.down_capacity);
+                for p in 0..self.masked_lease.num_ports {
+                    if !self.port_alive[p] {
+                        self.masked_lease.up_capacity[p] = 0.0;
+                        self.masked_lease.down_capacity[p] = 0.0;
+                    }
+                }
+                &self.masked_lease
+            } else {
+                &sh.lease
+            };
             rate::allocate_into(
-                &sh.lease,
+                lease,
                 &self.world.flows,
                 &self.world.coflows,
                 &sh.plan,

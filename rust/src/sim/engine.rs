@@ -381,6 +381,110 @@ impl CoordFrontend for CoordinatorCluster {
     }
 }
 
+/// Crash-injection frontend (`coordinator/recovery.rs`): a
+/// [`SingleCoord`] whose scheduler is killed and restored from a
+/// fresh sealed checkpoint every `every`-th event delivery. The crash
+/// model: the coordinator's *brain* (the scheduler and its learned state)
+/// is lost, while the physical world — agents, in-flight transfers, the
+/// engine's queues — survives. Each cycle runs the full production path:
+/// `checkpoint_scheduler → seal → unseal` (checksum verify) →
+/// [`crate::coordinator::restore_scheduler`] with `exact = true`, so
+/// `tests/chaos_recovery.rs` can pin that a restore at **any** event
+/// boundary leaves the run bit-identical to the uninterrupted one.
+struct RestoringCoord<'a> {
+    trace: &'a Trace,
+    cfg: &'a SchedulerConfig,
+    kind: SchedulerKind,
+    sched: Box<dyn Scheduler>,
+    plan: Plan,
+    scratch: rate::AllocScratch,
+    /// Crash every N-th event delivery (0 = never).
+    every: u64,
+    events: u64,
+    restores: u64,
+}
+
+impl RestoringCoord<'_> {
+    /// Count one event delivery; on every `every`-th, kill the scheduler
+    /// and rebuild it from a freshly sealed checkpoint **before** the
+    /// event is delivered (the restored coordinator must handle it).
+    fn maybe_crash(&mut self, world: &mut World) {
+        use crate::coordinator::{checkpoint_scheduler, restore_scheduler, seal, unseal};
+        self.events += 1;
+        if self.every == 0 || self.events % self.every != 0 {
+            return;
+        }
+        let payload = checkpoint_scheduler(self.kind, self.sched.as_ref(), world);
+        let sealed = seal(payload);
+        let payload = unseal(&sealed).expect("fresh checkpoint must pass verification");
+        self.sched = restore_scheduler(&payload, self.trace, self.cfg, world, true)
+            .expect("restore from a verified checkpoint");
+        self.restores += 1;
+    }
+}
+
+impl CoordFrontend for RestoringCoord<'_> {
+    fn name(&self) -> String {
+        self.sched.name()
+    }
+
+    fn tick_interval(&self) -> Option<Time> {
+        self.sched.tick_interval()
+    }
+
+    fn on_arrival(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
+        self.maybe_crash(world);
+        self.sched.on_arrival(cid, world)
+    }
+
+    fn on_flow_complete(&mut self, fid: FlowId, world: &mut World) -> Reaction {
+        self.maybe_crash(world);
+        self.sched.on_flow_complete(fid, world)
+    }
+
+    fn on_coflow_complete(&mut self, cid: CoflowId, world: &mut World) -> Reaction {
+        self.maybe_crash(world);
+        self.sched.on_coflow_complete(cid, world)
+    }
+
+    fn on_tick(&mut self, world: &mut World) -> Reaction {
+        self.maybe_crash(world);
+        self.sched.on_tick(world)
+    }
+
+    fn on_batch(&mut self, batch: &EventBatch, world: &mut World) -> Reaction {
+        self.maybe_crash(world);
+        self.sched.on_batch(batch, world)
+    }
+
+    fn compute(&mut self, world: &mut World, full: bool) {
+        if full {
+            self.sched.order_full_into(world, &mut self.plan);
+        } else {
+            self.sched.order_into(world, &mut self.plan);
+        }
+        rate::allocate_into(
+            &world.fabric,
+            &world.flows,
+            &world.coflows,
+            &self.plan,
+            &mut self.scratch,
+        );
+    }
+
+    fn grants(&self) -> &[(FlowId, f64)] {
+        self.scratch.grants()
+    }
+
+    fn was_granted(&self, fid: FlowId) -> bool {
+        self.scratch.was_granted(fid)
+    }
+
+    fn admission_stats(&self) -> Option<AdmissionStats> {
+        self.sched.admission_stats()
+    }
+}
+
 /// Min-heap entry of the delayed-report queue: (report time, flow).
 #[derive(PartialEq)]
 struct Ev(Time, FlowId);
@@ -462,6 +566,40 @@ impl Simulation {
     ) -> SimResult {
         cluster.set_alloc_shards(sim_cfg.alloc_shards);
         Engine::new(trace, cfg, sim_cfg).run(cluster)
+    }
+
+    /// Run with crash injection: the coordinator is killed and restored
+    /// from a freshly sealed checkpoint before every `every`-th event
+    /// delivery (`every = 0` → never, identical to [`Simulation::run`]).
+    /// Returns the result plus the number of restores performed, so tests
+    /// can assert non-vacuity. The restore is `exact` — see
+    /// `coordinator/recovery.rs` — and `tests/chaos_recovery.rs` pins the
+    /// outcome bit-identical to the uninterrupted run for all scheduler
+    /// kinds.
+    pub fn run_with_restore(
+        trace: &Trace,
+        kind: SchedulerKind,
+        cfg: &SchedulerConfig,
+        sim_cfg: &SimConfig,
+        every: u64,
+    ) -> (SimResult, u64) {
+        let mut front = RestoringCoord {
+            trace,
+            cfg,
+            kind,
+            sched: kind.build(trace, cfg),
+            plan: Plan::default(),
+            scratch: {
+                let mut s = rate::AllocScratch::new();
+                s.set_shards(sim_cfg.alloc_shards);
+                s
+            },
+            every,
+            events: 0,
+            restores: 0,
+        };
+        let result = Engine::new(trace, cfg, sim_cfg).run(&mut front);
+        (result, front.restores)
     }
 }
 

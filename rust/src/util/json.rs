@@ -1,7 +1,13 @@
-//! Minimal JSON reader — just enough for `artifacts/manifest.json`.
+//! Minimal JSON reader/writer — just enough for `artifacts/manifest.json`
+//! and the coordinator checkpoints (`coordinator::recovery`).
 //!
 //! Supports objects, arrays, strings (with escapes), numbers, booleans and
 //! null. No serde on this image; see `util` module docs.
+//!
+//! The writer is **canonical**: object keys come out in `BTreeMap` order
+//! and finite numbers use Rust's shortest round-trip `Display`, so
+//! `write(parse(write(v))) == write(v)` byte for byte. The recovery module
+//! relies on this to checksum checkpoints over their canonical encoding.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -57,6 +63,93 @@ impl JsonValue {
             _ => None,
         }
     }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Array(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&std::collections::BTreeMap<String, JsonValue>> {
+        match self {
+            JsonValue::Object(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Serialize canonically (sorted keys, shortest round-trip floats).
+    /// Non-finite numbers have no JSON encoding and come out as `null`;
+    /// callers that need them (the recovery module) string-encode first.
+    pub fn write(&self, out: &mut String) {
+        match self {
+            JsonValue::Null => out.push_str("null"),
+            JsonValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            JsonValue::Number(n) => {
+                if n.is_finite() {
+                    out.push_str(&n.to_string());
+                } else {
+                    out.push_str("null");
+                }
+            }
+            JsonValue::String(s) => write_json_string(s, out),
+            JsonValue::Array(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            JsonValue::Object(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_json_string(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl fmt::Display for JsonValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
+    }
+}
+
+fn write_json_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 /// Parse failure with byte offset.
@@ -295,5 +388,35 @@ mod tests {
         assert_eq!(JsonValue::parse("-1.5e3").unwrap().as_f64(), Some(-1500.0));
         assert_eq!(JsonValue::parse("42").unwrap().as_usize(), Some(42));
         assert_eq!(JsonValue::parse("1.5").unwrap().as_usize(), None);
+    }
+
+    #[test]
+    fn writer_is_canonical_fixed_point() {
+        // write(parse(write(v))) == write(v): keys sorted, floats shortest
+        let doc = r#"{"b": [1, 2.5, -3e-7], "a": {"x": true, "y": null, "s": "q\"\\\n"}}"#;
+        let v = JsonValue::parse(doc).unwrap();
+        let s1 = v.to_string();
+        let v2 = JsonValue::parse(&s1).unwrap();
+        assert_eq!(v, v2);
+        assert_eq!(s1, v2.to_string());
+        // keys come out sorted regardless of input order
+        assert!(s1.find("\"a\"").unwrap() < s1.find("\"b\"").unwrap());
+    }
+
+    #[test]
+    fn writer_floats_round_trip_bit_exact() {
+        for &x in &[0.1, 1.0 / 3.0, 1e300, -2.5e-9, 123456789.123456789, 0.0, -0.0] {
+            let s = JsonValue::Number(x).to_string();
+            let back = JsonValue::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "via {s:?}");
+        }
+    }
+
+    #[test]
+    fn writer_escapes_strings() {
+        let s = JsonValue::String("a\"b\\c\nd\u{1}".into()).to_string();
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\\u0001\"");
+        let back = JsonValue::parse(&s).unwrap();
+        assert_eq!(back.as_str(), Some("a\"b\\c\nd\u{1}"));
     }
 }

@@ -20,6 +20,17 @@ impl Rng {
         }
     }
 
+    /// Raw generator state, for checkpointing; restore with
+    /// [`Rng::from_state`] to resume the exact stream position.
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Rebuild an RNG at a previously captured [`state`](Rng::state).
+    pub fn from_state(state: u64) -> Self {
+        Rng { state }
+    }
+
     /// Next raw 64 random bits (SplitMix64 step).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {

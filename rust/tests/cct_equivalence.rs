@@ -312,6 +312,47 @@ fn aalo_batched_admission_cct_equivalent_under_report_jitter() {
     assert_batched_equals_per_event(60, 80, SchedulerKind::Aalo, 0.05);
 }
 
+/// Crash-failover pin (`coordinator/recovery.rs`): killing the coordinator
+/// and restoring it from a freshly sealed checkpoint before every k-th
+/// event delivery must reproduce the uninterrupted run bit for bit — the
+/// checkpointed durable facts plus the attach rebuild carry *everything*
+/// the scheduler knew, through the full production path
+/// (checkpoint → seal → unseal → restore, `exact` mode).
+fn assert_restore_bit_identical(trace: &Trace, kind: SchedulerKind, every: u64) {
+    let cfg = SchedulerConfig::default();
+    let base = SimConfig { account_delta: Some(1e18), ..SimConfig::default() };
+
+    let mut sched = kind.build(trace, &cfg);
+    let plain = Simulation::run_with(trace, sched.as_mut(), &cfg, &base);
+
+    let (restored, restores) = Simulation::run_with_restore(trace, kind, &cfg, &base, every);
+    assert!(restores > 0, "{kind:?}: crash injection never fired (every={every})");
+    assert_same_history(&plain, &restored, kind.as_str());
+    assert_eq!(plain.deadline, restored.deadline, "{kind:?}: SLO accounting diverged");
+}
+
+#[test]
+fn philae_restore_bit_identical_150_ports() {
+    let trace = TraceSpec::fb_like(150, 200).seed(5).generate();
+    assert_restore_bit_identical(&trace, SchedulerKind::Philae, 7);
+}
+
+#[test]
+fn aalo_restore_bit_identical_150_ports() {
+    let trace = TraceSpec::fb_like(150, 200).seed(5).generate();
+    assert_restore_bit_identical(&trace, SchedulerKind::Aalo, 5);
+}
+
+#[test]
+fn dcoflow_restore_bit_identical_with_deadlines() {
+    // crash-restore across live admission verdicts and reservations
+    let trace = TraceSpec::fb_like(60, 80)
+        .seed(5)
+        .with_deadline_tightness(2.0)
+        .generate();
+    assert_restore_bit_identical(&trace, SchedulerKind::Dcoflow, 3);
+}
+
 /// The deadline subsystem through the batching/cluster pipes: on a
 /// deadline-carrying trace, dcoflow's batched admission must reproduce the
 /// per-event history bit for bit, and the K=1 cluster must be a

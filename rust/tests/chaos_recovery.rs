@@ -1,0 +1,246 @@
+//! Chaos harness for coordinator crash-failover (`coordinator/recovery.rs`):
+//!
+//! * **Exact restore oracle** — killing the single coordinator at an event
+//!   boundary and restoring it from a freshly sealed checkpoint must be
+//!   **bit-identical** to the uninterrupted run, for *every* scheduler kind
+//!   in the registry. This is the strongest correctness statement the
+//!   checkpoint format can make: the sealed durable facts plus the physical
+//!   world reconstruct the scheduler brain exactly.
+//! * **Cluster chaos** — killing random shards mid-run through the chaos
+//!   driver must leave every structural invariant intact, finish every
+//!   coflow, and degrade CCT only boundedly (the crash model loses learned
+//!   scheduler state, never bytes in flight).
+//! * **SLO preservation** — a dcoflow run that meets every admitted
+//!   deadline without chaos must still expire nothing when shards crash:
+//!   admitted certificates are durable facts and survive the restore.
+//! * **Live-service supervisor** — the threaded service with checkpoint +
+//!   chaos + agent-loss watchdog armed still completes the trace, counts
+//!   one recovery per injected crash, and persists unsealable checkpoints.
+
+use philae::coordinator::{
+    unseal, ClusterConfig, CoordinatorCluster, SchedulerConfig, SchedulerKind,
+};
+use philae::service::{run_service, ServiceConfig};
+use philae::sim::{SimConfig, SimResult, Simulation};
+use philae::trace::{DeadlineModel, TraceSpec};
+
+/// Wall-time decoupled sim config: the §4.3 deadline model never couples
+/// measured wall time into the event history, so histories are replayable
+/// bit-for-bit.
+fn decoupled() -> SimConfig {
+    SimConfig { account_delta: Some(1e18), ..SimConfig::default() }
+}
+
+fn assert_bit_identical(a: &SimResult, b: &SimResult, what: &str) {
+    assert_eq!(a.ccts.len(), b.ccts.len(), "{what}: coflow count");
+    for (i, (x, y)) in a.ccts.iter().zip(b.ccts.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: CCT diverged at coflow {i}");
+    }
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{what}: makespan");
+    assert_eq!(a.rate_calcs, b.rate_calcs, "{what}: rate calcs");
+    assert_eq!(a.rate_msgs, b.rate_msgs, "{what}: rate msgs");
+    assert_eq!(a.update_msgs, b.update_msgs, "{what}: update msgs");
+    assert_eq!(a.deadline, b.deadline, "{what}: SLO accounting");
+}
+
+/// The tentpole pin: checkpoint-then-restore at any event boundary is
+/// bit-identical to never crashing, for all registry kinds. A deadline
+/// trace is used so the SLO accounting path (admission verdicts, expiry)
+/// is exercised through the crash for dcoflow too.
+#[test]
+fn restore_is_bit_identical_for_every_scheduler_kind() {
+    let trace = TraceSpec::fb_like(50, 60).seed(5).with_deadline_tightness(2.0).generate();
+    let cfg = SchedulerConfig::default();
+    let sim_cfg = decoupled();
+    for &kind in SchedulerKind::all() {
+        let mut sched = kind.build(&trace, &cfg);
+        let plain = Simulation::run_with(&trace, sched.as_mut(), &cfg, &sim_cfg);
+        // a prime period so crashes land on many distinct boundary shapes
+        let (restored, restores) = Simulation::run_with_restore(&trace, kind, &cfg, &sim_cfg, 7);
+        assert!(restores > 0, "{kind:?}: crash injection never fired — the pin is vacuous");
+        assert_bit_identical(&plain, &restored, kind.as_str());
+    }
+}
+
+/// Crashing every few events instead of every few dozen must not change
+/// the answer either — restore composes with itself.
+#[test]
+fn repeated_rapid_restores_stay_bit_identical() {
+    let trace = TraceSpec::fb_like(30, 40).seed(9).generate();
+    let cfg = SchedulerConfig::default();
+    let sim_cfg = decoupled();
+    for &kind in &[SchedulerKind::Philae, SchedulerKind::Saath, SchedulerKind::PhilaeEcMulti] {
+        let mut sched = kind.build(&trace, &cfg);
+        let plain = Simulation::run_with(&trace, sched.as_mut(), &cfg, &sim_cfg);
+        let (restored, restores) = Simulation::run_with_restore(&trace, kind, &cfg, &sim_cfg, 2);
+        assert!(restores > 10, "{kind:?}: only {restores} restores at every=2");
+        assert_bit_identical(&plain, &restored, kind.as_str());
+    }
+}
+
+fn chaos_cluster_cfg(k: usize) -> ClusterConfig {
+    ClusterConfig {
+        coordinators: k,
+        reconcile_every: 4,
+        max_migrations_per_round: 4,
+        imbalance_threshold: 1.5,
+        lease_floor_frac: 0.05,
+        // asserts lease conservation + unique ownership inside every
+        // scheduling round, crashes included
+        validate: true,
+    }
+}
+
+/// End-to-end cluster chaos: shards die and are restored from the chaos
+/// driver's own checkpoints mid-run. Everything must finish, invariants
+/// hold every round (`validate: true`), and the CCT cost of losing learned
+/// scheduler state stays bounded — the crash model never loses bytes in
+/// flight, so degradation is a re-learning cost, not a restart.
+#[test]
+fn cluster_chaos_finishes_with_bounded_cct_degradation() {
+    let trace = TraceSpec::tiny(12, 30).seed(11).generate();
+    let cfg = SchedulerConfig::default();
+    let sim_cfg = decoupled();
+    for &kind in &[SchedulerKind::Philae, SchedulerKind::Aalo] {
+        let mut baseline = CoordinatorCluster::new(kind, &trace, &cfg, chaos_cluster_cfg(3));
+        let base = Simulation::run_with_cluster(&trace, &mut baseline, &cfg, &sim_cfg);
+
+        let mut chaotic = CoordinatorCluster::new(kind, &trace, &cfg, chaos_cluster_cfg(3));
+        chaotic.set_chaos(&trace, &cfg, 2, 3, 42);
+        let res = Simulation::run_with_cluster(&trace, &mut chaotic, &cfg, &sim_cfg);
+
+        assert!(chaotic.chaos_checkpoints() > 0, "{kind:?}: no checkpoints sealed");
+        assert!(chaotic.chaos_kills() > 0, "{kind:?}: no shards killed");
+        for (i, &cct) in res.ccts.iter().enumerate() {
+            assert!(
+                cct.is_finite() && cct > 0.0,
+                "{kind:?}: coflow {i} never finished under chaos"
+            );
+        }
+        let base_mean = base.ccts.iter().sum::<f64>() / base.ccts.len() as f64;
+        let chaos_mean = res.ccts.iter().sum::<f64>() / res.ccts.len() as f64;
+        assert!(
+            chaos_mean <= base_mean * 10.0,
+            "{kind:?}: unbounded degradation — chaos mean CCT {chaos_mean} vs baseline {base_mean}"
+        );
+        assert!(res.makespan <= base.makespan * 10.0, "{kind:?}: unbounded makespan under chaos");
+    }
+}
+
+/// SLO certificates are durable: on a workload where the no-chaos run
+/// expires nothing, crashing shards mid-run must not expire anything
+/// either. Admitted coflows' reservations are re-asserted by the restore
+/// (conservative merge), so a crash can reject future arrivals but never
+/// break a promise already made.
+#[test]
+fn cluster_chaos_preserves_slo_certificates() {
+    let trace = TraceSpec::tiny(8, 14)
+        .seed(14)
+        .with_deadlines(DeadlineModel { tightness: 50.0, spread: 0.5, coverage: 1.0 })
+        .generate();
+    let cfg = SchedulerConfig::default();
+    let sim_cfg = decoupled();
+    let kind = SchedulerKind::Dcoflow;
+
+    let mut baseline = CoordinatorCluster::new(kind, &trace, &cfg, chaos_cluster_cfg(2));
+    let base = Simulation::run_with_cluster(&trace, &mut baseline, &cfg, &sim_cfg);
+    assert_eq!(
+        base.deadline.expired,
+        0,
+        "workload too tight for the preservation property to be meaningful"
+    );
+    assert!(base.deadline.admitted > 0, "nothing admitted — the pin is vacuous");
+
+    let mut chaotic = CoordinatorCluster::new(kind, &trace, &cfg, chaos_cluster_cfg(2));
+    chaotic.set_chaos(&trace, &cfg, 2, 3, 7);
+    let res = Simulation::run_with_cluster(&trace, &mut chaotic, &cfg, &sim_cfg);
+    assert!(chaotic.chaos_kills() > 0, "no shards killed — the pin is vacuous");
+    assert_eq!(
+        res.deadline.expired,
+        0,
+        "an admitted coflow expired across a crash: certificates were lost"
+    );
+    assert!(res.ccts.iter().all(|c| c.is_finite() && *c > 0.0));
+}
+
+fn chaos_svc(kind: SchedulerKind) -> ServiceConfig {
+    ServiceConfig {
+        kind,
+        coordinators: 2,
+        time_scale: 200.0, // fast replay: tiny traces finish in < 2 s wall
+        checkpoint_every: 2,
+        chaos_kill_every: 3,
+        ..ServiceConfig::default()
+    }
+}
+
+/// Live-service supervisor: crashes injected into the threaded coordinator
+/// are each answered by exactly one recovery, the trace still completes,
+/// and recovery wall time is measured.
+#[test]
+fn service_chaos_completes_trace_and_counts_recoveries() {
+    // Philae exercises the adopt()-based rebuild, Aalo the
+    // checkpoint-consuming generic restore.
+    for kind in [SchedulerKind::Philae, SchedulerKind::Aalo] {
+        let trace = TraceSpec::tiny(8, 14).seed(21).generate();
+        let report = run_service(&trace, &chaos_svc(kind)).expect("chaos service run");
+        assert_eq!(report.ccts.len(), trace.coflows.len());
+        for (i, &cct) in report.ccts.iter().enumerate() {
+            assert!(
+                cct.is_finite() && cct > 0.0,
+                "{kind:?}: coflow {i} unfinished under chaos: {cct}"
+            );
+        }
+        assert!(report.checkpoints_written > 0, "{kind:?}: supervisor never checkpointed");
+        assert!(report.crashes_injected > 0, "{kind:?}: chaos never fired");
+        assert_eq!(
+            report.recoveries,
+            report.crashes_injected,
+            "{kind:?}: a crash went unrecovered"
+        );
+        assert!(
+            report.recovery_wall.n == report.recoveries,
+            "{kind:?}: recovery latency not measured per recovery"
+        );
+    }
+}
+
+/// Persisted checkpoints survive the process: `shard_<s>.ckpt` files are
+/// written atomically and unseal cleanly (checksum + version verified).
+#[test]
+fn service_persists_unsealable_checkpoints() {
+    let dir = std::env::temp_dir().join(format!("philae_ckpt_{}", std::process::id()));
+    let trace = TraceSpec::tiny(8, 12).seed(5).generate();
+    let cfg = ServiceConfig {
+        checkpoint_dir: Some(dir.clone()),
+        ..chaos_svc(SchedulerKind::Philae)
+    };
+    let report = run_service(&trace, &cfg).expect("service run");
+    assert!(report.checkpoints_written > 0);
+    for s in 0..2 {
+        let path = dir.join(format!("shard_{s}.ckpt"));
+        let sealed = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("missing checkpoint {}: {e}", path.display()));
+        let payload = unseal(&sealed).expect("persisted checkpoint must unseal");
+        assert!(payload.get("kind").is_some(), "checkpoint lacks scheduler kind");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The agent-loss watchdog is armed but agents keep reporting: nothing
+/// ages out spuriously on a healthy run, and the service still completes
+/// with chaos on top.
+#[test]
+fn watchdog_does_not_fire_on_healthy_agents() {
+    let trace = TraceSpec::tiny(8, 14).seed(33).generate();
+    let cfg = ServiceConfig {
+        // generous threshold: a healthy tiny-trace run never goes this quiet
+        // while demand is pending
+        agent_miss_intervals: 10_000,
+        ..chaos_svc(SchedulerKind::Aalo)
+    };
+    let report = run_service(&trace, &cfg).expect("watchdog service run");
+    assert!(report.ccts.iter().all(|c| c.is_finite() && *c > 0.0));
+    assert_eq!(report.ports_aged_out, 0, "healthy agents were aged out");
+    assert_eq!(report.ports_restored, 0);
+}

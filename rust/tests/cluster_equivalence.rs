@@ -136,6 +136,70 @@ fn lease_conservation_exact_on_heterogeneous_fabrics() {
     });
 }
 
+/// Crash-failover property: killing a shard and restoring its scheduler
+/// (from a sealed cluster checkpoint, or cold with none) must leave every
+/// structural invariant intact — per-port lease sums still equal the
+/// fabric capacity, ownership stays unique, and the next compute round
+/// still produces feasible grants. The restore deliberately keeps the
+/// shard's current lease and ownership, so this is conservation *by
+/// construction* — the test pins that construction.
+#[test]
+fn shard_restore_preserves_leases_and_ownership() {
+    prop::for_all(16, |rng| {
+        let ports = rng.range_inclusive(6, 14);
+        let coflows = rng.range_inclusive(8, 20);
+        let k = rng.range_inclusive(2, 4);
+        let seed = rng.next_u64();
+        let kind = if rng.chance(0.5) {
+            SchedulerKind::Philae
+        } else {
+            SchedulerKind::Aalo
+        };
+        let trace = TraceSpec::tiny(ports, coflows).seed(seed).generate();
+        let cfg = SchedulerConfig::default();
+        let mut world = world_from_trace(&trace);
+        let mut cluster = CoordinatorCluster::new(kind, &trace, &cfg, aggressive(k));
+        for cid in 0..trace.coflows.len() {
+            world.active.push(cid);
+            cluster.on_arrival(cid, &mut world);
+        }
+        cluster.compute(&mut world, false);
+        cluster.reconcile_now(&mut world); // leases now demand-weighted
+        let ckpt = cluster.checkpoint(&mut world);
+        let victim = rng.below(k);
+        let with_ckpt = rng.chance(0.5);
+        let restored = cluster.kill_and_restore_shard(
+            victim,
+            &trace,
+            &cfg,
+            with_ckpt.then_some(ckpt.as_str()),
+            &mut world,
+        );
+        restored.unwrap_or_else(|e| panic!("{kind:?} K={k} seed {seed}: restore failed: {e}"));
+        cluster.check_invariants(&world);
+        for p in 0..world.fabric.num_ports {
+            let up: f64 = (0..k).map(|s| cluster.lease(s).up_capacity[p]).sum();
+            let cap = world.fabric.up_capacity[p];
+            assert!(
+                (up - cap).abs() <= 1e-9 * cap.max(1.0),
+                "{kind:?} K={k} seed {seed}: uplink {p} leaked across restore: {up} != {cap}"
+            );
+            let down: f64 = (0..k).map(|s| cluster.lease(s).down_capacity[p]).sum();
+            let cap = world.fabric.down_capacity[p];
+            assert!(
+                (down - cap).abs() <= 1e-9 * cap.max(1.0),
+                "{kind:?} K={k} seed {seed}: downlink {p} leaked across restore: {down} != {cap}"
+            );
+        }
+        cluster.compute(&mut world, false);
+        cluster.check_invariants(&world);
+        assert!(
+            !cluster.grants().is_empty(),
+            "{kind:?} K={k} seed {seed}: restored cluster stopped granting"
+        );
+    });
+}
+
 #[test]
 fn migration_preserves_unique_ownership() {
     prop::for_all(24, |rng| {
