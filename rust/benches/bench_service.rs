@@ -1,0 +1,199 @@
+//! §Perf bench of the **persistent-worker allocation pool** and the
+//! **event-loop service runtime**.
+//!
+//! Part A pins the tentpole claim at the allocator level: sharded
+//! `allocate_into` entry cost with the persistent pool (parked workers
+//! woken per call) vs the spawn-per-call `thread::scope` baseline vs
+//! serial, at 900 and 5000 ports, every variant asserted bit-identical.
+//! The gated metric is `pool_entry_speedup_vs_spawn` — the pool must never
+//! pay more per call than spawning did.
+//!
+//! Part B soaks the live coordinator runtime headlessly (`run_soak`: null
+//! agents, a feeder thread streaming synthesized completion reports
+//! round-robin across coflows) at 5000 ports / 100k+ concurrent flows and
+//! reports sustained events/sec plus the p50/p99 reallocation latency
+//! under that pressure — absolute numbers for the trajectory record, not
+//! gated (they are machine-dependent).
+//!
+//! Emits machine-readable `BENCH_service.json` at the repo root.
+//!
+//! `cargo bench --bench bench_service`
+
+mod common;
+
+use philae::coordinator::philae::PhilaeCore;
+use philae::coordinator::{rate, Plan, SchedulerConfig, SchedulerKind};
+use philae::service::{run_soak, ServiceConfig};
+use philae::sim::world_from_trace;
+use philae::trace::TraceSpec;
+
+struct AllocRow {
+    ports: usize,
+    shards: usize,
+    serial_us: f64,
+    spawn_us: f64,
+    pool_us: f64,
+}
+
+fn main() {
+    common::banner(
+        "service",
+        "persistent pool vs spawn-per-call + event-loop soak (events/sec, realloc p99)",
+    );
+    let cfg = SchedulerConfig::default();
+    let iters = common::iters(10);
+    let shards = 4usize;
+    println!("alloc shards: {shards} | iters: {iters}\n");
+
+    // ---- Part A: allocation entry cost, pool vs spawn vs serial --------
+    let mut rows: Vec<AllocRow> = Vec::new();
+    for (ports, coflows) in [(900usize, 600usize), (5000, 1500)] {
+        let trace = TraceSpec::fb_like(ports, coflows).seed(5).generate();
+        let mut world = world_from_trace(&trace);
+        world.active = (0..trace.coflows.len()).collect();
+        let mut core = PhilaeCore::new(cfg.clone());
+        for cid in 0..trace.coflows.len() {
+            core.handle_arrival(cid, &mut world);
+            world.coflows[cid].phase = philae::coflow::CoflowPhase::Running;
+            world.coflows[cid].est_size = Some(world.coflows[cid].total_bytes);
+        }
+        let mut plan = Plan::default();
+        core.order_full_into(&world, &mut plan);
+
+        let mut serial = rate::AllocScratch::new();
+        rate::allocate_into(&world.fabric, &world.flows, &world.coflows, &plan, &mut serial);
+        let (serial_s, _) = common::time_it(iters, || {
+            rate::allocate_into(&world.fabric, &world.flows, &world.coflows, &plan, &mut serial)
+        });
+
+        let mut spawn = rate::AllocScratch::new();
+        spawn.set_shards(shards);
+        spawn.set_spawn_workers(true);
+        rate::allocate_into(&world.fabric, &world.flows, &world.coflows, &plan, &mut spawn);
+        assert_eq!(spawn.grants(), serial.grants(), "spawn path diverged at {ports}p");
+        let (spawn_s, _) = common::time_it(iters, || {
+            rate::allocate_into(&world.fabric, &world.flows, &world.coflows, &plan, &mut spawn)
+        });
+
+        let mut pool = rate::AllocScratch::new();
+        pool.set_shards(shards);
+        // first call spawns + parks the workers; timed calls only wake them
+        rate::allocate_into(&world.fabric, &world.flows, &world.coflows, &plan, &mut pool);
+        assert_eq!(pool.grants(), serial.grants(), "pool path diverged at {ports}p");
+        let (pool_s, _) = common::time_it(iters, || {
+            rate::allocate_into(&world.fabric, &world.flows, &world.coflows, &plan, &mut pool)
+        });
+
+        println!(
+            "{} ports / {} coflows / {} flows ({} grants):",
+            ports,
+            coflows,
+            trace.flows.len(),
+            serial.grants().len()
+        );
+        println!("  serial              {:>10.1} µs", serial_s * 1e6);
+        println!(
+            "  S={shards} spawn-per-call {:>10.1} µs ({:.2}x vs serial)",
+            spawn_s * 1e6,
+            serial_s / spawn_s.max(1e-12)
+        );
+        println!(
+            "  S={shards} persistent    {:>10.1} µs ({:.2}x vs serial, {:.2}x vs spawn)",
+            pool_s * 1e6,
+            serial_s / pool_s.max(1e-12),
+            spawn_s / pool_s.max(1e-12)
+        );
+        rows.push(AllocRow {
+            ports,
+            shards,
+            serial_us: serial_s * 1e6,
+            spawn_us: spawn_s * 1e6,
+            pool_us: pool_s * 1e6,
+        });
+        println!();
+    }
+
+    // ---- Part B: event-loop soak at 5k ports / 100k+ flows -------------
+    let soak_ports = 5000usize;
+    let target_flows = std::env::var("PHILAE_SOAK_FLOWS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(100_000);
+    let mut soak_coflows = 400usize;
+    let trace = loop {
+        let t = TraceSpec::fb_like(soak_ports, soak_coflows).seed(7).generate();
+        if t.flows.len() >= target_flows {
+            break t;
+        }
+        soak_coflows *= 2;
+    };
+    println!(
+        "soak: {} ports, {} coflows, {} concurrent flows (target {target_flows})",
+        soak_ports,
+        trace.coflows.len(),
+        trace.flows.len()
+    );
+    let svc = ServiceConfig {
+        kind: SchedulerKind::Philae,
+        sched: cfg,
+        alloc_shards: shards,
+        ..ServiceConfig::default()
+    };
+    let report = run_soak(&trace, &svc).expect("soak run");
+    let events_per_sec = report.update_msgs as f64 / report.wall_seconds.max(1e-9);
+    println!(
+        "  {} completion events in {:.2}s wall -> {:.0} events/sec sustained",
+        report.update_msgs, report.wall_seconds, events_per_sec
+    );
+    println!(
+        "  reallocations: {} | latency ms p50 {:.3} / p99 {:.3} | sched bufs recycled {}",
+        report.rate_calcs,
+        report.realloc_p50 * 1e3,
+        report.realloc_p99 * 1e3,
+        report.sched_bufs_reused,
+    );
+    assert_eq!(
+        report.ccts.iter().filter(|c| c.is_finite()).count(),
+        trace.coflows.len(),
+        "soak must complete every coflow"
+    );
+
+    // ---- JSON ----------------------------------------------------------
+    let mut json = String::from("{\n  \"bench\": \"service\",\n  \"iters\": ");
+    json.push_str(&iters.to_string());
+    json.push_str(",\n  \"alloc\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"ports\": {}, \"shards\": {}, \"serial_us\": {:.3}, \"spawn_us\": {:.3}, \
+             \"pool_us\": {:.3},\n      \"pool_entry_speedup_vs_spawn\": {:.4}, \
+             \"pool_speedup_vs_serial\": {:.4}}}{}\n",
+            r.ports,
+            r.shards,
+            r.serial_us,
+            r.spawn_us,
+            r.pool_us,
+            r.spawn_us / r.pool_us.max(1e-9),
+            r.serial_us / r.pool_us.max(1e-9),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"soak\": {{\"ports\": {}, \"coflows\": {}, \"flows\": {}, \"events\": {}, \
+         \"wall_seconds\": {:.3},\n    \"events_per_sec\": {:.1}, \"rate_calcs\": {}, \
+         \"realloc_p50_ms\": {:.4}, \"realloc_p99_ms\": {:.4}, \"sched_bufs_reused\": {}}}\n",
+        soak_ports,
+        trace.coflows.len(),
+        trace.flows.len(),
+        report.update_msgs,
+        report.wall_seconds,
+        events_per_sec,
+        report.rate_calcs,
+        report.realloc_p50 * 1e3,
+        report.realloc_p99 * 1e3,
+        report.sched_bufs_reused,
+    ));
+    json.push_str("}\n");
+    common::write_json("BENCH_service.json", &json);
+}

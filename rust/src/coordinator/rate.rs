@@ -48,19 +48,24 @@
 //!
 //! The pipeline exploits that in four phases:
 //!
-//! 1. **Bucket** — one serial walk of the plan emits each runnable flow as
-//!    an op and assigns it a *DAG level* (`1 + max(level of the previous op
-//!    on its src uplink, on its dst downlink)`). Ops in the same level
-//!    touch pairwise-disjoint ports by construction. Each op is then
-//!    bucketed by `(level, src-shard)`, where ports are partitioned into
-//!    `S` contiguous shards.
-//! 2. **Grant (parallel)** — `S` workers under [`std::thread::scope`]
-//!    sweep the levels in lockstep (a spin barrier per level). Worker `s`
-//!    owns shard `s`'s slice of the capacity ledger: it grants every op
-//!    whose src port lies in its shard — intra-shard flows touch only its
-//!    own slice; cross-shard flows additionally debit the remote downlink,
-//!    which is safe and exact because ports are disjoint within a level.
-//!    Port residuals and group budgets live in f64-bit atomic tables.
+//! 1. **Emit + bucket** — the plan's runnable flows are emitted as ops in
+//!    exactly the serial visit order, then a serial walk assigns each op a
+//!    *DAG level* (`1 + max(level of the previous op on its src uplink, on
+//!    its dst downlink)`). Ops in the same level touch pairwise-disjoint
+//!    ports by construction. Each op is then bucketed by
+//!    `(level, src-shard)`, where ports are partitioned into `S`
+//!    contiguous shards. On the pooled path the emission itself runs in
+//!    parallel: every worker emits a contiguous chunk of the plan's
+//!    entries (pass-major) into a private buffer, and the caller
+//!    concatenates the buffers pass-major in worker order — byte for byte
+//!    the serial emission.
+//! 2. **Grant (parallel)** — `S` workers sweep the levels in lockstep (a
+//!    sense-reversing spin barrier per level). Worker `s` owns shard `s`'s
+//!    slice of the capacity ledger: it grants every op whose src port lies
+//!    in its shard — intra-shard flows touch only its own slice;
+//!    cross-shard flows additionally debit the remote downlink, which is
+//!    safe and exact because ports are disjoint within a level. Port
+//!    residuals and group budgets live in f64-bit atomic tables.
 //! 3. **Merge (serial, deterministic)** — a replay walk over the ops in
 //!    original plan order rebuilds the canonical grants list (including
 //!    the budgeted/backfill duplicate-grant merge), the `visited` counter,
@@ -73,14 +78,46 @@
 //!
 //! `S = 1` (the default) bypasses the pipeline entirely and runs the
 //! serial loop — there is no behavioral difference, only a wall-clock one.
-//! The sharded path pays one `thread::scope` spawn per call, so it wins
-//! only on large fabrics (see `benches/bench_shard.rs`, which emits
-//! `BENCH_shard.json`: allocation µs vs shard count at 900/5000 ports).
+//!
+//! ## Persistent worker pool (pool lifecycle, wake protocol)
+//!
+//! The sharded path used to pay one `thread::scope` spawn per call; at
+//! service event rates that entry cost dominates the zero-alloc fast path.
+//! Each [`AllocScratch`] therefore owns a [`WorkerPool`]: `S − 1` parked
+//! worker threads, created lazily on the first sharded call and reused for
+//! every subsequent allocation. The wake protocol per round:
+//!
+//! 1. the caller sizes the barrier to the round's clamped shard count,
+//!    arms the ack counter, and publishes a [`PoolJob`] (raw pointers to
+//!    the scratch tables, plan, and world slices) by bumping a round
+//!    counter under a mutex + condvar;
+//! 2. caller and workers emit their op chunks, cross a barrier, the caller
+//!    runs the serial bucket/sort/table-setup phase alone, and a second
+//!    barrier crossing releases everyone into the level-lockstep grant
+//!    sweep of phase 2;
+//! 3. each worker acknowledges round completion on an atomic counter; the
+//!    caller spins that counter to zero before returning, which is what
+//!    keeps the job's raw pointers sound — no worker can touch the round's
+//!    data after `allocate_into` returns.
+//!
+//! Workers beyond the round's clamped shard count sit the round out
+//! without touching the barrier; a scratch whose shard count grows simply
+//! spawns the missing workers. Dropping the scratch sets a shutdown flag,
+//! wakes everyone, and joins the threads (**shutdown-on-drop** — the pool
+//! never outlives its scratch). [`AllocScratch::set_spawn_workers`] keeps
+//! the old spawn-per-call path selectable as the equivalence/bench
+//! baseline; both paths are bit-identical to serial (see
+//! `benches/bench_service.rs`, which gates the pool's entry cost against
+//! the spawn baseline, and `benches/bench_shard.rs` for µs vs shard
+//! count at 900/5000 ports).
 
 use crate::coflow::{CoflowState, FlowState};
 use crate::fabric::{CapacityLedger, Fabric};
 use crate::{CoflowId, FlowId, EPS};
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
 
 /// Which of a coflow's flows an order entry admits — Philae's lanes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -205,11 +242,13 @@ pub fn env_test_shards() -> usize {
 
 /// Sense-reversing spin barrier for the per-level lockstep of the shard
 /// workers. Levels are short (one op per port at most), so spinning beats
-/// a futex park/unpark by a wide margin.
+/// a futex park/unpark by a wide margin. `total` is atomic so a persistent
+/// pool can retarget the participant count between rounds (it is only ever
+/// stored while every participant is parked, never mid-wait).
 struct SpinBarrier {
     arrived: AtomicUsize,
     generation: AtomicUsize,
-    total: usize,
+    total: AtomicUsize,
 }
 
 impl SpinBarrier {
@@ -217,13 +256,20 @@ impl SpinBarrier {
         SpinBarrier {
             arrived: AtomicUsize::new(0),
             generation: AtomicUsize::new(0),
-            total,
+            total: AtomicUsize::new(total),
         }
+    }
+
+    /// Retarget the participant count. Only sound while the barrier is
+    /// quiescent (no thread between `wait` entry and exit) — the pool
+    /// guarantees that by setting it before publishing a round.
+    fn set_total(&self, total: usize) {
+        self.total.store(total, Ordering::Relaxed);
     }
 
     fn wait(&self) {
         let gen = self.generation.load(Ordering::Acquire);
-        if self.arrived.fetch_add(1, Ordering::AcqRel) + 1 == self.total {
+        if self.arrived.fetch_add(1, Ordering::AcqRel) + 1 == self.total.load(Ordering::Relaxed) {
             self.arrived.store(0, Ordering::Relaxed);
             self.generation.store(gen.wrapping_add(1), Ordering::Release);
         } else {
@@ -269,7 +315,25 @@ struct ShardState {
     grant_bits: Vec<AtomicU64>,
     /// Level count of the current round.
     levels: usize,
+    /// Per-worker emission buffers of the pooled path (one slot per
+    /// worker, grown to the shard-count high-water mark).
+    emit: Vec<EmitBuf>,
 }
+
+/// One worker's private op-emission buffer (see [`emit_chunk`]). The
+/// `UnsafeCell` hands worker `w` exclusive lock-free mutation of slot `w`
+/// during the emission phase; distinct slots never alias, and the barrier
+/// after emission publishes every buffer to the concatenating caller.
+#[derive(Debug, Default)]
+struct EmitBuf {
+    ops: UnsafeCell<Vec<ShardOp>>,
+    /// Index where the second (backfill) pass begins in `ops`.
+    split: AtomicUsize,
+}
+
+// SAFETY: each round, slot `w` is mutated only by worker `w`, and all
+// cross-thread reads happen after the emission barrier.
+unsafe impl Sync for EmitBuf {}
 
 /// Scratch state is transient per call, so a cloned scratch just starts
 /// cold (atomics are not `Clone`).
@@ -284,6 +348,191 @@ fn grow_bits(v: &mut Vec<AtomicU64>, n: usize) {
     if v.len() < n {
         v.resize_with(n, || AtomicU64::new(0));
     }
+}
+
+/// Job descriptor for one pooled allocation round. Raw pointers stand in
+/// for the borrows the long-lived worker threads cannot hold: they are
+/// valid from publication until the caller observes every participant's
+/// ack (`PoolShared::active` reaching 0), and workers dereference them
+/// only between those two points.
+#[derive(Clone, Copy)]
+struct PoolJob {
+    st: *const ShardState,
+    plan: *const Plan,
+    flows: *const FlowState,
+    nflows: usize,
+    coflows: *const CoflowState,
+    ncoflows: usize,
+    shards: usize,
+    nports: usize,
+    has_groups: bool,
+}
+
+// SAFETY: the pointers are dereferenced only inside a round, while the
+// publishing `allocate_into` call keeps the pointees alive and blocks on
+// the ack counter before returning (wake protocol in the module docs).
+unsafe impl Send for PoolJob {}
+
+impl PoolJob {
+    /// Pre-first-round placeholder; never dereferenced (`shards == 0`
+    /// makes every worker sit the round out).
+    const fn empty() -> Self {
+        PoolJob {
+            st: std::ptr::null(),
+            plan: std::ptr::null(),
+            flows: std::ptr::null(),
+            nflows: 0,
+            coflows: std::ptr::null(),
+            ncoflows: 0,
+            shards: 0,
+            nports: 0,
+            has_groups: false,
+        }
+    }
+}
+
+/// Round gate of the wake protocol: bumping `round` under the lock
+/// publishes a fresh job to the parked workers.
+struct PoolGate {
+    round: u64,
+    job: PoolJob,
+    shutdown: bool,
+}
+
+/// State shared between an [`AllocScratch`] and its parked workers.
+struct PoolShared {
+    gate: Mutex<PoolGate>,
+    /// Wakes parked workers on a new round or on shutdown.
+    cv: Condvar,
+    /// Level-lockstep barrier, retargeted per round to the clamped shard
+    /// count while every participant is parked.
+    barrier: SpinBarrier,
+    /// Participants still inside the current round. The caller spins this
+    /// to 0 before returning, which is what makes [`PoolJob`]'s raw
+    /// pointers sound.
+    active: AtomicUsize,
+}
+
+/// Persistent worker pool of the sharded allocation pipeline (module
+/// docs): `S − 1` parked threads created lazily on the first sharded call
+/// and woken per allocation, replacing a `thread::scope` spawn per call.
+/// Dropping the pool (with its owning scratch) sets the shutdown flag,
+/// wakes everyone, and joins the threads.
+#[derive(Default)]
+struct WorkerPool {
+    shared: Option<Arc<PoolShared>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Park-to-park worker body: wait for a round, run it (or sit it out
+    /// when the clamped shard count excludes this worker), acknowledge,
+    /// park again. Exits when the owning scratch drops.
+    fn worker_main(shared: Arc<PoolShared>, idx: usize) {
+        let mut last_round = 0u64;
+        loop {
+            let job = {
+                let mut g = shared.gate.lock().unwrap();
+                loop {
+                    if g.shutdown {
+                        return;
+                    }
+                    if g.round != last_round {
+                        break;
+                    }
+                    g = shared.cv.wait(g).unwrap();
+                }
+                last_round = g.round;
+                g.job
+            };
+            // caller is shard 0; pool worker `idx` is shard `idx + 1`
+            let w = idx + 1;
+            if w >= job.shards {
+                continue; // clamped out of this round: no barrier, no ack
+            }
+            // SAFETY: PoolJob contract — the pointees stay alive until the
+            // ack below, and the barrier protocol serializes all access.
+            unsafe { pool_round(&job, w, &shared.barrier) };
+            shared.active.fetch_sub(1, Ordering::Release);
+        }
+    }
+
+    /// Ensure at least `n` parked workers exist (lazy first spawn, and
+    /// growth when a scratch's shard count is raised later).
+    fn ensure_workers(&mut self, n: usize) {
+        if self.shared.is_none() {
+            self.shared = Some(Arc::new(PoolShared {
+                gate: Mutex::new(PoolGate {
+                    round: 0,
+                    job: PoolJob::empty(),
+                    shutdown: false,
+                }),
+                cv: Condvar::new(),
+                barrier: SpinBarrier::new(1),
+                active: AtomicUsize::new(0),
+            }));
+        }
+        let shared = self.shared.as_ref().unwrap();
+        while self.handles.len() < n {
+            let idx = self.handles.len();
+            let sh = Arc::clone(shared);
+            self.handles.push(thread::spawn(move || Self::worker_main(sh, idx)));
+        }
+    }
+}
+
+/// Pool threads are bound to one scratch; a cloned scratch starts with its
+/// own (empty, lazily spawned) pool — the same cold-clone rule as
+/// [`ShardState`].
+impl Clone for WorkerPool {
+    fn clone(&self) -> Self {
+        WorkerPool::default()
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.handles.len())
+            .finish()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        let Some(shared) = self.shared.take() else { return };
+        {
+            let mut g = shared.gate.lock().unwrap();
+            g.shutdown = true;
+            shared.cv.notify_all();
+        }
+        for th in self.handles.drain(..) {
+            let _ = th.join();
+        }
+    }
+}
+
+/// One pooled worker's share of an allocation round: parallel op emission,
+/// two barrier crossings bracketing the caller's serial bucket/sort/setup
+/// window, then the level-lockstep grant sweep of phase 2.
+///
+/// # Safety
+/// `job`'s pointers must be valid for the whole round, the emit slots must
+/// be sized for `job.shards` (the caller grows them before publishing),
+/// and the caller must confine its `*job.st` mutation to the window
+/// between the two barriers (its serial phase), as `allocate_sharded_pooled`
+/// does.
+unsafe fn pool_round(job: &PoolJob, w: usize, barrier: &SpinBarrier) {
+    {
+        let st = &*job.st;
+        let plan = &*job.plan;
+        let flows = std::slice::from_raw_parts(job.flows, job.nflows);
+        let coflows = std::slice::from_raw_parts(job.coflows, job.ncoflows);
+        emit_chunk(st, plan, flows, coflows, w, job.shards, job.has_groups);
+    }
+    barrier.wait(); // emission done — caller concatenates + buckets
+    barrier.wait(); // caller's serial phase done — tables are ready
+    shard_worker(&*job.st, &*job.plan, w, job.shards, job.nports, barrier);
 }
 
 /// Reusable workspace for [`allocate_into`]/[`apply_grants`]. Construct once
@@ -313,6 +562,12 @@ pub struct AllocScratch {
     shards: usize,
     /// Sharded-pipeline tables (unused while `shards <= 1`).
     shard: ShardState,
+    /// Persistent parked workers for the pooled sharded path (module
+    /// docs); lazily spawned on the first sharded call.
+    pool: WorkerPool,
+    /// Use per-call `thread::scope` spawns instead of the pool (the
+    /// pre-pool baseline, kept for equivalence pins and benches).
+    spawn_workers: bool,
 }
 
 impl AllocScratch {
@@ -323,10 +578,20 @@ impl AllocScratch {
     /// Set the number of port shards (worker threads) [`allocate_into`]
     /// uses. `0`/`1` selects the serial path. Results are bit-identical for
     /// every setting (see the module docs); only wall time differs — the
-    /// parallel path pays a `thread::scope` spawn per call and wins on
-    /// large fabrics only.
+    /// parallel path keeps `S − 1` persistent workers parked between calls
+    /// and wins on large fabrics only. Raising the count later grows the
+    /// pool; lowering it just benches the extra workers.
     pub fn set_shards(&mut self, shards: usize) {
         self.shards = shards;
+    }
+
+    /// Route the sharded path through per-call [`std::thread::scope`]
+    /// spawns instead of the persistent pool — the pre-pool baseline, kept
+    /// selectable so tests can pin the two bit-identical and benches can
+    /// measure the pool's entry-cost win. Outputs are identical either
+    /// way.
+    pub fn set_spawn_workers(&mut self, spawn: bool) {
+        self.spawn_workers = spawn;
     }
 
     /// Configured shard count (≥ 1).
@@ -372,8 +637,8 @@ impl AllocScratch {
 /// Allocate rates for `plan` (entries highest priority first) against
 /// `fabric`, writing the result into `scratch` (see
 /// [`AllocScratch::grants`]). Zero heap allocation once the scratch tables
-/// have reached their high-water size (serial path; the sharded path
-/// additionally spawns its scoped workers per call).
+/// have reached their high-water size (serial path; the sharded path's
+/// persistent workers are spawned once and woken per call).
 ///
 /// Two passes when bandwidth groups are present: pass 1 walks entries in
 /// priority order with each grouped claim capped by its group's per-port
@@ -519,10 +784,31 @@ fn allocate_serial(
     }
 }
 
-/// The port-sharded parallel pipeline (module docs): bucket → parallel
-/// level-lockstep grant → deterministic serial merge. Bit-identical to
-/// [`allocate_serial`] for any shard count.
+/// The port-sharded parallel pipeline (module docs): emit + bucket →
+/// parallel level-lockstep grant → deterministic serial merge.
+/// Bit-identical to [`allocate_serial`] for any shard count, on both the
+/// pooled (default) and the spawn-per-call worker paths.
 fn allocate_sharded(
+    fabric: &Fabric,
+    flows: &[FlowState],
+    coflows: &[CoflowState],
+    plan: &Plan,
+    scratch: &mut AllocScratch,
+    has_groups: bool,
+    shards: usize,
+) {
+    if scratch.spawn_workers {
+        allocate_sharded_spawn(fabric, flows, coflows, plan, scratch, has_groups, shards);
+    } else {
+        allocate_sharded_pooled(fabric, flows, coflows, plan, scratch, has_groups, shards);
+    }
+}
+
+/// The pre-pool baseline: serial op emission, then `S` scoped workers
+/// spawned per call. Kept selectable ([`AllocScratch::set_spawn_workers`])
+/// as the bit-identity pin and the bench baseline for the pool's entry
+/// cost.
+fn allocate_sharded_spawn(
     fabric: &Fabric,
     flows: &[FlowState],
     coflows: &[CoflowState],
@@ -535,7 +821,7 @@ fn allocate_sharded(
     let epoch = scratch.epoch;
     let passes: &[bool] = if has_groups { &[true, false] } else { &[false] };
 
-    // ---- phase 1: bucket — one serial walk of the plan emits the runnable
+    // ---- phase 1: emit — one serial walk of the plan emits the runnable
     // flows as ops, in exactly the order the serial path would visit them.
     let st = &mut scratch.shard;
     st.ops.clear();
@@ -566,6 +852,191 @@ fn allocate_sharded(
     if nops == 0 {
         return;
     }
+    bucket_and_setup(st, fabric, plan, has_groups, shards);
+
+    // ---- phase 2: parallel grant — S shard workers sweep the levels in
+    // lockstep; every op's slot in grant_bits is written exactly once.
+    {
+        let st: &ShardState = st;
+        let barrier = SpinBarrier::new(shards);
+        std::thread::scope(|scope| {
+            for w in 1..shards {
+                let barrier = &barrier;
+                scope.spawn(move || shard_worker(st, plan, w, shards, nports, barrier));
+            }
+            shard_worker(st, plan, 0, shards, nports, &barrier);
+        });
+    }
+
+    merge_grants(fabric, scratch, epoch, nops);
+}
+
+/// The pooled sharded path (wake protocol in the module docs): one condvar
+/// wake per allocation drives parallel op emission, the caller-serial
+/// bucket/sort/setup window, and the level-lockstep grant sweep; the
+/// caller then spins the ack counter to zero and merges.
+fn allocate_sharded_pooled(
+    fabric: &Fabric,
+    flows: &[FlowState],
+    coflows: &[CoflowState],
+    plan: &Plan,
+    scratch: &mut AllocScratch,
+    has_groups: bool,
+    shards: usize,
+) {
+    let nports = fabric.num_ports;
+    let epoch = scratch.epoch;
+
+    scratch.pool.ensure_workers(shards - 1);
+    {
+        let st = &mut scratch.shard;
+        while st.emit.len() < shards {
+            st.emit.push(EmitBuf::default());
+        }
+    }
+    let shared = Arc::clone(scratch.pool.shared.as_ref().expect("pool just ensured"));
+    // Quiescent between rounds (previous round's ack spin saw 0), so the
+    // barrier can be retargeted and the ack counter re-armed safely.
+    shared.barrier.set_total(shards);
+    shared.active.store(shards - 1, Ordering::Release);
+    let st_ptr: *mut ShardState = &mut scratch.shard;
+    {
+        let mut g = shared.gate.lock().unwrap();
+        g.round = g.round.wrapping_add(1);
+        g.job = PoolJob {
+            st: st_ptr as *const ShardState,
+            plan,
+            flows: flows.as_ptr(),
+            nflows: flows.len(),
+            coflows: coflows.as_ptr(),
+            ncoflows: coflows.len(),
+            shards,
+            nports,
+            has_groups,
+        };
+        shared.cv.notify_all();
+    }
+
+    // The caller participates as shard 0. SAFETY (for every st_ptr deref
+    // below): st_ptr derives from the exclusive &mut scratch borrow, and
+    // the barrier protocol keeps caller and worker access disjoint —
+    // workers touch only their own emit slot until the second barrier,
+    // while the caller's &mut window sits between the barriers.
+    emit_chunk(unsafe { &*st_ptr }, plan, flows, coflows, 0, shards, has_groups);
+    shared.barrier.wait();
+
+    // ---- serial window: deterministic pass-major concatenation in worker
+    // order (byte-identical to the serial emission), then bucket + setup.
+    let nops;
+    {
+        let st = unsafe { &mut *st_ptr };
+        st.ops.clear();
+        for pass in 0..2 {
+            for wi in 0..shards {
+                let split = st.emit[wi].split.load(Ordering::Acquire);
+                // SAFETY: emission finished at the barrier above; workers
+                // do not touch their slots again this round.
+                let buf = unsafe { &*st.emit[wi].ops.get() };
+                let seg = if pass == 0 { &buf[..split] } else { &buf[split..] };
+                st.ops.extend_from_slice(seg);
+            }
+        }
+        nops = st.ops.len();
+        if nops == 0 {
+            // still release the workers (they run a 0-level sweep)
+            st.levels = 0;
+        } else {
+            bucket_and_setup(st, fabric, plan, has_groups, shards);
+        }
+    }
+    shared.barrier.wait(); // release workers into the grant sweep
+
+    shard_worker(unsafe { &*st_ptr }, plan, 0, shards, nports, &shared.barrier);
+
+    // Wait for every worker's ack before touching the scratch again (and
+    // before Drop or the next round could retarget the barrier).
+    let mut spins = 0u32;
+    while shared.active.load(Ordering::Acquire) != 0 {
+        if spins < 1 << 14 {
+            std::hint::spin_loop();
+            spins += 1;
+        } else {
+            std::thread::yield_now();
+        }
+    }
+
+    if nops == 0 {
+        return;
+    }
+    merge_grants(fabric, scratch, epoch, nops);
+}
+
+/// Emit worker `w`'s contiguous chunk of the plan's entries — every pass,
+/// pass-major — into its own [`EmitBuf`], recording where the second pass
+/// begins. Concatenating the buffers pass-major in worker order
+/// reproduces the serial emission order exactly.
+fn emit_chunk(
+    st: &ShardState,
+    plan: &Plan,
+    flows: &[FlowState],
+    coflows: &[CoflowState],
+    w: usize,
+    shards: usize,
+    has_groups: bool,
+) {
+    let n = plan.entries.len();
+    let lo = n * w / shards;
+    let hi = n * (w + 1) / shards;
+    // SAFETY: slot `w` belongs to worker `w` alone this round (EmitBuf).
+    let buf = unsafe { &mut *st.emit[w].ops.get() };
+    buf.clear();
+    let passes: &[bool] = if has_groups { &[true, false] } else { &[false] };
+    let mut split = usize::MAX;
+    for (pi, &budgeted) in passes.iter().enumerate() {
+        if pi == 1 {
+            split = buf.len();
+        }
+        let pass_bit = if budgeted { BUDGETED_BIT } else { 0 };
+        for (off, e) in plan.entries[lo..hi].iter().enumerate() {
+            let ei = (lo + off) as u32;
+            for &fid in &coflows[e.coflow].active_list {
+                let f = &flows[fid];
+                if f.done() {
+                    continue;
+                }
+                match e.filter {
+                    FlowFilter::All => {}
+                    FlowFilter::PilotsOnly if !f.pilot => continue,
+                    FlowFilter::NonPilots if f.pilot => continue,
+                    _ => {}
+                }
+                buf.push(ShardOp {
+                    fid: fid as u32,
+                    src: f.src as u32,
+                    dst: f.dst as u32,
+                    entry: ei | pass_bit,
+                });
+            }
+        }
+    }
+    if split == usize::MAX {
+        split = buf.len();
+    }
+    st.emit[w].split.store(split, Ordering::Release);
+}
+
+/// Phases 1b + 2-setup of the sharded pipeline, shared by the spawn and
+/// pooled paths: DAG levels, the counting sort by `(level, src-shard)`,
+/// and the shared residual/budget/grant tables.
+fn bucket_and_setup(
+    st: &mut ShardState,
+    fabric: &Fabric,
+    plan: &Plan,
+    has_groups: bool,
+    shards: usize,
+) {
+    let nports = fabric.num_ports;
+    let nops = st.ops.len();
 
     // ---- phase 1b: DAG levels + counting sort by (level, src-shard).
     // Ops in one level touch pairwise-disjoint ports, so they can execute
@@ -637,24 +1108,12 @@ fn allocate_sharded(
         }
     }
     grow_bits(&mut st.grant_bits, nops);
+}
 
-    // ---- phase 2: parallel grant — S shard workers sweep the levels in
-    // lockstep; every op's slot in grant_bits is written exactly once.
-    {
-        let st: &ShardState = st;
-        let barrier = SpinBarrier::new(shards);
-        std::thread::scope(|scope| {
-            for w in 1..shards {
-                let barrier = &barrier;
-                scope.spawn(move || shard_worker(st, plan, w, shards, nports, barrier));
-            }
-            shard_worker(st, plan, 0, shards, nports, &barrier);
-        });
-    }
-
-    // ---- phase 3: deterministic merge — replay the ops in plan order
-    // against the (freshly reset) ledger to rebuild the canonical grants
-    // list, the visited count, and the serial early exit.
+/// Phase 3 — deterministic merge (module docs): replay the ops in plan
+/// order against the (freshly reset) ledger to rebuild the canonical
+/// grants list, the visited count, and the serial early exit.
+fn merge_grants(fabric: &Fabric, scratch: &mut AllocScratch, epoch: u64, nops: usize) {
     let mut open_up = fabric.up_capacity.iter().filter(|&&c| c > EPS).count();
     let mut open_down = fabric.down_capacity.iter().filter(|&&c| c > EPS).count();
     for i in 0..nops {
@@ -992,7 +1451,8 @@ mod tests {
         assert_eq!(scratch.grants().len(), 0);
     }
 
-    /// Run `plan` through the serial path and through every shard count,
+    /// Run `plan` through the serial path and through every shard count —
+    /// on both the persistent-pool and the spawn-per-call worker paths —
     /// asserting bit-identical outputs (the in-module smoke version of
     /// `tests/shard_equivalence.rs`).
     fn assert_sharded_matches_serial(
@@ -1004,31 +1464,87 @@ mod tests {
         let mut serial = AllocScratch::new();
         allocate_into(fabric, flows, coflows, plan, &mut serial);
         for s in [1usize, 2, 3, 4, 8] {
-            let mut sharded = AllocScratch::new();
-            sharded.set_shards(s);
-            // twice: the reused tables must stay exact across rounds
-            for round in 0..2 {
-                allocate_into(fabric, flows, coflows, plan, &mut sharded);
-                assert_eq!(
-                    sharded.grants().len(),
-                    serial.grants().len(),
-                    "S={s} round {round}: grant count"
-                );
-                for (a, b) in sharded.grants().iter().zip(serial.grants()) {
-                    assert_eq!(a.0, b.0, "S={s}: flow id");
-                    assert_eq!(a.1.to_bits(), b.1.to_bits(), "S={s}: rate bits for flow {}", a.0);
-                }
-                assert_eq!(sharded.visited(), serial.visited(), "S={s}: visited");
-                for f in 0..flows.len() {
-                    assert_eq!(sharded.was_granted(f), serial.was_granted(f), "S={s}: flow {f}");
+            for spawn in [false, true] {
+                let mut sharded = AllocScratch::new();
+                sharded.set_shards(s);
+                sharded.set_spawn_workers(spawn);
+                // twice: the reused tables (and the parked pool) must stay
+                // exact across rounds
+                for round in 0..2 {
+                    allocate_into(fabric, flows, coflows, plan, &mut sharded);
                     assert_eq!(
-                        sharded.granted_rate(f).to_bits(),
-                        serial.granted_rate(f).to_bits(),
-                        "S={s}: rate of flow {f}"
+                        sharded.grants().len(),
+                        serial.grants().len(),
+                        "S={s} spawn={spawn} round {round}: grant count"
                     );
+                    for (a, b) in sharded.grants().iter().zip(serial.grants()) {
+                        assert_eq!(a.0, b.0, "S={s} spawn={spawn}: flow id");
+                        assert_eq!(
+                            a.1.to_bits(),
+                            b.1.to_bits(),
+                            "S={s} spawn={spawn}: rate bits for flow {}",
+                            a.0
+                        );
+                    }
+                    assert_eq!(sharded.visited(), serial.visited(), "S={s} spawn={spawn}: visited");
+                    for f in 0..flows.len() {
+                        assert_eq!(
+                            sharded.was_granted(f),
+                            serial.was_granted(f),
+                            "S={s} spawn={spawn}: flow {f}"
+                        );
+                        assert_eq!(
+                            sharded.granted_rate(f).to_bits(),
+                            serial.granted_rate(f).to_bits(),
+                            "S={s} spawn={spawn}: rate of flow {f}"
+                        );
+                    }
                 }
             }
         }
+    }
+
+    #[test]
+    fn pooled_scratch_survives_shard_count_changes() {
+        // One scratch, shard count raised/lowered/toggled across calls:
+        // the pool grows in place, sits excess workers out, and keeps
+        // producing bit-identical grants the whole time.
+        let fabric = Fabric::homogeneous(6, 100.0);
+        let (flows, coflows) = setup(&[
+            (0, 1, 10.0),
+            (0, 2, 10.0),
+            (2, 1, 10.0),
+            (3, 4, 10.0),
+            (5, 0, 10.0),
+            (4, 5, 10.0),
+        ]);
+        let plan = entries(6);
+        let mut serial = AllocScratch::new();
+        allocate_into(&fabric, &flows, &coflows, &plan, &mut serial);
+        let mut pooled = AllocScratch::new();
+        for (i, &s) in [2usize, 8, 3, 1, 2, 4].iter().enumerate() {
+            pooled.set_shards(s);
+            pooled.set_spawn_workers(i == 3); // one spawn-path round mid-life
+            allocate_into(&fabric, &flows, &coflows, &plan, &mut pooled);
+            assert_eq!(pooled.grants().len(), serial.grants().len(), "call {i} (S={s})");
+            for (a, b) in pooled.grants().iter().zip(serial.grants()) {
+                assert_eq!(a.0, b.0, "call {i} (S={s}): flow id");
+                assert_eq!(a.1.to_bits(), b.1.to_bits(), "call {i} (S={s}): rate bits");
+            }
+        }
+    }
+
+    #[test]
+    fn cloned_scratch_pool_starts_cold_and_works() {
+        let fabric = Fabric::homogeneous(4, 100.0);
+        let (flows, coflows) = setup(&[(0, 1, 10.0), (2, 3, 10.0), (1, 2, 10.0)]);
+        let plan = entries(3);
+        let mut warm = AllocScratch::new();
+        warm.set_shards(4);
+        allocate_into(&fabric, &flows, &coflows, &plan, &mut warm);
+        let mut cloned = warm.clone();
+        allocate_into(&fabric, &flows, &coflows, &plan, &mut cloned);
+        assert_eq!(warm.grants(), cloned.grants());
     }
 
     #[test]

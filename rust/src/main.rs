@@ -47,9 +47,12 @@ COMMON FLAGS:
 sim:      --scheduler <name>                            [default: philae]
 compare:  --baseline <name> --candidate <name>          [default: aalo vs philae]
 serve:    --scheduler <name> --artifacts <dir> --time-scale <x> --delta-ms <n>
-          --checkpoint-dir <dir> --agent-miss <n>
+          --checkpoint-dir <dir> --agent-miss <auto|n>
           (accepts every scheduler below; --artifacts drives PJRT, philae
-          only; --agent-miss ages silent ports out of the plan)
+          only; --agent-miss ages silent ports out of the plan — a number
+          is a flat threshold in δ intervals, `auto` derives it per port
+          from the observed report cadence; a checkpoint-dir holding
+          shard_<s>.ckpt seals from a previous run is restored on start)
 gen-trace: --out <file>
 
 schedulers: philae aalo sebf scf fifo saath philae-lcb philae-ec1
@@ -282,7 +285,11 @@ fn main() -> anyhow::Result<()> {
                 checkpoint_every: flags.get("checkpoint-every", 0u64).map_err(anyhow::Error::msg)?,
                 chaos_kill_every: flags.get("chaos", 0u64).map_err(anyhow::Error::msg)?,
                 checkpoint_dir: flags.get_opt("checkpoint-dir").map(Into::into),
-                agent_miss_intervals: flags.get("agent-miss", 0u64).map_err(anyhow::Error::msg)?,
+                agent_miss_intervals: match flags.get_opt("agent-miss") {
+                    Some("auto") | None => 0,
+                    Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--agent-miss: {e}"))?,
+                },
+                agent_miss_auto: flags.get_opt("agent-miss") == Some("auto"),
             };
             let report = run_service(&t, &svc)?;
             println!(
@@ -313,12 +320,20 @@ fn main() -> anyhow::Result<()> {
                     report.deadline.expired,
                 );
             }
+            println!(
+                "  realloc latency ms: p50 {:.3} | p99 {:.3} | sched bufs recycled {}",
+                report.realloc_p50 * 1e3,
+                report.realloc_p99 * 1e3,
+                report.sched_bufs_reused,
+            );
             if report.checkpoints_written > 0
                 || report.crashes_injected > 0
                 || report.ports_aged_out > 0
+                || report.restored_shards > 0
             {
                 println!(
-                    "  recovery: {} checkpoints | {} crashes -> {} recoveries ({:.3} ms avg) | ports aged out {} / restored {}",
+                    "  recovery: {} shards restored from disk | {} checkpoints | {} crashes -> {} recoveries ({:.3} ms avg) | ports aged out {} / restored {}",
+                    report.restored_shards,
                     report.checkpoints_written,
                     report.crashes_injected,
                     report.recoveries,

@@ -1,0 +1,299 @@
+//! Event-loop primitives for the long-lived service runtime.
+//!
+//! The live coordinator (`service::coordinator`) is a daemon: it ingests
+//! agent messages and registration ops from an mpsc channel while firing a
+//! wall-clock interval tick for checkpoints, watchdogs, and reconciliation.
+//! This module factors that shape out of the coordinator so it can be unit
+//! tested without a fabric:
+//!
+//! - [`EventLoop`] wraps an `mpsc::Receiver` with a deadline-driven tick:
+//!   `poll()` blocks with `recv_timeout` until either an event arrives
+//!   ([`Wake::Event`]), the next tick deadline passes ([`Wake::Tick`]), or
+//!   every sender is gone ([`Wake::Closed`]). Ticks advance by a fixed
+//!   period from the previous deadline (not from "now"), so a slow event
+//!   burst cannot starve the interval work — the loop catches up one tick
+//!   per poll until the deadline is ahead of the clock again.
+//! - [`BufferPool`] is a trivial free-list for heap-backed values (the
+//!   boomerang `free_reaction_sets` idiom): `take()` pops a recycled value
+//!   or makes a fresh default, `put()` returns one. The coordinator pools
+//!   per-agent schedule vectors so steady-state reallocation does not
+//!   allocate.
+//! - [`recycler`] builds the return path for buffers handed to other
+//!   threads: agents push consumed schedule buffers into a
+//!   [`RecycleSender`] and the coordinator drains the matching
+//!   [`RecycleBin`] back into its [`BufferPool`] each cycle. Sends never
+//!   block and ignore a closed bin (the buffer is simply dropped).
+//!
+//! None of this is async: the service is a handful of OS threads with
+//! blocking channels, and the loop's only clock is `Instant`.
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::time::{Duration, Instant};
+
+/// What woke the loop: an event, the interval tick, or channel closure.
+#[derive(Debug)]
+pub enum Wake<T> {
+    /// An event arrived before the tick deadline.
+    Event(T),
+    /// The tick deadline passed (possibly while waiting for an event).
+    Tick,
+    /// All senders dropped and the queue is drained; the loop is done.
+    Closed,
+}
+
+/// A blocking receive loop with a fixed-period wall-clock tick.
+#[derive(Debug)]
+pub struct EventLoop<T> {
+    rx: Receiver<T>,
+    period: Duration,
+    next_tick: Instant,
+    events: u64,
+    ticks: u64,
+}
+
+impl<T> EventLoop<T> {
+    /// Wrap `rx` with a tick every `period`, the first one `period` from now.
+    pub fn new(rx: Receiver<T>, period: Duration) -> Self {
+        EventLoop { rx, period, next_tick: Instant::now() + period, events: 0, ticks: 0 }
+    }
+
+    /// Block until the next event, tick, or closure.
+    ///
+    /// The tick deadline is checked first so interval work cannot be
+    /// starved by a saturated queue; when a `recv_timeout` expires, the
+    /// deadline advances by one `period` from its previous value.
+    pub fn poll(&mut self) -> Wake<T> {
+        let now = Instant::now();
+        if now >= self.next_tick {
+            self.next_tick += self.period;
+            self.ticks += 1;
+            return Wake::Tick;
+        }
+        match self.rx.recv_timeout(self.next_tick - now) {
+            Ok(ev) => {
+                self.events += 1;
+                Wake::Event(ev)
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                self.next_tick += self.period;
+                self.ticks += 1;
+                Wake::Tick
+            }
+            Err(RecvTimeoutError::Disconnected) => Wake::Closed,
+        }
+    }
+
+    /// Non-blocking drain step: the next queued event, if any.
+    ///
+    /// Used after a `poll()` wake to batch-drain the queue before doing
+    /// per-cycle work. Returns `None` both when the queue is empty and
+    /// when it is closed — `poll()` reports closure.
+    pub fn try_next(&mut self) -> Option<T> {
+        match self.rx.try_recv() {
+            Ok(ev) => {
+                self.events += 1;
+                Some(ev)
+            }
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
+        }
+    }
+
+    /// Events delivered so far (via `poll` and `try_next`).
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Ticks fired so far.
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+}
+
+/// A free-list of reusable heap-backed values.
+///
+/// `take()` prefers a recycled value (counted in `reused`) over a fresh
+/// `T::default()` (counted in `fresh`). Callers are responsible for
+/// clearing whatever state they care about — the pool hands values back
+/// as they were `put()`.
+#[derive(Debug)]
+pub struct BufferPool<T: Default> {
+    free: Vec<T>,
+    reused: u64,
+    fresh: u64,
+}
+
+impl<T: Default> Default for BufferPool<T> {
+    fn default() -> Self {
+        BufferPool { free: Vec::new(), reused: 0, fresh: 0 }
+    }
+}
+
+impl<T: Default> BufferPool<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pop a recycled value, or default-construct one.
+    pub fn take(&mut self) -> T {
+        match self.free.pop() {
+            Some(v) => {
+                self.reused += 1;
+                v
+            }
+            None => {
+                self.fresh += 1;
+                T::default()
+            }
+        }
+    }
+
+    /// Return a value to the free-list.
+    pub fn put(&mut self, v: T) {
+        self.free.push(v);
+    }
+
+    /// How many `take()` calls were satisfied from the free-list.
+    pub fn reused(&self) -> u64 {
+        self.reused
+    }
+
+    /// How many `take()` calls had to default-construct.
+    pub fn fresh(&self) -> u64 {
+        self.fresh
+    }
+}
+
+/// The producer half of a buffer return path; clone one per consumer
+/// thread. Sends never block and never fail visibly — if the bin is gone
+/// the buffer is dropped, which is always correct (just not recycled).
+#[derive(Debug, Clone)]
+pub struct RecycleSender<T> {
+    tx: Sender<T>,
+}
+
+impl<T> RecycleSender<T> {
+    /// Hand a consumed buffer back for reuse.
+    pub fn give(&self, v: T) {
+        let _ = self.tx.send(v);
+    }
+}
+
+/// The consumer half: drained by the owning loop into its [`BufferPool`].
+#[derive(Debug)]
+pub struct RecycleBin<T> {
+    rx: Receiver<T>,
+}
+
+impl<T: Default> RecycleBin<T> {
+    /// Move every boomeranged buffer into `pool`; returns how many.
+    pub fn drain_into(&self, pool: &mut BufferPool<T>) -> usize {
+        let mut n = 0;
+        while let Ok(v) = self.rx.try_recv() {
+            pool.put(v);
+            n += 1;
+        }
+        n
+    }
+}
+
+/// Build a buffer return path: clone the sender into consumer threads,
+/// keep the bin on the owning loop.
+pub fn recycler<T>() -> (RecycleSender<T>, RecycleBin<T>) {
+    let (tx, rx) = mpsc::channel();
+    (RecycleSender { tx }, RecycleBin { rx })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn poll_delivers_events_then_closes() {
+        let (tx, rx) = mpsc::channel();
+        let mut lp = EventLoop::new(rx, Duration::from_secs(60));
+        tx.send(1u32).unwrap();
+        tx.send(2u32).unwrap();
+        drop(tx);
+        match lp.poll() {
+            Wake::Event(v) => assert_eq!(v, 1),
+            other => panic!("expected event, got {other:?}"),
+        }
+        assert_eq!(lp.try_next(), Some(2));
+        assert!(lp.try_next().is_none());
+        assert!(matches!(lp.poll(), Wake::Closed));
+        assert_eq!(lp.events(), 2);
+    }
+
+    #[test]
+    fn poll_ticks_on_idle_queue() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        let mut lp = EventLoop::new(rx, Duration::from_millis(5));
+        assert!(matches!(lp.poll(), Wake::Tick));
+        assert!(matches!(lp.poll(), Wake::Tick));
+        assert!(lp.ticks() >= 2);
+        drop(tx);
+    }
+
+    #[test]
+    fn tick_fires_even_under_event_pressure() {
+        // a sender that never stops: the deadline check at the top of
+        // poll() must still let ticks through.
+        let (tx, rx) = mpsc::channel();
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = std::sync::Arc::clone(&stop);
+        let feeder = thread::spawn(move || {
+            while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                if tx.send(0u32).is_err() {
+                    break;
+                }
+            }
+        });
+        let mut lp = EventLoop::new(rx, Duration::from_millis(2));
+        let deadline = Instant::now() + Duration::from_millis(500);
+        while lp.ticks() == 0 && Instant::now() < deadline {
+            let _ = lp.poll();
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        assert!(lp.ticks() >= 1, "tick starved by event stream");
+        assert!(lp.events() > 0);
+        drop(lp);
+        feeder.join().unwrap();
+    }
+
+    #[test]
+    fn buffer_pool_recycles() {
+        let mut pool: BufferPool<Vec<u32>> = BufferPool::new();
+        let mut a = pool.take();
+        a.push(7);
+        pool.put(a);
+        let b = pool.take();
+        // pooled values come back as-is; callers clear what they reuse
+        assert_eq!(b, vec![7]);
+        assert_eq!(pool.reused(), 1);
+        assert_eq!(pool.fresh(), 1);
+    }
+
+    #[test]
+    fn recycler_boomerangs_buffers_across_threads() {
+        let (tx, bin) = recycler::<Vec<u32>>();
+        let t = thread::spawn(move || {
+            tx.give(vec![1, 2, 3]);
+            tx.give(Vec::new());
+        });
+        t.join().unwrap();
+        let mut pool = BufferPool::new();
+        assert_eq!(bin.drain_into(&mut pool), 2);
+        let _ = pool.take();
+        let _ = pool.take();
+        assert_eq!(pool.reused(), 2);
+        assert_eq!(pool.fresh(), 0);
+    }
+
+    #[test]
+    fn give_after_bin_drop_is_silent() {
+        let (tx, bin) = recycler::<Vec<u32>>();
+        drop(bin);
+        tx.give(vec![1]); // must not panic
+    }
+}

@@ -7,6 +7,8 @@
 //! in rust so the simulator and tests run without artifacts; parity between
 //! the two paths is asserted in `rust/tests/runtime_parity.rs`.
 
+pub mod evloop;
+
 #[cfg(feature = "pjrt")]
 mod engine;
 /// Without the `pjrt` feature (no `xla` crate / XLA extension library),

@@ -7,7 +7,24 @@
 //! cycle per shard: all of a shard's queued reports are applied to the
 //! world first, then that shard pays **one** order repair + rate
 //! allocation for the burst. Allocation itself can run the port-sharded
-//! parallel pipeline via [`ServiceConfig::alloc_shards`].
+//! parallel pipeline via [`ServiceConfig::alloc_shards`] — and the
+//! scratch's persistent worker pool (`coordinator/rate.rs`) means those
+//! workers are parked threads woken per allocation, not per-call spawns.
+//!
+//! ## Event-loop runtime
+//!
+//! The run loop is an [`EventLoop`] over the merged input channel
+//! (`runtime/evloop.rs`): `poll()` blocks until the next input or the δ
+//! tick deadline, whichever comes first, and the tick deadline is checked
+//! before the receive so a saturated queue can never starve interval work
+//! (checkpoints, watchdog sweeps, reconciliation). Steady-state
+//! reallocation is allocation-free end to end: per-agent schedule vectors
+//! come from a [`BufferPool`] free-list, ride to the agent inside
+//! `CoordMsg::NewSchedule`, and boomerang back through a [`recycler`]
+//! return channel once the agent has applied them — the
+//! `free_reaction_sets` idiom, extended across threads. Per-reallocation
+//! wall latency is sampled into the final report's p50/p99
+//! ([`ServiceReport::realloc_p50`], [`ServiceReport::realloc_p99`]).
 //!
 //! ## Multi-coordinator sharding ([`ServiceConfig::coordinators`])
 //!
@@ -79,6 +96,7 @@ use crate::coordinator::{
 };
 use crate::fabric::{Fabric, PortLoad};
 use crate::metrics::{DeadlineStats, IntervalStats, RunningStat};
+use crate::runtime::evloop::{recycler, BufferPool, EventLoop, RecycleBin, RecycleSender, Wake};
 use crate::runtime::{BatchFeatures, Engine};
 use crate::trace::{Trace, TraceRecord};
 use crate::util::{JsonValue, Rng};
@@ -104,6 +122,37 @@ const LEASE_FLOOR_FRAC: f64 = 0.05;
 /// Migration bounds per reconciliation round (match the sim cluster).
 const MAX_MIGRATIONS_PER_ROUND: usize = 4;
 const IMBALANCE_THRESHOLD: f64 = 1.5;
+
+/// Auto-tuned agent-loss watchdog ([`ServiceConfig::agent_miss_auto`]):
+/// a port is declared missing after this many multiples of its observed
+/// EWMA inter-report gap…
+const AUTO_MISS_MULT: f64 = 8.0;
+/// …but never sooner than this many δ intervals (guards against a port
+/// whose cadence estimate collapsed during a chatty burst).
+const AUTO_MISS_FLOOR: u64 = 8;
+/// EWMA smoothing for per-port inter-report gaps.
+const AUTO_MISS_EWMA_ALPHA: f64 = 0.25;
+
+/// Cap on per-reallocation latency samples kept for the report's
+/// percentiles (soaks run millions of reallocations; 2^18 samples bound
+/// memory while keeping the tail estimate stable).
+const CALC_SAMPLE_CAP: usize = 1 << 18;
+
+/// Miss threshold (δ intervals) derived from a port's EWMA inter-report
+/// gap: `max(⌈AUTO_MISS_MULT × ewma⌉, AUTO_MISS_FLOOR)`.
+fn auto_miss_threshold(gap_ewma: f64) -> u64 {
+    ((AUTO_MISS_MULT * gap_ewma).ceil() as u64).max(AUTO_MISS_FLOOR)
+}
+
+/// `q`-th quantile (0..=1) of an ascending-sorted sample, by
+/// nearest-rank; 0 on an empty sample.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
 
 /// Everything the coordinator thread receives, merged onto one channel
 /// (std mpsc has no select).
@@ -149,10 +198,21 @@ pub struct ServiceConfig {
     /// Agent-loss watchdog: a port whose agent has not reported for this
     /// many δ intervals while the port still has pending demand ages out
     /// of the plan — its capacity is masked from every shard's allocation
-    /// until the agent reappears. 0 disables the watchdog (the default:
-    /// event-triggered policies have legitimately long quiet periods, so
-    /// the threshold must be chosen against the workload).
+    /// until the agent reappears. 0 disables the flat threshold (the
+    /// default: event-triggered policies have legitimately long quiet
+    /// periods, so a flat threshold must be chosen against the workload).
+    /// When set alongside [`ServiceConfig::agent_miss_auto`], this value
+    /// wins — the flag is the operator override.
     pub agent_miss_intervals: u64,
+    /// Auto-tuned agent-loss watchdog: derive each port's miss threshold
+    /// from the observed cadence of its own reports (an EWMA of
+    /// inter-report gaps, aged out after [`AUTO_MISS_MULT`] missed gaps,
+    /// floored at [`AUTO_MISS_FLOOR`] intervals). A port that has never
+    /// reported has no cadence and is never aged out, and a port is only
+    /// aged while holding a rate grant newer than its last report —
+    /// starved ports are legitimately quiet and stay unmasked. Ignored
+    /// when [`ServiceConfig::agent_miss_intervals`] is non-zero.
+    pub agent_miss_auto: bool,
 }
 
 impl Default for ServiceConfig {
@@ -170,6 +230,7 @@ impl Default for ServiceConfig {
             chaos_kill_every: 0,
             checkpoint_dir: None,
             agent_miss_intervals: 0,
+            agent_miss_auto: false,
         }
     }
 }
@@ -215,6 +276,15 @@ pub struct ServiceReport {
     pub ports_aged_out: u64,
     /// Aged-out ports whose agent reappeared and was restored.
     pub ports_restored: u64,
+    /// Shard schedulers restored from on-disk checkpoints at startup.
+    pub restored_shards: u64,
+    /// Median per-reallocation wall latency (seconds).
+    pub realloc_p50: f64,
+    /// 99th-percentile per-reallocation wall latency (seconds).
+    pub realloc_p99: f64,
+    /// Schedule buffers served from the recycled free-list rather than
+    /// freshly allocated (the event-loop runtime's boomerang pool).
+    pub sched_bufs_reused: u64,
 }
 
 impl ServiceReport {
@@ -223,14 +293,11 @@ impl ServiceReport {
     }
 }
 
-/// Run `trace` through the live coordinator + agents; returns when every
-/// coflow has completed.
-pub fn run_service(trace: &Trace, cfg: &ServiceConfig) -> Result<ServiceReport> {
-    let (input_tx, input_rx) = mpsc::channel::<Input>();
-    let handle = OpsHandle { tx: input_tx.clone() };
-
-    // Trace replayer: registers coflows at scaled arrival times.
-    let records: Vec<TraceRecord> = trace
+/// Registration records for `trace`, in trace (arrival) order, each with
+/// its reducers sorted by port — the exact shape `Coordinator::register`
+/// consumes, so flow-id assignment is deterministic.
+fn trace_records(trace: &Trace) -> Vec<TraceRecord> {
+    trace
         .coflows
         .iter()
         .map(|c| {
@@ -248,7 +315,17 @@ pub fn run_service(trace: &Trace, cfg: &ServiceConfig) -> Result<ServiceReport> 
                 reducers,
             }
         })
-        .collect();
+        .collect()
+}
+
+/// Run `trace` through the live coordinator + agents; returns when every
+/// coflow has completed.
+pub fn run_service(trace: &Trace, cfg: &ServiceConfig) -> Result<ServiceReport> {
+    let (input_tx, input_rx) = mpsc::channel::<Input>();
+    let handle = OpsHandle { tx: input_tx.clone() };
+
+    // Trace replayer: registers coflows at scaled arrival times.
+    let records = trace_records(trace);
     let time_scale = cfg.time_scale;
     let replayer = thread::spawn(move || {
         let start = Instant::now();
@@ -263,8 +340,89 @@ pub fn run_service(trace: &Trace, cfg: &ServiceConfig) -> Result<ServiceReport> 
         handle.seal();
     });
 
-    let report = Coordinator::new(trace, cfg, input_tx)?.run(input_rx);
+    let mut coord = Coordinator::new(trace, cfg, input_tx)?;
+    coord.spawn_agents();
+    let report = coord.run(input_rx);
     let _ = replayer.join();
+    report
+}
+
+/// Headless soak harness for `benches/bench_service.rs`: drive the full
+/// coordinator runtime — registration, sharded allocation, schedule
+/// diffing, checkpoints — at maximum event rate, with the physical side
+/// stubbed out. Agents are **null sinks** (channels whose receivers are
+/// dropped, so every schedule send is a no-op), and a feeder thread
+/// replaces both the replayer and the agent sims: it registers every
+/// coflow up front (fire-and-forget), then streams synthesized
+/// `FlowComplete` reports round-robin across coflows — the worst case for
+/// the coordinator, since every report belongs to a different coflow than
+/// the last — and finally seals. The returned report's `update_msgs` over
+/// `wall_seconds` is the sustained event rate; `realloc_p50`/`realloc_p99`
+/// are the reallocation latency tail under that pressure.
+///
+/// The feeder mirrors `Coordinator::register`'s deterministic flow-id
+/// layout (registration order × reducers-sorted-by-port × mappers), so
+/// its synthesized reports name real flows without a reply round-trip.
+pub fn run_soak(trace: &Trace, cfg: &ServiceConfig) -> Result<ServiceReport> {
+    let (input_tx, input_rx) = mpsc::channel::<Input>();
+    let records = trace_records(trace);
+    let feeder_tx = input_tx.clone();
+    let feeder = thread::spawn(move || {
+        // (flow id, size, src agent) per coflow, in coordinator fid order
+        let mut flows: Vec<Vec<(FlowId, f64, PortId)>> = Vec::with_capacity(records.len());
+        let mut fid = 0usize;
+        for rec in &records {
+            let mut of_coflow = Vec::new();
+            for &(_dst, reducer_bytes) in &rec.reducers {
+                let per_flow = reducer_bytes / rec.mappers.len() as f64;
+                for &src in &rec.mappers {
+                    of_coflow.push((fid, per_flow, src));
+                    fid += 1;
+                }
+            }
+            flows.push(of_coflow);
+            // fire-and-forget: the reply receiver is dropped immediately;
+            // route_input's reply send is a tolerated no-op
+            let (reply, _drop_rx) = mpsc::sync_channel::<CoflowId>(1);
+            if feeder_tx
+                .send(Input::Op(CoflowOp::Register { record: rec.clone(), reply }))
+                .is_err()
+            {
+                return;
+            }
+        }
+        let mut cursor = vec![0usize; flows.len()];
+        loop {
+            let mut any = false;
+            for (cid, of_coflow) in flows.iter().enumerate() {
+                if cursor[cid] < of_coflow.len() {
+                    let (flow, size, agent) = of_coflow[cursor[cid]];
+                    cursor[cid] += 1;
+                    any = true;
+                    let msg = AgentMsg::FlowComplete {
+                        agent,
+                        flow,
+                        coflow: cid,
+                        size,
+                        pilot: false,
+                        at: 0.0,
+                    };
+                    if feeder_tx.send(Input::Agent(msg)).is_err() {
+                        return;
+                    }
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        let _ = feeder_tx.send(Input::Op(CoflowOp::Seal));
+    });
+
+    let mut coord = Coordinator::new(trace, cfg, input_tx)?;
+    coord.install_null_agents();
+    let report = coord.run(input_rx);
+    let _ = feeder.join();
     report
 }
 
@@ -342,13 +500,32 @@ struct Coordinator {
     crashes_injected: u64,
     recoveries: u64,
     recovery_wall: RunningStat,
-    // agent-loss watchdog (ServiceConfig::agent_miss_intervals)
+    // agent-loss watchdog (ServiceConfig::{agent_miss_intervals,
+    // agent_miss_auto})
     port_last_seen: Vec<u64>,
     port_alive: Vec<bool>,
     dead_ports: usize,
     masked_lease: Fabric,
     ports_aged_out: u64,
     ports_restored: u64,
+    /// EWMA of per-port inter-report gaps (δ intervals); 0 = never heard.
+    gap_ewma: Vec<f64>,
+    /// Last interval at which a port's flows held a nonzero rate grant.
+    /// Auto aging requires a grant *newer than the port's last report*:
+    /// silence while holding capacity is the black-hole signature, whereas
+    /// a starved port (granted nothing) is legitimately quiet and must
+    /// never be aged — masking it would deadlock its flows.
+    port_rate_stamp: Vec<u64>,
+    /// Shards restored from on-disk checkpoints at startup.
+    restored_shards: u64,
+    // event-loop runtime: recycled schedule buffers + reused diff scratch
+    sched_bufs: BufferPool<Vec<(FlowId, f64)>>,
+    recycle_tx: RecycleSender<Vec<(FlowId, f64)>>,
+    recycle_bin: RecycleBin<Vec<(FlowId, f64)>>,
+    dirty_agents: Vec<PortId>,
+    per_agent: HashMap<PortId, Vec<(FlowId, f64)>>,
+    /// Per-reallocation wall latencies (capped at [`CALC_SAMPLE_CAP`]).
+    calc_samples: Vec<f64>,
     // measured accounting
     stats: IntervalStats,
     rate_calc: RunningStat,
@@ -373,6 +550,7 @@ impl Coordinator {
             _ => None,
         };
         let batch = engine.as_ref().map(|e| BatchFeatures::new(&e.manifest));
+        let (recycle_tx, recycle_bin) = recycler();
         let world = World {
             now: 0.0,
             flows: Vec::new(),
@@ -407,7 +585,7 @@ impl Coordinator {
                 force_realloc: false,
             })
             .collect();
-        Ok(Coordinator {
+        let mut coord = Coordinator {
             cfg: cfg.clone(),
             world,
             shards,
@@ -450,6 +628,15 @@ impl Coordinator {
             },
             ports_aged_out: 0,
             ports_restored: 0,
+            gap_ewma: vec![0.0; num_ports],
+            port_rate_stamp: vec![0; num_ports],
+            restored_shards: 0,
+            sched_bufs: BufferPool::new(),
+            recycle_tx,
+            recycle_bin,
+            dirty_agents: Vec::new(),
+            per_agent: HashMap::new(),
+            calc_samples: Vec::new(),
             stats: IntervalStats::default(),
             rate_calc: RunningStat::default(),
             rate_send: RunningStat::default(),
@@ -463,7 +650,55 @@ impl Coordinator {
             rate_msgs: 0,
             update_msgs: 0,
             rate_calcs: 0,
-        })
+        };
+        coord.restore_from_disk(trace);
+        Ok(coord)
+    }
+
+    /// Restore-from-disk on service start: consume any `shard_<s>.ckpt`
+    /// seals a previous incarnation left under
+    /// [`ServiceConfig::checkpoint_dir`] *before* accepting input. Generic
+    /// kinds rebuild their scheduler through the stale-merge restore
+    /// against the still-empty world (dcoflow re-asserts its sealed
+    /// admission certificates as coflows re-register); Philae validates
+    /// the seal and keeps it as the supervisor's working copy — its
+    /// sampling state is re-derived from live reports by design. Missing,
+    /// corrupt, or wrong-kind files are skipped: a fresh start must never
+    /// be blocked by a stale directory.
+    fn restore_from_disk(&mut self, trace: &Trace) {
+        let Some(dir) = self.cfg.checkpoint_dir.clone() else {
+            return;
+        };
+        for s in 0..self.shards.len() {
+            let path = dir.join(format!("shard_{s}.ckpt"));
+            let Ok(sealed) = std::fs::read_to_string(&path) else {
+                continue;
+            };
+            let Ok(payload) = recovery::unseal(&sealed) else {
+                continue;
+            };
+            if payload.get("kind").and_then(|v| v.as_str()) != Some(self.cfg.kind.as_str()) {
+                continue; // checkpoint from a differently-configured service
+            }
+            if self.shards[s].generic.is_some() {
+                let sh = &mut self.shards[s];
+                std::mem::swap(&mut self.world.active, &mut sh.active);
+                let restored = recovery::restore_scheduler(
+                    &payload,
+                    trace,
+                    &self.cfg.sched,
+                    &mut self.world,
+                    false,
+                );
+                std::mem::swap(&mut self.world.active, &mut sh.active);
+                match restored {
+                    Ok(g) => sh.generic = Some(g),
+                    Err(_) => continue,
+                }
+            }
+            self.last_ckpts[s] = Some(sealed);
+            self.restored_shards += 1;
+        }
     }
 
     /// Whether the configured policy runs a periodic δ pipeline (Aalo):
@@ -492,6 +727,7 @@ impl Coordinator {
         for port in 0..n {
             let (tx, rx) = mpsc::channel::<CoordMsg>();
             let up = self.input_tx.clone();
+            let recycle = self.recycle_tx.clone();
             let scale = self.cfg.time_scale;
             let delta = self.cfg.delta_wall;
             let th = thread::spawn(move || {
@@ -522,6 +758,9 @@ impl Coordinator {
                         }
                         Ok(CoordMsg::NewSchedule { rates }) => {
                             sim.apply_schedule(&rates);
+                            // boomerang the consumed buffer back to the
+                            // coordinator's free-list
+                            recycle.give(rates);
                         }
                         Ok(CoordMsg::Shutdown) => break,
                         Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -542,25 +781,34 @@ impl Coordinator {
         }
     }
 
-    fn run(mut self, input_rx: mpsc::Receiver<Input>) -> Result<ServiceReport> {
-        self.spawn_agents();
-        let mut next_tick = Instant::now() + self.cfg.delta_wall;
+    /// Null agents for the headless soak harness ([`run_soak`]): every
+    /// `CoordMsg` sink is a channel whose receiver is immediately dropped,
+    /// so schedule and flow shipments are no-ops (all sends in this module
+    /// already tolerate a closed channel). No agent threads exist to join
+    /// at shutdown.
+    fn install_null_agents(&mut self) {
+        for _ in 0..self.world.fabric.num_ports {
+            let (tx, _rx) = mpsc::channel::<CoordMsg>();
+            self.agents.push(AgentHandle { tx });
+        }
+    }
 
+    fn run(mut self, input_rx: mpsc::Receiver<Input>) -> Result<ServiceReport> {
+        let mut lp = EventLoop::new(input_rx, self.cfg.delta_wall);
         loop {
             if self.sealed && self.world.active.is_empty() && !self.world.coflows.is_empty() {
                 break;
             }
-            let wait = next_tick.saturating_duration_since(Instant::now());
-            match input_rx.recv_timeout(wait) {
+            match lp.poll() {
                 // Batched admission: drain *everything* queued. Coflow ops
                 // apply immediately (they change the world's shape); agent
                 // messages are routed to their owning shard's input queue.
                 // Then each shard runs one drain-then-reallocate cycle for
                 // the whole burst instead of one reallocation per report.
-                Ok(first) => {
+                Wake::Event(first) => {
                     let t0 = Instant::now();
                     self.route_input(first);
-                    while let Ok(next) = input_rx.try_recv() {
+                    while let Some(next) = lp.try_next() {
                         self.route_input(next);
                     }
                     // single drain cycle per shard
@@ -590,12 +838,10 @@ impl Coordinator {
                         }
                     }
                 }
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-            if Instant::now() >= next_tick {
-                self.on_interval();
-                next_tick += self.cfg.delta_wall;
+                // the deadline is checked before the receive, so a
+                // saturated queue cannot starve interval work
+                Wake::Tick => self.on_interval(),
+                Wake::Closed => break,
             }
         }
 
@@ -630,6 +876,8 @@ impl Coordinator {
                 deadline.expired = adm.expired;
             }
         }
+        let mut calc_sorted = std::mem::take(&mut self.calc_samples);
+        calc_sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite latency samples"));
         Ok(ServiceReport {
             scheduler: if self.shards[0].philae.is_some() {
                 "philae".into()
@@ -662,6 +910,10 @@ impl Coordinator {
             recovery_wall: self.recovery_wall,
             ports_aged_out: self.ports_aged_out,
             ports_restored: self.ports_restored,
+            restored_shards: self.restored_shards,
+            realloc_p50: percentile(&calc_sorted, 0.50),
+            realloc_p99: percentile(&calc_sorted, 0.99),
+            sched_bufs_reused: self.sched_bufs.reused(),
         })
     }
 
@@ -739,7 +991,7 @@ impl Coordinator {
             let s = (self.chaos_rng.next_u64() % self.shards.len() as u64) as usize;
             self.kill_restore_shard(s);
         }
-        if self.cfg.agent_miss_intervals > 0 {
+        if self.cfg.agent_miss_intervals > 0 || self.cfg.agent_miss_auto {
             self.sweep_agent_watchdog();
         }
         if self.shards.len() > 1
@@ -912,9 +1164,21 @@ impl Coordinator {
 
     /// Watchdog bookkeeping: any message from a port proves its agent
     /// alive; a previously aged-out port rejoins the plan immediately.
+    /// The port's report cadence (EWMA of inter-report gaps, in δ
+    /// intervals) feeds the auto-tuned miss threshold
+    /// ([`ServiceConfig::agent_miss_auto`]). Same-interval bursts do not
+    /// drag the estimate toward zero — only whole-interval gaps count.
     fn note_agent(&mut self, port: PortId) {
         if port >= self.port_last_seen.len() {
             return;
+        }
+        let gap = self.intervals_seen.saturating_sub(self.port_last_seen[port]) as f64;
+        if self.gap_ewma[port] == 0.0 {
+            // first report establishes the cadence baseline
+            self.gap_ewma[port] = gap.max(1.0);
+        } else if gap > 0.0 {
+            self.gap_ewma[port] = AUTO_MISS_EWMA_ALPHA * gap
+                + (1.0 - AUTO_MISS_EWMA_ALPHA) * self.gap_ewma[port];
         }
         self.port_last_seen[port] = self.intervals_seen;
         if !self.port_alive[port] {
@@ -927,21 +1191,39 @@ impl Coordinator {
         }
     }
 
-    /// Age out ports whose agent has stopped reporting
-    /// ([`ServiceConfig::agent_miss_intervals`]): past the miss threshold,
-    /// a port that still has pending demand is masked out of every
-    /// shard's allocation until its agent reappears. Masking frees
+    /// Age out ports whose agent has stopped reporting: past the miss
+    /// threshold, a port that still has pending demand is masked out of
+    /// every shard's allocation until its agent reappears. Masking frees
     /// nothing physically — it stops the allocator from parking rate
     /// certificates on a black hole, letting competing coflows use their
-    /// other ports' capacity.
+    /// other ports' capacity. The threshold is the flat operator override
+    /// ([`ServiceConfig::agent_miss_intervals`]) when set; otherwise it is
+    /// derived per port from the observed report cadence
+    /// ([`auto_miss_threshold`] over the EWMA inter-report gap), and a
+    /// port that has never reported is never aged out.
+    ///
+    /// Auto mode additionally requires the port to hold a rate grant
+    /// *newer than its last report*: silence while holding capacity is
+    /// the black-hole signature, whereas a starved port — granted
+    /// nothing, so with nothing to complete — is legitimately quiet and
+    /// masking it would stall its flows for good.
     fn sweep_agent_watchdog(&mut self) {
         let mut changed = false;
         for p in 0..self.world.fabric.num_ports {
             if !self.port_alive[p] {
                 continue;
             }
+            let threshold = if self.cfg.agent_miss_intervals > 0 {
+                self.cfg.agent_miss_intervals
+            } else if self.gap_ewma[p] > 0.0 && self.port_rate_stamp[p] > self.port_last_seen[p] {
+                auto_miss_threshold(self.gap_ewma[p])
+            } else {
+                // auto mode: no cadence observed yet, or no grant newer
+                // than the last report (starved ports stay unmasked)
+                continue;
+            };
             let idle = self.intervals_seen.saturating_sub(self.port_last_seen[p]);
-            if idle > self.cfg.agent_miss_intervals && self.world.load.up_bytes[p] > 0.0 {
+            if idle > threshold && self.world.load.up_bytes[p] > 0.0 {
                 self.port_alive[p] = false;
                 self.dead_ports += 1;
                 self.ports_aged_out += 1;
@@ -1355,27 +1637,31 @@ impl Coordinator {
         self.iv_calc += calc;
         self.iv_rate_calcs += 1;
         self.rate_calcs += 1;
+        if self.calc_samples.len() < CALC_SAMPLE_CAP {
+            self.calc_samples.push(calc);
+        }
 
         // diff this shard's grants against its last flushed rates to find
-        // the agents whose schedule changed
+        // the agents whose schedule changed (reused scratch vec — the
+        // steady state of this whole send path is allocation-free)
         let t1 = Instant::now();
-        let mut dirty_agents: Vec<PortId> = Vec::new();
+        self.dirty_agents.clear();
         {
             let sh = &self.shards[s];
             for &(f, r) in sh.scratch.grants() {
                 let prev = sh.last_rates.get(&f).copied().unwrap_or(0.0);
                 if (prev - r).abs() > crate::EPS {
                     let a = self.world.flows[f].src;
-                    if !dirty_agents.contains(&a) {
-                        dirty_agents.push(a);
+                    if !self.dirty_agents.contains(&a) {
+                        self.dirty_agents.push(a);
                     }
                 }
             }
             for (&f, _) in sh.last_rates.iter() {
                 if !sh.scratch.was_granted(f) && !self.world.flows[f].done() {
                     let a = self.world.flows[f].src;
-                    if !dirty_agents.contains(&a) {
-                        dirty_agents.push(a);
+                    if !self.dirty_agents.contains(&a) {
+                        self.dirty_agents.push(a);
                     }
                 }
             }
@@ -1388,10 +1674,16 @@ impl Coordinator {
         // flow until its next recompute, and a stale duplicate would
         // otherwise win at the agent (last entry applies). One pass over
         // all shards' grants buckets them by agent (O(grants), not
-        // O(dirty_agents × grants)).
-        let mut per_agent: HashMap<PortId, Vec<(FlowId, f64)>> = HashMap::new();
-        for &agent in &dirty_agents {
-            per_agent.insert(agent, Vec::new());
+        // O(dirty_agents × grants)). The per-agent vectors come from the
+        // recycled free-list: agents boomerang consumed buffers back
+        // through `recycle_tx` and we reclaim them here, so sustained
+        // reallocation churns zero heap.
+        self.recycle_bin.drain_into(&mut self.sched_bufs);
+        for i in 0..self.dirty_agents.len() {
+            let agent = self.dirty_agents[i];
+            let mut buf = self.sched_bufs.take();
+            buf.clear();
+            self.per_agent.insert(agent, buf);
         }
         for (si, sh) in self.shards.iter().enumerate() {
             for &(f, r) in sh.scratch.grants() {
@@ -1399,13 +1691,14 @@ impl Coordinator {
                 if fl.done() || self.owner_of(fl.coflow) != Some(si) {
                     continue;
                 }
-                if let Some(rates) = per_agent.get_mut(&fl.src) {
+                if let Some(rates) = self.per_agent.get_mut(&fl.src) {
                     rates.push((f, r));
                 }
             }
         }
-        for &agent in &dirty_agents {
-            let rates = per_agent.remove(&agent).unwrap_or_default();
+        for i in 0..self.dirty_agents.len() {
+            let agent = self.dirty_agents[i];
+            let rates = self.per_agent.remove(&agent).unwrap_or_default();
             let _ = self.agents[agent].tx.send(CoordMsg::NewSchedule { rates });
             self.iv_rate_msgs += 1;
             self.rate_msgs += 1;
@@ -1415,6 +1708,9 @@ impl Coordinator {
             sh.last_rates.clear();
             for &(f, r) in sh.scratch.grants() {
                 sh.last_rates.insert(f, r);
+                if r > 0.0 {
+                    self.port_rate_stamp[self.world.flows[f].src] = self.intervals_seen;
+                }
             }
         }
         self.iv_send += t1.elapsed().as_secs_f64();
@@ -1656,5 +1952,32 @@ impl Coordinator {
             }
         }
         out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_miss_threshold_scales_with_cadence() {
+        // never below the floor, even for chatty ports
+        assert_eq!(auto_miss_threshold(0.1), AUTO_MISS_FLOOR);
+        assert_eq!(auto_miss_threshold(1.0), AUTO_MISS_FLOOR);
+        // a port reporting every ~4 intervals is missed after ~32
+        assert_eq!(auto_miss_threshold(4.0), 32);
+        // ceil: fractional cadences round up, never down
+        assert_eq!(auto_miss_threshold(4.1), 33);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        assert_eq!(percentile(&[], 0.99), 0.0);
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&v, 0.5), 51.0); // nearest-rank on 0..=99
+        assert_eq!(percentile(&v, 0.99), 99.0);
     }
 }

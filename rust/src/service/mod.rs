@@ -15,6 +15,6 @@ mod coordinator;
 mod ops;
 
 pub use coordinator::{
-    run_service, Input, ServiceConfig, ServiceReport, SERVICE_RECONCILE_INTERVALS,
+    run_service, run_soak, Input, ServiceConfig, ServiceReport, SERVICE_RECONCILE_INTERVALS,
 };
 pub use ops::{CoflowOp, OpsHandle};

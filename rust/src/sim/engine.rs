@@ -17,7 +17,13 @@
 //!   per-event `HashMap`s and O(G²) grant dedup. With
 //!   [`SimConfig::alloc_shards`] ≥ 2 the allocation runs through the
 //!   port-sharded parallel pipeline (bit-identical results; see
-//!   `coordinator/rate.rs`).
+//!   `coordinator/rate.rs`), whose S−1 helper threads are a **persistent
+//!   pool owned by the scratch** — spawned lazily on the first sharded
+//!   call, parked between allocations, woken per call, and joined when
+//!   the scratch drops. Because frontends own their scratch across
+//!   scheduler kill/restore cycles ([`RestoringCoord`] rebuilds only the
+//!   scheduler), the pool survives restores too — restarting the brain
+//!   never respawns allocation workers.
 //! * The engine's own bookkeeping (`running` set, per-coflow `rate_sum`
 //!   integrator) uses the same pattern: swap buffers plus an epoch-stamped
 //!   dirty list, cleared in O(changed) rather than O(total).

@@ -48,6 +48,16 @@ fn philae_service_completes_trace() {
     assert!(report.rate_calcs > 0);
     assert!(report.update_msgs as usize >= trace.flows.len());
     assert!(!report.used_engine);
+    // event-loop runtime accounting: no checkpoint dir, so nothing
+    // restored; latency percentiles sampled and ordered
+    assert_eq!(report.restored_shards, 0);
+    assert!(report.realloc_p50 >= 0.0);
+    assert!(
+        report.realloc_p99 >= report.realloc_p50,
+        "p99 {} below p50 {}",
+        report.realloc_p99,
+        report.realloc_p50
+    );
 }
 
 #[test]
@@ -112,6 +122,50 @@ fn philae_sends_fewer_updates_than_aalo() {
         aa.update_msgs,
         ph.update_msgs
     );
+}
+
+#[test]
+fn service_restores_checkpoints_from_disk_on_start() {
+    // run 1 persists sealed shard checkpoints; a fresh incarnation pointed
+    // at the same directory must consume them before accepting input.
+    // Philae exercises the seal-validation restore, Aalo the generic
+    // import_state path.
+    for kind in [SchedulerKind::Philae, SchedulerKind::Aalo] {
+        let dir = std::env::temp_dir()
+            .join(format!("philae_smoke_restore_{}_{kind:?}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let trace = TraceSpec::tiny(8, 12).seed(31).generate();
+        let cfg = ServiceConfig {
+            checkpoint_every: 1,
+            checkpoint_dir: Some(dir.clone()),
+            ..svc(kind)
+        };
+        let first = run_service(&trace, &cfg).expect("first incarnation");
+        assert!(first.ccts.iter().all(|c| c.is_finite() && *c > 0.0), "{kind:?}: run 1");
+        assert!(first.checkpoints_written > 0, "{kind:?}: no checkpoints persisted");
+        assert_eq!(first.restored_shards, 0, "{kind:?}: run 1 started from a clean dir");
+        assert!(dir.join("shard_0.ckpt").exists(), "{kind:?}: shard_0.ckpt missing");
+
+        let second = run_service(&trace, &cfg).expect("second incarnation");
+        assert!(second.restored_shards >= 1, "{kind:?}: on-disk checkpoint not consumed");
+        assert!(
+            second.ccts.iter().all(|c| c.is_finite() && *c > 0.0),
+            "{kind:?}: restored service left coflows unfinished"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn auto_watchdog_stays_quiet_on_healthy_run() {
+    // cadence-derived miss thresholds must never age out agents that are
+    // merely slow — a healthy run completes with zero masked ports
+    let trace = TraceSpec::tiny(8, 12).seed(9).generate();
+    let cfg = ServiceConfig { agent_miss_auto: true, ..svc(SchedulerKind::Philae) };
+    let report = run_service(&trace, &cfg).expect("auto-watchdog run");
+    assert!(report.ccts.iter().all(|c| c.is_finite() && *c > 0.0));
+    assert_eq!(report.ports_aged_out, 0, "healthy agents were aged out");
+    assert_eq!(report.ports_restored, 0);
 }
 
 #[test]

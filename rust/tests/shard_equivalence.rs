@@ -3,11 +3,19 @@
 //! plans (lane filters, bandwidth groups, duplicate entries), allocation
 //! under `S ∈ {1, 2, 4, 8}` shards must be **bit-identical** to the serial
 //! allocator — grants, visited count, and the stamped grant-table queries —
-//! and stay bit-identical across scratch reuse.
+//! and stay bit-identical across scratch reuse. Both sharded execution
+//! backends are covered: the persistent worker pool (the default: parked
+//! threads woken per call) and the spawn-per-call `thread::scope`
+//! baseline, plus one scratch driven through changing shard counts and
+//! the restore-heavy simulator path that reuses its scratch (and thus its
+//! pool) across scheduler rebuilds.
 
 use philae::coflow::{CoflowState, FlowState};
 use philae::coordinator::rate::{self, AllocScratch, FlowFilter, OrderEntry, Plan};
+use philae::coordinator::{SchedulerConfig, SchedulerKind};
 use philae::fabric::Fabric;
+use philae::sim::{SimConfig, Simulation};
+use philae::trace::TraceSpec;
 use philae::util::{prop, Rng};
 
 struct Case {
@@ -90,52 +98,115 @@ fn sharded_allocation_bit_identical_to_serial() {
         let mut serial = AllocScratch::new();
         rate::allocate_into(&case.fabric, &case.flows, &case.coflows, &case.plan, &mut serial);
 
-        for shards in [1usize, 2, 4, 8] {
-            let mut sharded = AllocScratch::new();
-            sharded.set_shards(shards);
-            // two rounds: table reuse must not perturb the result
-            for round in 0..2 {
-                rate::allocate_into(
-                    &case.fabric,
-                    &case.flows,
-                    &case.coflows,
-                    &case.plan,
-                    &mut sharded,
-                );
-                assert_eq!(
-                    sharded.grants().len(),
-                    serial.grants().len(),
-                    "S={shards} round {round}: grant count"
-                );
-                for (a, b) in sharded.grants().iter().zip(serial.grants()) {
-                    assert_eq!(a.0, b.0, "S={shards} round {round}: flow order");
-                    assert_eq!(
-                        a.1.to_bits(),
-                        b.1.to_bits(),
-                        "S={shards} round {round}: rate bits of flow {}",
-                        a.0
-                    );
-                }
-                assert_eq!(
-                    sharded.visited(),
-                    serial.visited(),
-                    "S={shards} round {round}: visited"
-                );
-                for f in 0..case.flows.len() {
-                    assert_eq!(
-                        sharded.was_granted(f),
-                        serial.was_granted(f),
-                        "S={shards}: was_granted({f})"
+        // spawn=false: persistent worker pool; spawn=true: thread::scope
+        for spawn in [false, true] {
+            for shards in [1usize, 2, 4, 8] {
+                let mut sharded = AllocScratch::new();
+                sharded.set_shards(shards);
+                sharded.set_spawn_workers(spawn);
+                // two rounds: table/pool reuse must not perturb the result
+                for round in 0..2 {
+                    rate::allocate_into(
+                        &case.fabric,
+                        &case.flows,
+                        &case.coflows,
+                        &case.plan,
+                        &mut sharded,
                     );
                     assert_eq!(
-                        sharded.granted_rate(f).to_bits(),
-                        serial.granted_rate(f).to_bits(),
-                        "S={shards}: granted_rate({f})"
+                        sharded.grants().len(),
+                        serial.grants().len(),
+                        "S={shards} spawn={spawn} round {round}: grant count"
                     );
+                    for (a, b) in sharded.grants().iter().zip(serial.grants()) {
+                        assert_eq!(a.0, b.0, "S={shards} spawn={spawn} round {round}: flow order");
+                        assert_eq!(
+                            a.1.to_bits(),
+                            b.1.to_bits(),
+                            "S={shards} spawn={spawn} round {round}: rate bits of flow {}",
+                            a.0
+                        );
+                    }
+                    assert_eq!(
+                        sharded.visited(),
+                        serial.visited(),
+                        "S={shards} spawn={spawn} round {round}: visited"
+                    );
+                    for f in 0..case.flows.len() {
+                        assert_eq!(
+                            sharded.was_granted(f),
+                            serial.was_granted(f),
+                            "S={shards} spawn={spawn}: was_granted({f})"
+                        );
+                        assert_eq!(
+                            sharded.granted_rate(f).to_bits(),
+                            serial.granted_rate(f).to_bits(),
+                            "S={shards} spawn={spawn}: granted_rate({f})"
+                        );
+                    }
                 }
             }
         }
     });
+}
+
+/// One scratch — and therefore one worker pool — driven through changing
+/// shard counts and fresh random cases must keep matching serial bit for
+/// bit. The pool grows lazily (S=8 after S=2), idles surplus workers
+/// (S=1 after S=8), and its per-worker emit buffers carry stale content
+/// between calls; none of that may leak into the result.
+#[test]
+fn pooled_scratch_reused_across_shard_counts_stays_bit_identical() {
+    // not prop::for_all: the whole point is ONE long-lived scratch
+    // carried across cases, which an unwind-safe closure cannot capture
+    let mut rng = Rng::seed_from_u64(0x9001_5EED);
+    let mut reused = AllocScratch::new();
+    let mut serial = AllocScratch::new();
+    for case_no in 0..48usize {
+        let case = random_case(&mut rng);
+        rate::allocate_into(&case.fabric, &case.flows, &case.coflows, &case.plan, &mut serial);
+        let shards = [2usize, 8, 3, 1, 4][case_no % 5];
+        reused.set_shards(shards);
+        rate::allocate_into(&case.fabric, &case.flows, &case.coflows, &case.plan, &mut reused);
+        assert_eq!(
+            reused.grants().len(),
+            serial.grants().len(),
+            "case {case_no} S={shards}: grant count after reuse"
+        );
+        for (a, b) in reused.grants().iter().zip(serial.grants()) {
+            assert_eq!(a.0, b.0, "case {case_no} S={shards}: flow order after reuse");
+            assert_eq!(
+                a.1.to_bits(),
+                b.1.to_bits(),
+                "case {case_no} S={shards}: rate bits of flow {} after reuse",
+                a.0
+            );
+        }
+    }
+}
+
+/// The restore-heavy simulator path (`RestoringCoord`) checkpoints and
+/// rebuilds the scheduler every few events while keeping its
+/// `AllocScratch` — so the persistent worker pool must survive scheduler
+/// restores and keep producing the exact CCTs of an uninterrupted serial
+/// run.
+#[test]
+fn pool_survives_scheduler_restores() {
+    let trace = TraceSpec::tiny(10, 16).seed(42).generate();
+    let cfg = SchedulerConfig::default();
+    let baseline = Simulation::run(&trace, SchedulerKind::Philae, &cfg);
+    let sim_cfg = SimConfig { alloc_shards: 4, ..SimConfig::default() };
+    let (restored, restores) =
+        Simulation::run_with_restore(&trace, SchedulerKind::Philae, &cfg, &sim_cfg, 3);
+    assert!(restores > 0, "restore cadence too coarse for this trace");
+    assert_eq!(baseline.ccts.len(), restored.ccts.len());
+    for (cid, (a, b)) in baseline.ccts.iter().zip(&restored.ccts).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "coflow {cid}: CCT diverged across restores with pooled shards"
+        );
+    }
 }
 
 #[test]
