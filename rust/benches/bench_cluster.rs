@@ -145,6 +145,26 @@ fn main() {
         println!();
     }
 
+    // Streamed-engine scale point: the same engine driven from the
+    // bounded-memory arrival stream, never materializing the trace. CI
+    // keeps this small; the 1M-coflow / 10k-port run lives in the
+    // workflow's streaming smoke (see docs/BENCHMARKS.md).
+    let stream_spec = TraceSpec::tiny(2000, 20_000).seed(9);
+    let mut stream_res = None;
+    let (stream_wall, _) = common::time_it(1, || {
+        let mut s = stream_spec.stream();
+        stream_res =
+            Some(Simulation::run_stream(&mut s, SchedulerKind::Fifo, &cfg, &SimConfig::default()));
+    });
+    let stream_res = stream_res.expect("streamed run finished");
+    assert_eq!(stream_res.ccts.len(), 20_000, "streamed run lost coflows");
+    println!(
+        "streamed 20k coflows / 2000 ports (fifo): {:.3} s wall | {:.0} coflows/s | peak active flows {}",
+        stream_wall,
+        20_000.0 / stream_wall.max(1e-9),
+        stream_res.peak_active_flows
+    );
+
     let mut json = String::from("{\n  \"bench\": \"cluster\",\n  \"iters\": ");
     json.push_str(&iters.to_string());
     json.push_str(",\n  \"configs\": [\n");
@@ -177,6 +197,12 @@ fn main() {
         }
         json.push_str(&format!("]}}{}\n", if i + 1 < rows.len() { "," } else { "" }));
     }
-    json.push_str("  ]\n}\n");
+    json.push_str(&format!(
+        "  ],\n  \"stream\": {{\"coflows\": 20000, \"ports\": 2000, \"wall_s\": {:.6}, \
+         \"coflows_per_sec\": {:.1}, \"peak_active_flows\": {}}}\n}}\n",
+        stream_wall,
+        20_000.0 / stream_wall.max(1e-9),
+        stream_res.peak_active_flows
+    ));
     common::write_json("BENCH_cluster.json", &json);
 }

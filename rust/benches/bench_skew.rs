@@ -5,7 +5,9 @@
 
 mod common;
 
-use philae::analysis::{skew_distribution, TwoCoflowSetting};
+use philae::analysis::{
+    cct_lower_bound_default, optimality_gap, skew_distribution, TwoCoflowSetting,
+};
 use philae::coordinator::{SchedulerConfig, SchedulerKind};
 use philae::metrics::percentile;
 use philae::sim::Simulation;
@@ -40,5 +42,22 @@ fn main() {
     for m in [1.0, 2.0, 4.0, 10.0, 25.0] {
         let b = TwoCoflowSetting::symmetric(200.0, 10.0, 0.9, 1.2, m).hoeffding_bound();
         println!("  m = {m:>4.0}: bound {b:.4}");
+    }
+
+    // Adversarial-skew scenario (docs/SCENARIOS.md): the generator's
+    // worst case for pilot-based size estimation — lognormal σ up to 3
+    // interleaved with a uniform decoy class. Gaps are against the
+    // offline SRPT-relaxation lower bound.
+    let trace = TraceSpec::adversarial_skew(100, 300).with_load_factor(2.0).generate();
+    let lb = cct_lower_bound_default(&trace);
+    println!("\nadversarial-skew scenario (avg CCT LB {:.3}s):", lb.avg_cct());
+    for kind in [SchedulerKind::Philae, SchedulerKind::Aalo, SchedulerKind::Sebf] {
+        let r = Simulation::run(&trace, kind, &cfg);
+        println!(
+            "  {:>8}: avg CCT {:>7.3}s | gap {:>6.1}%",
+            kind.as_str(),
+            r.avg_cct(),
+            100.0 * optimality_gap(r.avg_cct(), lb.avg_cct())
+        );
     }
 }

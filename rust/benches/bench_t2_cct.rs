@@ -1,11 +1,17 @@
 //! Bench for **Table 2** (and the CCT-speedup CDF figure): end-to-end
 //! Philae-vs-Aalo CCT comparison on the FB-like trace, full and wide-only,
-//! with simulation wall-time measurements.
+//! with simulation wall-time measurements — plus per-scheduler
+//! **optimality gaps** against the offline SRPT-relaxation lower bound
+//! (docs/BENCHMARKS.md) and a streamed-vs-materialized parity check.
+//!
+//! Emits machine-readable `BENCH_t2_cct.json` at the repo root;
+//! `bench_gate` tracks the gap ceilings against `ci/bench_baseline.json`.
 //!
 //! `cargo bench --bench bench_t2_cct`
 
 mod common;
 
+use philae::analysis::{cct_lower_bound_default, optimality_gap};
 use philae::coordinator::{SchedulerConfig, SchedulerKind};
 use philae::metrics::SpeedupRow;
 use philae::sim::{SimConfig, Simulation};
@@ -64,4 +70,67 @@ fn main() {
         Simulation::run(&trace, SchedulerKind::Aalo, &cfg).avg_cct()
     });
     println!("sim wall time (aalo): min {min_a:.2}s");
+
+    // Optimality gaps: every registered scheduler against the offline
+    // SRPT-relaxation lower bound — absolute floors, not just ratios
+    // between schedulers, so a regression that slows *every* policy at
+    // once still trips the gate.
+    let lb = cct_lower_bound_default(&trace);
+    println!("\noptimality gap vs offline lower bound (avg CCT LB {:.3}s):", lb.avg_cct());
+    let mut gaps: Vec<(&str, f64, f64)> = Vec::new();
+    for &kind in SchedulerKind::all() {
+        let r = Simulation::run(&trace, kind, &cfg);
+        let gap = optimality_gap(r.avg_cct(), lb.avg_cct());
+        println!(
+            "  {:>16}: avg CCT {:>7.3}s | gap {:>6.1}%",
+            kind.as_str(),
+            r.avg_cct(),
+            100.0 * gap
+        );
+        gaps.push((kind.as_str(), r.avg_cct(), gap));
+    }
+
+    // Streamed-engine parity: the same spec driven through the
+    // bounded-memory arrival stream must reproduce the materialized run
+    // bit-for-bit (Philae is event-triggered, so no wall-clock coupling).
+    let spec = TraceSpec::fb_like(150, 526).with_load_factor(4.0).seed(42);
+    let mut stream = spec.stream();
+    let streamed =
+        Simulation::run_stream(&mut stream, SchedulerKind::Philae, &cfg, &SimConfig::default());
+    assert_eq!(streamed.ccts.len(), philae.ccts.len(), "streamed coflow count");
+    for (i, (a, b)) in streamed.ccts.iter().zip(philae.ccts.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "streamed CCT diverged at coflow {i}");
+    }
+    println!(
+        "\nstreamed == materialized (philae): {} coflows bit-identical | peak active flows {}",
+        streamed.ccts.len(),
+        streamed.peak_active_flows
+    );
+
+    let mut json = String::from("{\n  \"bench\": \"t2_cct\",\n");
+    json.push_str(&format!(
+        "  \"speedup\": {{\"full_avg\": {:.4}, \"wide_avg\": {:.4}, \"mixed_avg\": {:.4}}},\n",
+        aalo.avg_cct() / philae.avg_cct(),
+        aw.avg_cct() / pw.avg_cct(),
+        amr.avg_cct() / pmr.avg_cct()
+    ));
+    json.push_str(&format!("  \"lb_avg_cct_s\": {:.6},\n  \"gap\": {{", lb.avg_cct()));
+    for (i, (name, _, gap)) in gaps.iter().enumerate() {
+        json.push_str(&format!(
+            "\"{name}\": {gap:.4}{}",
+            if i + 1 < gaps.len() { ", " } else { "" }
+        ));
+    }
+    json.push_str("},\n  \"avg_cct_s\": {");
+    for (i, (name, avg, _)) in gaps.iter().enumerate() {
+        json.push_str(&format!(
+            "\"{name}\": {avg:.6}{}",
+            if i + 1 < gaps.len() { ", " } else { "" }
+        ));
+    }
+    json.push_str(&format!(
+        "}},\n  \"stream\": {{\"bit_identical\": true, \"peak_active_flows\": {}}}\n}}\n",
+        streamed.peak_active_flows
+    ));
+    common::write_json("BENCH_t2_cct.json", &json);
 }

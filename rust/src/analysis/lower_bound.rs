@@ -1,0 +1,271 @@
+//! Offline lower bound on total (and average) CCT — the optimality-gap
+//! oracle.
+//!
+//! Follows the single-machine relaxation used in the coflow-approximation
+//! literature (Qiu–Stein–Zhong, arXiv 1603.07981): project the fabric onto
+//! each port direction ("machine"), where coflow *j* needs
+//! `w_{j,m} = bytes_{j,m} / cap_m` seconds of service after its release
+//! `a_j`. Any feasible coflow schedule, restricted to machine *m*, is a
+//! feasible preemptive single-machine schedule, and a coflow finishes no
+//! earlier than its last byte through *m* — so the sum of CCTs over the
+//! coflows touching *m* is at least the optimal `1|r_j, pmtn|ΣC_j` flow
+//! time, which SRPT attains exactly. Coflows not touching *m* contribute
+//! at least their ideal isolated CCT (their bottleneck seconds). The bound
+//! is the best such relaxation over all `2·num_ports` machines:
+//!
+//! ```text
+//! Σ_j cct_j ≥ max_m [ max(SRPT_m, Σ_{j∈S_m} ideal_j) + Σ_{j∉S_m} ideal_j ]
+//! ```
+//!
+//! On instances whose contention is one shared port (e.g. two coflows on a
+//! single src→dst pair) the relaxation is *tight*: SRPT on that port is the
+//! optimum, so `bench_t2_cct`'s per-scheduler gaps are true distances from
+//! optimal there, and honest floors everywhere else.
+
+use crate::fabric::Fabric;
+use crate::trace::Trace;
+use crate::Time;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Min-heap entry: (remaining seconds, job index) under `total_cmp`.
+#[derive(PartialEq)]
+struct Job(f64, usize);
+impl Eq for Job {}
+impl PartialOrd for Job {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Job {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
+    }
+}
+
+/// Exact preemptive SRPT on one machine: jobs are `(release, work,
+/// coflow)`, the return value is the optimal `Σ (C_j − r_j)` for
+/// `1|r_j, pmtn|ΣC_j`.
+fn srpt_total_flow_time(jobs: &mut [(Time, f64, usize)]) -> f64 {
+    jobs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.2.cmp(&b.2)));
+    let n = jobs.len();
+    let mut heap: BinaryHeap<Reverse<Job>> = BinaryHeap::with_capacity(n);
+    let mut t = 0.0f64;
+    let mut i = 0usize;
+    let mut sum = 0.0f64;
+    while i < n || !heap.is_empty() {
+        if heap.is_empty() && t < jobs[i].0 {
+            t = jobs[i].0;
+        }
+        while i < n && jobs[i].0 <= t {
+            heap.push(Reverse(Job(jobs[i].1, i)));
+            i += 1;
+        }
+        let Reverse(Job(rem, idx)) = heap.pop().expect("non-empty by loop guard");
+        let next_release = if i < n { jobs[i].0 } else { f64::INFINITY };
+        let finish = t + rem;
+        if finish <= next_release {
+            t = finish;
+            sum += t - jobs[idx].0;
+        } else {
+            // preempt: a shorter job may arrive at the release instant
+            heap.push(Reverse(Job(rem - (next_release - t), idx)));
+            t = next_release;
+        }
+    }
+    sum
+}
+
+/// The oracle's verdict for one trace/fabric pair.
+#[derive(Debug, Clone)]
+pub struct CctLowerBound {
+    /// Per-coflow ideal isolated CCT in seconds (bottleneck bytes over the
+    /// bottleneck port's capacity) — the per-coflow floor.
+    pub ideal: Vec<Time>,
+    /// Lower bound on `Σ_j cct_j` in seconds.
+    pub total_cct: f64,
+    /// Machine whose relaxation is binding (`p` = uplink of port p,
+    /// `num_ports + p` = downlink of port p); `None` when the plain
+    /// `Σ ideal` bound already dominates every machine.
+    pub binding_machine: Option<usize>,
+}
+
+impl CctLowerBound {
+    /// Lower bound on the average CCT.
+    pub fn avg_cct(&self) -> f64 {
+        if self.ideal.is_empty() {
+            0.0
+        } else {
+            self.total_cct / self.ideal.len() as f64
+        }
+    }
+}
+
+/// Relative optimality gap of a measured average CCT against the oracle:
+/// `measured / bound − 1` (≥ 0 for any real schedule up to float noise;
+/// 0.0 when the bound is vacuous).
+pub fn optimality_gap(measured_avg_cct: f64, bound_avg_cct: f64) -> f64 {
+    if bound_avg_cct <= 0.0 {
+        return 0.0;
+    }
+    measured_avg_cct / bound_avg_cct - 1.0
+}
+
+/// Compute the CCT lower bound for `trace` on `fabric` (must cover the
+/// trace's ports). O(F) accumulation plus one SRPT run per touched
+/// machine.
+pub fn cct_lower_bound(trace: &Trace, fabric: &Fabric) -> CctLowerBound {
+    assert_eq!(
+        fabric.num_ports, trace.num_ports,
+        "fabric port count must match the trace"
+    );
+    let np = trace.num_ports;
+    let nc = trace.coflows.len();
+    // machine m ∈ [0, np) = uplink of port m; m ∈ [np, 2np) = downlink
+    let mut machine_jobs: Vec<Vec<(Time, f64, usize)>> = vec![Vec::new(); 2 * np];
+    let mut ideal = vec![0.0f64; nc];
+    let mut up = vec![0.0f64; np];
+    let mut down = vec![0.0f64; np];
+    let mut touched_up: Vec<usize> = Vec::new();
+    let mut touched_down: Vec<usize> = Vec::new();
+    for c in &trace.coflows {
+        for &fid in &c.flows {
+            let f = &trace.flows[fid];
+            if up[f.src] == 0.0 {
+                touched_up.push(f.src);
+            }
+            if down[f.dst] == 0.0 {
+                touched_down.push(f.dst);
+            }
+            up[f.src] += f.size;
+            down[f.dst] += f.size;
+        }
+        let mut best = 0.0f64;
+        for &p in &touched_up {
+            let w = up[p] / fabric.up_capacity[p].max(1.0);
+            best = best.max(w);
+            machine_jobs[p].push((c.arrival, w, c.id));
+            up[p] = 0.0;
+        }
+        for &p in &touched_down {
+            let w = down[p] / fabric.down_capacity[p].max(1.0);
+            best = best.max(w);
+            machine_jobs[np + p].push((c.arrival, w, c.id));
+            down[p] = 0.0;
+        }
+        touched_up.clear();
+        touched_down.clear();
+        ideal[c.id] = best;
+    }
+    let sum_ideal: f64 = ideal.iter().sum();
+    let mut total_cct = sum_ideal;
+    let mut binding_machine = None;
+    for (m, jobs) in machine_jobs.iter_mut().enumerate() {
+        if jobs.len() < 2 {
+            // one job: SRPT equals its work ≤ its ideal — cannot improve
+            continue;
+        }
+        let ideal_on_m: f64 = jobs.iter().map(|&(_, _, cid)| ideal[cid]).sum();
+        let srpt = srpt_total_flow_time(jobs);
+        let bound = sum_ideal - ideal_on_m + srpt.max(ideal_on_m);
+        if bound > total_cct {
+            total_cct = bound;
+            binding_machine = Some(m);
+        }
+    }
+    CctLowerBound { ideal, total_cct, binding_machine }
+}
+
+/// Convenience: the bound on the paper-default homogeneous fabric.
+pub fn cct_lower_bound_default(trace: &Trace) -> CctLowerBound {
+    cct_lower_bound(trace, &Fabric::homogeneous(trace.num_ports, crate::GBPS))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{SchedulerConfig, SchedulerKind};
+    use crate::sim::Simulation;
+    use crate::trace::{TraceRecord, TraceSpec};
+
+    #[test]
+    fn srpt_matches_hand_solved_instances() {
+        // two jobs released together: short first → flow times w1, w1+w2
+        let mut jobs = vec![(0.0, 1.0, 0), (0.0, 3.0, 1)];
+        assert!((srpt_total_flow_time(&mut jobs) - (1.0 + 4.0)).abs() < 1e-12);
+        // preemption: long job starts, short job arrives and preempts
+        let mut jobs = vec![(0.0, 10.0, 0), (1.0, 1.0, 1)];
+        // short: 1→2 (flow 1); long: finishes at 11 (flow 11)
+        assert!((srpt_total_flow_time(&mut jobs) - 12.0).abs() < 1e-12);
+        // idle gap between releases
+        let mut jobs = vec![(0.0, 1.0, 0), (5.0, 1.0, 1)];
+        assert!((srpt_total_flow_time(&mut jobs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bound_is_exact_on_a_shared_port_pair() {
+        // two 125 MB coflows on the same (0→1) pair: optimum is SCF —
+        // ccts 1 s and 2 s — and the engine's SCF run attains it
+        let trace = Trace::from_records(
+            2,
+            vec![
+                TraceRecord::uniform(1, 0.0, vec![0], vec![1], 125.0),
+                TraceRecord::uniform(2, 0.0, vec![0], vec![1], 125.0),
+            ],
+        );
+        let lb = cct_lower_bound_default(&trace);
+        assert!((lb.avg_cct() - 1.5).abs() < 1e-9, "lb {}", lb.avg_cct());
+        let res = Simulation::run(&trace, SchedulerKind::Scf, &SchedulerConfig::default());
+        let gap = optimality_gap(res.avg_cct(), lb.avg_cct());
+        assert!(gap.abs() < 1e-6, "SCF should sit on the bound, gap {gap}");
+    }
+
+    #[test]
+    fn bound_is_exact_on_disjoint_coflows() {
+        // no contention: every coflow runs at its ideal
+        let trace = Trace::from_records(
+            4,
+            vec![
+                TraceRecord::uniform(1, 0.0, vec![0], vec![1], 125.0),
+                TraceRecord::uniform(2, 0.0, vec![2], vec![3], 125.0),
+            ],
+        );
+        let lb = cct_lower_bound_default(&trace);
+        assert!((lb.avg_cct() - 1.0).abs() < 1e-9);
+        assert_eq!(lb.binding_machine, None);
+        let res = Simulation::run(&trace, SchedulerKind::Philae, &SchedulerConfig::default());
+        assert!(optimality_gap(res.avg_cct(), lb.avg_cct()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn every_scheduler_sits_at_or_above_the_bound() {
+        let trace = TraceSpec::fb_like(20, 40).seed(6).generate();
+        let lb = cct_lower_bound_default(&trace);
+        assert!(lb.avg_cct() > 0.0);
+        let cfg = SchedulerConfig::default();
+        for &kind in SchedulerKind::all() {
+            let res = Simulation::run(&trace, kind, &cfg);
+            let gap = optimality_gap(res.avg_cct(), lb.avg_cct());
+            assert!(
+                gap >= -1e-6,
+                "{kind:?} beat the lower bound: gap {gap}, avg {}, lb {}",
+                res.avg_cct(),
+                lb.avg_cct()
+            );
+        }
+    }
+
+    #[test]
+    fn machine_relaxation_tightens_over_sum_of_ideals() {
+        // heavy contention on one port: the SRPT machine term must beat
+        // the plain Σ ideal bound
+        let records: Vec<TraceRecord> = (0..6)
+            .map(|i| TraceRecord::uniform(i + 1, 0.0, vec![0], vec![1], 25.0))
+            .collect();
+        let trace = Trace::from_records(2, records);
+        let lb = cct_lower_bound_default(&trace);
+        let sum_ideal: f64 = lb.ideal.iter().sum();
+        assert!(lb.total_cct > sum_ideal * 1.5, "total {} vs Σideal {sum_ideal}", lb.total_cct);
+        assert!(lb.binding_machine.is_some());
+    }
+}

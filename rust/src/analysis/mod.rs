@@ -5,6 +5,9 @@
 use crate::coflow::CoflowOracle;
 use crate::trace::Trace;
 
+pub mod lower_bound;
+pub use lower_bound::{cct_lower_bound, cct_lower_bound_default, optimality_gap, CctLowerBound};
+
 /// Parameters of the two-coflow setting of Eq. (1): coflow *i* has `c·nᵢ`
 /// flows i.i.d. in `[aᵢ, bᵢ]` with mean `μᵢ`; `mᵢ` pilot flows are sampled.
 /// WLOG `n₂μ₂ ≥ n₁μ₁`.

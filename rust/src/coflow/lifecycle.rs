@@ -38,6 +38,11 @@ pub struct FlowState {
     /// distinguish granted from stalled flows in a single pass without a
     /// per-call lookup table. Always `false` outside that call.
     pub alloc_mark: bool,
+    /// Stable creation sequence: monotone across the run even when flow
+    /// *slots* (ids) are recycled by the streaming engine. Event tie-breaks
+    /// key on this, never on `id`, so slot recycling stays bit-identical
+    /// to the materialized path (where `seq == id`).
+    pub seq: u64,
 }
 
 impl FlowState {
@@ -54,6 +59,7 @@ impl FlowState {
             finished_at: None,
             active_pos: 0,
             alloc_mark: false,
+            seq: id as u64,
         }
     }
 
@@ -120,6 +126,11 @@ pub struct CoflowState {
     /// Total bytes of the coflow (for remaining computations *after*
     /// estimation — Philae uses est_size, oracles use the true value).
     pub total_bytes: Bytes,
+    /// Clairvoyant bottleneck bound in bytes: max over the coflow's ports
+    /// of the bytes it moves through that port. Filled by the world
+    /// builders and the streaming admitter (`0.0` in hand-built worlds —
+    /// SEBF falls back to `total_bytes`).
+    pub bottleneck_bytes: Bytes,
     /// Longest finished flow so far (Saath transition metric).
     pub max_finished_flow: Bytes,
     /// Completion time.
@@ -147,6 +158,7 @@ impl CoflowState {
             est_size: None,
             bytes_sent: 0.0,
             total_bytes,
+            bottleneck_bytes: 0.0,
             max_finished_flow: 0.0,
             finished_at: None,
             queue: 0,

@@ -5,28 +5,50 @@
 //! coflow with the least *remaining* bytes. This is the upper-bound policy
 //! Philae's sampling approximates; the gap between Philae and SCF is the
 //! cost of learning.
+//!
+//! Sizes come from [`crate::coflow::CoflowState::total_bytes`] in the
+//! world, not a trace-indexed table, so the scheduler works unchanged on
+//! the streaming engine path. Like `sebf.rs`, the sorted order is carried
+//! across calls with refreshed keys and re-sorted only when an O(n)
+//! sortedness scan finds an inversion; the emitted plan is a pure function
+//! of the world, so the carried state is self-healing after a restore.
 
 use super::{DeadlineMode, OrderEntry, Plan, Reaction, Scheduler, World};
 use crate::trace::Trace;
-use crate::{Bytes, CoflowId, FlowId};
+use crate::{CoflowId, FlowId};
+
+/// `(remaining, deadline key, seq, coflow)` — seq-unique, deterministic
+/// under unstable sort.
+type Entry = (f64, f64, u64, CoflowId);
+
+#[inline]
+fn cmp_entry(a: &Entry, b: &Entry) -> std::cmp::Ordering {
+    a.0.total_cmp(&b.0)
+        .then(a.1.total_cmp(&b.1))
+        .then(a.2.cmp(&b.2))
+}
 
 pub struct ScfScheduler {
-    total_bytes: Vec<Bytes>,
     /// SLO handling: `Secondary` uses the coflow deadline as a tie-break
     /// behind remaining size (`Ignore`, the default, is deadline-blind).
     deadline_mode: DeadlineMode,
-    /// Reused sort buffer — remaining size moves with every byte sent, so
-    /// the order is rebuilt per event but allocation-free in steady state.
-    scratch: Vec<(f64, f64, u64, CoflowId)>,
+    /// Sorted order carried across calls (keys refreshed per call).
+    cached: Vec<Entry>,
+    /// Epoch-stamped membership (`epoch` = active, `epoch + 1` = carried);
+    /// +2 stride, never cleared.
+    stamp: Vec<u64>,
+    epoch: u64,
 }
 
 impl ScfScheduler {
-    pub fn new(trace: &Trace) -> Self {
-        let oracles = trace.oracles();
+    /// The trace parameter is kept for constructor-signature stability;
+    /// all scheduling state now comes from the world.
+    pub fn new(_trace: &Trace) -> Self {
         ScfScheduler {
-            total_bytes: oracles.iter().map(|o| o.total_bytes).collect(),
             deadline_mode: DeadlineMode::default(),
-            scratch: Vec::new(),
+            cached: Vec::new(),
+            stamp: Vec::new(),
+            epoch: 0,
         }
     }
 
@@ -51,27 +73,56 @@ impl Scheduler for ScfScheduler {
     }
 
     fn order_into(&mut self, world: &World, plan: &mut Plan) {
-        self.scratch.clear();
-        for &cid in &world.active {
-            let c = &world.coflows[cid];
-            if c.done() {
-                continue;
-            }
-            // beyond-trace cids (live-service dynamic registrations) fall
-            // back to the world's own total
-            let total = self.total_bytes.get(cid).copied().unwrap_or(c.total_bytes);
-            let remaining = (total - c.bytes_sent).max(0.0);
-            let dk = self.deadline_mode.key(c.deadline);
-            self.scratch.push((remaining, dk, c.seq, cid));
+        self.epoch += 2;
+        let e = self.epoch;
+        if self.stamp.len() < world.coflows.len() {
+            self.stamp.resize(world.coflows.len(), 0);
         }
-        self.scratch.sort_unstable_by(|a, b| {
-            a.0.total_cmp(&b.0)
-                .then(a.1.total_cmp(&b.1))
-                .then(a.2.cmp(&b.2))
+        for &cid in &world.active {
+            if !world.coflows[cid].done() {
+                self.stamp[cid] = e;
+            }
+        }
+        let stamp = &mut self.stamp;
+        let dm = &self.deadline_mode;
+        self.cached.retain_mut(|entry| {
+            let cid = entry.3;
+            if stamp[cid] != e {
+                return false;
+            }
+            let c = &world.coflows[cid];
+            entry.0 = (c.total_bytes - c.bytes_sent).max(0.0);
+            entry.1 = dm.key(c.deadline);
+            stamp[cid] = e + 1;
+            true
         });
+        for &cid in &world.active {
+            if self.stamp[cid] == e {
+                let c = &world.coflows[cid];
+                self.cached.push((
+                    (c.total_bytes - c.bytes_sent).max(0.0),
+                    self.deadline_mode.key(c.deadline),
+                    c.seq,
+                    cid,
+                ));
+                self.stamp[cid] = e + 1;
+            }
+        }
+        let sorted = self
+            .cached
+            .windows(2)
+            .all(|w| cmp_entry(&w[0], &w[1]) != std::cmp::Ordering::Greater);
+        if !sorted {
+            self.cached.sort_unstable_by(cmp_entry);
+        }
         plan.clear();
         plan.entries
-            .extend(self.scratch.iter().map(|&(_, _, _, cid)| OrderEntry::all(cid)));
+            .extend(self.cached.iter().map(|&(_, _, _, cid)| OrderEntry::all(cid)));
+    }
+
+    fn order_full_into(&mut self, world: &World, plan: &mut Plan) {
+        self.cached.clear();
+        self.order_into(world, plan);
     }
 }
 
@@ -99,5 +150,29 @@ mod tests {
         w.coflows[0].bytes_sent = w.coflows[0].total_bytes - 1.0;
         let order = s.order(&w);
         assert_eq!(order.entries[0].coflow, 0);
+    }
+
+    #[test]
+    fn carried_and_fresh_scheduler_agree() {
+        let trace = Trace::from_records(
+            6,
+            vec![
+                TraceRecord::uniform(1, 0.0, vec![0], vec![3], 50.0),
+                TraceRecord::uniform(2, 0.0, vec![1], vec![4], 10.0),
+                TraceRecord::uniform(3, 0.0, vec![2], vec![5], 30.0),
+            ],
+        );
+        let mut carried = ScfScheduler::new(&trace);
+        let mut w = crate::sim::world_from_trace(&trace);
+        w.active = vec![0, 1, 2];
+        let _ = carried.order(&w);
+        // progress inverts the order; a departure shrinks it
+        w.coflows[0].bytes_sent = 45.0e6;
+        w.coflows[1].finished_at = Some(1.0);
+        w.active = vec![0, 2];
+        let a = carried.order(&w);
+        let b = ScfScheduler::new(&trace).order(&w);
+        assert_eq!(a.entries, b.entries);
+        assert_eq!(a.entries[0].coflow, 0);
     }
 }

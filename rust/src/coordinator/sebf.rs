@@ -2,31 +2,62 @@
 //! heuristic). Orders coflows by the remaining bytes of their most loaded
 //! port — the quantity that lower-bounds the coflow's completion time on a
 //! non-blocking fabric.
+//!
+//! Keys come from the world itself ([`CoflowState::bottleneck_bytes`] and
+//! [`CoflowState::total_bytes`], filled by the world builders and the
+//! streaming admitter) rather than a trace-indexed oracle table, so the
+//! scheduler needs no per-trace construction state and works unchanged on
+//! the streaming engine path, where coflows materialize after build time.
+//!
+//! The order is maintained incrementally: the sorted entry list is carried
+//! between calls, departed coflows are dropped and new actives appended,
+//! and — because uniform progress moves every key but rarely *reorders*
+//! them — the O(n log n) sort is skipped whenever an O(n) sortedness scan
+//! shows the carried order still holds. The sorted output is a pure
+//! function of the world (keys are recomputed fresh each call and made
+//! unique by the coflow seq), so the carried state is self-healing:
+//! a restored or freshly built scheduler converges on the identical plan
+//! in one call.
 
 use super::{DeadlineMode, OrderEntry, Plan, Reaction, Scheduler, World};
+use crate::coflow::CoflowState;
 use crate::trace::Trace;
-use crate::{Bytes, CoflowId, FlowId};
+use crate::{CoflowId, FlowId};
+
+/// `(key, deadline key, seq, coflow)` — seq makes the tuple unique, so the
+/// unstable sort is deterministic.
+type Entry = (f64, f64, u64, CoflowId);
+
+#[inline]
+fn cmp_entry(a: &Entry, b: &Entry) -> std::cmp::Ordering {
+    a.0.total_cmp(&b.0)
+        .then(a.1.total_cmp(&b.1))
+        .then(a.2.cmp(&b.2))
+}
 
 pub struct SebfScheduler {
-    bottleneck: Vec<Bytes>,
-    total: Vec<Bytes>,
     /// SLO handling: `Secondary` uses the coflow deadline as a tie-break
     /// behind the bottleneck key (`Ignore`, the default, is deadline-blind).
     deadline_mode: DeadlineMode,
-    /// Reused sort buffer — the SEBF key moves with every byte sent by
-    /// every coflow, so there is no stable order to repair incrementally;
-    /// the rebuild at least allocates nothing in steady state.
-    scratch: Vec<(f64, f64, u64, CoflowId)>,
+    /// Sorted order carried across calls (keys refreshed per call).
+    cached: Vec<Entry>,
+    /// Epoch-stamped membership: `epoch` = active this round, `epoch + 1` =
+    /// already carried in `cached`. The +2 stride keeps both values fresh
+    /// without ever clearing the table.
+    stamp: Vec<u64>,
+    epoch: u64,
 }
 
 impl SebfScheduler {
-    pub fn new(trace: &Trace) -> Self {
-        let oracles = trace.oracles();
+    /// The trace parameter is kept for constructor-signature stability
+    /// (checkpoint restore and [`super::SchedulerKind::build`] pass it);
+    /// all scheduling state now comes from the world.
+    pub fn new(_trace: &Trace) -> Self {
         SebfScheduler {
-            bottleneck: oracles.iter().map(|o| o.bottleneck_bytes).collect(),
-            total: oracles.iter().map(|o| o.total_bytes).collect(),
             deadline_mode: DeadlineMode::default(),
-            scratch: Vec::new(),
+            cached: Vec::new(),
+            stamp: Vec::new(),
+            epoch: 0,
         }
     }
 
@@ -39,16 +70,20 @@ impl SebfScheduler {
     /// Remaining effective bottleneck, approximated by scaling the static
     /// bottleneck with the coflow's remaining fraction (exact per-port
     /// tracking would cost O(width) per comparison; the approximation
-    /// preserves the ordering for the uniform-progress case). Coflows
-    /// registered after trace construction (live-service dynamic
-    /// registrations) fall back to their total size as the bottleneck
-    /// proxy.
-    fn remaining_bottleneck(&self, cid: CoflowId, total: Bytes, sent: Bytes) -> f64 {
+    /// preserves the ordering for the uniform-progress case). Worlds built
+    /// by hand without a bottleneck bound (`bottleneck_bytes == 0`) fall
+    /// back to the coflow's total size as the proxy.
+    fn remaining_bottleneck(c: &CoflowState) -> f64 {
+        let total = c.total_bytes;
         if total <= 0.0 {
             return 0.0;
         }
-        let bottleneck = self.bottleneck.get(cid).copied().unwrap_or(total);
-        let frac_left = ((total - sent) / total).clamp(0.0, 1.0);
+        let bottleneck = if c.bottleneck_bytes > 0.0 {
+            c.bottleneck_bytes
+        } else {
+            total
+        };
+        let frac_left = ((total - c.bytes_sent) / total).clamp(0.0, 1.0);
         bottleneck * frac_left
     }
 }
@@ -67,25 +102,63 @@ impl Scheduler for SebfScheduler {
     }
 
     fn order_into(&mut self, world: &World, plan: &mut Plan) {
-        self.scratch.clear();
-        for &cid in &world.active {
-            let c = &world.coflows[cid];
-            if c.done() {
-                continue;
-            }
-            let total = self.total.get(cid).copied().unwrap_or(c.total_bytes);
-            let dk = self.deadline_mode.key(c.deadline);
-            let key = (self.remaining_bottleneck(cid, total, c.bytes_sent), dk, c.seq, cid);
-            self.scratch.push(key);
+        self.epoch += 2;
+        let e = self.epoch;
+        if self.stamp.len() < world.coflows.len() {
+            self.stamp.resize(world.coflows.len(), 0);
         }
-        self.scratch.sort_unstable_by(|a, b| {
-            a.0.total_cmp(&b.0)
-                .then(a.1.total_cmp(&b.1))
-                .then(a.2.cmp(&b.2))
+        for &cid in &world.active {
+            if !world.coflows[cid].done() {
+                self.stamp[cid] = e;
+            }
+        }
+        // refresh the carried entries' keys, dropping departed coflows
+        let stamp = &mut self.stamp;
+        let dm = &self.deadline_mode;
+        self.cached.retain_mut(|entry| {
+            let cid = entry.3;
+            if stamp[cid] != e {
+                return false;
+            }
+            let c = &world.coflows[cid];
+            entry.0 = Self::remaining_bottleneck(c);
+            entry.1 = dm.key(c.deadline);
+            stamp[cid] = e + 1;
+            true
         });
+        // append coflows that became active since the last call
+        for &cid in &world.active {
+            if self.stamp[cid] == e {
+                let c = &world.coflows[cid];
+                self.cached.push((
+                    Self::remaining_bottleneck(c),
+                    self.deadline_mode.key(c.deadline),
+                    c.seq,
+                    cid,
+                ));
+                self.stamp[cid] = e + 1;
+            }
+        }
+        // uniform progress shifts keys without reordering them most calls:
+        // an O(n) check dodges the O(n log n) sort. Unstable sort is safe —
+        // seq makes every tuple unique — and allocates nothing.
+        let sorted = self
+            .cached
+            .windows(2)
+            .all(|w| cmp_entry(&w[0], &w[1]) != std::cmp::Ordering::Greater);
+        if !sorted {
+            self.cached.sort_unstable_by(cmp_entry);
+        }
         plan.clear();
         plan.entries
-            .extend(self.scratch.iter().map(|&(_, _, _, cid)| OrderEntry::all(cid)));
+            .extend(self.cached.iter().map(|&(_, _, _, cid)| OrderEntry::all(cid)));
+    }
+
+    fn order_full_into(&mut self, world: &World, plan: &mut Plan) {
+        // from-scratch oracle path: drop the carried order and rebuild —
+        // same output by construction, exists for the equivalence pins
+        self.cached.clear();
+        self.order_into(world, plan);
     }
 }
 
@@ -126,5 +199,63 @@ mod tests {
         w.active = vec![0, 1];
         let order = s.order(&w);
         assert_eq!(order.entries[0].coflow, 0);
+    }
+
+    #[test]
+    fn incremental_order_tracks_departures_and_arrivals() {
+        let trace = Trace::from_records(
+            6,
+            vec![
+                TraceRecord::uniform(1, 0.0, vec![0], vec![3], 30.0),
+                TraceRecord::uniform(2, 0.0, vec![1], vec![4], 10.0),
+                TraceRecord::uniform(3, 0.0, vec![2], vec![5], 20.0),
+            ],
+        );
+        let mut s = SebfScheduler::new(&trace);
+        let mut w = crate::sim::world_from_trace(&trace);
+        w.active = vec![0, 1];
+        let order = s.order(&w);
+        assert_eq!(
+            order.entries.iter().map(|e| e.coflow).collect::<Vec<_>>(),
+            vec![1, 0]
+        );
+        // coflow 1 departs, coflow 2 arrives: carried order must converge
+        w.coflows[1].finished_at = Some(1.0);
+        w.active = vec![0, 2];
+        let order = s.order(&w);
+        assert_eq!(
+            order.entries.iter().map(|e| e.coflow).collect::<Vec<_>>(),
+            vec![2, 0]
+        );
+        // progress that inverts keys forces the repair sort
+        w.coflows[0].bytes_sent = w.coflows[0].total_bytes * 0.9;
+        let order = s.order(&w);
+        assert_eq!(
+            order.entries.iter().map(|e| e.coflow).collect::<Vec<_>>(),
+            vec![0, 2]
+        );
+    }
+
+    #[test]
+    fn carried_and_fresh_scheduler_agree() {
+        // the sorted plan is a pure function of the world: a scheduler that
+        // carried state across calls and a fresh one must emit the same plan
+        let trace = Trace::from_records(
+            6,
+            vec![
+                TraceRecord::uniform(1, 0.0, vec![0], vec![3], 30.0),
+                TraceRecord::uniform(2, 0.0, vec![1], vec![4], 10.0),
+                TraceRecord::uniform(3, 0.0, vec![2], vec![5], 20.0),
+            ],
+        );
+        let mut carried = SebfScheduler::new(&trace);
+        let mut w = crate::sim::world_from_trace(&trace);
+        w.active = vec![0, 1, 2];
+        let _ = carried.order(&w);
+        w.coflows[0].bytes_sent = 25.0e6;
+        w.coflows[2].bytes_sent = 19.0e6;
+        let a = carried.order(&w);
+        let b = SebfScheduler::new(&trace).order(&w);
+        assert_eq!(a.entries, b.entries);
     }
 }

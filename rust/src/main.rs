@@ -27,9 +27,13 @@ USAGE:
 
 COMMON FLAGS:
   --trace <file>       load a coflow-benchmark trace instead of generating
+  --scenario <name>    generator scenario               [default: fb-like]
+                       (fb-like mixed-rate tiny incast all-reduce diurnal
+                       adversarial-skew — see docs/SCENARIOS.md)
   --ports <n>          generated trace ports            [default: 150]
   --coflows <n>        generated trace coflows          [default: 526]
   --seed <n>           generator seed                   [default: 42]
+  --load <x>           scale arrival rate by x (shrinks inter-arrival gaps)
   --wide-only          keep only wide coflows (Table 2 row 2)
   --replicate <k>      replicate k× across ports (900-port derivation)
   --deadline-tightness <t>  give every coflow an SLO deadline of
@@ -45,6 +49,11 @@ COMMON FLAGS:
                        rounds (sim, K>1) / δ intervals (serve)  [default: off]
 
 sim:      --scheduler <name>                            [default: philae]
+          --stream     admit coflows from a bounded-memory arrival stream
+                       instead of materializing the trace (scales to 1M+
+                       coflows / 10k+ ports; bit-identical results)
+          --gap        report the offline CCT lower bound (SRPT relaxation)
+                       and this run's optimality gap (materialized only)
 compare:  --baseline <name> --candidate <name>          [default: aalo vs philae]
 serve:    --scheduler <name> --artifacts <dir> --time-scale <x> --delta-ms <n>
           --checkpoint-dir <dir> --agent-miss <auto|n>
@@ -73,7 +82,7 @@ impl Flags {
             }
             let key = a.trim_start_matches("--").to_string();
             // boolean flags
-            if key == "wide-only" {
+            if key == "wide-only" || key == "stream" || key == "gap" {
                 map.insert(key, "true".into());
                 i += 1;
                 continue;
@@ -106,15 +115,38 @@ impl Flags {
     }
 }
 
+/// The generator spec described by `--scenario/--ports/--coflows/--seed/
+/// --load` — shared by the materialized and the streaming paths so both
+/// see the exact same arrival process.
+fn build_spec(flags: &Flags) -> anyhow::Result<TraceSpec> {
+    let ports = flags.get("ports", 150usize).map_err(anyhow::Error::msg)?;
+    let coflows = flags.get("coflows", 526usize).map_err(anyhow::Error::msg)?;
+    let seed = flags.get("seed", 42u64).map_err(anyhow::Error::msg)?;
+    let name = flags.get_opt("scenario").unwrap_or("fb-like");
+    let mut spec = TraceSpec::scenario(name, ports, coflows).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown scenario {name:?}; known: {}",
+            TraceSpec::scenario_names().join(" ")
+        )
+    })?;
+    if flags.has("seed") {
+        spec = spec.seed(seed);
+    }
+    if let Some(load) = flags.get_opt("load") {
+        let load: f64 = load.parse().map_err(|e| anyhow::anyhow!("--load: {e}"))?;
+        anyhow::ensure!(
+            load > 0.0 && load.is_finite(),
+            "--load must be a positive factor, got {load}"
+        );
+        spec = spec.with_load_factor(load);
+    }
+    Ok(spec)
+}
+
 fn build_trace(flags: &Flags) -> anyhow::Result<Trace> {
     let mut t = match flags.get_opt("trace") {
         Some(path) => Trace::load(path)?,
-        None => {
-            let ports = flags.get("ports", 150usize).map_err(anyhow::Error::msg)?;
-            let coflows = flags.get("coflows", 526usize).map_err(anyhow::Error::msg)?;
-            let seed = flags.get("seed", 42u64).map_err(anyhow::Error::msg)?;
-            TraceSpec::fb_like(ports, coflows).seed(seed).generate()
-        }
+        None => build_spec(flags)?.generate(),
     };
     if flags.has("wide-only") {
         t = t.wide_only();
@@ -188,6 +220,78 @@ fn run_sim(
     }
 }
 
+/// `philae sim --stream`: drive the engine from a bounded-memory arrival
+/// stream. Generated specs stream straight out of the generator — no trace
+/// is ever materialized, which is what lets a single run admit 1M+ coflows
+/// over 10k+ ports — while `--trace` files are replayed in arrival order
+/// through the same interface. Results are bit-identical to the
+/// materialized path. Crash-failover and the post-hoc trace transforms
+/// need the full trace in memory and are rejected here.
+fn run_sim_streaming(
+    kind: SchedulerKind,
+    cfg: &SchedulerConfig,
+    flags: &Flags,
+) -> anyhow::Result<()> {
+    for unsupported in
+        ["wide-only", "replicate", "deadline-tightness", "checkpoint-every", "chaos", "gap"]
+    {
+        anyhow::ensure!(
+            !flags.has(unsupported),
+            "--{unsupported} needs a materialized trace; drop --stream"
+        );
+    }
+    let coordinators = flags.get("coordinators", 1usize).map_err(anyhow::Error::msg)?;
+    let alloc_shards = flags.get("shards", 1usize).map_err(anyhow::Error::msg)?;
+    let sim_cfg = SimConfig { coordinators, alloc_shards, ..SimConfig::default() };
+    let loaded;
+    let mut spec_stream;
+    let mut trace_stream;
+    let stream: &mut dyn philae::trace::ArrivalStream = match flags.get_opt("trace") {
+        Some(path) => {
+            loaded = Trace::load(path)?;
+            trace_stream = philae::trace::TraceStream::new(&loaded);
+            &mut trace_stream
+        }
+        None => {
+            spec_stream = build_spec(flags)?.stream();
+            &mut spec_stream
+        }
+    };
+    let num_ports = stream.num_ports();
+    let res = if coordinators > 1 {
+        Simulation::run_stream_cluster(stream, kind, cfg, &sim_cfg)
+    } else {
+        Simulation::run_stream(stream, kind, cfg, &sim_cfg)
+    };
+    println!(
+        "{} (K={}, streamed): {} coflows on {} ports | avg CCT {:.3}s | makespan {:.1}s | peak active flows {} | flow slots {} | rate calcs {} | updates {}",
+        res.scheduler,
+        coordinators.max(1),
+        res.ccts.len(),
+        num_ports,
+        res.avg_cct(),
+        res.makespan,
+        res.peak_active_flows,
+        res.flow_slots,
+        res.rate_calcs,
+        res.update_msgs,
+    );
+    let dl = &res.deadline;
+    if dl.with_deadline > 0 {
+        println!(
+            "  SLO: {}/{} deadlines met ({:.1}%) | goodput {:.1}% | admitted {} rejected {} expired {}",
+            dl.met,
+            dl.with_deadline,
+            100.0 * dl.met_ratio(),
+            100.0 * dl.goodput_ratio(),
+            dl.admitted,
+            dl.rejected,
+            dl.expired,
+        );
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else {
@@ -202,11 +306,14 @@ fn main() -> anyhow::Result<()> {
 
     match cmd.as_str() {
         "sim" => {
-            let t = build_trace(&flags)?;
             let kind: SchedulerKind = flags
                 .get("scheduler", SchedulerKind::Philae)
                 .map_err(anyhow::Error::msg)?;
             let coordinators = flags.get("coordinators", 1usize).map_err(anyhow::Error::msg)?;
+            if flags.has("stream") {
+                return run_sim_streaming(kind, &cfg, &flags);
+            }
+            let t = build_trace(&flags)?;
             let res = run_sim(&t, kind, &cfg, &flags)?;
             println!(
                 "{} (K={}): {} coflows on {} ports | avg CCT {:.3}s | makespan {:.1}s | rate calcs {} | updates {}",
@@ -219,6 +326,15 @@ fn main() -> anyhow::Result<()> {
                 res.rate_calcs,
                 res.update_msgs,
             );
+            if flags.has("gap") {
+                let lb = philae::analysis::cct_lower_bound_default(&t);
+                let gap = philae::analysis::optimality_gap(res.avg_cct(), lb.avg_cct());
+                println!(
+                    "  oracle: avg CCT lower bound {:.3}s | optimality gap {:.1}%",
+                    lb.avg_cct(),
+                    100.0 * gap,
+                );
+            }
             let dl = &res.deadline;
             if dl.with_deadline > 0 {
                 println!(

@@ -1308,6 +1308,29 @@ impl Coordinator {
         c.receivers = rec.reducers.iter().map(|&(p, _)| p).collect();
         c.receivers.sort_unstable();
         c.receivers.dedup();
+        // clairvoyant bottleneck bound — same math as the sim world
+        // builders, so SEBF keys match across the serve and sim surfaces
+        let mut up_b: Vec<(PortId, f64)> = Vec::new();
+        let mut down_b: Vec<(PortId, f64)> = Vec::new();
+        for &f in &flow_ids {
+            let fl = self.world.flows[f];
+            match up_b.iter_mut().find(|(p, _)| *p == fl.src) {
+                Some(e) => e.1 += fl.size,
+                None => up_b.push((fl.src, fl.size)),
+            }
+            match down_b.iter_mut().find(|(p, _)| *p == fl.dst) {
+                Some(e) => e.1 += fl.size,
+                None => down_b.push((fl.dst, fl.size)),
+            }
+        }
+        let mut bn = 0.0f64;
+        for &(_, b) in &up_b {
+            bn = bn.max(b);
+        }
+        for &(_, b) in &down_b {
+            bn = bn.max(b);
+        }
+        c.bottleneck_bytes = bn;
         for (i, &fid) in c.active_list.iter().enumerate() {
             self.world.flows[fid].active_pos = i;
         }

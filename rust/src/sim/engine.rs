@@ -102,7 +102,7 @@ use crate::coordinator::{
 use crate::coflow::{CoflowState, FlowState};
 use crate::fabric::{Fabric, PortLoad};
 use crate::metrics::{DeadlineStats, IntervalStats, MessageCostModel, RunningStat};
-use crate::trace::Trace;
+use crate::trace::{ArrivalStream, CoflowArrival, Trace};
 use crate::{CoflowId, FlowId, Time, EPS};
 use crate::util::Rng;
 use std::cmp::Reverse;
@@ -184,6 +184,12 @@ pub struct SimResult {
     /// Peak working set (Table 6 proxies).
     pub peak_active_coflows: usize,
     pub peak_active_flows: usize,
+    /// Flow slots ever allocated (`world.flows.len()` at exit). On the
+    /// materialized path this is the trace's flow count; on the streaming
+    /// path retirement recycles slots, so it stays near the peak
+    /// *concurrent* width no matter how long the arrival stream runs —
+    /// the memory-boundedness witness.
+    pub flow_slots: usize,
     /// Mean active agents reporting per interval.
     pub updates_per_interval: RunningStat,
     /// Wall-clock seconds the whole simulation took.
@@ -224,6 +230,11 @@ pub fn world_with_fabric(trace: &Trace, fabric: Fabric) -> World {
         .iter()
         .map(|f| FlowState::new(f.id, f.coflow, f.src, f.dst, f.size))
         .collect();
+    // per-port scratch for the clairvoyant bottleneck bound (same math as
+    // `CoflowOracle::compute`, O(touched) reset per coflow)
+    let mut up = vec![0.0f64; trace.num_ports];
+    let mut down = vec![0.0f64; trace.num_ports];
+    let mut touched: Vec<usize> = Vec::new();
     let coflows: Vec<CoflowState> = trace
         .coflows
         .iter()
@@ -236,6 +247,25 @@ pub fn world_with_fabric(trace: &Trace, fabric: Fabric) -> World {
             for (i, &fid) in st.active_list.iter().enumerate() {
                 flows[fid].active_pos = i;
             }
+            let mut bn = 0.0f64;
+            for &fid in &c.flows {
+                let f = &trace.flows[fid];
+                if up[f.src] == 0.0 {
+                    touched.push(f.src);
+                }
+                if down[f.dst] == 0.0 {
+                    touched.push(f.dst);
+                }
+                up[f.src] += f.size;
+                down[f.dst] += f.size;
+            }
+            for &p in &touched {
+                bn = bn.max(up[p]).max(down[p]);
+                up[p] = 0.0;
+                down[p] = 0.0;
+            }
+            touched.clear();
+            st.bottleneck_bytes = bn;
             st
         })
         .collect();
@@ -491,9 +521,12 @@ impl CoordFrontend for RestoringCoord<'_> {
     }
 }
 
-/// Min-heap entry of the delayed-report queue: (report time, flow).
+/// Min-heap entry of the delayed-report queue: (report time, stable flow
+/// seq, flow). The tie-break keys on the flow's creation sequence — not
+/// its id — so streaming slot recycling keeps replay order identical to
+/// the materialized path (where `seq == id`).
 #[derive(PartialEq)]
-struct Ev(Time, FlowId);
+struct Ev(Time, u64, FlowId);
 impl Eq for Ev {}
 impl PartialOrd for Ev {
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
@@ -607,6 +640,79 @@ impl Simulation {
         let result = Engine::new(trace, cfg, sim_cfg).run(&mut front);
         (result, front.restores)
     }
+
+    /// Streaming entry point: drive the engine from an [`ArrivalStream`]
+    /// without materializing the workload. Coflows are admitted as
+    /// simulated time reaches them and their heavy state is reclaimed
+    /// after completion, so resident memory tracks the *concurrent*
+    /// population — million-coflow runs fit in a test-runner footprint.
+    /// On arrival-sorted sources (everything [`crate::trace::TraceSpec`]
+    /// generates, and [`crate::trace::TraceStream`] over generated
+    /// traces) the result is bit-identical to the materialized
+    /// [`Simulation::run`]; `rust/tests/streaming_equivalence.rs` pins
+    /// this for every scheduler kind.
+    pub fn run_stream(
+        stream: &mut dyn ArrivalStream,
+        kind: SchedulerKind,
+        cfg: &SchedulerConfig,
+        sim_cfg: &SimConfig,
+    ) -> SimResult {
+        // Schedulers are built against an empty stub trace: every kind
+        // derives its per-coflow state from the world at admission time
+        // (the clairvoyant kinds read `CoflowState::{bottleneck_bytes,
+        // total_bytes}`), so construction needs only the port count.
+        let stub = Trace {
+            num_ports: stream.num_ports(),
+            coflows: Vec::new(),
+            flows: Vec::new(),
+        };
+        let mut sched = kind.build(&stub, cfg);
+        Self::run_stream_with(stream, sched.as_mut(), cfg, sim_cfg)
+    }
+
+    /// Streaming counterpart of [`Simulation::run_with`] — caller-built
+    /// scheduler, full [`SimConfig`] control.
+    pub fn run_stream_with(
+        stream: &mut dyn ArrivalStream,
+        sched: &mut dyn Scheduler,
+        cfg: &SchedulerConfig,
+        sim_cfg: &SimConfig,
+    ) -> SimResult {
+        let mut front = SingleCoord {
+            sched,
+            plan: Plan::default(),
+            scratch: {
+                let mut s = rate::AllocScratch::new();
+                s.set_shards(sim_cfg.alloc_shards);
+                s
+            },
+        };
+        Engine::new_streaming(stream.num_ports(), cfg, sim_cfg).run_streaming(&mut front, stream)
+    }
+
+    /// Streaming counterpart of [`Simulation::run_cluster`]: the same
+    /// bounded-memory arrival path through the K-shard
+    /// [`CoordinatorCluster`] frontend (K = [`SimConfig::coordinators`]).
+    pub fn run_stream_cluster(
+        stream: &mut dyn ArrivalStream,
+        kind: SchedulerKind,
+        cfg: &SchedulerConfig,
+        sim_cfg: &SimConfig,
+    ) -> SimResult {
+        let stub = Trace {
+            num_ports: stream.num_ports(),
+            coflows: Vec::new(),
+            flows: Vec::new(),
+        };
+        let mut cluster = CoordinatorCluster::with_coordinators(
+            sim_cfg.coordinators.max(1),
+            kind,
+            &stub,
+            cfg,
+        );
+        cluster.set_alloc_shards(sim_cfg.alloc_shards);
+        Engine::new_streaming(stream.num_ports(), cfg, sim_cfg).run_streaming(&mut cluster, stream)
+    }
 }
 
 struct Engine {
@@ -661,6 +767,29 @@ struct Engine {
     rng: Rng,
     max_sim_time: Time,
     costs: MessageCostModel,
+    // ---- streaming mode (bounded-memory trace ingestion) ----
+    /// `true` when driven by an [`ArrivalStream`] instead of a
+    /// pre-materialized arrival list.
+    streaming: bool,
+    /// The next not-yet-admitted arrival pulled from the stream (reused
+    /// buffer; valid only while `has_pending`).
+    pending: CoflowArrival,
+    has_pending: bool,
+    /// LIFO free list of recycled flow slots (streaming only): a finished
+    /// coflow's flow slots are reused by later admissions so the flow table
+    /// stays bounded by the *live* flow count, not the run total.
+    flow_free: Vec<FlowId>,
+    /// Global monotone flow creation counter — the stable event tie-break
+    /// (`FlowState::seq`) handed to recycled slots.
+    flow_seq: u64,
+    /// Coflows whose heavy per-flow state is reclaimed at the end of the
+    /// current loop iteration (after the reallocation consumed the batch).
+    retire_pending: Vec<CoflowId>,
+    /// Per-port scratch for the streaming admitter's bottleneck bound
+    /// (same shape as `world_with_fabric`).
+    bn_up: Vec<f64>,
+    bn_down: Vec<f64>,
+    bn_touched: Vec<usize>,
 }
 
 #[derive(Default)]
@@ -684,8 +813,43 @@ impl Engine {
         let mut arrivals: Vec<(Time, CoflowId)> =
             trace.coflows.iter().map(|c| (c.arrival, c.id)).collect();
         arrivals.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        Self::from_world(world, arrivals, cfg, sim_cfg, false)
+    }
+
+    /// Streaming constructor: an empty world over `num_ports` ports. Coflows
+    /// materialize one at a time via [`Engine::admit_pending`] as the
+    /// [`ArrivalStream`] reaches them, and retire after completion — resident
+    /// state tracks the concurrent population, not the trace length.
+    fn new_streaming(num_ports: usize, cfg: &SchedulerConfig, sim_cfg: &SimConfig) -> Self {
+        let fabric = sim_cfg
+            .fabric
+            .clone()
+            .unwrap_or_else(|| Fabric::homogeneous(num_ports, sim_cfg.port_rate));
+        assert_eq!(
+            fabric.num_ports, num_ports,
+            "fabric port count must match the stream"
+        );
+        let world = World {
+            now: 0.0,
+            flows: Vec::new(),
+            coflows: Vec::new(),
+            fabric,
+            load: PortLoad::new(num_ports),
+            active: Vec::new(),
+        };
+        Self::from_world(world, Vec::new(), cfg, sim_cfg, true)
+    }
+
+    fn from_world(
+        world: World,
+        arrivals: Vec<(Time, CoflowId)>,
+        cfg: &SchedulerConfig,
+        sim_cfg: &SimConfig,
+        streaming: bool,
+    ) -> Self {
         let nf = world.flows.len();
         let nc = world.coflows.len();
+        let np = world.fabric.num_ports;
         Engine {
             world,
             arrivals,
@@ -708,7 +872,7 @@ impl Engine {
             reports_pending: vec![0; nc],
             coflow_delivered: vec![false; nc],
             active_agents: 0,
-            port_active: vec![0; trace.num_ports],
+            port_active: vec![0; np],
             delta_acct: sim_cfg.account_delta.unwrap_or(cfg.delta),
             interval_idx: 0,
             iv_rate_calc_s: 0.0,
@@ -721,10 +885,38 @@ impl Engine {
             rng: Rng::seed_from_u64(cfg.dynamics_seed.wrapping_add(0xDEAD_BEEF)),
             max_sim_time: sim_cfg.max_sim_time,
             costs: sim_cfg.costs,
+            streaming,
+            pending: CoflowArrival::default(),
+            has_pending: false,
+            flow_free: Vec::new(),
+            flow_seq: nf as u64,
+            retire_pending: Vec::new(),
+            bn_up: if streaming { vec![0.0; np] } else { Vec::new() },
+            bn_down: if streaming { vec![0.0; np] } else { Vec::new() },
+            bn_touched: Vec::new(),
         }
     }
 
-    fn run<F: CoordFrontend>(mut self, front: &mut F) -> SimResult {
+    fn run<F: CoordFrontend>(self, front: &mut F) -> SimResult {
+        self.run_inner(front, None)
+    }
+
+    /// Drive the loop from an [`ArrivalStream`]: prime the pending-arrival
+    /// buffer, then run with the stream as the arrival source.
+    fn run_streaming<F: CoordFrontend>(
+        mut self,
+        front: &mut F,
+        stream: &mut dyn ArrivalStream,
+    ) -> SimResult {
+        self.has_pending = stream.next_arrival(&mut self.pending);
+        self.run_inner(front, Some(stream))
+    }
+
+    fn run_inner<F: CoordFrontend>(
+        mut self,
+        front: &mut F,
+        mut stream: Option<&mut dyn ArrivalStream>,
+    ) -> SimResult {
         let wall_start = Instant::now();
         let tick = front.tick_interval();
         let mut next_tick: Option<Time> = None;
@@ -735,10 +927,13 @@ impl Engine {
             if self.next_arrival < self.arrivals.len() {
                 t_next = t_next.min(self.arrivals[self.next_arrival].0);
             }
-            if let Some((t, _)) = self.completions.peek() {
+            if self.has_pending {
+                t_next = t_next.min(self.pending.arrival);
+            }
+            if let Some((t, _, _)) = self.completions.peek() {
                 t_next = t_next.min(t);
             }
-            if let Some(Reverse(Ev(t, _))) = self.reports.peek() {
+            if let Some(Reverse(Ev(t, _, _))) = self.reports.peek() {
                 t_next = t_next.min(*t);
             }
             if let Some(nt) = next_tick {
@@ -784,12 +979,36 @@ impl Engine {
                 }
             }
 
+            // ---- streaming arrivals ----
+            while self.has_pending && self.pending.arrival <= self.world.now + EPS {
+                let cid = self.admit_pending();
+                let prev = self.pending.arrival;
+                self.has_pending = match stream.as_mut() {
+                    Some(s) => s.next_arrival(&mut self.pending),
+                    None => false,
+                };
+                debug_assert!(
+                    !self.has_pending || self.pending.arrival >= prev,
+                    "arrival stream must be non-decreasing"
+                );
+                if self.per_event {
+                    reaction = reaction.merge(front.on_arrival(cid, &mut self.world));
+                } else {
+                    self.batch.arrivals.push(cid);
+                }
+                if next_tick.is_none() {
+                    if let Some(iv) = tick {
+                        next_tick = Some(self.world.now + iv);
+                    }
+                }
+            }
+
             // ---- physical flow completions ----
             // NB: fire on the scheduled time even if the flow crossed the
             // EPS completion threshold early by float slop — the event is
             // what stamps `finished_at`.
             self.completed.clear();
-            while let Some((t, f)) = self.completions.peek() {
+            while let Some((t, _, f)) = self.completions.peek() {
                 if t <= self.world.now + EPS {
                     self.completions.pop();
                     debug_assert!(self.world.flows[f].finished_at.is_none());
@@ -805,7 +1024,8 @@ impl Engine {
                 self.reports_pending[cid] += 1;
                 if self.jitter > 0.0 {
                     let d: f64 = self.rng.uniform(0.0, self.jitter);
-                    self.reports.push(Reverse(Ev(self.world.now + d, f)));
+                    let seq = self.world.flows[f].seq;
+                    self.reports.push(Reverse(Ev(self.world.now + d, seq, f)));
                 } else if self.per_event {
                     reaction = reaction.merge(self.deliver_report(f, front));
                 } else {
@@ -814,7 +1034,7 @@ impl Engine {
             }
 
             // ---- delayed completion reports ----
-            while let Some(Reverse(Ev(t, f))) = self.reports.peek() {
+            while let Some(Reverse(Ev(t, _, f))) = self.reports.peek() {
                 if *t <= self.world.now + EPS {
                     let f = *f;
                     self.reports.pop();
@@ -882,6 +1102,14 @@ impl Engine {
                     }
                 }
             }
+
+            // ---- streaming retirement ----
+            // Reclaim heavy state of coflows whose completion was fully
+            // delivered this instant — after the reallocation, so no hook
+            // or allocator sees a retired coflow mid-round.
+            if self.streaming && !self.retire_pending.is_empty() {
+                self.retire_done();
+            }
         }
 
         // close the final interval
@@ -913,6 +1141,7 @@ impl Engine {
             rate_calc_wall_s: self.totals.rate_calc_wall_s,
             peak_active_coflows: self.totals.peak_active_coflows,
             peak_active_flows: self.totals.peak_active_flows,
+            flow_slots: self.world.flows.len(),
             updates_per_interval: self.stats.updates_per_interval.clone(),
             sim_wall_s: wall_start.elapsed().as_secs_f64(),
             deadline,
@@ -969,6 +1198,94 @@ impl Engine {
             self.totals.peak_active_flows.max(self.totals.active_flows);
         self.totals.peak_active_coflows =
             self.totals.peak_active_coflows.max(self.world.active.len());
+    }
+
+    /// Streaming admission: materialize the pending arrival into the world
+    /// — dense coflow id (monotone, never recycled), flow slots recycled
+    /// through the free list with a fresh global `seq` — then register it
+    /// through the ordinary [`admit`](Self::admit) path. The identity
+    /// assignment reproduces the materialized world exactly on
+    /// arrival-sorted traces: coflow `k` of the trace becomes world coflow
+    /// `k`, and because earlier coflows only *retire* (slots return LIFO)
+    /// after completing, a fully-materialized run and a streamed run see
+    /// the same `(seq, size, ports)` tuples everywhere the schedulers look.
+    fn admit_pending(&mut self) -> CoflowId {
+        let cid = self.world.coflows.len();
+        let nflows = self.pending.flows.len();
+        let mut flow_ids: Vec<FlowId> = Vec::with_capacity(nflows);
+        let mut total = 0.0f64;
+        for i in 0..nflows {
+            let (src, dst, size) = self.pending.flows[i];
+            total += size;
+            let fid = match self.flow_free.pop() {
+                Some(slot) => {
+                    self.world.flows[slot] = FlowState::new(slot, cid, src, dst, size);
+                    slot
+                }
+                None => {
+                    let id = self.world.flows.len();
+                    self.world.flows.push(FlowState::new(id, cid, src, dst, size));
+                    id
+                }
+            };
+            self.world.flows[fid].seq = self.flow_seq;
+            self.flow_seq += 1;
+            if self.bn_up[src] == 0.0 {
+                self.bn_touched.push(src);
+            }
+            if self.bn_down[dst] == 0.0 {
+                self.bn_touched.push(dst);
+            }
+            self.bn_up[src] += size;
+            self.bn_down[dst] += size;
+            flow_ids.push(fid);
+        }
+        // clairvoyant bottleneck bound — same math as `world_with_fabric`
+        let mut bn = 0.0f64;
+        for &p in &self.bn_touched {
+            bn = bn.max(self.bn_up[p]).max(self.bn_down[p]);
+            self.bn_up[p] = 0.0;
+            self.bn_down[p] = 0.0;
+        }
+        self.bn_touched.clear();
+        let mut st = CoflowState::new(cid, self.pending.arrival, flow_ids, total, cid as u64);
+        st.deadline = self.pending.deadline;
+        st.senders = self.pending.senders.clone();
+        st.receivers = self.pending.receivers.clone();
+        st.bottleneck_bytes = bn;
+        for (i, &fid) in st.active_list.iter().enumerate() {
+            self.world.flows[fid].active_pos = i;
+        }
+        self.world.coflows.push(st);
+        // grow the engine's per-coflow tables in lockstep
+        self.rate_sum.push(0.0);
+        self.rate_dirty_stamp.push(0);
+        self.port_refs.push(None);
+        self.reports_pending.push(0);
+        self.coflow_delivered.push(false);
+        self.admit(cid);
+        cid
+    }
+
+    /// Reclaim the heavy per-coflow state of fully-delivered coflows
+    /// (streaming only): flow slots return to the free list and the
+    /// port/flow vectors are dropped. The scalar fields needed for the
+    /// end-of-run accounting — `arrival`, `finished_at`, `deadline`,
+    /// `total_bytes` — are retained, so `ccts` and [`DeadlineStats`] still
+    /// cover every coflow of the run.
+    fn retire_done(&mut self) {
+        for idx in 0..self.retire_pending.len() {
+            let cid = self.retire_pending[idx];
+            debug_assert!(self.world.coflows[cid].done());
+            let flows = std::mem::take(&mut self.world.coflows[cid].flows);
+            self.flow_free.extend(flows);
+            let c = &mut self.world.coflows[cid];
+            c.active_list = Vec::new();
+            c.senders = Vec::new();
+            c.receivers = Vec::new();
+            c.pilots = Vec::new();
+        }
+        self.retire_pending.clear();
     }
 
     fn mark_port_active(&mut self, p: usize) {
@@ -1069,6 +1386,9 @@ impl Engine {
             && !self.coflow_delivered[cid]
         {
             self.coflow_delivered[cid] = true;
+            if self.streaming {
+                self.retire_pending.push(cid);
+            }
             reaction = reaction.merge(front.on_coflow_complete(cid, &mut self.world));
         }
         reaction
@@ -1089,6 +1409,9 @@ impl Engine {
             && !self.coflow_delivered[cid];
         if coflow_done {
             self.coflow_delivered[cid] = true;
+            if self.streaming {
+                self.retire_pending.push(cid);
+            }
         }
         self.batch.flow_reports.push((f, coflow_done));
     }
@@ -1143,7 +1466,8 @@ impl Engine {
                 self.world.flows[f].rate = r;
                 changed += 1;
                 let due = now + self.world.flows[f].remaining() / r;
-                self.completions.set(f, due);
+                let seq = self.world.flows[f].seq;
+                self.completions.set(f, due, seq);
             }
             self.running.push(f);
             let cid = self.world.flows[f].coflow;
@@ -1448,6 +1772,41 @@ mod tests {
                 assert!(cct.is_finite() && cct > 0.0, "{kind:?}: coflow {i} unfinished");
             }
         }
+    }
+
+    #[test]
+    fn streamed_run_matches_materialized_run() {
+        let spec = TraceSpec::tiny(8, 20).seed(3);
+        let trace = spec.generate();
+        let cfg = SchedulerConfig::default();
+        let sim_cfg = SimConfig { account_delta: Some(1e18), ..SimConfig::default() };
+        for &kind in &[SchedulerKind::Philae, SchedulerKind::Fifo] {
+            let mut s = kind.build(&trace, &cfg);
+            let mat = Simulation::run_with(&trace, s.as_mut(), &cfg, &sim_cfg);
+            let mut stream = spec.stream();
+            let streamed = Simulation::run_stream(&mut stream, kind, &cfg, &sim_cfg);
+            assert_eq!(mat.ccts, streamed.ccts, "{kind:?}");
+            assert_eq!(mat.rate_calcs, streamed.rate_calcs, "{kind:?}");
+            assert_eq!(mat.update_msgs, streamed.update_msgs, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn streamed_run_retires_flow_state() {
+        // sequential single-pair coflows: the flow table must stay at the
+        // concurrent high-water mark (1 slot), not the run total
+        let records: Vec<TraceRecord> = (0..20)
+            .map(|i| TraceRecord::uniform(i + 1, i as f64 * 2.0, vec![0], vec![1], 125.0))
+            .collect();
+        let trace = Trace::from_records(2, records);
+        let mut stream = crate::trace::TraceStream::new(&trace);
+        let cfg = SchedulerConfig::default();
+        let res =
+            Simulation::run_stream(&mut stream, SchedulerKind::Fifo, &cfg, &SimConfig::default());
+        assert_eq!(res.ccts.len(), 20);
+        assert!(res.ccts.iter().all(|c| c.is_finite()));
+        assert_eq!(res.peak_active_flows, 1, "coflows must run sequentially");
+        assert_eq!(res.flow_slots, 1, "retirement must recycle slots");
     }
 
     #[test]

@@ -10,17 +10,21 @@
 //! is bounded by the number of running flows and stale entries simply
 //! cannot exist.
 //!
-//! Ordering is `(due time, flow id)` under `f64::total_cmp` — a total,
-//! deterministic order, so event replay is bit-reproducible.
+//! Ordering is `(due time, key)` under `f64::total_cmp` — a total,
+//! deterministic order, so event replay is bit-reproducible. The key is a
+//! caller-supplied stable sequence (the flow's creation order), **not** the
+//! flow id: the streaming engine recycles flow slots, so an id-based
+//! tie-break would depend on allocation history. In materialized worlds
+//! `key == id` and the historical order is unchanged.
 
 use crate::{FlowId, Time};
 
-/// Min-heap of `(due, flow)` with O(1) membership and O(log n)
+/// Min-heap of `(due, key, flow)` with O(1) membership and O(log n)
 /// insert/reschedule/remove. All storage is reused; `pos` grows once to the
 /// flow-table size and the heap vector to the running-flow high-water mark.
 #[derive(Debug, Clone, Default)]
 pub struct CompletionHeap {
-    heap: Vec<(Time, FlowId)>,
+    heap: Vec<(Time, u64, FlowId)>,
     /// `flow → heap slot + 1`; 0 = not queued.
     pos: Vec<u32>,
 }
@@ -49,39 +53,41 @@ impl CompletionHeap {
         self.pos.get(f).copied().unwrap_or(0) != 0
     }
 
-    /// Earliest `(due, flow)` without removing it.
+    /// Earliest `(due, key, flow)` without removing it.
     #[inline]
-    pub fn peek(&self) -> Option<(Time, FlowId)> {
+    pub fn peek(&self) -> Option<(Time, u64, FlowId)> {
         self.heap.first().copied()
     }
 
-    /// Remove and return the earliest `(due, flow)`.
-    pub fn pop(&mut self) -> Option<(Time, FlowId)> {
+    /// Remove and return the earliest `(due, key, flow)`.
+    pub fn pop(&mut self) -> Option<(Time, u64, FlowId)> {
         let top = *self.heap.first()?;
-        self.pos[top.1] = 0;
+        self.pos[top.2] = 0;
         let last = self.heap.pop().expect("non-empty");
         if !self.heap.is_empty() {
             self.heap[0] = last;
-            self.pos[last.1] = 1;
+            self.pos[last.2] = 1;
             self.sift_down(0);
         }
         Some(top)
     }
 
-    /// Schedule (or reschedule) flow `f` to complete at `due`.
-    pub fn set(&mut self, f: FlowId, due: Time) {
+    /// Schedule (or reschedule) flow `f` (stable tie-break `key`) to
+    /// complete at `due`.
+    pub fn set(&mut self, f: FlowId, due: Time, key: u64) {
         if f >= self.pos.len() {
             self.pos.resize(f + 1, 0);
         }
         let slot = self.pos[f];
         if slot == 0 {
-            self.heap.push((due, f));
+            self.heap.push((due, key, f));
             let i = self.heap.len() - 1;
             self.pos[f] = i as u32 + 1;
             self.sift_up(i);
         } else {
             let i = slot as usize - 1;
             self.heap[i].0 = due;
+            self.heap[i].1 = key;
             self.sift_up(i);
             self.sift_down(i);
         }
@@ -97,22 +103,22 @@ impl CompletionHeap {
         let last = self.heap.pop().expect("non-empty: f was queued");
         if slot < self.heap.len() {
             self.heap[slot] = last;
-            self.pos[last.1] = slot as u32 + 1;
+            self.pos[last.2] = slot as u32 + 1;
             self.sift_up(slot);
             self.sift_down(slot);
         }
     }
 
     #[inline]
-    fn less(a: (Time, FlowId), b: (Time, FlowId)) -> bool {
+    fn less(a: (Time, u64, FlowId), b: (Time, u64, FlowId)) -> bool {
         a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)) == std::cmp::Ordering::Less
     }
 
     #[inline]
     fn swap(&mut self, a: usize, b: usize) {
         self.heap.swap(a, b);
-        self.pos[self.heap[a].1] = a as u32 + 1;
-        self.pos[self.heap[b].1] = b as u32 + 1;
+        self.pos[self.heap[a].2] = a as u32 + 1;
+        self.pos[self.heap[b].2] = b as u32 + 1;
     }
 
     fn sift_up(&mut self, mut i: usize) {
@@ -154,33 +160,48 @@ mod tests {
 
     fn drain(h: &mut CompletionHeap) -> Vec<(Time, FlowId)> {
         let mut out = Vec::new();
-        while let Some(e) = h.pop() {
-            out.push(e);
+        while let Some((t, _, f)) = h.pop() {
+            out.push((t, f));
         }
         out
     }
 
+    /// `set` with the materialized-world convention `key == id`.
+    fn set_id(h: &mut CompletionHeap, f: FlowId, due: Time) {
+        h.set(f, due, f as u64);
+    }
+
     #[test]
-    fn pops_in_time_then_id_order() {
+    fn pops_in_time_then_key_order() {
         let mut h = CompletionHeap::new();
-        h.set(2, 3.0);
-        h.set(0, 1.0);
-        h.set(1, 3.0);
-        h.set(3, 2.0);
-        assert_eq!(h.peek(), Some((1.0, 0)));
+        set_id(&mut h, 2, 3.0);
+        set_id(&mut h, 0, 1.0);
+        set_id(&mut h, 1, 3.0);
+        set_id(&mut h, 3, 2.0);
+        assert_eq!(h.peek(), Some((1.0, 0, 0)));
         assert_eq!(drain(&mut h), vec![(1.0, 0), (2.0, 3), (3.0, 1), (3.0, 2)]);
         assert!(h.is_empty());
     }
 
     #[test]
+    fn key_breaks_same_time_ties_not_id() {
+        // recycled slots: flow slot 5 created *before* slot 1 (seq 10 < 20)
+        let mut h = CompletionHeap::new();
+        h.set(5, 1.0, 10);
+        h.set(1, 1.0, 20);
+        assert_eq!(h.pop(), Some((1.0, 10, 5)));
+        assert_eq!(h.pop(), Some((1.0, 20, 1)));
+    }
+
+    #[test]
     fn set_reschedules_in_place() {
         let mut h = CompletionHeap::new();
-        h.set(0, 5.0);
-        h.set(1, 2.0);
-        h.set(0, 1.0); // move earlier
+        set_id(&mut h, 0, 5.0);
+        set_id(&mut h, 1, 2.0);
+        set_id(&mut h, 0, 1.0); // move earlier
         assert_eq!(h.len(), 2, "reschedule must not duplicate");
-        assert_eq!(h.peek(), Some((1.0, 0)));
-        h.set(0, 9.0); // move later
+        assert_eq!(h.peek(), Some((1.0, 0, 0)));
+        set_id(&mut h, 0, 9.0); // move later
         assert_eq!(h.len(), 2);
         assert_eq!(drain(&mut h), vec![(2.0, 1), (9.0, 0)]);
     }
@@ -189,7 +210,7 @@ mod tests {
     fn remove_is_exact_and_tolerant() {
         let mut h = CompletionHeap::with_flow_capacity(8);
         for f in 0..6 {
-            h.set(f, (6 - f) as f64);
+            set_id(&mut h, f, (6 - f) as f64);
         }
         h.remove(3);
         h.remove(3); // double remove: no-op
@@ -213,7 +234,7 @@ mod tests {
                     let t = rng.uniform(0.0, 100.0);
                     reference.retain(|e| e.1 != f);
                     reference.push((t, f));
-                    h.set(f, t);
+                    set_id(&mut h, f, t);
                 }
                 _ => {
                     reference.retain(|e| e.1 != f);

@@ -17,10 +17,11 @@
 //! Every knob is public so evaluation sweeps (skew, load, width) can be
 //! expressed directly.
 
-use super::{Trace, TraceRecord};
+use super::stream::{ArrivalStream, CoflowArrival, SpecStream};
+use super::Trace;
 use crate::fabric::Fabric;
-use crate::{Time, MB};
 use crate::util::Rng;
+use crate::Time;
 
 /// One class of the coflow mixture.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -64,6 +65,18 @@ impl DeadlineModel {
     }
 }
 
+/// How a coflow's flows connect its ports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FlowPattern {
+    /// Mapper × reducer shuffle (the FB benchmark's bipartite expansion).
+    #[default]
+    Bipartite,
+    /// All-reduce ring step: W workers, one equal-size chunk per link,
+    /// flows `worker[i] → worker[(i+1) mod W]`. The class's mapper range
+    /// doubles as the worker-count range; reducer ranges are unused.
+    Ring,
+}
+
 /// Generator parameters; defaults approximate the FB trace marginals.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceSpec {
@@ -90,6 +103,16 @@ pub struct TraceSpec {
     /// against this spec's fabric. Deadline assignment uses its own RNG
     /// stream, so the flows/arrivals are bit-identical with and without it.
     pub deadline: Option<DeadlineModel>,
+    /// Flow topology per coflow (bipartite shuffle vs all-reduce ring).
+    pub flow_pattern: FlowPattern,
+    /// Diurnal load-cycle period in seconds (used only when
+    /// `diurnal_amplitude > 0`).
+    pub diurnal_period: Time,
+    /// Peak extra load of the diurnal cycle: inter-arrival gaps are divided
+    /// by `1 + amplitude·½(1 + sin(2πt/period))`, so peak load is
+    /// `(1 + amplitude)×` the trough. `0.0` disables modulation and keeps
+    /// the arrival process bit-identical to the flat generator.
+    pub diurnal_amplitude: f64,
 }
 
 impl TraceSpec {
@@ -145,6 +168,9 @@ impl TraceSpec {
             rng_seed: 42,
             port_gbps_cycle: Vec::new(),
             deadline: None,
+            flow_pattern: FlowPattern::Bipartite,
+            diurnal_period: 0.0,
+            diurnal_amplitude: 0.0,
         }
     }
 
@@ -167,6 +193,144 @@ impl TraceSpec {
         } else {
             Fabric::mixed_gbps(self.num_ports, &self.port_gbps_cycle)
         }
+    }
+
+    /// Incast scenario: many-to-one shuffles (DCoflow's motivating
+    /// pattern, arXiv 2205.01229 §2 — aggregation stages whose single
+    /// reducer port is the structural bottleneck). Every coflow funnels a
+    /// wide mapper fan-in into exactly one reducer; arrivals are strongly
+    /// burst-clustered the way query fan-outs launch in waves. Own RNG
+    /// stream (seed 71), so existing scenarios are untouched.
+    pub fn incast(num_ports: usize, num_coflows: usize) -> Self {
+        let mut spec = Self::fb_like(num_ports, num_coflows);
+        spec.classes = vec![
+            // shallow aggregations: the bulk by count
+            CoflowClass {
+                weight: 0.6,
+                mappers: (8, 32),
+                reducers: (1, 1),
+                flow_mb_median: 1.0,
+                flow_mb_sigma: 0.8,
+            },
+            // deep fan-ins: few coflows, severe single-port contention
+            CoflowClass {
+                weight: 0.4,
+                mappers: (32, 128),
+                reducers: (1, 1),
+                flow_mb_median: 8.0,
+                flow_mb_sigma: 1.0,
+            },
+        ];
+        spec.burstiness = 0.7;
+        spec.burst_gap = 0.1;
+        spec.rng_seed = 71;
+        spec
+    }
+
+    /// All-reduce scenario: ring all-reduce steps from synchronous ML
+    /// training (each coflow is one ring pass over W sampled workers,
+    /// equal chunk per link). Ring traffic is the pattern where clairvoyant
+    /// bottleneck ordering degenerates — every port carries the same
+    /// bytes — so it isolates the schedulers' inter-coflow behavior. Own
+    /// RNG stream (seed 73).
+    pub fn all_reduce(num_ports: usize, num_coflows: usize) -> Self {
+        assert!(num_ports >= 2, "a ring needs at least two ports");
+        let mut spec = Self::fb_like(num_ports, num_coflows);
+        spec.flow_pattern = FlowPattern::Ring;
+        spec.classes = vec![
+            // small data-parallel jobs
+            CoflowClass {
+                weight: 0.7,
+                mappers: (2, 8),
+                reducers: (1, 1), // unused by Ring
+                flow_mb_median: 24.0,
+                flow_mb_sigma: 0.4,
+            },
+            // large jobs spanning a big worker set
+            CoflowClass {
+                weight: 0.3,
+                mappers: (8, 64),
+                reducers: (1, 1),
+                flow_mb_median: 96.0,
+                flow_mb_sigma: 0.4,
+            },
+        ];
+        spec.burstiness = 0.3;
+        spec.burst_gap = 0.5;
+        spec.rng_seed = 73;
+        spec
+    }
+
+    /// Diurnal scenario: the FB mixture under a sinusoidal load cycle —
+    /// gaps are compressed by up to `(1 + amplitude)×` at the peak, so the
+    /// trace alternates quiet troughs with heavily contended rush hours
+    /// (the production shape flat Poisson arrivals miss). Own RNG stream
+    /// (seed 79).
+    pub fn diurnal(num_ports: usize, num_coflows: usize) -> Self {
+        let mut spec = Self::fb_like(num_ports, num_coflows);
+        // one full cycle per generated hour of trace at fb_like's span
+        spec.diurnal_period = 3600.0;
+        spec.diurnal_amplitude = 3.0;
+        spec.rng_seed = 79;
+        spec
+    }
+
+    /// Adversarial-skew scenario: the sampling-robustness stress from
+    /// paper §2.2/§4.4 pushed to the edge — heavy-tailed classes at
+    /// lognormal σ up to 3 (pilot flows can miss the coflow's true size by
+    /// orders of magnitude) interleaved with a near-uniform "decoy" class
+    /// that sampling estimates perfectly. Own RNG stream (seed 83).
+    pub fn adversarial_skew(num_ports: usize, num_coflows: usize) -> Self {
+        let mut spec = Self::fb_like(num_ports, num_coflows);
+        spec.classes = vec![
+            CoflowClass {
+                weight: 0.5,
+                mappers: (2, 8),
+                reducers: (2, 8),
+                flow_mb_median: 4.0,
+                flow_mb_sigma: 3.0,
+            },
+            CoflowClass {
+                weight: 0.3,
+                mappers: (10, 60),
+                reducers: (10, 60),
+                flow_mb_median: 10.0,
+                flow_mb_sigma: 2.5,
+            },
+            // decoy: tiny, perfectly uniform — trivial for sampling,
+            // present to punish schedulers that mis-bin the heavy tail
+            CoflowClass {
+                weight: 0.2,
+                mappers: (1, 2),
+                reducers: (1, 2),
+                flow_mb_median: 0.5,
+                flow_mb_sigma: 0.05,
+            },
+        ];
+        spec.rng_seed = 83;
+        spec
+    }
+
+    /// Scenario registry: the named workloads reachable from the CLI
+    /// (`--scenario`) and docs. Returns `None` for unknown names.
+    pub fn scenario(name: &str, num_ports: usize, num_coflows: usize) -> Option<Self> {
+        Some(match name {
+            "fb-like" | "fb_like" => Self::fb_like(num_ports, num_coflows),
+            "mixed-rate" | "mixed_rate" => Self::mixed_rate(num_ports, num_coflows),
+            "tiny" => Self::tiny(num_ports, num_coflows),
+            "incast" => Self::incast(num_ports, num_coflows),
+            "all-reduce" | "all_reduce" | "ring" => Self::all_reduce(num_ports, num_coflows),
+            "diurnal" => Self::diurnal(num_ports, num_coflows),
+            "adversarial-skew" | "adversarial_skew" | "skew" => {
+                Self::adversarial_skew(num_ports, num_coflows)
+            }
+            _ => return None,
+        })
+    }
+
+    /// Canonical scenario names, in registry order.
+    pub fn scenario_names() -> &'static [&'static str] {
+        &["fb-like", "mixed-rate", "tiny", "incast", "all-reduce", "diurnal", "adversarial-skew"]
     }
 
     /// A small trace for tests and the quickstart example.
@@ -215,58 +379,40 @@ impl TraceSpec {
         self.with_deadlines(DeadlineModel::tightness(tightness))
     }
 
-    /// Generate the trace.
-    pub fn generate(&self) -> Trace {
-        assert!(self.num_ports >= 1, "need at least one port");
-        assert!(!self.classes.is_empty(), "need at least one coflow class");
-        let mut rng = Rng::seed_from_u64(self.rng_seed);
-        let total_w: f64 = self.classes.iter().map(|c| c.weight).sum();
+    /// The streaming form of this spec: yields [`CoflowArrival`]s one at a
+    /// time in O(active) memory. [`TraceSpec::generate`] is the drain of
+    /// this stream, so materialized and streamed workloads are
+    /// bit-identical by construction.
+    pub fn stream(&self) -> SpecStream {
+        SpecStream::new(self)
+    }
 
-        let mut t = 0.0;
-        let mut records = Vec::with_capacity(self.num_coflows);
-        for ext in 0..self.num_coflows {
-            if ext > 0 {
-                t += if rng.chance(self.burstiness) {
-                    rng.exp(self.burst_gap.max(1e-9))
-                } else {
-                    rng.exp(self.mean_interarrival.max(1e-9))
-                };
-            }
-            let class = self.pick_class(&mut rng, total_w);
-            let cap = self.num_ports;
-            let (m0, m1) = (class.mappers.0.min(cap), class.mappers.1.min(cap));
-            let (r0, r1) = (class.reducers.0.min(cap), class.reducers.1.min(cap));
-            let nm = rng.range_inclusive(m0, m1).max(1);
-            let nr = rng.range_inclusive(r0, r1).max(1);
-            let mappers = rng.sample_distinct(self.num_ports, nm);
-            let reducer_ports = rng.sample_distinct(self.num_ports, nr);
-            // Draw a size per (reducer) aggregated over mappers so the
-            // per-flow size (reducer_total / nm) follows the class lognormal.
-            let reducers = reducer_ports
-                .into_iter()
-                .map(|p| {
-                    let per_flow_mb: f64 = rng
-                        .lognormal(class.flow_mb_median.ln(), class.flow_mb_sigma)
-                        .clamp(0.01, 10_000.0);
-                    (p, per_flow_mb * nm as f64 * MB)
-                })
-                .collect();
-            records.push(TraceRecord {
-                external_id: ext as u64 + 1,
-                arrival: t,
-                deadline: None,
-                mappers,
-                reducers,
-            });
+    /// Instantaneous diurnal load multiplier at trace time `t` (1.0 when
+    /// modulation is off).
+    pub fn diurnal_load(&self, t: Time) -> f64 {
+        if self.diurnal_amplitude <= 0.0 {
+            return 1.0;
         }
-        let mut trace = Trace::from_records(self.num_ports, records);
-        if let Some(model) = &self.deadline {
-            trace.assign_deadlines(model, &self.fabric(), self.rng_seed);
+        let phase = 2.0 * std::f64::consts::PI * t / self.diurnal_period.max(1e-9);
+        1.0 + self.diurnal_amplitude * 0.5 * (1.0 + phase.sin())
+    }
+
+    /// Generate the trace by draining [`TraceSpec::stream`].
+    pub fn generate(&self) -> Trace {
+        let mut stream = self.stream();
+        let mut trace = Trace {
+            num_ports: self.num_ports,
+            coflows: Vec::with_capacity(self.num_coflows),
+            flows: Vec::new(),
+        };
+        let mut arrival = CoflowArrival::default();
+        while stream.next_arrival(&mut arrival) {
+            trace.push_arrival(&arrival);
         }
         trace
     }
 
-    fn pick_class(&self, rng: &mut Rng, total_w: f64) -> &CoflowClass {
+    pub(crate) fn pick_class(&self, rng: &mut Rng, total_w: f64) -> &CoflowClass {
         let mut x = rng.f64() * total_w;
         for c in &self.classes {
             if x < c.weight {
@@ -402,6 +548,108 @@ mod tests {
         for (a, b) in slo.coflows.iter().zip(again.coflows.iter()) {
             assert_eq!(a.deadline, b.deadline);
         }
+    }
+
+    #[test]
+    fn scenario_registry_resolves_all_names() {
+        for &name in TraceSpec::scenario_names() {
+            let spec = TraceSpec::scenario(name, 50, 20).unwrap_or_else(|| panic!("{name}"));
+            let t = spec.generate();
+            assert_eq!(t.coflows.len(), 20, "{name}");
+            assert_eq!(t.num_ports, 50, "{name}");
+        }
+        assert!(TraceSpec::scenario("no-such-scenario", 10, 10).is_none());
+    }
+
+    #[test]
+    fn scenario_determinism_pins() {
+        // same seed → same trace, per scenario; distinct scenario streams
+        // must not collide with fb_like's
+        let fb = TraceSpec::fb_like(60, 40).generate();
+        for &name in &["incast", "all-reduce", "diurnal", "adversarial-skew"] {
+            let a = TraceSpec::scenario(name, 60, 40).unwrap().generate();
+            let b = TraceSpec::scenario(name, 60, 40).unwrap().generate();
+            assert_eq!(a.flows, b.flows, "{name}");
+            for (x, y) in a.coflows.iter().zip(b.coflows.iter()) {
+                assert_eq!(x.arrival.to_bits(), y.arrival.to_bits(), "{name}");
+            }
+            let same_as_fb = a.flows.len() == fb.flows.len()
+                && a.flows.iter().zip(fb.flows.iter()).all(|(x, y)| x == y);
+            assert!(!same_as_fb, "{name} collides with fb_like");
+        }
+    }
+
+    #[test]
+    fn incast_is_many_to_one() {
+        let t = TraceSpec::incast(150, 60).generate();
+        for c in &t.coflows {
+            assert_eq!(c.receivers.len(), 1, "incast coflow has one reducer");
+            assert!(c.senders.len() >= 8, "incast fan-in is wide");
+        }
+    }
+
+    #[test]
+    fn all_reduce_builds_rings() {
+        let t = TraceSpec::all_reduce(100, 50).generate();
+        for c in &t.coflows {
+            let w = c.senders.len();
+            assert!(w >= 2, "ring spans at least two workers");
+            assert_eq!(c.flows.len(), w, "one flow per ring link");
+            assert_eq!(c.senders, c.receivers, "every worker sends and receives");
+            // each worker appears exactly once as src and once as dst,
+            // and all chunks are equal
+            let mut out_deg = std::collections::HashMap::new();
+            let mut in_deg = std::collections::HashMap::new();
+            let first = t.flows[c.flows[0]].size;
+            for &fid in &c.flows {
+                let f = &t.flows[fid];
+                *out_deg.entry(f.src).or_insert(0) += 1;
+                *in_deg.entry(f.dst).or_insert(0) += 1;
+                assert_eq!(f.size.to_bits(), first.to_bits());
+            }
+            assert!(out_deg.values().all(|&d| d == 1));
+            assert!(in_deg.values().all(|&d| d == 1));
+        }
+    }
+
+    #[test]
+    fn diurnal_compresses_peak_arrivals() {
+        let spec = TraceSpec::diurnal(60, 400);
+        // the load multiplier swings between 1× and (1+amplitude)×
+        assert!((spec.diurnal_load(0.0) - (1.0 + spec.diurnal_amplitude / 2.0)).abs() < 1e-9);
+        let peak_t = spec.diurnal_period / 4.0; // sin = 1
+        assert!((spec.diurnal_load(peak_t) - (1.0 + spec.diurnal_amplitude)).abs() < 1e-9);
+        // the modulated trace finishes arriving sooner than the flat one
+        let flat = {
+            let mut s = spec.clone();
+            s.diurnal_amplitude = 0.0;
+            s.generate()
+        };
+        let wavy = spec.generate();
+        assert!(wavy.makespan_lower_bound() < flat.makespan_lower_bound());
+        // amplitude 0 keeps the legacy arrival process bit-identical
+        let fb = TraceSpec::fb_like(60, 400).seed(79).generate();
+        for (a, b) in flat.coflows.iter().zip(fb.coflows.iter()) {
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+        }
+    }
+
+    #[test]
+    fn adversarial_skew_has_extreme_and_uniform_classes() {
+        let t = TraceSpec::adversarial_skew(80, 120).generate();
+        let oracles = t.oracles();
+        let skews: Vec<f64> = t
+            .coflows
+            .iter()
+            .zip(&oracles)
+            .filter(|(c, _)| c.num_flows() > 1)
+            .map(|(_, o)| o.skew())
+            .filter(|s| s.is_finite())
+            .collect();
+        let max_skew = skews.iter().cloned().fold(0.0, f64::max);
+        let min_skew = skews.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max_skew > 50.0, "heavy tail missing (max skew {max_skew})");
+        assert!(min_skew < 1.5, "decoy class missing (min skew {min_skew})");
     }
 
     #[test]

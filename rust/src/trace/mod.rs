@@ -15,9 +15,11 @@
 
 mod format;
 mod generator;
+mod stream;
 
 pub use format::{parse_trace, render_trace};
-pub use generator::{CoflowClass, DeadlineModel, TraceSpec};
+pub use generator::{CoflowClass, DeadlineModel, FlowPattern, TraceSpec};
+pub use stream::{ArrivalStream, CoflowArrival, SpecStream, TraceStream};
 
 use crate::coflow::{CoflowOracle, CoflowSpec, FlowSpec};
 use crate::fabric::Fabric;
@@ -69,6 +71,30 @@ impl Trace {
             });
         }
         Trace { num_ports, coflows, flows }
+    }
+
+    /// Append one pre-expanded [`CoflowArrival`] (the streaming unit) as
+    /// the next coflow. Flow expansion order is the arrival's `flows`
+    /// order, which for bipartite patterns matches
+    /// [`Trace::from_records`] exactly — [`TraceSpec::generate`] drains a
+    /// stream through this.
+    pub fn push_arrival(&mut self, a: &CoflowArrival) {
+        let cid = self.coflows.len();
+        let mut flow_ids = Vec::with_capacity(a.flows.len());
+        for &(src, dst, size) in &a.flows {
+            let id = self.flows.len();
+            self.flows.push(FlowSpec { id, coflow: cid, src, dst, size });
+            flow_ids.push(id);
+        }
+        self.coflows.push(CoflowSpec {
+            id: cid,
+            external_id: a.external_id,
+            arrival: a.arrival,
+            deadline: a.deadline,
+            flows: flow_ids,
+            senders: a.senders.clone(),
+            receivers: a.receivers.clone(),
+        });
     }
 
     /// Load a coflow-benchmark format trace file.

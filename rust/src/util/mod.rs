@@ -10,4 +10,4 @@ pub mod prop;
 pub mod rng;
 
 pub use json::JsonValue;
-pub use rng::Rng;
+pub use rng::{Rng, SampleScratch};

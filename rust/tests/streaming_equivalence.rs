@@ -1,0 +1,194 @@
+//! Equivalence pins for the streaming engine path (ROADMAP item 3).
+//!
+//! The streamed run admits coflows from a bounded-memory
+//! [`ArrivalStream`] and retires per-flow state as coflows finish; this
+//! suite pins it **bit-identical** to the materialized engine for every
+//! registered scheduler, through the K=1 cluster frontend, and across
+//! generator scenarios — plus determinism pins for the scenario library
+//! and sanity bounds for the optimality-gap oracle.
+//!
+//! `account_delta: Some(1e18)` everywhere: one giant accounting interval,
+//! so measured wall time never couples into the event history (same
+//! convention as `cct_equivalence.rs`).
+
+use philae::analysis::{cct_lower_bound_default, optimality_gap};
+use philae::coordinator::{SchedulerConfig, SchedulerKind};
+use philae::sim::{SimConfig, Simulation};
+use philae::trace::{ArrivalStream, CoflowArrival, TraceSpec, TraceStream};
+
+fn sim_cfg() -> SimConfig {
+    SimConfig { account_delta: Some(1e18), ..SimConfig::default() }
+}
+
+fn assert_bit_identical(
+    kind: SchedulerKind,
+    a: &philae::sim::SimResult,
+    b: &philae::sim::SimResult,
+) {
+    assert_eq!(a.ccts.len(), b.ccts.len(), "{kind:?}: coflow count");
+    for (i, (x, y)) in a.ccts.iter().zip(b.ccts.iter()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{kind:?}: CCT diverged at coflow {i} ({x} vs {y})"
+        );
+    }
+    assert_eq!(a.rate_calcs, b.rate_calcs, "{kind:?}: rate calcs");
+    assert_eq!(a.update_msgs, b.update_msgs, "{kind:?}: update messages");
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{kind:?}: makespan");
+}
+
+#[test]
+fn streamed_matches_materialized_for_every_scheduler() {
+    let spec = TraceSpec::tiny(10, 30).seed(7);
+    let trace = spec.generate();
+    let cfg = SchedulerConfig::default();
+    for &kind in SchedulerKind::all() {
+        let mut sched = kind.build(&trace, &cfg);
+        let materialized = Simulation::run_with(&trace, sched.as_mut(), &cfg, &sim_cfg());
+        let mut stream = spec.stream();
+        let streamed = Simulation::run_stream(&mut stream, kind, &cfg, &sim_cfg());
+        assert_bit_identical(kind, &streamed, &materialized);
+    }
+}
+
+#[test]
+fn streamed_trace_replay_matches_generator_stream() {
+    // the two ArrivalStream impls must drive the engine identically:
+    // SpecStream regenerates from the spec, TraceStream replays the
+    // materialized trace in arrival order
+    let spec = TraceSpec::fb_like(12, 40).seed(11);
+    let trace = spec.generate();
+    let cfg = SchedulerConfig::default();
+    for kind in [SchedulerKind::Philae, SchedulerKind::Sebf, SchedulerKind::Scf] {
+        let mut gen_stream = spec.stream();
+        let a = Simulation::run_stream(&mut gen_stream, kind, &cfg, &sim_cfg());
+        let mut replay = TraceStream::new(&trace);
+        let b = Simulation::run_stream(&mut replay, kind, &cfg, &sim_cfg());
+        assert_bit_identical(kind, &a, &b);
+    }
+}
+
+#[test]
+fn streamed_cluster_k1_matches_single_coordinator() {
+    let spec = TraceSpec::tiny(8, 25).seed(13);
+    let trace = spec.generate();
+    let cfg = SchedulerConfig::default();
+    let kind = SchedulerKind::Philae;
+    let mut sched = kind.build(&trace, &cfg);
+    let single = Simulation::run_with(&trace, sched.as_mut(), &cfg, &sim_cfg());
+    let mut stream = spec.stream();
+    let clustered = Simulation::run_stream_cluster(&mut stream, kind, &cfg, &sim_cfg());
+    assert_bit_identical(kind, &clustered, &single);
+}
+
+#[test]
+fn streamed_scenarios_match_materialized() {
+    // every library scenario, streamed vs materialized, one cheap kind —
+    // covers the Ring expansion path (all-reduce) and the diurnal clock
+    let cfg = SchedulerConfig::default();
+    for name in TraceSpec::scenario_names() {
+        let spec = TraceSpec::scenario(name, 12, 25).expect("registry name").seed(17);
+        let trace = spec.generate();
+        let mut sched = SchedulerKind::Fifo.build(&trace, &cfg);
+        let materialized = Simulation::run_with(&trace, sched.as_mut(), &cfg, &sim_cfg());
+        let mut stream = spec.stream();
+        let streamed = Simulation::run_stream(&mut stream, SchedulerKind::Fifo, &cfg, &sim_cfg());
+        assert!(
+            materialized.ccts.iter().all(|c| c.is_finite()),
+            "{name}: unfinished coflows"
+        );
+        assert_bit_identical(SchedulerKind::Fifo, &streamed, &materialized);
+    }
+}
+
+#[test]
+fn scenario_library_is_deterministic_and_distinct() {
+    // same name + seed → byte-equal traces; each scenario has its own RNG
+    // stream, so adding one can never perturb another
+    for name in TraceSpec::scenario_names() {
+        let a = TraceSpec::scenario(name, 20, 30).unwrap().generate();
+        let b = TraceSpec::scenario(name, 20, 30).unwrap().generate();
+        assert_eq!(a.coflows, b.coflows, "{name}: coflow specs must be reproducible");
+        assert_eq!(a.flows, b.flows, "{name}: flow specs must be reproducible");
+        assert!(!a.coflows.is_empty(), "{name}: empty scenario");
+    }
+    // alias spellings resolve to the same spec
+    let a = TraceSpec::scenario("all-reduce", 16, 10).unwrap().generate();
+    let b = TraceSpec::scenario("all_reduce", 16, 10).unwrap().generate();
+    assert_eq!(a.flows, b.flows);
+    assert!(TraceSpec::scenario("no-such-scenario", 16, 10).is_none());
+}
+
+#[test]
+fn scenario_shapes_match_their_stories() {
+    // incast: every coflow funnels into exactly one reducer
+    let incast = TraceSpec::incast(32, 20).generate();
+    for c in &incast.coflows {
+        assert_eq!(c.receivers.len(), 1, "incast coflow {} has fan-out", c.id);
+        assert!(c.senders.len() >= 2, "incast coflow {} is not a fan-in", c.id);
+    }
+    // all-reduce: ring pass — every participant sends and receives once,
+    // equal bytes per link
+    let ring = TraceSpec::all_reduce(32, 20).generate();
+    for c in &ring.coflows {
+        assert_eq!(c.senders.len(), c.receivers.len(), "ring coflow {}", c.id);
+        assert_eq!(c.flows.len(), c.senders.len(), "one flow per link");
+        let first = ring.flows[c.flows[0]].size;
+        for &f in &c.flows {
+            assert_eq!(ring.flows[f].size, first, "unequal ring chunks");
+        }
+    }
+}
+
+#[test]
+fn streamed_run_bounds_live_flow_state() {
+    // the allocated flow table must track the concurrent working set
+    // (recycled slots), not the cumulative arrival count
+    let spec = TraceSpec::tiny(6, 60).seed(23);
+    let mut probe = spec.stream();
+    let mut arr = CoflowArrival::default();
+    let mut total_flows = 0usize;
+    while probe.next_arrival(&mut arr) {
+        total_flows += arr.flows.len();
+    }
+    let mut stream = spec.stream();
+    let res = Simulation::run_stream(
+        &mut stream,
+        SchedulerKind::Fifo,
+        &SchedulerConfig::default(),
+        &sim_cfg(),
+    );
+    assert_eq!(res.ccts.len(), 60);
+    assert!(
+        res.flow_slots < total_flows,
+        "no retirement happened: {} slots allocated for {} streamed flows",
+        res.flow_slots,
+        total_flows
+    );
+}
+
+#[test]
+fn oracle_bound_is_sane_across_kinds_and_scenarios() {
+    let cfg = SchedulerConfig::default();
+    for name in ["fb-like", "incast", "adversarial-skew"] {
+        let trace = TraceSpec::scenario(name, 16, 30).unwrap().generate();
+        let lb = cct_lower_bound_default(&trace);
+        assert!(lb.avg_cct() > 0.0, "{name}: vacuous bound");
+        assert!(lb.avg_cct().is_finite(), "{name}: divergent bound");
+        let sum_ideal: f64 = lb.ideal.iter().sum();
+        assert!(
+            lb.total_cct >= sum_ideal - 1e-9,
+            "{name}: machine relaxation below Σ ideal"
+        );
+        for &kind in SchedulerKind::all() {
+            let mut sched = kind.build(&trace, &cfg);
+            let res = Simulation::run_with(&trace, sched.as_mut(), &cfg, &sim_cfg());
+            let gap = optimality_gap(res.avg_cct(), lb.avg_cct());
+            assert!(
+                gap >= -1e-6,
+                "{name}/{kind:?}: beat the lower bound (gap {gap})"
+            );
+        }
+    }
+}
