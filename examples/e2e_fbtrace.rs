@@ -74,6 +74,8 @@ fn main() -> anyhow::Result<()> {
         port_rate: philae::GBPS,
         alloc_shards: 1,
         coordinators: 1,
+        // resilience + observability knobs stay at their defaults (off)
+        ..ServiceConfig::default()
     };
 
     let philae_run = run_service(&trace, &base)?;

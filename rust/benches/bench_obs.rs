@@ -1,0 +1,94 @@
+//! §Observability overhead: what the flight recorder + metrics registry
+//! cost when armed, and the raw throughput of the two hot recording
+//! primitives.
+//!
+//! * **sim overhead** — the full simulation at bench scale, obs off vs
+//!   obs on (64Ki-event ring). The ratio of the two minimum wall times is
+//!   the number the CI gate holds under the ≤10% ceiling
+//!   (`overhead.events_ratio_on_vs_off` in `ci/bench_baseline.json`).
+//! * **histogram** — `LogHistogram::record` throughput: two index bumps
+//!   into the fixed 64×64 bucket grid, no allocation, no locks.
+//! * **recorder** — `ObsPlane::emit` throughput: one ring store plus a
+//!   sequence bump, the cost every recorded lifecycle event pays.
+//!
+//! Emits machine-readable `BENCH_obs.json` at the repo root.
+//!
+//! `cargo bench --bench bench_obs`
+
+mod common;
+
+use philae::coordinator::{SchedulerConfig, SchedulerKind};
+use philae::obs::{EventKind, LogHistogram, ObsPlane};
+use philae::sim::{SimConfig, Simulation};
+use philae::trace::TraceSpec;
+
+fn main() {
+    common::banner("obs", "flight recorder + metrics overhead (off vs on)");
+    let iters = common::iters(10);
+
+    let (ports, coflows) = (150usize, 200usize);
+    let trace = TraceSpec::fb_like(ports, coflows).seed(5).generate();
+    let cfg = SchedulerConfig::default();
+
+    let run = |obs_events: usize| {
+        let sim_cfg = SimConfig { obs_events, ..SimConfig::default() };
+        let mut sched = SchedulerKind::Philae.build(&trace, &cfg);
+        Simulation::run_with(&trace, sched.as_mut(), &cfg, &sim_cfg)
+    };
+
+    // warm both paths once so first-touch page faults don't skew either side
+    let base = run(0);
+    let armed = run(1 << 16);
+    let recorded = armed.obs.as_ref().map(|s| s.recorded).unwrap_or(0);
+    assert!(recorded > 0, "armed run recorded no events");
+
+    let (wall_off, _) = common::time_it(iters, || run(0));
+    let (wall_on, _) = common::time_it(iters, || run(1 << 16));
+    let ratio = wall_on / wall_off;
+    println!(
+        "sim {ports}p/{coflows}c philae: off {:.1} ms | on {:.1} ms | ratio {ratio:.4} ({recorded} events, {} CCTs)",
+        wall_off * 1e3,
+        wall_on * 1e3,
+        base.ccts.len()
+    );
+
+    // histogram record throughput
+    let mut hist = LogHistogram::new();
+    let n_hist = 4_000_000u64;
+    let (hist_s, _) = common::time_it(iters, || {
+        for i in 0..n_hist {
+            hist.record(i.wrapping_mul(2654435761) | 1);
+        }
+    });
+    let hist_rate = n_hist as f64 / hist_s;
+    println!("LogHistogram::record: {:.1} M records/s", hist_rate / 1e6);
+
+    // recorder emit throughput (ring at capacity — steady-state overwrite)
+    let mut plane = ObsPlane::new(1 << 16);
+    let n_emit = 2_000_000u64;
+    let (emit_s, _) = common::time_it(iters, || {
+        for i in 0..n_emit {
+            plane.emit(i as f64 * 1e-9, 0, 0, EventKind::FlowComplete, i % 512, i, i);
+        }
+    });
+    let emit_rate = n_emit as f64 / emit_s;
+    println!("ObsPlane::emit:       {:.1} M events/s", emit_rate / 1e6);
+    std::hint::black_box((&hist, &plane));
+
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"overhead\": {{\n",
+            "    \"wall_off_s\": {:.6},\n",
+            "    \"wall_on_s\": {:.6},\n",
+            "    \"events_ratio_on_vs_off\": {:.6},\n",
+            "    \"events_recorded\": {}\n",
+            "  }},\n",
+            "  \"hist\": {{ \"records_per_sec\": {:.1} }},\n",
+            "  \"recorder\": {{ \"emits_per_sec\": {:.1} }}\n",
+            "}}\n"
+        ),
+        wall_off, wall_on, ratio, recorded, hist_rate, emit_rate
+    );
+    common::write_json("BENCH_obs.json", &json);
+}

@@ -147,16 +147,27 @@ fn main() {
         report.update_msgs, report.wall_seconds, events_per_sec
     );
     println!(
-        "  reallocations: {} | latency ms p50 {:.3} / p99 {:.3} | sched bufs recycled {}",
+        "  reallocations: {} | latency ms p50 {:.3} / p99 {:.3} / p999 {:.3} | sched bufs recycled {} | register bufs recycled {}",
         report.rate_calcs,
         report.realloc_p50 * 1e3,
         report.realloc_p99 * 1e3,
+        report.realloc_p999 * 1e3,
         report.sched_bufs_reused,
+        report.register_bufs_reused,
     );
     assert_eq!(
         report.ccts.iter().filter(|c| c.is_finite()).count(),
         trace.coflows.len(),
         "soak must complete every coflow"
+    );
+    // steady-state registration must ride the boomerang buffer pool: the
+    // feeder awaits each reply and the coordinator recycles the consumed
+    // record before replying, so only the first take can be fresh
+    assert!(
+        report.register_bufs_reused >= trace.coflows.len() as u64 - 1,
+        "register path fell back to fresh buffers: {} reused of {} registrations",
+        report.register_bufs_reused,
+        trace.coflows.len()
     );
 
     // ---- JSON ----------------------------------------------------------
@@ -182,7 +193,8 @@ fn main() {
     json.push_str(&format!(
         "  \"soak\": {{\"ports\": {}, \"coflows\": {}, \"flows\": {}, \"events\": {}, \
          \"wall_seconds\": {:.3},\n    \"events_per_sec\": {:.1}, \"rate_calcs\": {}, \
-         \"realloc_p50_ms\": {:.4}, \"realloc_p99_ms\": {:.4}, \"sched_bufs_reused\": {}}}\n",
+         \"realloc_p50_ms\": {:.4}, \"realloc_p99_ms\": {:.4}, \"realloc_p999_ms\": {:.4}, \
+         \"sched_bufs_reused\": {}, \"register_bufs_reused\": {}}}\n",
         soak_ports,
         trace.coflows.len(),
         trace.flows.len(),
@@ -192,7 +204,9 @@ fn main() {
         report.rate_calcs,
         report.realloc_p50 * 1e3,
         report.realloc_p99 * 1e3,
+        report.realloc_p999 * 1e3,
         report.sched_bufs_reused,
+        report.register_bufs_reused,
     ));
     json.push_str("}\n");
     common::write_json("BENCH_service.json", &json);

@@ -110,6 +110,7 @@ use super::{
     World,
 };
 use crate::fabric::Fabric;
+use crate::obs::{self, EventKind};
 use crate::trace::Trace;
 use crate::util::{JsonValue, Rng};
 use crate::{CoflowId, FlowId, Time};
@@ -214,6 +215,12 @@ pub struct CoordinatorCluster {
     migrations: u64,
     reconciliations: u64,
     chaos: Option<Box<ChaosState>>,
+    /// Buffer coordination-plane lifecycle events for the engine's flight
+    /// recorder (see [`Self::set_obs`]); off by default, zero cost when off.
+    obs_on: bool,
+    /// Events since the last [`Self::drain_obs`] (time/sequence stamped by
+    /// the consumer).
+    obs_pending: Vec<obs::PendingEvent>,
 }
 
 /// SplitMix64 finalizer — the coflow→shard router hash (shared with the
@@ -315,7 +322,24 @@ impl CoordinatorCluster {
             migrations: 0,
             reconciliations: 0,
             chaos: None,
+            obs_on: false,
+            obs_pending: Vec::new(),
         }
+    }
+
+    /// Arm (or disarm) coordination-plane event buffering for a flight
+    /// recorder. Purely observational — scheduling behavior is identical
+    /// either way.
+    pub fn set_obs(&mut self, on: bool) {
+        self.obs_on = on;
+        if !on {
+            self.obs_pending = Vec::new();
+        }
+    }
+
+    /// Move buffered `(shard, kind, coflow, a, b)` events into `out`.
+    pub fn drain_obs(&mut self, out: &mut Vec<obs::PendingEvent>) {
+        out.append(&mut self.obs_pending);
     }
 
     /// Convenience constructor: `k` shards, default cluster tunables.
@@ -466,6 +490,15 @@ impl CoordinatorCluster {
         std::mem::swap(&mut world.active, &mut sh.active);
         sh.sched = restored?;
         self.dirty[s] = true;
+        if self.obs_on {
+            self.obs_pending.push((
+                s as u32,
+                EventKind::Restore,
+                obs::NO_COFLOW,
+                u64::from(ckpt.is_some()),
+                0,
+            ));
+        }
         Ok(())
     }
 
@@ -479,6 +512,15 @@ impl CoordinatorCluster {
         if chaos.checkpoint_every > 0 && self.rounds % chaos.checkpoint_every == 0 {
             chaos.last_ckpt = Some(self.checkpoint(world));
             chaos.checkpoints += 1;
+            if self.obs_on {
+                self.obs_pending.push((
+                    0,
+                    EventKind::Checkpoint,
+                    obs::NO_COFLOW,
+                    chaos.checkpoints,
+                    0,
+                ));
+            }
         }
         if chaos.kill_every > 0 && self.rounds % chaos.kill_every == 0 {
             let s = (chaos.rng.next_u64() % self.shards.len() as u64) as usize;
@@ -936,6 +978,10 @@ impl CoordinatorCluster {
             self.dirty[s] = true;
         }
         self.reconciliations += 1;
+        if self.obs_on {
+            self.obs_pending
+                .push((0, EventKind::LeaseReconcile, obs::NO_COFLOW, k as u64, 0));
+        }
     }
 
     /// Move `cid` from shard `from` to shard `to`, handing its per-port
@@ -974,6 +1020,10 @@ impl CoordinatorCluster {
         self.dirty[from] = true;
         self.dirty[to] = true;
         self.migrations += 1;
+        if self.obs_on {
+            self.obs_pending
+                .push((from as u32, EventKind::Migration, cid as u64, from as u64, to as u64));
+        }
     }
 
     /// Assert the cluster's structural invariants against `world` (K ≥ 2):

@@ -42,6 +42,7 @@ pub mod coflow;
 pub mod coordinator;
 pub mod fabric;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod service;
 pub mod sim;

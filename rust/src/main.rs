@@ -23,7 +23,7 @@ const USAGE: &str = "\
 philae — sampling-based coflow scheduling (Philae, Jajoo/Hu/Lin 2021)
 
 USAGE:
-  philae <sim|compare|serve|gen-trace> [flags]
+  philae <sim|compare|serve|explain|gen-trace> [flags]
 
 COMMON FLAGS:
   --trace <file>       load a coflow-benchmark trace instead of generating
@@ -47,6 +47,11 @@ COMMON FLAGS:
                        rounds (sim, K>1), or every n δ intervals (serve)
   --chaos <n>          kill-and-restore a random coordinator shard every n
                        rounds (sim, K>1) / δ intervals (serve)  [default: off]
+  --trace-out <file>   flight recorder: write the run's lifecycle events as
+                       Chrome trace-event JSON (open in Perfetto or
+                       chrome://tracing; sim + serve)
+  --metrics-out <file> write the metrics + event-log snapshot (JSON, schema
+                       philae.obs.v1 — see docs/OBSERVABILITY.md)
 
 sim:      --scheduler <name>                            [default: philae]
           --stream     admit coflows from a bounded-memory arrival stream
@@ -62,6 +67,9 @@ serve:    --scheduler <name> --artifacts <dir> --time-scale <x> --delta-ms <n>
           is a flat threshold in δ intervals, `auto` derives it per port
           from the observed report cadence; a checkpoint-dir holding
           shard_<s>.ckpt seals from a previous run is restored on start)
+explain:  philae explain <cid> [sim flags] — re-run the sim with the
+          flight recorder on and print where coflow <cid>'s time went
+          (waiting / sampling / scheduled / starved segments + totals)
 gen-trace: --out <file>
 
 schedulers: philae aalo sebf scf fifo saath philae-lcb philae-ec1
@@ -176,6 +184,46 @@ fn build_trace(flags: &Flags) -> anyhow::Result<Trace> {
     Ok(t)
 }
 
+/// Flight-recorder ring capacity (events per shard) when `--trace-out` /
+/// `--metrics-out` / `explain` arms the observability plane.
+const OBS_RING_DEFAULT: usize = 1 << 16;
+
+/// Events per shard the observability plane should record: the default
+/// ring when either output flag asks for it, 0 (plane off) otherwise.
+fn obs_ring(flags: &Flags) -> usize {
+    if flags.has("trace-out") || flags.has("metrics-out") {
+        OBS_RING_DEFAULT
+    } else {
+        0
+    }
+}
+
+/// Write `--trace-out` (Chrome trace-event JSON, for Perfetto /
+/// chrome://tracing) and `--metrics-out` (`philae.obs.v1` snapshot JSON)
+/// from a run's observability snapshot.
+fn write_obs_outputs(
+    obs: Option<&philae::obs::ObsSnapshot>,
+    flags: &Flags,
+) -> anyhow::Result<()> {
+    if let Some(path) = flags.get_opt("trace-out") {
+        let snap =
+            obs.ok_or_else(|| anyhow::anyhow!("--trace-out: the run recorded no events"))?;
+        std::fs::write(path, snap.chrome_trace_json())?;
+        println!(
+            "  wrote Chrome trace ({} events kept, {} dropped) to {path}",
+            snap.events.len(),
+            snap.dropped,
+        );
+    }
+    if let Some(path) = flags.get_opt("metrics-out") {
+        let snap =
+            obs.ok_or_else(|| anyhow::anyhow!("--metrics-out: the run recorded no events"))?;
+        std::fs::write(path, snap.to_json().to_string())?;
+        println!("  wrote metrics snapshot (philae.obs.v1) to {path}");
+    }
+    Ok(())
+}
+
 /// Run one simulation honoring `--coordinators`/`--shards`: K ≥ 2 routes
 /// through the multi-coordinator cluster, K = 1 through the single path
 /// (the cluster's K=1 is bit-identical, but the direct path skips the
@@ -188,12 +236,13 @@ fn run_sim(
     kind: SchedulerKind,
     cfg: &SchedulerConfig,
     flags: &Flags,
+    obs_events: usize,
 ) -> anyhow::Result<SimResult> {
     let coordinators = flags.get("coordinators", 1usize).map_err(anyhow::Error::msg)?;
     let alloc_shards = flags.get("shards", 1usize).map_err(anyhow::Error::msg)?;
     let checkpoint_every = flags.get("checkpoint-every", 0u64).map_err(anyhow::Error::msg)?;
     let chaos = flags.get("chaos", 0u64).map_err(anyhow::Error::msg)?;
-    let sim_cfg = SimConfig { coordinators, alloc_shards, ..SimConfig::default() };
+    let sim_cfg = SimConfig { coordinators, alloc_shards, obs_events, ..SimConfig::default() };
     if coordinators > 1 {
         let mut cluster = CoordinatorCluster::with_coordinators(coordinators, kind, trace, cfg);
         if checkpoint_every > 0 || chaos > 0 {
@@ -242,7 +291,12 @@ fn run_sim_streaming(
     }
     let coordinators = flags.get("coordinators", 1usize).map_err(anyhow::Error::msg)?;
     let alloc_shards = flags.get("shards", 1usize).map_err(anyhow::Error::msg)?;
-    let sim_cfg = SimConfig { coordinators, alloc_shards, ..SimConfig::default() };
+    let sim_cfg = SimConfig {
+        coordinators,
+        alloc_shards,
+        obs_events: obs_ring(flags),
+        ..SimConfig::default()
+    };
     let loaded;
     let mut spec_stream;
     let mut trace_stream;
@@ -289,6 +343,7 @@ fn run_sim_streaming(
             dl.expired,
         );
     }
+    write_obs_outputs(res.obs.as_ref(), flags)?;
     Ok(())
 }
 
@@ -298,7 +353,19 @@ fn main() -> anyhow::Result<()> {
         eprintln!("{USAGE}");
         std::process::exit(2);
     };
-    let flags = Flags::parse(&args[1..]).map_err(|e| {
+    // `explain` takes its coflow id as a positional argument before the
+    // flags; everything else is pure `--flag` pairs
+    let mut flag_args = &args[1..];
+    let mut explain_cid: Option<u64> = None;
+    if cmd == "explain" {
+        let raw = args
+            .get(1)
+            .ok_or_else(|| anyhow::anyhow!("explain requires a coflow id: philae explain <cid>"))?;
+        explain_cid =
+            Some(raw.parse().map_err(|e| anyhow::anyhow!("explain <cid>: {e}"))?);
+        flag_args = &args[2..];
+    }
+    let flags = Flags::parse(flag_args).map_err(|e| {
         eprintln!("{USAGE}");
         anyhow::anyhow!(e)
     })?;
@@ -314,7 +381,7 @@ fn main() -> anyhow::Result<()> {
                 return run_sim_streaming(kind, &cfg, &flags);
             }
             let t = build_trace(&flags)?;
-            let res = run_sim(&t, kind, &cfg, &flags)?;
+            let res = run_sim(&t, kind, &cfg, &flags, obs_ring(&flags))?;
             println!(
                 "{} (K={}): {} coflows on {} ports | avg CCT {:.3}s | makespan {:.1}s | rate calcs {} | updates {}",
                 res.scheduler,
@@ -348,6 +415,31 @@ fn main() -> anyhow::Result<()> {
                     dl.expired,
                 );
             }
+            write_obs_outputs(res.obs.as_ref(), &flags)?;
+        }
+        "explain" => {
+            let cid = explain_cid.expect("parsed before the flags");
+            let kind: SchedulerKind = flags
+                .get("scheduler", SchedulerKind::Philae)
+                .map_err(anyhow::Error::msg)?;
+            let t = build_trace(&flags)?;
+            anyhow::ensure!(
+                (cid as usize) < t.coflows.len(),
+                "coflow {cid} out of range: trace has {} coflows",
+                t.coflows.len()
+            );
+            let res = run_sim(&t, kind, &cfg, &flags, obs_ring(&flags).max(OBS_RING_DEFAULT))?;
+            let snap = res.obs.as_ref().expect("explain runs with the recorder on");
+            match snap.explain(cid) {
+                Some(tl) => print!("{}", tl.render()),
+                None => anyhow::bail!(
+                    "coflow {cid} has no surviving events (ring dropped {}); \
+                     the flight recorder keeps the newest {} events per shard",
+                    snap.dropped,
+                    OBS_RING_DEFAULT,
+                ),
+            }
+            write_obs_outputs(res.obs.as_ref(), &flags)?;
         }
         "compare" => {
             let t = build_trace(&flags)?;
@@ -357,8 +449,8 @@ fn main() -> anyhow::Result<()> {
             let candidate: SchedulerKind = flags
                 .get("candidate", SchedulerKind::Philae)
                 .map_err(anyhow::Error::msg)?;
-            let base = run_sim(&t, baseline, &cfg, &flags)?;
-            let cand = run_sim(&t, candidate, &cfg, &flags)?;
+            let base = run_sim(&t, baseline, &cfg, &flags, 0)?;
+            let cand = run_sim(&t, candidate, &cfg, &flags, obs_ring(&flags))?;
             let row = SpeedupRow::from_ccts(&base.ccts, &cand.ccts);
             println!(
                 "{} vs {} on {} coflows / {} ports:",
@@ -381,6 +473,8 @@ fn main() -> anyhow::Result<()> {
                     100.0 * base.deadline.goodput_ratio(),
                 );
             }
+            // obs outputs come from the candidate run (the one under study)
+            write_obs_outputs(cand.obs.as_ref(), &flags)?;
         }
         "serve" => {
             let t = build_trace(&flags)?;
@@ -406,6 +500,7 @@ fn main() -> anyhow::Result<()> {
                     Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--agent-miss: {e}"))?,
                 },
                 agent_miss_auto: flags.get_opt("agent-miss") == Some("auto"),
+                obs_events: obs_ring(&flags),
             };
             let report = run_service(&t, &svc)?;
             println!(
@@ -437,11 +532,13 @@ fn main() -> anyhow::Result<()> {
                 );
             }
             println!(
-                "  realloc latency ms: p50 {:.3} | p99 {:.3} | sched bufs recycled {}",
+                "  realloc latency ms: p50 {:.3} | p99 {:.3} | p999 {:.3} | sched bufs recycled {}",
                 report.realloc_p50 * 1e3,
                 report.realloc_p99 * 1e3,
+                report.realloc_p999 * 1e3,
                 report.sched_bufs_reused,
             );
+            write_obs_outputs(report.obs.as_ref(), &flags)?;
             if report.checkpoints_written > 0
                 || report.crashes_injected > 0
                 || report.ports_aged_out > 0

@@ -1,0 +1,1154 @@
+//! Observability plane: metrics registry + flight recorder.
+//!
+//! The paper's argument is about overhead you cannot see in end-of-run CCT
+//! scalars (§3: Aalo pays for size-learning in queue crossings and
+//! coordinator↔agent chatter; Philae pays a pilot-sampling tax up front).
+//! This module makes that time visible without taxing the paths it
+//! observes:
+//!
+//! * [`Registry`] — counters, gauges, and log-bucketed [`LogHistogram`]s
+//!   (HDR-style fixed 64×64 layout, exact p50/p90/p99/p999 tails, O(1)
+//!   record, mergeable across shards/workers). Handles are dense indices,
+//!   so the hot path is a single `Vec` index increment — no locks, no
+//!   hashing.
+//! * [`Recorder`] — a bounded ring buffer of typed lifecycle [`Event`]s
+//!   (arrival, pilot start/estimate, queue transition, migration, lease
+//!   reconciliation, checkpoint/restore, agent age-out/return, admission
+//!   verdict/expiry, retirement), one ring per shard, oldest evicted
+//!   first with a drop counter.
+//! * [`ObsPlane`] — one registry + per-shard rings behind a monotone
+//!   event sequence; the engine and the live service own at most one,
+//!   wrapped in `Option` so the disabled state is a single branch.
+//! * [`ObsSnapshot`] — the merged, time-ordered end-of-run view.
+//!   Serializes to a stable JSON schema (`philae.obs.v1`), to Chrome
+//!   trace-event JSON (load in Perfetto / `chrome://tracing`), to CSV,
+//!   and answers the per-coflow timeline query behind `philae explain`:
+//!   a CCT decomposed into waiting / sampling / scheduled / starved
+//!   segments.
+//!
+//! Everything is in-crate (the offline image has no tracing/metrics
+//! dependencies) and allocation-free on the record path once the rings
+//! exist: `tests/zero_alloc.rs` pins `LogHistogram::record` and
+//! `Recorder::push` at zero heap allocations.
+
+use crate::util::JsonValue;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Sub-buckets per power-of-two group (6 significant bits ⇒ ≤ 1/64
+/// relative quantization error; values below 128 ns are exact).
+const SUB: usize = 64;
+/// Power-of-two groups (group 0 is the exact 0..64 range).
+const GROUPS: usize = 64;
+
+/// Log-bucketed latency histogram over `u64` nanoseconds.
+///
+/// Layout: group 0 holds values `0..64` exactly; group `g ≥ 1` holds
+/// values whose most significant bit is `g + 5`, split into 64 linear
+/// sub-buckets — the classic HDR shape with a fixed 64×64 table (32 KiB),
+/// so `record` is two shifts and an add, and two histograms merge by
+/// element-wise addition. Percentiles are nearest-rank over the bucket
+/// counts, clamped to the recorded min/max so p0/p100 are exact.
+#[derive(Clone)]
+pub struct LogHistogram {
+    counts: Box<[u64]>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for LogHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LogHistogram")
+            .field("count", &self.count)
+            .field("min", &self.min)
+            .field("max", &self.max)
+            .field("p50", &self.percentile(0.50))
+            .field("p99", &self.percentile(0.99))
+            .finish()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram {
+            counts: vec![0u64; SUB * GROUPS].into_boxed_slice(),
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Bucket index of `v`: group = position of the highest set bit,
+    /// sub-bucket = the next 6 bits.
+    #[inline]
+    fn index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros(); // ≥ 6 here
+        let g = (msb - 5) as usize;
+        let sub = ((v >> (msb - 6)) & 63) as usize;
+        g * SUB + sub
+    }
+
+    /// Lower edge of bucket `i` (the reported representative value).
+    #[inline]
+    fn bucket_value(i: usize) -> u64 {
+        let (g, sub) = (i / SUB, (i % SUB) as u64);
+        if g == 0 {
+            sub
+        } else {
+            (SUB as u64 + sub) << (g - 1)
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Record a duration in seconds (stored as whole nanoseconds).
+    #[inline]
+    pub fn record_secs(&mut self, s: f64) {
+        self.record((s.max(0.0) * 1e9).round() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Mean of recorded values (ns); 0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Nearest-rank percentile, `q ∈ [0, 1]`. Exact for values < 128;
+    /// within 1/64 relative error above. p0 and p100 return the exact
+    /// recorded min/max.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        if rank == self.count {
+            return self.max;
+        }
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Self::bucket_value(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Percentile converted back to seconds.
+    pub fn percentile_secs(&self, q: f64) -> f64 {
+        self.percentile(q) as f64 / 1e9
+    }
+
+    /// Element-wise merge (shard/worker → global roll-up).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    fn to_json(&self) -> JsonValue {
+        let mut o = BTreeMap::new();
+        o.insert("count".into(), JsonValue::Number(self.count as f64));
+        o.insert(
+            "min_ns".into(),
+            JsonValue::Number(if self.count == 0 { 0.0 } else { self.min as f64 }),
+        );
+        o.insert("max_ns".into(), JsonValue::Number(self.max as f64));
+        o.insert("mean_ns".into(), JsonValue::Number(self.mean()));
+        for (name, q) in [("p50", 0.50), ("p90", 0.90), ("p99", 0.99), ("p999", 0.999)] {
+            o.insert(format!("{name}_ns"), JsonValue::Number(self.percentile(q) as f64));
+        }
+        JsonValue::Object(o)
+    }
+}
+
+/// Gauge: last written value plus the running maximum.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Gauge {
+    pub last: f64,
+    pub max: f64,
+    /// Whether the gauge was ever written (distinguishes "0" from "unset").
+    pub set: bool,
+}
+
+/// Dense handle into a [`Registry`] counter (O(1) hot-path increment).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterId(usize);
+/// Dense handle into a [`Registry`] gauge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GaugeId(usize);
+/// Dense handle into a [`Registry`] histogram.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistId(usize);
+
+/// Per-shard/worker metrics registry. Handles are resolved once (by name,
+/// at setup) and the hot path indexes a `Vec` — no locks, no hashing.
+/// Shard registries merge by metric name at snapshot time.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    counters: Vec<(String, u64)>,
+    gauges: Vec<(String, Gauge)>,
+    hists: Vec<(String, LogHistogram)>,
+}
+
+impl Registry {
+    /// Find-or-create a counter handle.
+    pub fn counter(&mut self, name: &str) -> CounterId {
+        if let Some(i) = self.counters.iter().position(|(n, _)| n == name) {
+            return CounterId(i);
+        }
+        self.counters.push((name.to_string(), 0));
+        CounterId(self.counters.len() - 1)
+    }
+
+    #[inline]
+    pub fn inc(&mut self, id: CounterId, by: u64) {
+        self.counters[id.0].1 += by;
+    }
+
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    }
+
+    /// Find-or-create a gauge handle.
+    pub fn gauge(&mut self, name: &str) -> GaugeId {
+        if let Some(i) = self.gauges.iter().position(|(n, _)| n == name) {
+            return GaugeId(i);
+        }
+        self.gauges.push((name.to_string(), Gauge::default()));
+        GaugeId(self.gauges.len() - 1)
+    }
+
+    #[inline]
+    pub fn set_gauge(&mut self, id: GaugeId, v: f64) {
+        let g = &mut self.gauges[id.0].1;
+        g.last = v;
+        if !g.set || v > g.max {
+            g.max = v;
+        }
+        g.set = true;
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<Gauge> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|(_, g)| *g)
+    }
+
+    /// Find-or-create a histogram handle.
+    pub fn hist(&mut self, name: &str) -> HistId {
+        if let Some(i) = self.hists.iter().position(|(n, _)| n == name) {
+            return HistId(i);
+        }
+        self.hists.push((name.to_string(), LogHistogram::new()));
+        HistId(self.hists.len() - 1)
+    }
+
+    #[inline]
+    pub fn observe(&mut self, id: HistId, ns: u64) {
+        self.hists[id.0].1.record(ns);
+    }
+
+    #[inline]
+    pub fn observe_secs(&mut self, id: HistId, s: f64) {
+        self.hists[id.0].1.record_secs(s);
+    }
+
+    pub fn hist_named(&self, name: &str) -> Option<&LogHistogram> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    /// Merge another registry by metric name: counters add, gauges keep
+    /// the other's last write and the max of maxima, histograms merge
+    /// bucket-wise.
+    pub fn merge(&mut self, other: &Registry) {
+        for (name, v) in &other.counters {
+            let id = self.counter(name);
+            self.inc(id, *v);
+        }
+        for (name, g) in &other.gauges {
+            let id = self.gauge(name);
+            let mine = &mut self.gauges[id.0].1;
+            if g.set {
+                mine.last = g.last;
+                if !mine.set || g.max > mine.max {
+                    mine.max = g.max;
+                }
+                mine.set = true;
+            }
+        }
+        for (name, h) in &other.hists {
+            let id = self.hist(name);
+            self.hists[id.0].1.merge(h);
+        }
+    }
+
+    pub fn to_json(&self) -> JsonValue {
+        let mut counters = BTreeMap::new();
+        for (n, v) in &self.counters {
+            counters.insert(n.clone(), JsonValue::Number(*v as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (n, g) in &self.gauges {
+            let mut o = BTreeMap::new();
+            o.insert("last".into(), JsonValue::Number(g.last));
+            o.insert("max".into(), JsonValue::Number(g.max));
+            gauges.insert(n.clone(), JsonValue::Object(o));
+        }
+        let mut hists = BTreeMap::new();
+        for (n, h) in &self.hists {
+            hists.insert(n.clone(), h.to_json());
+        }
+        let mut root = BTreeMap::new();
+        root.insert("counters".into(), JsonValue::Object(counters));
+        root.insert("gauges".into(), JsonValue::Object(gauges));
+        root.insert("histograms".into(), JsonValue::Object(hists));
+        JsonValue::Object(root)
+    }
+}
+
+/// `Event::coflow` value for events not tied to a coflow.
+pub const NO_COFLOW: u64 = u64::MAX;
+
+/// Typed lifecycle events — the flight recorder's vocabulary. The `a`/`b`
+/// payload words are kind-specific (see `docs/OBSERVABILITY.md`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Coflow admitted. `a` = flow count.
+    Arrival,
+    /// Pilot sampling began (Philae). `a` = pilot flow count.
+    PilotStart,
+    /// Size estimate produced from completed samples. `a` = estimated bytes.
+    Estimate,
+    /// Coflow phase changed. `a` = new phase (0 piloting, 1 running, 2 done).
+    Phase,
+    /// Priority queue / lane changed (Aalo MLFQ, dcoflow lanes). `a` = new queue.
+    QueueChange,
+    /// Coflow started receiving rate (allocated > 0 after having none).
+    Scheduled,
+    /// Coflow stopped receiving rate while unfinished (preempted/backlogged).
+    Starved,
+    /// One flow physically finished. `a` = flow seq, `b` = bytes.
+    FlowComplete,
+    /// Last flow finished; CCT is closed. `b` = total bytes.
+    CoflowComplete,
+    /// Streaming retirement reclaimed the coflow's heavy state.
+    Retire,
+    /// Cluster moved the coflow between shards. `a` = from, `b` = to.
+    Migration,
+    /// Demand-weighted lease reconciliation ran. `a` = shard count.
+    LeaseReconcile,
+    /// Scheduler checkpoint sealed. `a` = checkpoint ordinal, `b` = wall ns.
+    Checkpoint,
+    /// Scheduler killed and restored from a checkpoint. `a` = restore
+    /// ordinal, `b` = wall ns spent restoring.
+    Restore,
+    /// Agent watchdog masked a silent port out of the plan. `a` = port.
+    AgentAgeOut,
+    /// A previously aged-out port reported again and rejoined. `a` = port.
+    AgentReturn,
+    /// Deadline admission decided. `a` = admitted delta, `b` = rejected delta.
+    AdmissionVerdict,
+    /// Admission certificates expired. `a` = expired delta.
+    AdmissionExpiry,
+}
+
+impl EventKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EventKind::Arrival => "arrival",
+            EventKind::PilotStart => "pilot_start",
+            EventKind::Estimate => "estimate",
+            EventKind::Phase => "phase",
+            EventKind::QueueChange => "queue_change",
+            EventKind::Scheduled => "scheduled",
+            EventKind::Starved => "starved",
+            EventKind::FlowComplete => "flow_complete",
+            EventKind::CoflowComplete => "coflow_complete",
+            EventKind::Retire => "retire",
+            EventKind::Migration => "migration",
+            EventKind::LeaseReconcile => "lease_reconcile",
+            EventKind::Checkpoint => "checkpoint",
+            EventKind::Restore => "restore",
+            EventKind::AgentAgeOut => "agent_age_out",
+            EventKind::AgentReturn => "agent_return",
+            EventKind::AdmissionVerdict => "admission_verdict",
+            EventKind::AdmissionExpiry => "admission_expiry",
+        }
+    }
+}
+
+/// One recorded lifecycle event. Fixed-size and `Copy`, so the ring
+/// buffer is a flat array and recording is a store.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Simulated time (seconds). In the live service this is the scaled
+    /// service clock (`sim_now`).
+    pub t: f64,
+    /// Wall-clock nanoseconds since plane creation (0 in pure simulation).
+    pub wall_ns: u64,
+    /// Monotone sequence across the whole plane — the total order for
+    /// same-instant events.
+    pub seq: u64,
+    /// Emitting shard (0 on single-coordinator paths).
+    pub shard: u32,
+    pub kind: EventKind,
+    /// Subject coflow id, or [`NO_COFLOW`].
+    pub coflow: u64,
+    pub a: u64,
+    pub b: u64,
+}
+
+/// Bounded ring of [`Event`]s: oldest entries are overwritten once the
+/// ring is full, with an eviction counter so a snapshot is honest about
+/// what it lost.
+#[derive(Debug, Clone)]
+pub struct Recorder {
+    buf: Vec<Event>,
+    cap: usize,
+    head: usize,
+    dropped: u64,
+}
+
+impl Recorder {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Recorder { buf: Vec::with_capacity(cap), cap, head: 0, dropped: 0 }
+    }
+
+    #[inline]
+    pub fn push(&mut self, e: Event) {
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+        } else {
+            self.buf[self.head] = e;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Append the retained events, oldest first.
+    pub fn extend_into(&self, out: &mut Vec<Event>) {
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+    }
+}
+
+/// Events buffered by a coordinator frontend between engine drains:
+/// `(shard, kind, coflow, a, b)` — the engine stamps time and sequence.
+pub type PendingEvent = (u32, EventKind, u64, u64, u64);
+
+/// Event consumer abstraction. [`NullSink`] is the disabled plane: every
+/// call compiles to nothing, and `enabled()` lets emitters skip payload
+/// construction entirely.
+pub trait Sink {
+    fn emit(&mut self, e: &Event);
+    fn enabled(&self) -> bool {
+        true
+    }
+}
+
+/// The no-op sink: observability compiled away.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl Sink for NullSink {
+    #[inline]
+    fn emit(&mut self, _e: &Event) {}
+
+    #[inline]
+    fn enabled(&self) -> bool {
+        false
+    }
+}
+
+impl Sink for Recorder {
+    #[inline]
+    fn emit(&mut self, e: &Event) {
+        self.push(*e);
+    }
+}
+
+/// One registry + per-shard flight-recorder rings. Owned (at most once)
+/// by the sim engine or the live coordinator; `Option<ObsPlane>` is the
+/// on/off switch, so the disabled path costs one branch.
+#[derive(Debug, Clone)]
+pub struct ObsPlane {
+    pub reg: Registry,
+    rings: Vec<Recorder>,
+    ring_cap: usize,
+    seq: u64,
+}
+
+impl ObsPlane {
+    /// `ring_cap` bounds each shard's ring (events beyond it evict the
+    /// oldest).
+    pub fn new(ring_cap: usize) -> Self {
+        ObsPlane {
+            reg: Registry::default(),
+            rings: vec![Recorder::new(ring_cap)],
+            ring_cap: ring_cap.max(1),
+            seq: 0,
+        }
+    }
+
+    /// Record one event; rings grow lazily per shard (amortized — the
+    /// steady-state path is a ring store).
+    #[inline]
+    pub fn emit(
+        &mut self,
+        t: f64,
+        wall_ns: u64,
+        shard: u32,
+        kind: EventKind,
+        coflow: u64,
+        a: u64,
+        b: u64,
+    ) {
+        while self.rings.len() <= shard as usize {
+            self.rings.push(Recorder::new(self.ring_cap));
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        self.rings[shard as usize].push(Event { t, wall_ns, seq, shard, kind, coflow, a, b });
+    }
+
+    /// Total events ever recorded (including later-evicted ones).
+    pub fn events_recorded(&self) -> u64 {
+        self.seq
+    }
+
+    /// Merge the shard rings into one time-ordered snapshot.
+    pub fn snapshot(self) -> ObsSnapshot {
+        let mut events: Vec<Event> = Vec::new();
+        let mut dropped = 0u64;
+        for r in &self.rings {
+            r.extend_into(&mut events);
+            dropped += r.dropped();
+        }
+        events.sort_by(|x, y| x.t.total_cmp(&y.t).then(x.seq.cmp(&y.seq)));
+        ObsSnapshot { registry: self.reg, events, dropped, recorded: self.seq }
+    }
+}
+
+/// A CCT decomposed into where the time went.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegmentKind {
+    /// Admitted, no rate yet, not sampling.
+    Waiting,
+    /// Pilot flows probing the coflow's size (Philae's learning tax).
+    Sampling,
+    /// Holding a non-zero aggregate rate.
+    Scheduled,
+    /// Lost all rate while unfinished (preempted / backlogged / masked).
+    Starved,
+}
+
+impl SegmentKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SegmentKind::Waiting => "waiting",
+            SegmentKind::Sampling => "sampling",
+            SegmentKind::Scheduled => "scheduled",
+            SegmentKind::Starved => "starved",
+        }
+    }
+}
+
+/// One contiguous stretch of a coflow's lifetime in a single state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segment {
+    pub kind: SegmentKind,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// The `philae explain <cid>` answer: lifecycle segments of one coflow.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoflowTimeline {
+    pub coflow: u64,
+    pub arrival: f64,
+    pub finished: Option<f64>,
+    pub segments: Vec<Segment>,
+}
+
+impl CoflowTimeline {
+    /// Total seconds spent in `kind`.
+    pub fn total(&self, kind: SegmentKind) -> f64 {
+        self.segments
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    /// Human-readable per-coflow report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        match self.finished {
+            Some(f) => {
+                let _ = writeln!(
+                    out,
+                    "coflow {}: arrival t={:.6}s  completion t={:.6}s  cct {:.6}s",
+                    self.coflow,
+                    self.arrival,
+                    f,
+                    f - self.arrival
+                );
+            }
+            None => {
+                let _ = writeln!(
+                    out,
+                    "coflow {}: arrival t={:.6}s  (unfinished)",
+                    self.coflow, self.arrival
+                );
+            }
+        }
+        let span: f64 = self.segments.iter().map(|s| s.end - s.start).sum();
+        for s in &self.segments {
+            let dur = s.end - s.start;
+            let pct = if span > 0.0 { 100.0 * dur / span } else { 0.0 };
+            let _ = writeln!(
+                out,
+                "  {:>12.6}s – {:<12.6}s  {:<9}  ({:.6}s, {:.1}%)",
+                s.start,
+                s.end,
+                s.kind.as_str(),
+                dur,
+                pct
+            );
+        }
+        let _ = writeln!(
+            out,
+            "  totals: waiting {:.6}s  sampling {:.6}s  scheduled {:.6}s  starved {:.6}s",
+            self.total(SegmentKind::Waiting),
+            self.total(SegmentKind::Sampling),
+            self.total(SegmentKind::Scheduled),
+            self.total(SegmentKind::Starved),
+        );
+        out
+    }
+}
+
+/// Merged end-of-run observability state: the roll-up registry plus the
+/// time-ordered surviving events.
+#[derive(Debug, Clone)]
+pub struct ObsSnapshot {
+    pub registry: Registry,
+    /// Time-ordered (then sequence-ordered) events that survived the rings.
+    pub events: Vec<Event>,
+    /// Events evicted by ring wraparound.
+    pub dropped: u64,
+    /// Events ever recorded (`events.len() + dropped`).
+    pub recorded: u64,
+}
+
+impl ObsSnapshot {
+    /// Stable JSON schema (`philae.obs.v1`): registry + event log.
+    pub fn to_json(&self) -> JsonValue {
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), JsonValue::String("philae.obs.v1".into()));
+        root.insert("registry".into(), self.registry.to_json());
+        let mut meta = BTreeMap::new();
+        meta.insert("recorded".into(), JsonValue::Number(self.recorded as f64));
+        meta.insert("kept".into(), JsonValue::Number(self.events.len() as f64));
+        meta.insert("dropped".into(), JsonValue::Number(self.dropped as f64));
+        root.insert("events".into(), JsonValue::Object(meta));
+        let log: Vec<JsonValue> = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut o = BTreeMap::new();
+                o.insert("t".into(), JsonValue::Number(e.t));
+                o.insert("wall_ns".into(), JsonValue::Number(e.wall_ns as f64));
+                o.insert("seq".into(), JsonValue::Number(e.seq as f64));
+                o.insert("shard".into(), JsonValue::Number(e.shard as f64));
+                o.insert("kind".into(), JsonValue::String(e.kind.as_str().into()));
+                if e.coflow != NO_COFLOW {
+                    o.insert("coflow".into(), JsonValue::Number(e.coflow as f64));
+                }
+                o.insert("a".into(), JsonValue::Number(e.a as f64));
+                o.insert("b".into(), JsonValue::Number(e.b as f64));
+                JsonValue::Object(o)
+            })
+            .collect();
+        root.insert("event_log".into(), JsonValue::Array(log));
+        JsonValue::Object(root)
+    }
+
+    /// CSV export: one event per line, header included.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("seq,t,wall_ns,shard,kind,coflow,a,b\n");
+        for e in &self.events {
+            let cid = if e.coflow == NO_COFLOW {
+                String::new()
+            } else {
+                e.coflow.to_string()
+            };
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{},{},{},{}",
+                e.seq,
+                e.t,
+                e.wall_ns,
+                e.shard,
+                e.kind.as_str(),
+                cid,
+                e.a,
+                e.b
+            );
+        }
+        out
+    }
+
+    /// Per-coflow timelines for every coflow with events in the log.
+    pub fn timelines(&self) -> Vec<CoflowTimeline> {
+        let mut ids: Vec<u64> = self
+            .events
+            .iter()
+            .filter(|e| e.coflow != NO_COFLOW)
+            .map(|e| e.coflow)
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.into_iter().filter_map(|cid| self.explain(cid)).collect()
+    }
+
+    /// The `philae explain <cid>` query: replay the coflow's events into
+    /// waiting / sampling / scheduled / starved segments. `None` when the
+    /// log holds no events for `cid` (e.g. evicted by ring wraparound).
+    pub fn explain(&self, cid: u64) -> Option<CoflowTimeline> {
+        let mut sampling = false;
+        // None until the first Scheduled/Starved verdict lands.
+        let mut rate: Option<bool> = None;
+        let label = |sampling: bool, rate: Option<bool>| -> SegmentKind {
+            match (rate, sampling) {
+                (Some(true), _) => SegmentKind::Scheduled,
+                (_, true) => SegmentKind::Sampling,
+                (Some(false), _) => SegmentKind::Starved,
+                _ => SegmentKind::Waiting,
+            }
+        };
+        let mut tl: Option<CoflowTimeline> = None;
+        let mut seg_start = 0.0f64;
+        let mut cur = SegmentKind::Waiting;
+        for e in self.events.iter().filter(|e| e.coflow == cid) {
+            if tl.is_none() {
+                // the first event opens the timeline (normally Arrival)
+                tl = Some(CoflowTimeline {
+                    coflow: cid,
+                    arrival: e.t,
+                    finished: None,
+                    segments: Vec::new(),
+                });
+                seg_start = e.t;
+            }
+            match e.kind {
+                EventKind::PilotStart => sampling = true,
+                EventKind::Estimate => sampling = false,
+                EventKind::Phase => sampling = e.a == 0,
+                EventKind::Scheduled => rate = Some(true),
+                EventKind::Starved => rate = Some(false),
+                EventKind::CoflowComplete => {
+                    let tl = tl.as_mut().expect("timeline opened above");
+                    if e.t > seg_start {
+                        tl.segments.push(Segment { kind: cur, start: seg_start, end: e.t });
+                    }
+                    tl.finished = Some(e.t);
+                    return Some(tl.clone());
+                }
+                _ => {}
+            }
+            let next = label(sampling, rate);
+            if next != cur {
+                let tl = tl.as_mut().expect("timeline opened above");
+                if e.t > seg_start {
+                    tl.segments.push(Segment { kind: cur, start: seg_start, end: e.t });
+                }
+                seg_start = e.t;
+                cur = next;
+            }
+        }
+        // unfinished coflow: close the open segment at the last event time
+        let mut tl = tl?;
+        if let Some(last) = self.events.iter().rev().find(|e| e.coflow != NO_COFLOW || true) {
+            if last.t > seg_start {
+                tl.segments.push(Segment { kind: cur, start: seg_start, end: last.t });
+            }
+        }
+        Some(tl)
+    }
+
+    /// Chrome trace-event JSON (load in Perfetto or `chrome://tracing`):
+    /// per-coflow lifecycle segments as complete spans on pid 1 (tid =
+    /// coflow id), coordination-plane events (migration, reconciliation,
+    /// checkpoint/restore, agent watchdog, admission) on pid 0 (tid =
+    /// shard). Timestamps are sim-time microseconds.
+    pub fn chrome_trace_json(&self) -> String {
+        let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+        let mut first = true;
+        let mut push = |out: &mut String, first: &mut bool, ev: String| {
+            if !*first {
+                out.push(',');
+            }
+            *first = false;
+            out.push_str(&ev);
+        };
+        for tl in self.timelines() {
+            for s in &tl.segments {
+                let dur_us = ((s.end - s.start) * 1e6).max(0.001);
+                push(
+                    &mut out,
+                    &mut first,
+                    format!(
+                        "{{\"name\":\"{}\",\"cat\":\"coflow\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{},\"args\":{{\"coflow\":{}}}}}",
+                        s.kind.as_str(),
+                        s.start * 1e6,
+                        dur_us,
+                        tl.coflow,
+                        tl.coflow
+                    ),
+                );
+            }
+        }
+        for e in &self.events {
+            let span = matches!(
+                e.kind,
+                EventKind::Migration | EventKind::Checkpoint | EventKind::Restore
+            );
+            let instant = matches!(
+                e.kind,
+                EventKind::LeaseReconcile
+                    | EventKind::AgentAgeOut
+                    | EventKind::AgentReturn
+                    | EventKind::AdmissionVerdict
+                    | EventKind::AdmissionExpiry
+            );
+            if span {
+                // wall duration (b, ns) when measured; 1 µs floor so the
+                // span stays visible at sim-instant resolution
+                let dur_us = (e.b as f64 / 1e3).max(1.0);
+                push(
+                    &mut out,
+                    &mut first,
+                    format!(
+                        "{{\"name\":\"{}\",\"cat\":\"coordination\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":0,\"tid\":{},\"args\":{{\"coflow\":{},\"a\":{},\"b\":{}}}}}",
+                        e.kind.as_str(),
+                        e.t * 1e6,
+                        dur_us,
+                        e.shard,
+                        e.coflow as i64,
+                        e.a,
+                        e.b
+                    ),
+                );
+            } else if instant {
+                push(
+                    &mut out,
+                    &mut first,
+                    format!(
+                        "{{\"name\":\"{}\",\"cat\":\"coordination\",\"ph\":\"i\",\"s\":\"g\",\"ts\":{},\"pid\":0,\"tid\":{},\"args\":{{\"a\":{},\"b\":{}}}}}",
+                        e.kind.as_str(),
+                        e.t * 1e6,
+                        e.shard,
+                        e.a,
+                        e.b
+                    ),
+                );
+            }
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_small_values_are_exact() {
+        let mut h = LogHistogram::new();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        // nearest-rank on 100 samples of 1..=100: rank = ceil(q·100)
+        assert_eq!(h.percentile(0.50), 50);
+        assert_eq!(h.percentile(0.90), 90);
+        assert_eq!(h.percentile(0.99), 99);
+        assert_eq!(h.percentile(0.999), 100);
+        assert_eq!(h.percentile(0.0), 1);
+        assert_eq!(h.percentile(1.0), 100);
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_large_values_within_relative_error() {
+        let mut h = LogHistogram::new();
+        let vals: [u64; 5] = [1_000, 50_000, 1_000_000, 123_456_789, 9_876_543_210];
+        for &v in &vals {
+            h.record(v);
+        }
+        for (i, &v) in vals.iter().enumerate() {
+            let q = (i as f64 + 1.0) / vals.len() as f64 - 1e-9;
+            let got = h.percentile(q);
+            let err = (got as f64 - v as f64).abs() / v as f64;
+            assert!(err <= 1.0 / 64.0, "value {v}: got {got} (rel err {err})");
+        }
+        // extremes exact
+        assert_eq!(h.percentile(0.0), 1_000);
+        assert_eq!(h.percentile(1.0), 9_876_543_210);
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined_recording() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut all = LogHistogram::new();
+        for v in 0..500u64 {
+            let x = v * v * 31 + 7;
+            if v % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+            all.record(x);
+        }
+        a.merge(&b);
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            assert_eq!(a.percentile(q), all.percentile(q), "q={q}");
+        }
+        assert_eq!(a.count(), all.count());
+    }
+
+    #[test]
+    fn histogram_record_secs_roundtrip() {
+        let mut h = LogHistogram::new();
+        h.record_secs(0.000_25); // 250 µs
+        let p = h.percentile_secs(0.5);
+        assert!((p - 0.000_25).abs() / 0.000_25 <= 1.0 / 64.0, "got {p}");
+    }
+
+    #[test]
+    fn ring_wraparound_keeps_newest() {
+        let mut r = Recorder::new(4);
+        for i in 0..6u64 {
+            r.push(Event {
+                t: i as f64,
+                wall_ns: 0,
+                seq: i,
+                shard: 0,
+                kind: EventKind::Arrival,
+                coflow: i,
+                a: 0,
+                b: 0,
+            });
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 2);
+        let mut out = Vec::new();
+        r.extend_into(&mut out);
+        let seqs: Vec<u64> = out.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![2, 3, 4, 5], "oldest evicted, order preserved");
+    }
+
+    #[test]
+    fn registry_merge_by_name() {
+        let mut a = Registry::default();
+        let c = a.counter("x");
+        a.inc(c, 3);
+        let g = a.gauge("depth");
+        a.set_gauge(g, 2.0);
+        a.set_gauge(g, 1.0);
+        let mut b = Registry::default();
+        let c2 = b.counter("x");
+        b.inc(c2, 4);
+        let c3 = b.counter("y");
+        b.inc(c3, 1);
+        let g2 = b.gauge("depth");
+        b.set_gauge(g2, 5.0);
+        a.merge(&b);
+        assert_eq!(a.counter_value("x"), 7);
+        assert_eq!(a.counter_value("y"), 1);
+        let g = a.gauge_value("depth").unwrap();
+        assert_eq!(g.last, 5.0);
+        assert_eq!(g.max, 5.0);
+    }
+
+    #[test]
+    fn null_sink_is_disabled() {
+        let mut s = NullSink;
+        assert!(!s.enabled());
+        s.emit(&Event {
+            t: 0.0,
+            wall_ns: 0,
+            seq: 0,
+            shard: 0,
+            kind: EventKind::Arrival,
+            coflow: 0,
+            a: 0,
+            b: 0,
+        });
+        let mut r = Recorder::new(2);
+        assert!(Sink::enabled(&r));
+        r.emit(&Event {
+            t: 0.0,
+            wall_ns: 0,
+            seq: 0,
+            shard: 0,
+            kind: EventKind::Arrival,
+            coflow: 0,
+            a: 0,
+            b: 0,
+        });
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn plane_snapshot_orders_across_shards() {
+        let mut p = ObsPlane::new(16);
+        p.emit(2.0, 0, 1, EventKind::Migration, 7, 1, 0);
+        p.emit(1.0, 0, 0, EventKind::Arrival, 7, 1, 0);
+        p.emit(2.0, 0, 0, EventKind::LeaseReconcile, NO_COFLOW, 2, 0);
+        let snap = p.snapshot();
+        assert_eq!(snap.recorded, 3);
+        assert_eq!(snap.events.len(), 3);
+        assert_eq!(snap.events[0].kind, EventKind::Arrival);
+        // same t: plane sequence breaks the tie (Migration was emitted first)
+        assert_eq!(snap.events[1].kind, EventKind::Migration);
+        assert_eq!(snap.events[2].kind, EventKind::LeaseReconcile);
+    }
+
+    fn ev(t: f64, kind: EventKind, coflow: u64, a: u64) -> Event {
+        Event { t, wall_ns: 0, seq: 0, shard: 0, kind, coflow, a, b: 0 }
+    }
+
+    #[test]
+    fn explain_decomposes_lifecycle() {
+        let mut events = vec![
+            ev(1.0, EventKind::Arrival, 5, 4),
+            ev(1.0, EventKind::PilotStart, 5, 1),
+            ev(2.0, EventKind::Estimate, 5, 1000),
+            ev(2.0, EventKind::Phase, 5, 1),
+            ev(2.0, EventKind::Scheduled, 5, 0),
+            ev(3.0, EventKind::Starved, 5, 0),
+            ev(4.0, EventKind::Scheduled, 5, 0),
+            ev(5.0, EventKind::CoflowComplete, 5, 0),
+        ];
+        for (i, e) in events.iter_mut().enumerate() {
+            e.seq = i as u64;
+        }
+        let snap = ObsSnapshot { registry: Registry::default(), events, dropped: 0, recorded: 8 };
+        let tl = snap.explain(5).expect("coflow 5 has events");
+        assert_eq!(tl.arrival, 1.0);
+        assert_eq!(tl.finished, Some(5.0));
+        let kinds: Vec<SegmentKind> = tl.segments.iter().map(|s| s.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                SegmentKind::Sampling,
+                SegmentKind::Scheduled,
+                SegmentKind::Starved,
+                SegmentKind::Scheduled
+            ]
+        );
+        assert!((tl.total(SegmentKind::Sampling) - 1.0).abs() < 1e-12);
+        assert!((tl.total(SegmentKind::Scheduled) - 2.0).abs() < 1e-12);
+        assert!((tl.total(SegmentKind::Starved) - 1.0).abs() < 1e-12);
+        assert!(snap.explain(99).is_none());
+        // the rendered report mentions every state with its share
+        let text = tl.render();
+        assert!(text.contains("cct 4.0"));
+        assert!(text.contains("sampling"));
+        assert!(text.contains("starved"));
+    }
+
+    #[test]
+    fn snapshot_json_is_parseable_and_stable() {
+        let mut p = ObsPlane::new(8);
+        let c = p.reg.counter("sim.rate_calcs");
+        p.reg.inc(c, 42);
+        let h = p.reg.hist("calc_ns");
+        p.reg.observe(h, 100);
+        p.emit(0.5, 0, 0, EventKind::Arrival, 1, 2, 0);
+        let snap = p.snapshot();
+        let json = snap.to_json().to_string();
+        let v = JsonValue::parse(&json).expect("self-produced JSON parses");
+        assert_eq!(
+            v.get("schema").and_then(|s| s.as_str()),
+            Some("philae.obs.v1")
+        );
+        let reg = v.get("registry").expect("registry");
+        assert_eq!(
+            reg.get("counters").and_then(|c| c.get("sim.rate_calcs")).and_then(|n| n.as_f64()),
+            Some(42.0)
+        );
+        assert_eq!(
+            v.get("events").and_then(|e| e.get("kept")).and_then(|n| n.as_f64()),
+            Some(1.0)
+        );
+        // CSV + chrome exports stay well-formed
+        let csv = snap.to_csv();
+        assert!(csv.starts_with("seq,t,wall_ns,shard,kind,coflow,a,b\n"));
+        assert_eq!(csv.lines().count(), 2);
+        let chrome = snap.chrome_trace_json();
+        assert!(JsonValue::parse(&chrome).is_ok(), "chrome trace must be valid JSON");
+    }
+}

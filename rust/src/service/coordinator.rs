@@ -96,6 +96,7 @@ use crate::coordinator::{
 };
 use crate::fabric::{Fabric, PortLoad};
 use crate::metrics::{DeadlineStats, IntervalStats, RunningStat};
+use crate::obs::{self, EventKind, ObsPlane, ObsSnapshot};
 use crate::runtime::evloop::{recycler, BufferPool, EventLoop, RecycleBin, RecycleSender, Wake};
 use crate::runtime::{BatchFeatures, Engine};
 use crate::trace::{Trace, TraceRecord};
@@ -133,25 +134,10 @@ const AUTO_MISS_FLOOR: u64 = 8;
 /// EWMA smoothing for per-port inter-report gaps.
 const AUTO_MISS_EWMA_ALPHA: f64 = 0.25;
 
-/// Cap on per-reallocation latency samples kept for the report's
-/// percentiles (soaks run millions of reallocations; 2^18 samples bound
-/// memory while keeping the tail estimate stable).
-const CALC_SAMPLE_CAP: usize = 1 << 18;
-
 /// Miss threshold (δ intervals) derived from a port's EWMA inter-report
 /// gap: `max(⌈AUTO_MISS_MULT × ewma⌉, AUTO_MISS_FLOOR)`.
 fn auto_miss_threshold(gap_ewma: f64) -> u64 {
     ((AUTO_MISS_MULT * gap_ewma).ceil() as u64).max(AUTO_MISS_FLOOR)
-}
-
-/// `q`-th quantile (0..=1) of an ascending-sorted sample, by
-/// nearest-rank; 0 on an empty sample.
-fn percentile(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
 }
 
 /// Everything the coordinator thread receives, merged onto one channel
@@ -213,6 +199,10 @@ pub struct ServiceConfig {
     /// starved ports are legitimately quiet and stay unmasked. Ignored
     /// when [`ServiceConfig::agent_miss_intervals`] is non-zero.
     pub agent_miss_auto: bool,
+    /// Flight-recorder ring capacity per shard (events; 0 disables the
+    /// observability plane entirely — the report's `obs` stays `None` and
+    /// no event payloads are built). See `obs::ObsPlane`.
+    pub obs_events: usize,
 }
 
 impl Default for ServiceConfig {
@@ -231,6 +221,7 @@ impl Default for ServiceConfig {
             checkpoint_dir: None,
             agent_miss_intervals: 0,
             agent_miss_auto: false,
+            obs_events: 0,
         }
     }
 }
@@ -282,9 +273,22 @@ pub struct ServiceReport {
     pub realloc_p50: f64,
     /// 99th-percentile per-reallocation wall latency (seconds).
     pub realloc_p99: f64,
+    /// 99.9th-percentile per-reallocation wall latency (seconds). The
+    /// percentiles come from an uncapped log-bucketed histogram
+    /// (`obs::LogHistogram`), so the tail is exact-rank over *every*
+    /// reallocation of the run, not a capped sample.
+    pub realloc_p999: f64,
     /// Schedule buffers served from the recycled free-list rather than
     /// freshly allocated (the event-loop runtime's boomerang pool).
     pub sched_bufs_reused: u64,
+    /// Registration record buffers the soak feeder served from its
+    /// recycled pool instead of allocating fresh (see [`run_soak`];
+    /// always 0 for [`run_service`], whose replayer registers at trace
+    /// cadence where allocation is off the hot path).
+    pub register_bufs_reused: u64,
+    /// Metrics + flight-recorder snapshot when
+    /// [`ServiceConfig::obs_events`] > 0.
+    pub obs: Option<ObsSnapshot>,
 }
 
 impl ServiceReport {
@@ -353,21 +357,30 @@ pub fn run_service(trace: &Trace, cfg: &ServiceConfig) -> Result<ServiceReport> 
 /// stubbed out. Agents are **null sinks** (channels whose receivers are
 /// dropped, so every schedule send is a no-op), and a feeder thread
 /// replaces both the replayer and the agent sims: it registers every
-/// coflow up front (fire-and-forget), then streams synthesized
-/// `FlowComplete` reports round-robin across coflows — the worst case for
-/// the coordinator, since every report belongs to a different coflow than
-/// the last — and finally seals. The returned report's `update_msgs` over
-/// `wall_seconds` is the sustained event rate; `realloc_p50`/`realloc_p99`
-/// are the reallocation latency tail under that pressure.
+/// coflow up front, then streams synthesized `FlowComplete` reports
+/// round-robin across coflows — the worst case for the coordinator, since
+/// every report belongs to a different coflow than the last — and finally
+/// seals. The returned report's `update_msgs` over `wall_seconds` is the
+/// sustained event rate; `realloc_p50`/`realloc_p99`/`realloc_p999` are
+/// the reallocation latency tail under that pressure.
 ///
 /// The feeder mirrors `Coordinator::register`'s deterministic flow-id
 /// layout (registration order × reducers-sorted-by-port × mappers), so
-/// its synthesized reports name real flows without a reply round-trip.
+/// its synthesized reports name real flows.
+///
+/// Registration buffers ride the boomerang pool: each [`TraceRecord`]
+/// shipped in a [`CoflowOp::Register`] carries a recycle path, the
+/// coordinator hands the consumed record back *before* replying, and the
+/// feeder awaits the reply — so from the second registration on, every
+/// record is served from the pool ([`ServiceReport::register_bufs_reused`]
+/// counts the reuses; the steady state allocates nothing).
 pub fn run_soak(trace: &Trace, cfg: &ServiceConfig) -> Result<ServiceReport> {
     let (input_tx, input_rx) = mpsc::channel::<Input>();
     let records = trace_records(trace);
     let feeder_tx = input_tx.clone();
-    let feeder = thread::spawn(move || {
+    let (reg_recycle_tx, reg_bin) = recycler::<TraceRecord>();
+    let feeder = thread::spawn(move || -> u64 {
+        let mut pool: BufferPool<TraceRecord> = BufferPool::new();
         // (flow id, size, src agent) per coflow, in coordinator fid order
         let mut flows: Vec<Vec<(FlowId, f64, PortId)>> = Vec::with_capacity(records.len());
         let mut fid = 0usize;
@@ -381,14 +394,32 @@ pub fn run_soak(trace: &Trace, cfg: &ServiceConfig) -> Result<ServiceReport> {
                 }
             }
             flows.push(of_coflow);
-            // fire-and-forget: the reply receiver is dropped immediately;
-            // route_input's reply send is a tolerated no-op
-            let (reply, _drop_rx) = mpsc::sync_channel::<CoflowId>(1);
+            // refill the record from the pool, not a clone: consumed
+            // buffers boomerang back through `reg_bin`
+            reg_bin.drain_into(&mut pool);
+            let mut buf = pool.take();
+            buf.external_id = rec.external_id;
+            buf.arrival = rec.arrival;
+            buf.deadline = rec.deadline;
+            buf.mappers.clear();
+            buf.mappers.extend_from_slice(&rec.mappers);
+            buf.reducers.clear();
+            buf.reducers.extend_from_slice(&rec.reducers);
+            let (reply, reply_rx) = mpsc::sync_channel::<CoflowId>(1);
             if feeder_tx
-                .send(Input::Op(CoflowOp::Register { record: rec.clone(), reply }))
+                .send(Input::Op(CoflowOp::Register {
+                    record: buf,
+                    reply,
+                    recycle: Some(reg_recycle_tx.clone()),
+                }))
                 .is_err()
             {
-                return;
+                return pool.reused();
+            }
+            // the coordinator recycles before replying, so the next
+            // `drain_into` is guaranteed to reclaim this buffer
+            if reply_rx.recv().is_err() {
+                return pool.reused();
             }
         }
         let mut cursor = vec![0usize; flows.len()];
@@ -408,7 +439,7 @@ pub fn run_soak(trace: &Trace, cfg: &ServiceConfig) -> Result<ServiceReport> {
                         at: 0.0,
                     };
                     if feeder_tx.send(Input::Agent(msg)).is_err() {
-                        return;
+                        return pool.reused();
                     }
                 }
             }
@@ -417,17 +448,39 @@ pub fn run_soak(trace: &Trace, cfg: &ServiceConfig) -> Result<ServiceReport> {
             }
         }
         let _ = feeder_tx.send(Input::Op(CoflowOp::Seal));
+        pool.reused()
     });
 
     let mut coord = Coordinator::new(trace, cfg, input_tx)?;
     coord.install_null_agents();
     let report = coord.run(input_rx);
-    let _ = feeder.join();
-    report
+    let reused = feeder.join().unwrap_or(0);
+    report.map(|mut r| {
+        r.register_bufs_reused = reused;
+        r
+    })
 }
 
 struct AgentHandle {
     tx: mpsc::Sender<CoordMsg>,
+}
+
+/// Live-service observability: the shared plane plus the dense metric
+/// handles resolved once at startup (`obs::Registry` find-or-create).
+/// Pure observer — nothing here is ever read back into scheduling.
+struct SvcObs {
+    plane: ObsPlane,
+    /// How late each δ tick fired vs. the configured cadence (seconds).
+    g_tick_lag: obs::GaugeId,
+    /// Inputs drained per event wake (queue pressure at the coordinator).
+    g_queue_depth: obs::GaugeId,
+    /// Per-shard leased-uplink utilization, set at each reallocation.
+    g_lease_util: Vec<obs::GaugeId>,
+    c_migrations: obs::CounterId,
+    c_reconciliations: obs::CounterId,
+    /// Mirror of the always-on realloc latency histogram, exported in the
+    /// snapshot registry as `svc.realloc_ns`.
+    h_realloc: obs::HistId,
 }
 
 /// One live coordinator shard: its scheduler instance, owned coflows,
@@ -524,8 +577,15 @@ struct Coordinator {
     recycle_bin: RecycleBin<Vec<(FlowId, f64)>>,
     dirty_agents: Vec<PortId>,
     per_agent: HashMap<PortId, Vec<(FlowId, f64)>>,
-    /// Per-reallocation wall latencies (capped at [`CALC_SAMPLE_CAP`]).
-    calc_samples: Vec<f64>,
+    /// Per-reallocation wall latencies, log-bucketed. Always on (feeds the
+    /// report's `realloc_p50/p99/p999`): a record is two array increments,
+    /// and unlike the capped sampler it predates, memory is fixed while
+    /// the tail rank stays exact over every reallocation of a soak.
+    calc_hist: obs::LogHistogram,
+    /// Metrics + flight recorder ([`ServiceConfig::obs_events`] > 0).
+    obs: Option<SvcObs>,
+    /// Wall instant of the previous δ tick (tick-lag gauge).
+    last_tick: Instant,
     // measured accounting
     stats: IntervalStats,
     rate_calc: RunningStat,
@@ -561,6 +621,20 @@ impl Coordinator {
         };
         let is_philae = matches!(cfg.kind, SchedulerKind::Philae);
         let k = cfg.coordinators.max(1);
+        let obs = (cfg.obs_events > 0).then(|| {
+            let mut plane = ObsPlane::new(cfg.obs_events);
+            SvcObs {
+                g_tick_lag: plane.reg.gauge("svc.tick_lag_s"),
+                g_queue_depth: plane.reg.gauge("svc.input_queue_depth"),
+                g_lease_util: (0..k)
+                    .map(|s| plane.reg.gauge(&format!("svc.lease_util.{s}")))
+                    .collect(),
+                c_migrations: plane.reg.counter("svc.migrations"),
+                c_reconciliations: plane.reg.counter("svc.reconciliations"),
+                h_realloc: plane.reg.hist("svc.realloc_ns"),
+                plane,
+            }
+        });
         let shards: Vec<SvcShard> = (0..k)
             .map(|_| SvcShard {
                 philae: is_philae.then(|| PhilaeCore::new(cfg.sched.clone())),
@@ -636,7 +710,9 @@ impl Coordinator {
             recycle_bin,
             dirty_agents: Vec::new(),
             per_agent: HashMap::new(),
-            calc_samples: Vec::new(),
+            calc_hist: obs::LogHistogram::new(),
+            obs,
+            last_tick: Instant::now(),
             stats: IntervalStats::default(),
             rate_calc: RunningStat::default(),
             rate_send: RunningStat::default(),
@@ -807,9 +883,14 @@ impl Coordinator {
                 // the whole burst instead of one reallocation per report.
                 Wake::Event(first) => {
                     let t0 = Instant::now();
+                    let mut depth = 1u64;
                     self.route_input(first);
                     while let Some(next) = lp.try_next() {
+                        depth += 1;
                         self.route_input(next);
+                    }
+                    if let Some(o) = self.obs.as_mut() {
+                        o.plane.reg.set_gauge(o.g_queue_depth, depth as f64);
                     }
                     // single drain cycle per shard
                     for s in 0..self.shards.len() {
@@ -840,7 +921,15 @@ impl Coordinator {
                 }
                 // the deadline is checked before the receive, so a
                 // saturated queue cannot starve interval work
-                Wake::Tick => self.on_interval(),
+                Wake::Tick => {
+                    if let Some(o) = self.obs.as_mut() {
+                        let lag = self.last_tick.elapsed().as_secs_f64()
+                            - self.cfg.delta_wall.as_secs_f64();
+                        o.plane.reg.set_gauge(o.g_tick_lag, lag.max(0.0));
+                    }
+                    self.last_tick = Instant::now();
+                    self.on_interval();
+                }
                 Wake::Closed => break,
             }
         }
@@ -876,8 +965,7 @@ impl Coordinator {
                 deadline.expired = adm.expired;
             }
         }
-        let mut calc_sorted = std::mem::take(&mut self.calc_samples);
-        calc_sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite latency samples"));
+        let obs_snapshot = self.obs.take().map(|o| o.plane.snapshot());
         Ok(ServiceReport {
             scheduler: if self.shards[0].philae.is_some() {
                 "philae".into()
@@ -911,9 +999,12 @@ impl Coordinator {
             ports_aged_out: self.ports_aged_out,
             ports_restored: self.ports_restored,
             restored_shards: self.restored_shards,
-            realloc_p50: percentile(&calc_sorted, 0.50),
-            realloc_p99: percentile(&calc_sorted, 0.99),
+            realloc_p50: self.calc_hist.percentile_secs(0.50),
+            realloc_p99: self.calc_hist.percentile_secs(0.99),
+            realloc_p999: self.calc_hist.percentile_secs(0.999),
             sched_bufs_reused: self.sched_bufs.reused(),
+            register_bufs_reused: 0, // patched by `run_soak` post-join
+            obs: obs_snapshot,
         })
     }
 
@@ -922,8 +1013,17 @@ impl Coordinator {
     fn route_input(&mut self, input: Input) {
         match input {
             Input::Op(op) => match op {
-                CoflowOp::Register { record, reply } => {
+                CoflowOp::Register { record, reply, recycle } => {
                     let cid = self.register(&record);
+                    // boomerang the consumed record *before* replying: a
+                    // registrar that awaits the reply is then guaranteed
+                    // to find this buffer in its pool on the next take
+                    if let Some(r) = recycle {
+                        let mut rec = record;
+                        rec.mappers.clear();
+                        rec.reducers.clear();
+                        r.give(rec);
+                    }
                     let _ = reply.send(cid);
                     let s = self.owner[cid] as usize;
                     self.shards[s].need_realloc = true;
@@ -1048,6 +1148,24 @@ impl Coordinator {
         self.start.elapsed().as_secs_f64() * self.cfg.time_scale
     }
 
+    /// Record one lifecycle event, stamped with both clocks (`t` in
+    /// simulated seconds, `wall_ns` since service start). One branch when
+    /// the plane is off — no payload is built.
+    #[inline]
+    fn obs_emit(&mut self, shard: u32, kind: EventKind, coflow: u64, a: u64, b: u64) {
+        let Some(o) = self.obs.as_mut() else { return };
+        let el = self.start.elapsed();
+        o.plane.emit(
+            el.as_secs_f64() * self.cfg.time_scale,
+            el.as_nanos() as u64,
+            shard,
+            kind,
+            coflow,
+            a,
+            b,
+        );
+    }
+
     /// Advance the world's simulated clock to the service clock. Scheduler
     /// hooks read `world.now` (Philae's aging lane, dcoflow's admission
     /// slack and expiry sweep), so it must track `sim_now()` — a frozen
@@ -1080,6 +1198,7 @@ impl Coordinator {
             }
             self.last_ckpts[s] = Some(sealed);
             self.checkpoints_written += 1;
+            self.obs_emit(s as u32, EventKind::Checkpoint, obs::NO_COFLOW, self.checkpoints_written, 0);
         }
     }
 
@@ -1159,7 +1278,17 @@ impl Coordinator {
         }
         self.reallocate_shard(s);
         self.recoveries += 1;
-        self.recovery_wall.push(t0.elapsed().as_secs_f64());
+        let rec_wall = t0.elapsed();
+        self.recovery_wall.push(rec_wall.as_secs_f64());
+        // b = recovery wall time in ns (renders as a span in the Chrome
+        // trace export)
+        self.obs_emit(
+            s as u32,
+            EventKind::Restore,
+            obs::NO_COFLOW,
+            self.recoveries,
+            rec_wall.as_nanos() as u64,
+        );
     }
 
     /// Watchdog bookkeeping: any message from a port proves its agent
@@ -1188,6 +1317,7 @@ impl Coordinator {
             for sh in &mut self.shards {
                 sh.force_realloc = true;
             }
+            self.obs_emit(0, EventKind::AgentReturn, obs::NO_COFLOW, port as u64, 0);
         }
     }
 
@@ -1228,6 +1358,7 @@ impl Coordinator {
                 self.dead_ports += 1;
                 self.ports_aged_out += 1;
                 changed = true;
+                self.obs_emit(0, EventKind::AgentAgeOut, obs::NO_COFLOW, p as u64, idle);
             }
         }
         if changed {
@@ -1396,6 +1527,8 @@ impl Coordinator {
                 pilot: fl.pilot,
             });
         }
+        let nflows = self.world.coflows[cid].flows.len() as u64;
+        self.obs_emit(s as u32, EventKind::Arrival, cid as u64, nflows, 0);
         cid
     }
 
@@ -1507,6 +1640,16 @@ impl Coordinator {
                         self.world.coflows[coflow].est_size = Some(est);
                         self.world.coflows[coflow].phase = CoflowPhase::Running;
                         self.scores_dirty = true;
+                        self.obs_emit(
+                            s as u32,
+                            EventKind::Estimate,
+                            coflow as u64,
+                            est.max(0.0) as u64,
+                            0,
+                        );
+                        // phase code 1 = Running (matches the sim engine's
+                        // CoflowPhase discriminants)
+                        self.obs_emit(s as u32, EventKind::Phase, coflow as u64, 1, 0);
                     }
                     self.shards[s].philae = Some(ph);
                 }
@@ -1563,6 +1706,19 @@ impl Coordinator {
                             }
                         }
                         std::mem::swap(&mut self.world.active, &mut sh.active);
+                    }
+                }
+                if self.obs.is_some() {
+                    self.obs_emit(
+                        s as u32,
+                        EventKind::FlowComplete,
+                        coflow as u64,
+                        flow as u64,
+                        size.max(0.0) as u64,
+                    );
+                    if coflow_finished {
+                        let total = self.world.coflows[coflow].total_bytes.max(0.0) as u64;
+                        self.obs_emit(s as u32, EventKind::CoflowComplete, coflow as u64, 0, total);
                     }
                 }
                 true
@@ -1660,8 +1816,9 @@ impl Coordinator {
         self.iv_calc += calc;
         self.iv_rate_calcs += 1;
         self.rate_calcs += 1;
-        if self.calc_samples.len() < CALC_SAMPLE_CAP {
-            self.calc_samples.push(calc);
+        self.calc_hist.record_secs(calc);
+        if let Some(o) = self.obs.as_mut() {
+            o.plane.reg.observe_secs(o.h_realloc, calc);
         }
 
         // diff this shard's grants against its last flushed rates to find
@@ -1726,15 +1883,25 @@ impl Coordinator {
             self.iv_rate_msgs += 1;
             self.rate_msgs += 1;
         }
+        let mut granted = 0.0f64;
         {
             let sh = &mut self.shards[s];
             sh.last_rates.clear();
             for &(f, r) in sh.scratch.grants() {
                 sh.last_rates.insert(f, r);
+                granted += r;
                 if r > 0.0 {
                     self.port_rate_stamp[self.world.flows[f].src] = self.intervals_seen;
                 }
             }
+        }
+        if let Some(o) = self.obs.as_mut() {
+            // granted rate over leased uplink capacity: a starved or idle
+            // shard reads ~0, a saturated lease reads ~1
+            let cap: f64 = self.shards[s].lease.up_capacity.iter().sum();
+            let util = if cap > 0.0 { granted / cap } else { 0.0 };
+            let id = o.g_lease_util[s];
+            o.plane.reg.set_gauge(id, util);
         }
         self.iv_send += t1.elapsed().as_secs_f64();
     }
@@ -1851,6 +2018,10 @@ impl Coordinator {
             }
         }
         self.reconciliations += 1;
+        self.obs_emit(0, EventKind::LeaseReconcile, obs::NO_COFLOW, k as u64, 0);
+        if let Some(o) = self.obs.as_mut() {
+            o.plane.reg.inc(o.c_reconciliations, 1);
+        }
     }
 
     /// Move `cid` from shard `from` to shard `to`: ownership, queued
@@ -1918,6 +2089,10 @@ impl Coordinator {
             self.scores_dirty = true;
         }
         self.migrations += 1;
+        self.obs_emit(from as u32, EventKind::Migration, cid as u64, from as u64, to as u64);
+        if let Some(o) = self.obs.as_mut() {
+            o.plane.reg.inc(o.c_migrations, 1);
+        }
     }
 
     /// Batch the scheduled coflows through the PJRT scorer. Each coflow's
@@ -1991,16 +2166,5 @@ mod tests {
         assert_eq!(auto_miss_threshold(4.0), 32);
         // ceil: fractional cadences round up, never down
         assert_eq!(auto_miss_threshold(4.1), 33);
-    }
-
-    #[test]
-    fn percentile_nearest_rank() {
-        assert_eq!(percentile(&[], 0.99), 0.0);
-        assert_eq!(percentile(&[7.0], 0.5), 7.0);
-        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
-        assert_eq!(percentile(&v, 0.0), 1.0);
-        assert_eq!(percentile(&v, 1.0), 100.0);
-        assert_eq!(percentile(&v, 0.5), 51.0); // nearest-rank on 0..=99
-        assert_eq!(percentile(&v, 0.99), 99.0);
     }
 }

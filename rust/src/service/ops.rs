@@ -3,6 +3,7 @@
 //! Frameworks drive it through an [`OpsHandle`]; the trace replayer in
 //! `coordinator.rs` is just one such client.
 
+use crate::runtime::evloop::RecycleSender;
 use crate::trace::TraceRecord;
 use crate::CoflowId;
 use std::sync::mpsc;
@@ -14,6 +15,11 @@ pub enum CoflowOp {
     Register {
         record: TraceRecord,
         reply: mpsc::SyncSender<CoflowId>,
+        /// When set, the coordinator hands the consumed `record` (cleared)
+        /// back through this path so a high-rate registrar can recycle
+        /// buffers via a [`crate::runtime::evloop::BufferPool`] instead of
+        /// allocating fresh mapper/reducer vectors per registration.
+        recycle: Option<RecycleSender<TraceRecord>>,
     },
     /// Remove a coflow (job exit / kill): its unfinished flows are dropped.
     Deregister { coflow: CoflowId },
@@ -38,7 +44,11 @@ impl OpsHandle {
     pub fn register(&self, record: TraceRecord) -> Option<CoflowId> {
         let (reply, rx) = mpsc::sync_channel(1);
         self.tx
-            .send(super::coordinator::Input::Op(CoflowOp::Register { record, reply }))
+            .send(super::coordinator::Input::Op(CoflowOp::Register {
+                record,
+                reply,
+                recycle: None,
+            }))
             .ok()?;
         rx.recv().ok()
     }

@@ -102,6 +102,7 @@ use crate::coordinator::{
 use crate::coflow::{CoflowState, FlowState};
 use crate::fabric::{Fabric, PortLoad};
 use crate::metrics::{DeadlineStats, IntervalStats, MessageCostModel, RunningStat};
+use crate::obs::{self, EventKind, ObsPlane, ObsSnapshot};
 use crate::trace::{ArrivalStream, CoflowArrival, Trace};
 use crate::{CoflowId, FlowId, Time, EPS};
 use crate::util::Rng;
@@ -145,6 +146,13 @@ pub struct SimConfig {
     /// clusters); `None` = homogeneous at `port_rate`. Must cover exactly
     /// the trace's port count.
     pub fabric: Option<Fabric>,
+    /// Flight-recorder ring capacity in events per shard (`0` = the
+    /// default: observability off — no recorder, no registry, and the
+    /// engine's obs hooks reduce to one `Option` branch). When on,
+    /// [`SimResult::obs`] carries the merged [`ObsSnapshot`]. Scheduling
+    /// decisions are never read from obs state, so CCTs are bit-identical
+    /// either way (pinned in `tests/cct_equivalence.rs`).
+    pub obs_events: usize,
 }
 
 impl Default for SimConfig {
@@ -161,6 +169,7 @@ impl Default for SimConfig {
             alloc_shards: rate::env_test_shards(),
             coordinators: 1,
             fabric: None,
+            obs_events: 0,
         }
     }
 }
@@ -197,6 +206,9 @@ pub struct SimResult {
     /// SLO accounting (met ratio, goodput, admission counters); vacuous
     /// (`with_deadline == 0`, met ratio 1.0) on deadline-free traces.
     pub deadline: DeadlineStats,
+    /// Merged observability snapshot (metrics registry + flight-recorder
+    /// event log); `None` unless [`SimConfig::obs_events`] > 0.
+    pub obs: Option<ObsSnapshot>,
 }
 
 impl SimResult {
@@ -301,6 +313,14 @@ pub(crate) trait CoordFrontend {
     fn was_granted(&self, fid: FlowId) -> bool;
     /// Admission-control counters (deadline-aware schedulers only).
     fn admission_stats(&self) -> Option<AdmissionStats>;
+    /// Tell the frontend whether to buffer coordination-plane lifecycle
+    /// events (migration, reconciliation, checkpoint/restore) for the
+    /// engine's flight recorder. Default: ignore (frontends without a
+    /// coordination plane have nothing to report).
+    fn set_obs(&mut self, _on: bool) {}
+    /// Drain buffered `(shard, kind, coflow, a, b)` events into `out`;
+    /// the engine stamps time and sequence. Default: nothing buffered.
+    fn drain_obs(&mut self, _out: &mut Vec<obs::PendingEvent>) {}
 }
 
 /// Single-coordinator frontend: one scheduler, one reused plan, one reused
@@ -415,6 +435,14 @@ impl CoordFrontend for CoordinatorCluster {
     fn admission_stats(&self) -> Option<AdmissionStats> {
         CoordinatorCluster::admission_stats(self)
     }
+
+    fn set_obs(&mut self, on: bool) {
+        CoordinatorCluster::set_obs(self, on)
+    }
+
+    fn drain_obs(&mut self, out: &mut Vec<obs::PendingEvent>) {
+        CoordinatorCluster::drain_obs(self, out)
+    }
 }
 
 /// Crash-injection frontend (`coordinator/recovery.rs`): a
@@ -438,6 +466,8 @@ struct RestoringCoord<'a> {
     every: u64,
     events: u64,
     restores: u64,
+    obs_on: bool,
+    obs_pending: Vec<obs::PendingEvent>,
 }
 
 impl RestoringCoord<'_> {
@@ -456,6 +486,12 @@ impl RestoringCoord<'_> {
         self.sched = restore_scheduler(&payload, self.trace, self.cfg, world, true)
             .expect("restore from a verified checkpoint");
         self.restores += 1;
+        if self.obs_on {
+            self.obs_pending
+                .push((0, EventKind::Checkpoint, obs::NO_COFLOW, self.restores, 0));
+            self.obs_pending
+                .push((0, EventKind::Restore, obs::NO_COFLOW, self.restores, 0));
+        }
     }
 }
 
@@ -518,6 +554,14 @@ impl CoordFrontend for RestoringCoord<'_> {
 
     fn admission_stats(&self) -> Option<AdmissionStats> {
         self.sched.admission_stats()
+    }
+
+    fn set_obs(&mut self, on: bool) {
+        self.obs_on = on;
+    }
+
+    fn drain_obs(&mut self, out: &mut Vec<obs::PendingEvent>) {
+        out.append(&mut self.obs_pending);
     }
 }
 
@@ -636,6 +680,8 @@ impl Simulation {
             every,
             events: 0,
             restores: 0,
+            obs_on: false,
+            obs_pending: Vec::new(),
         };
         let result = Engine::new(trace, cfg, sim_cfg).run(&mut front);
         (result, front.restores)
@@ -790,6 +836,36 @@ struct Engine {
     bn_up: Vec<f64>,
     bn_down: Vec<f64>,
     bn_touched: Vec<usize>,
+    /// Observability plane ([`SimConfig::obs_events`] > 0); boxed so the
+    /// disabled path carries one pointer-sized `Option` and a single
+    /// branch per hook site.
+    obs: Option<Box<EngineObs>>,
+}
+
+/// Engine-side observability state. The shadow tables remember the last
+/// observed phase / estimate / queue / rate verdict per coflow, so the
+/// per-instant scan emits *transitions* rather than state dumps. Pure
+/// observer: nothing here is ever read back into scheduling decisions
+/// (the disabled-obs bit-identity pin in `tests/cct_equivalence.rs`
+/// depends on that).
+struct EngineObs {
+    plane: ObsPlane,
+    /// Last seen phase (0 piloting / 1 running / 2 done; 255 = unseen).
+    phase_seen: Vec<u8>,
+    /// Estimate event already emitted for this coflow.
+    est_seen: Vec<bool>,
+    /// Last rate verdict: 0 unknown, 1 scheduled, 2 starved.
+    sched_seen: Vec<u8>,
+    /// Last seen priority queue (`u64::MAX` = unseen).
+    queue_seen: Vec<u64>,
+    /// Reused drain buffer for frontend coordination-plane events.
+    pending: Vec<obs::PendingEvent>,
+    /// Admission counters at the last scan (delta detection).
+    adm_admitted: u64,
+    adm_rejected: u64,
+    adm_expired: u64,
+    /// Registry handle for the full-fidelity realloc latency histogram.
+    calc_hist: obs::HistId,
 }
 
 #[derive(Default)]
@@ -894,6 +970,24 @@ impl Engine {
             bn_up: if streaming { vec![0.0; np] } else { Vec::new() },
             bn_down: if streaming { vec![0.0; np] } else { Vec::new() },
             bn_touched: Vec::new(),
+            obs: if sim_cfg.obs_events > 0 {
+                let mut plane = ObsPlane::new(sim_cfg.obs_events);
+                let calc_hist = plane.reg.hist("sim.calc_ns");
+                Some(Box::new(EngineObs {
+                    plane,
+                    phase_seen: vec![u8::MAX; nc],
+                    est_seen: vec![false; nc],
+                    sched_seen: vec![0; nc],
+                    queue_seen: vec![u64::MAX; nc],
+                    pending: Vec::new(),
+                    adm_admitted: 0,
+                    adm_rejected: 0,
+                    adm_expired: 0,
+                    calc_hist,
+                }))
+            } else {
+                None
+            },
         }
     }
 
@@ -918,6 +1012,7 @@ impl Engine {
         mut stream: Option<&mut dyn ArrivalStream>,
     ) -> SimResult {
         let wall_start = Instant::now();
+        front.set_obs(self.obs.is_some());
         let tick = front.tick_interval();
         let mut next_tick: Option<Time> = None;
 
@@ -1086,6 +1181,9 @@ impl Engine {
             // ---- reallocate ----
             if reaction == Reaction::Reallocate {
                 let (calc_s, changed) = self.reallocate(front);
+                if let Some(o) = self.obs.as_mut() {
+                    o.plane.reg.observe_secs(o.calc_hist, calc_s);
+                }
                 // Deadline model (§4.3): if this tick's coordinator work —
                 // ingesting updates, recalculating, pushing new rates —
                 // exceeds δ, the coordinator overruns into the next interval
@@ -1101,6 +1199,13 @@ impl Engine {
                         }
                     }
                 }
+            }
+
+            // ---- observability: transition scan + frontend drain ----
+            // After the instant's reallocation so the scan sees settled
+            // rates; pure observation, never feeds back into scheduling.
+            if self.obs.is_some() {
+                self.obs_scan(front);
             }
 
             // ---- streaming retirement ----
@@ -1130,6 +1235,15 @@ impl Engine {
             deadline.rejected = a.rejected;
             deadline.expired = a.expired;
         }
+        let obs = self.obs.take().map(|mut o| {
+            let id = o.plane.reg.counter("sim.rate_calcs");
+            o.plane.reg.inc(id, self.totals.rate_calcs);
+            let id = o.plane.reg.counter("sim.rate_msgs");
+            o.plane.reg.inc(id, self.totals.rate_msgs);
+            let id = o.plane.reg.counter("sim.update_msgs");
+            o.plane.reg.inc(id, self.totals.update_msgs);
+            o.plane.snapshot()
+        });
         SimResult {
             scheduler: front.name(),
             ccts,
@@ -1145,6 +1259,108 @@ impl Engine {
             updates_per_interval: self.stats.updates_per_interval.clone(),
             sim_wall_s: wall_start.elapsed().as_secs_f64(),
             deadline,
+            obs,
+        }
+    }
+
+    /// Once per engine instant (obs enabled): drain coordination-plane
+    /// events buffered by the frontend, diff the admission counters, and
+    /// scan the active set for phase / estimate / queue / rate-verdict
+    /// transitions against the shadow tables. Read-only with respect to
+    /// the world and the scheduler.
+    fn obs_scan<F: CoordFrontend>(&mut self, front: &mut F) {
+        let now = self.world.now;
+        // coordination-plane events (migrations, reconciliations,
+        // checkpoint/restore) buffered since the last drain
+        let mut pending = match self.obs.as_mut() {
+            Some(o) => std::mem::take(&mut o.pending),
+            None => return,
+        };
+        front.drain_obs(&mut pending);
+        let adm = front.admission_stats();
+        let o = self.obs.as_mut().expect("obs checked by caller");
+        for &(shard, kind, coflow, a, b) in &pending {
+            o.plane.emit(now, 0, shard, kind, coflow, a, b);
+        }
+        pending.clear();
+        o.pending = pending;
+        // admission verdicts (deadline-aware schedulers): counter deltas
+        if let Some(st) = adm {
+            let da = st.admitted.saturating_sub(o.adm_admitted);
+            let dr = st.rejected.saturating_sub(o.adm_rejected);
+            let de = st.expired.saturating_sub(o.adm_expired);
+            if da > 0 || dr > 0 {
+                o.plane
+                    .emit(now, 0, 0, EventKind::AdmissionVerdict, obs::NO_COFLOW, da, dr);
+            }
+            if de > 0 {
+                o.plane
+                    .emit(now, 0, 0, EventKind::AdmissionExpiry, obs::NO_COFLOW, de, 0);
+            }
+            o.adm_admitted = st.admitted;
+            o.adm_rejected = st.rejected;
+            o.adm_expired = st.expired;
+        }
+        for i in 0..self.world.active.len() {
+            let cid = self.world.active[i];
+            let c = &self.world.coflows[cid];
+            let phase = match c.phase {
+                crate::coflow::CoflowPhase::Piloting => 0u8,
+                crate::coflow::CoflowPhase::Running => 1,
+                crate::coflow::CoflowPhase::Done => 2,
+            };
+            if o.phase_seen[cid] == u8::MAX {
+                // first observation; Arrival is already logged, so the only
+                // interesting birth fact is pilot sampling starting
+                if phase == 0 && !c.pilots.is_empty() {
+                    o.plane.emit(
+                        now,
+                        0,
+                        0,
+                        EventKind::PilotStart,
+                        cid as u64,
+                        c.pilots.len() as u64,
+                        0,
+                    );
+                }
+                o.phase_seen[cid] = phase;
+            } else if o.phase_seen[cid] != phase {
+                o.plane
+                    .emit(now, 0, 0, EventKind::Phase, cid as u64, phase as u64, 0);
+                o.phase_seen[cid] = phase;
+            }
+            if !o.est_seen[cid] {
+                if let Some(est) = c.est_size {
+                    o.plane.emit(
+                        now,
+                        0,
+                        0,
+                        EventKind::Estimate,
+                        cid as u64,
+                        est.max(0.0) as u64,
+                        0,
+                    );
+                    o.est_seen[cid] = true;
+                }
+            }
+            let q = c.queue as u64;
+            if o.queue_seen[cid] == u64::MAX {
+                o.queue_seen[cid] = q;
+            } else if o.queue_seen[cid] != q {
+                o.plane
+                    .emit(now, 0, 0, EventKind::QueueChange, cid as u64, q, o.queue_seen[cid]);
+                o.queue_seen[cid] = q;
+            }
+            let verdict = if self.rate_sum[cid] > 0.0 { 1u8 } else { 2u8 };
+            if o.sched_seen[cid] != verdict {
+                let kind = if verdict == 1 {
+                    EventKind::Scheduled
+                } else {
+                    EventKind::Starved
+                };
+                o.plane.emit(now, 0, 0, kind, cid as u64, 0, 0);
+                o.sched_seen[cid] = verdict;
+            }
         }
     }
 
@@ -1198,6 +1414,17 @@ impl Engine {
             self.totals.peak_active_flows.max(self.totals.active_flows);
         self.totals.peak_active_coflows =
             self.totals.peak_active_coflows.max(self.world.active.len());
+        if let Some(o) = self.obs.as_mut() {
+            o.plane.emit(
+                self.world.now,
+                0,
+                0,
+                EventKind::Arrival,
+                cid as u64,
+                nflows as u64,
+                0,
+            );
+        }
     }
 
     /// Streaming admission: materialize the pending arrival into the world
@@ -1263,6 +1490,12 @@ impl Engine {
         self.port_refs.push(None);
         self.reports_pending.push(0);
         self.coflow_delivered.push(false);
+        if let Some(o) = self.obs.as_mut() {
+            o.phase_seen.push(u8::MAX);
+            o.est_seen.push(false);
+            o.sched_seen.push(0);
+            o.queue_seen.push(u64::MAX);
+        }
         self.admit(cid);
         cid
     }
@@ -1284,6 +1517,10 @@ impl Engine {
             c.senders = Vec::new();
             c.receivers = Vec::new();
             c.pilots = Vec::new();
+            if let Some(o) = self.obs.as_mut() {
+                o.plane
+                    .emit(self.world.now, 0, 0, EventKind::Retire, cid as u64, 0, 0);
+            }
         }
         self.retire_pending.clear();
     }
@@ -1361,11 +1598,31 @@ impl Engine {
         if fl.size > c.max_finished_flow {
             c.max_finished_flow = fl.size;
         }
+        let mut coflow_done = false;
         if c.active_flows == 0 && c.finished_at.is_none() {
             c.finished_at = Some(now);
             c.phase = crate::coflow::CoflowPhase::Done;
             self.world.active.retain(|&x| x != cid);
             self.port_refs[cid] = None;
+            coflow_done = true;
+        }
+        if let Some(o) = self.obs.as_mut() {
+            // flow seq (not id) so streaming slot recycling matches the
+            // materialized event stream (`seq == id` there)
+            o.plane.emit(
+                now,
+                0,
+                0,
+                EventKind::FlowComplete,
+                cid as u64,
+                fl.seq,
+                fl.size.max(0.0) as u64,
+            );
+            if coflow_done {
+                let total = self.world.coflows[cid].total_bytes.max(0.0) as u64;
+                o.plane
+                    .emit(now, 0, 0, EventKind::CoflowComplete, cid as u64, 0, total);
+            }
         }
     }
 

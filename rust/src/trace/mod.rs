@@ -240,8 +240,11 @@ impl Trace {
 }
 
 /// One line of a coflow-benchmark trace: a coflow with its mapper ports and
-/// per-reducer (port, total bytes) pairs.
-#[derive(Debug, Clone, PartialEq)]
+/// per-reducer (port, total bytes) pairs. `Default` (an empty record) is
+/// what a recycled registration buffer starts from — see
+/// [`crate::runtime::evloop::BufferPool`] and the `CoflowOp::Register`
+/// recycle path.
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct TraceRecord {
     pub external_id: u64,
     /// Arrival in seconds.

@@ -380,3 +380,43 @@ fn dcoflow_batched_and_cluster_k1_bit_identical_with_deadlines() {
     assert_same_history(&batched, &clustered, "dcoflow single vs cluster K=1");
     assert_eq!(batched.deadline, clustered.deadline, "K=1 SLO accounting diverged");
 }
+
+/// The observability plane is a pure observer: arming the flight
+/// recorder + metrics registry (`SimConfig::obs_events`) must leave every
+/// scheduler's event history bit-identical to the obs-off run — through
+/// the single-coordinator path and the K=1 cluster frontend alike.
+#[test]
+fn obs_plane_is_invisible_to_scheduling() {
+    let trace = TraceSpec::fb_like(50, 60).seed(5).generate();
+    let cfg = SchedulerConfig::default();
+    let base = SimConfig { account_delta: Some(1e18), ..SimConfig::default() };
+    let obs_cfg = SimConfig { obs_events: 1 << 16, ..base.clone() };
+
+    for &kind in SchedulerKind::all() {
+        let mut off_sched = kind.build(&trace, &cfg);
+        let off = Simulation::run_with(&trace, off_sched.as_mut(), &cfg, &base);
+        assert!(off.obs.is_none(), "{kind:?}: obs-off run must not carry a snapshot");
+
+        let mut on_sched = kind.build(&trace, &cfg);
+        let on = Simulation::run_with(&trace, on_sched.as_mut(), &cfg, &obs_cfg);
+        assert_same_history(&off, &on, &format!("{kind:?} obs off vs on"));
+
+        let snap = on.obs.as_ref().expect("obs-on run must carry a snapshot");
+        assert!(snap.recorded > 0, "{kind:?}: flight recorder saw no events");
+        // every coflow completed, so every lifecycle must close
+        let completes = snap
+            .events
+            .iter()
+            .filter(|e| e.kind == philae::obs::EventKind::CoflowComplete)
+            .count();
+        assert_eq!(completes, trace.coflows.len(), "{kind:?}: CoflowComplete per coflow");
+    }
+
+    // same pin through the cluster frontend (K=1 is the transparent case)
+    let k1_on = SimConfig { coordinators: 1, obs_events: 1 << 16, ..base.clone() };
+    let k1_off = SimConfig { coordinators: 1, ..base };
+    let off = Simulation::run_cluster(&trace, SchedulerKind::Philae, &cfg, &k1_off);
+    let on = Simulation::run_cluster(&trace, SchedulerKind::Philae, &cfg, &k1_on);
+    assert_same_history(&off, &on, "cluster K=1 obs off vs on");
+    assert!(on.obs.is_some(), "cluster obs-on run must carry a snapshot");
+}

@@ -1,0 +1,172 @@
+//! Integration pins for the observability plane (flight recorder +
+//! metrics registry) riding the simulation engine:
+//!
+//! - the bounded per-shard ring really is bounded — a tiny
+//!   `obs_events` cap drops the oldest events and says so;
+//! - the streamed engine records the same lifecycle story as the
+//!   materialized engine (modulo `Retire`, which only the streaming
+//!   path's slot recycling emits);
+//! - the exported snapshot round-trips through the crate's own JSON
+//!   parser under the pinned `philae.obs.v1` schema, and the CSV /
+//!   Chrome-trace exports are well-formed;
+//! - `explain` decomposes a completed coflow's lifetime into
+//!   contiguous segments that cover arrival → completion.
+
+use philae::coordinator::{SchedulerConfig, SchedulerKind};
+use philae::obs::{EventKind, SegmentKind};
+use philae::sim::{SimConfig, SimResult, Simulation};
+use philae::trace::TraceSpec;
+use philae::util::JsonValue;
+
+fn run_obs(ports: usize, coflows: usize, kind: SchedulerKind, ring: usize) -> SimResult {
+    let trace = TraceSpec::fb_like(ports, coflows).seed(5).generate();
+    let cfg = SchedulerConfig::default();
+    let sim_cfg = SimConfig {
+        account_delta: Some(1e18),
+        obs_events: ring,
+        ..SimConfig::default()
+    };
+    let mut sched = kind.build(&trace, &cfg);
+    Simulation::run_with(&trace, sched.as_mut(), &cfg, &sim_cfg)
+}
+
+#[test]
+fn tiny_ring_wraps_and_reports_drops() {
+    let res = run_obs(50, 60, SchedulerKind::Philae, 64);
+    let snap = res.obs.as_ref().expect("obs snapshot");
+    assert!(snap.recorded > 64, "run too small to exercise wraparound");
+    assert_eq!(snap.events.len(), 64, "kept events must equal the ring capacity");
+    assert_eq!(
+        snap.dropped,
+        snap.recorded - 64,
+        "drop accounting must balance: recorded = kept + dropped"
+    );
+    // the ring keeps the *newest* events: the tail of the run survives
+    assert!(
+        snap.events.iter().any(|e| e.kind == EventKind::CoflowComplete),
+        "newest-event retention must keep the final completions"
+    );
+}
+
+#[test]
+fn streamed_engine_records_same_lifecycle_as_materialized() {
+    let spec = TraceSpec::tiny(10, 30).seed(7);
+    let trace = spec.generate();
+    let cfg = SchedulerConfig::default();
+    let sim_cfg = SimConfig {
+        account_delta: Some(1e18),
+        obs_events: 1 << 16,
+        ..SimConfig::default()
+    };
+
+    let kind = SchedulerKind::Philae;
+    let mut sched = kind.build(&trace, &cfg);
+    let mat = Simulation::run_with(&trace, sched.as_mut(), &cfg, &sim_cfg);
+    let mut stream = spec.stream();
+    let str_res = Simulation::run_stream(&mut stream, kind, &cfg, &sim_cfg);
+
+    // Retire is streaming-only (slot recycling); everything else —
+    // including FlowComplete, which carries the admission-stable flow
+    // *sequence* precisely so the two modes can agree — must match.
+    let key = |r: &SimResult| -> Vec<(u64, &'static str, u64, u64, u64)> {
+        r.obs
+            .as_ref()
+            .expect("obs snapshot")
+            .events
+            .iter()
+            .filter(|e| e.kind != EventKind::Retire)
+            .map(|e| (e.t.to_bits(), e.kind.as_str(), e.coflow, e.a, e.b))
+            .collect()
+    };
+    assert_eq!(key(&mat), key(&str_res), "streamed vs materialized event logs diverged");
+}
+
+#[test]
+fn snapshot_exports_are_well_formed() {
+    let res = run_obs(50, 60, SchedulerKind::Philae, 1 << 16);
+    let snap = res.obs.as_ref().expect("obs snapshot");
+    assert_eq!(snap.dropped, 0, "ring sized for the whole run");
+
+    // JSON snapshot: pinned schema, registry + event log present
+    let json = JsonValue::parse(&snap.to_json().to_string()).expect("snapshot JSON parses");
+    assert_eq!(
+        json.get("schema").and_then(|v| v.as_str()),
+        Some("philae.obs.v1"),
+        "schema tag"
+    );
+    assert!(json.get("registry").is_some(), "registry section");
+    let kept = json
+        .get("events")
+        .and_then(|e| e.get("kept"))
+        .and_then(|v| v.as_f64())
+        .expect("events.kept");
+    assert_eq!(kept as usize, snap.events.len());
+    let log = json
+        .get("event_log")
+        .and_then(|v| v.as_array())
+        .expect("event_log array");
+    assert_eq!(log.len(), snap.events.len());
+
+    // CSV: header plus one row per kept event
+    let csv = snap.to_csv();
+    let mut lines = csv.lines();
+    assert_eq!(lines.next(), Some("seq,t,wall_ns,shard,kind,coflow,a,b"));
+    assert_eq!(lines.count(), snap.events.len());
+
+    // Chrome trace: an object carrying a traceEvents array with at
+    // least one complete ("X") span
+    let trace_json = JsonValue::parse(&snap.chrome_trace_json()).expect("chrome trace parses");
+    let arr = trace_json
+        .get("traceEvents")
+        .and_then(|v| v.as_array())
+        .expect("traceEvents array");
+    assert!(!arr.is_empty(), "chrome trace must carry spans");
+    assert!(
+        arr.iter()
+            .any(|e| e.get("ph").and_then(|v| v.as_str()) == Some("X")),
+        "at least one complete span"
+    );
+}
+
+#[test]
+fn explain_covers_arrival_to_completion() {
+    let res = run_obs(50, 60, SchedulerKind::Philae, 1 << 16);
+    let snap = res.obs.as_ref().expect("obs snapshot");
+    let timelines = snap.timelines();
+    assert_eq!(timelines.len(), 60, "one timeline per coflow");
+
+    let tl = snap.explain(0).expect("coflow 0 timeline");
+    let finished = tl.finished.expect("coflow 0 completed");
+    assert!(finished > tl.arrival, "completion after arrival");
+    assert!(!tl.segments.is_empty(), "timeline has segments");
+    // segments are contiguous and cover the whole lifetime
+    let mut cursor = tl.arrival;
+    for seg in &tl.segments {
+        assert_eq!(seg.start.to_bits(), cursor.to_bits(), "segments must be contiguous");
+        assert!(seg.end >= seg.start);
+        cursor = seg.end;
+    }
+    assert_eq!(cursor.to_bits(), finished.to_bits(), "segments must end at completion");
+    // decomposition adds back up to the CCT
+    let total: f64 = [
+        SegmentKind::Waiting,
+        SegmentKind::Sampling,
+        SegmentKind::Scheduled,
+        SegmentKind::Starved,
+    ]
+    .iter()
+    .map(|&k| tl.total(k))
+    .sum();
+    let cct = finished - tl.arrival;
+    assert!(
+        (total - cct).abs() <= 1e-9 * cct.max(1.0),
+        "segment totals {total} must recompose the CCT {cct}"
+    );
+    // the human rendering mentions the coflow and every segment class total
+    let report = tl.render();
+    assert!(report.contains("coflow 0"), "render names the coflow: {report}");
+    assert!(report.contains("scheduled"), "render lists segment classes: {report}");
+
+    // (not NO_COFLOW — that sentinel tags plane-wide events, not a coflow)
+    assert!(snap.explain(1 << 60).is_none(), "unknown coflow yields no timeline");
+}

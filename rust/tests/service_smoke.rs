@@ -3,7 +3,7 @@
 //! and the measured interval accounting is sane.
 
 use philae::coordinator::SchedulerKind;
-use philae::service::{run_service, ServiceConfig};
+use philae::service::{run_service, run_soak, ServiceConfig};
 use philae::trace::{DeadlineModel, TraceSpec};
 
 fn svc(kind: SchedulerKind) -> ServiceConfig {
@@ -180,4 +180,59 @@ fn service_with_engine_if_artifacts_present() {
     let report = run_service(&trace, &cfg).expect("engine service run");
     assert!(report.used_engine);
     assert!(report.ccts.iter().all(|c| c.is_finite() && *c > 0.0));
+}
+
+#[test]
+fn service_obs_plane_records_lifecycle_and_metrics() {
+    let trace = TraceSpec::tiny(8, 12).seed(5).generate();
+
+    // obs off (the default): the report carries no snapshot
+    let off = run_service(&trace, &svc(SchedulerKind::Philae)).expect("obs-off run");
+    assert!(off.obs.is_none(), "obs defaults to disabled");
+    // …but the realloc histogram is always on and ordered
+    assert!(off.realloc_p999 >= off.realloc_p99);
+    assert!(off.realloc_p99 >= off.realloc_p50);
+
+    // obs on: lifecycle events + service gauges/counters survive to the report
+    let cfg = ServiceConfig { obs_events: 1 << 14, coordinators: 2, ..svc(SchedulerKind::Philae) };
+    let report = run_service(&trace, &cfg).expect("obs-on run");
+    assert!(report.ccts.iter().all(|c| c.is_finite() && *c > 0.0));
+    let snap = report.obs.as_ref().expect("obs snapshot in report");
+
+    use philae::obs::EventKind;
+    let count = |k: EventKind| snap.events.iter().filter(|e| e.kind == k).count();
+    assert_eq!(count(EventKind::Arrival), trace.coflows.len(), "one Arrival per coflow");
+    assert_eq!(
+        count(EventKind::CoflowComplete),
+        trace.coflows.len(),
+        "one CoflowComplete per coflow"
+    );
+    assert_eq!(count(EventKind::FlowComplete), trace.flows.len(), "one FlowComplete per flow");
+
+    // wall-clock stamps are live (unlike pure simulation's zeros)
+    assert!(snap.events.iter().any(|e| e.wall_ns > 0), "service events carry wall time");
+
+    // registry: the realloc histogram mirrors every reallocation, and the
+    // K=2 run published a lease-utilization gauge per shard
+    let h = snap.registry.hist_named("svc.realloc_ns").expect("svc.realloc_ns");
+    assert_eq!(h.count(), report.rate_calcs, "histogram sees every reallocation");
+    assert!(snap.registry.gauge_value("svc.lease_util.0").is_some());
+    assert!(snap.registry.gauge_value("svc.lease_util.1").is_some());
+    assert!(snap.registry.gauge_value("svc.input_queue_depth").is_some());
+}
+
+#[test]
+fn soak_registration_rides_the_buffer_pool() {
+    // run_soak's feeder awaits each registration reply and the coordinator
+    // boomerangs the consumed record before replying — so from the second
+    // registration on, every record buffer must come from the pool.
+    let trace = TraceSpec::tiny(8, 12).seed(5).generate();
+    let report = run_soak(&trace, &svc(SchedulerKind::Philae)).expect("soak run");
+    assert!(report.ccts.iter().all(|c| c.is_finite() && *c > 0.0));
+    assert!(
+        report.register_bufs_reused >= trace.coflows.len() as u64 - 1,
+        "register path fell back to fresh buffers: {} reused of {} coflows",
+        report.register_bufs_reused,
+        trace.coflows.len()
+    );
 }

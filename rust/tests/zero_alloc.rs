@@ -82,6 +82,51 @@ fn steady_state_reallocation_performs_zero_heap_allocations() {
         );
     }
     compat_wrappers_still_allocate_but_agree();
+    obs_record_paths_are_allocation_free();
+}
+
+fn obs_record_paths_are_allocation_free() {
+    // The observability hot paths must be free to leave always-on:
+    // `LogHistogram::record` is two array index bumps into a fixed
+    // 64×64 bucket grid, and `Recorder::push` writes into a ring whose
+    // backing store is fully reserved at construction — neither may
+    // touch the heap once built.
+    use philae::obs::{Event, EventKind, LogHistogram, Recorder};
+
+    let mut hist = LogHistogram::new();
+    let mut ring = Recorder::new(256);
+    let ev = Event {
+        t: 1.0,
+        wall_ns: 0,
+        seq: 0,
+        shard: 0,
+        kind: EventKind::Scheduled,
+        coflow: 3,
+        a: 0,
+        b: 0,
+    };
+    // warm (construction already reserved everything, but keep the
+    // window convention of the main test)
+    hist.record(17);
+    ring.push(ev);
+
+    let before = allocs();
+    for i in 0..10_000u64 {
+        hist.record(i * 131 + 1);
+        ring.push(Event { seq: i, ..ev });
+    }
+    // percentile queries walk the fixed grid — also alloc-free
+    let p = hist.percentile(0.99);
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "obs record path allocated {} times",
+        after - before
+    );
+    assert!(p > 0, "p99 of a populated histogram must be nonzero");
+    assert_eq!(ring.len(), 256, "ring must sit at capacity after wraparound");
+    assert!(ring.dropped() > 0, "wraparound must count drops");
 }
 
 fn compat_wrappers_still_allocate_but_agree() {
