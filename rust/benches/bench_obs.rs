@@ -6,6 +6,11 @@
 //!   obs on (64Ki-event ring). The ratio of the two minimum wall times is
 //!   the number the CI gate holds under the ≤10% ceiling
 //!   (`overhead.events_ratio_on_vs_off` in `ci/bench_baseline.json`).
+//! * **archive overhead** — the same run with the durable segment spool
+//!   armed on top of the ring (`--archive-dir`). Spooling happens on a
+//!   background thread off pooled buffers, so the gated ceiling
+//!   (`overhead.archive_ratio_vs_off`) is deliberately conservative: it
+//!   catches the spool blocking the hot path, not disk speed.
 //! * **histogram** — `LogHistogram::record` throughput: two index bumps
 //!   into the fixed 64×64 bucket grid, no allocation, no locks.
 //! * **recorder** — `ObsPlane::emit` throughput: one ring store plus a
@@ -52,6 +57,38 @@ fn main() {
         base.ccts.len()
     );
 
+    // ring + durable archive spool (background writer, pooled buffers)
+    let arc_dir =
+        std::env::temp_dir().join(format!("philae_bench_arc_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&arc_dir);
+    let run_archived = || {
+        let sim_cfg = SimConfig {
+            obs_events: 1 << 16,
+            archive: Some(philae::obs::ArchiveConfig::new(&arc_dir)),
+            ..SimConfig::default()
+        };
+        let mut sched = SchedulerKind::Philae.build(&trace, &cfg);
+        Simulation::run_with(&trace, sched.as_mut(), &cfg, &sim_cfg)
+    };
+    let arch = run_archived(); // warm (and assert the spool kept everything)
+    let stats = arch.obs.as_ref().and_then(|s| s.archive).expect("archive armed");
+    assert_eq!(
+        stats.spooled,
+        stats.kept + stats.dropped_ring + stats.dropped_spool,
+        "archive accounting identity broken"
+    );
+    assert_eq!(stats.io_errors, 0, "archive spool hit io errors");
+    let (wall_arc, _) = common::time_it(iters, run_archived);
+    let arc_ratio = wall_arc / wall_off;
+    println!(
+        "sim + archive spool:  {:.1} ms | ratio vs off {arc_ratio:.4} ({} kept, {} segment(s), {} bytes)",
+        wall_arc * 1e3,
+        stats.kept,
+        stats.segments,
+        stats.bytes
+    );
+    let _ = std::fs::remove_dir_all(&arc_dir);
+
     // histogram record throughput
     let mut hist = LogHistogram::new();
     let n_hist = 4_000_000u64;
@@ -82,13 +119,28 @@ fn main() {
             "    \"wall_off_s\": {:.6},\n",
             "    \"wall_on_s\": {:.6},\n",
             "    \"events_ratio_on_vs_off\": {:.6},\n",
-            "    \"events_recorded\": {}\n",
+            "    \"events_recorded\": {},\n",
+            "    \"wall_archived_s\": {:.6},\n",
+            "    \"archive_ratio_vs_off\": {:.6},\n",
+            "    \"archive_kept\": {},\n",
+            "    \"archive_segments\": {},\n",
+            "    \"archive_bytes\": {}\n",
             "  }},\n",
             "  \"hist\": {{ \"records_per_sec\": {:.1} }},\n",
             "  \"recorder\": {{ \"emits_per_sec\": {:.1} }}\n",
             "}}\n"
         ),
-        wall_off, wall_on, ratio, recorded, hist_rate, emit_rate
+        wall_off,
+        wall_on,
+        ratio,
+        recorded,
+        wall_arc,
+        arc_ratio,
+        stats.kept,
+        stats.segments,
+        stats.bytes,
+        hist_rate,
+        emit_rate
     );
     common::write_json("BENCH_obs.json", &json);
 }

@@ -979,8 +979,9 @@ impl CoordinatorCluster {
         }
         self.reconciliations += 1;
         if self.obs_on {
+            // a = shard count, b = migrations performed this round
             self.obs_pending
-                .push((0, EventKind::LeaseReconcile, obs::NO_COFLOW, k as u64, 0));
+                .push((0, EventKind::LeaseReconcile, obs::NO_COFLOW, k as u64, moves as u64));
         }
     }
 

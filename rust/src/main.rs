@@ -4,6 +4,7 @@
 //! philae sim       --scheduler philae --ports 150 --coflows 526
 //! philae compare   --ports 150 --coflows 526 [--baseline aalo --candidate philae]
 //! philae serve     --scheduler philae --coflows 60 [--artifacts artifacts]
+//! philae obs       archive-dir [--kind sched --csv-out events.csv]
 //! philae gen-trace --ports 150 --coflows 526 --out fb_like.txt
 //! ```
 //!
@@ -23,7 +24,7 @@ const USAGE: &str = "\
 philae — sampling-based coflow scheduling (Philae, Jajoo/Hu/Lin 2021)
 
 USAGE:
-  philae <sim|compare|serve|explain|gen-trace> [flags]
+  philae <sim|compare|serve|explain|obs|gen-trace> [flags]
 
 COMMON FLAGS:
   --trace <file>       load a coflow-benchmark trace instead of generating
@@ -52,6 +53,13 @@ COMMON FLAGS:
                        chrome://tracing; sim + serve)
   --metrics-out <file> write the metrics + event-log snapshot (JSON, schema
                        philae.obs.v1 — see docs/OBSERVABILITY.md)
+  --archive-dir <dir>  durable obs archive: spool every recorded event to
+                       rotated, checksummed segment files under <dir>
+                       (bounded memory; replay offline with `philae obs`;
+                       sim + serve)
+  --heatmap-out <file> per-port utilization heatmap time-series; a .json
+                       path writes the philae.obs.heatmap.v1 JSON, anything
+                       else the port,dir,bin CSV (sim paths)
 
 sim:      --scheduler <name>                            [default: philae]
           --stream     admit coflows from a bounded-memory arrival stream
@@ -61,15 +69,26 @@ sim:      --scheduler <name>                            [default: philae]
                        and this run's optimality gap (materialized only)
 compare:  --baseline <name> --candidate <name>          [default: aalo vs philae]
 serve:    --scheduler <name> --artifacts <dir> --time-scale <x> --delta-ms <n>
-          --checkpoint-dir <dir> --agent-miss <auto|n>
+          --checkpoint-dir <dir> --agent-miss <auto|n> --tick-max <ms>
           (accepts every scheduler below; --artifacts drives PJRT, philae
           only; --agent-miss ages silent ports out of the plan — a number
           is a flat threshold in δ intervals, `auto` derives it per port
           from the observed report cadence; a checkpoint-dir holding
-          shard_<s>.ckpt seals from a previous run is restored on start)
+          shard_<s>.ckpt seals from a previous run is restored on start;
+          --tick-max arms the adaptive tick: δ stretches up to <ms> when
+          reallocation work crowds the period and shrinks back when it
+          clears, each retarget logged as a tick_adjust event)
 explain:  philae explain <cid> [sim flags] — re-run the sim with the
           flight recorder on and print where coflow <cid>'s time went
           (waiting / sampling / scheduled / starved segments + totals)
+          philae explain --all [--csv-out <file>] [sim flags] — the same
+          decomposition for every coflow at once, as CSV
+          (both forms accept --from <archive-dir> to replay a durable
+          archive instead of re-running the simulation)
+obs:      philae obs <archive-dir> [--kind <event>] [--coflow <cid>]
+          [--shard <s>] [--csv-out <file>] [--trace-out <file>]
+          offline archive queries: summarize the segments, filter the
+          event log, re-export it as CSV or a Chrome trace
 gen-trace: --out <file>
 
 schedulers: philae aalo sebf scf fifo saath philae-lcb philae-ec1
@@ -90,7 +109,7 @@ impl Flags {
             }
             let key = a.trim_start_matches("--").to_string();
             // boolean flags
-            if key == "wide-only" || key == "stream" || key == "gap" {
+            if key == "wide-only" || key == "stream" || key == "gap" || key == "all" {
                 map.insert(key, "true".into());
                 i += 1;
                 continue;
@@ -189,10 +208,28 @@ fn build_trace(flags: &Flags) -> anyhow::Result<Trace> {
 const OBS_RING_DEFAULT: usize = 1 << 16;
 
 /// Events per shard the observability plane should record: the default
-/// ring when either output flag asks for it, 0 (plane off) otherwise.
+/// ring when any obs output flag asks for it, 0 (plane off) otherwise.
 fn obs_ring(flags: &Flags) -> usize {
-    if flags.has("trace-out") || flags.has("metrics-out") {
+    if flags.has("trace-out")
+        || flags.has("metrics-out")
+        || flags.has("archive-dir")
+        || flags.has("heatmap-out")
+    {
         OBS_RING_DEFAULT
+    } else {
+        0
+    }
+}
+
+/// `--archive-dir` → the durable spool config threaded into the run.
+fn archive_cfg(flags: &Flags) -> Option<philae::obs::ArchiveConfig> {
+    flags.get_opt("archive-dir").map(philae::obs::ArchiveConfig::new)
+}
+
+/// `--heatmap-out` arms the per-port utilization heatmap (sim paths).
+fn heatmap_bins(flags: &Flags) -> usize {
+    if flags.has("heatmap-out") {
+        philae::obs::heatmap::DEFAULT_BINS
     } else {
         0
     }
@@ -221,6 +258,31 @@ fn write_obs_outputs(
         std::fs::write(path, snap.to_json().to_string())?;
         println!("  wrote metrics snapshot (philae.obs.v1) to {path}");
     }
+    if let Some(path) = flags.get_opt("heatmap-out") {
+        let snap =
+            obs.ok_or_else(|| anyhow::anyhow!("--heatmap-out: the run recorded no events"))?;
+        let hm = snap.heatmap.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("--heatmap-out: this path records no heatmap (sim paths only)")
+        })?;
+        if path.ends_with(".json") {
+            std::fs::write(path, hm.to_json().to_string())?;
+        } else {
+            std::fs::write(path, hm.to_csv())?;
+        }
+        println!(
+            "  wrote port heatmap ({} ports × {} bins, {}s wide, {} folds) to {path}",
+            hm.ports(),
+            hm.bins(),
+            hm.bin_width(),
+            hm.folds(),
+        );
+    }
+    if let Some(a) = obs.and_then(|s| s.archive.as_ref()) {
+        println!(
+            "  archive: spooled {} = kept {} + dropped_ring {} + dropped_spool {} | {} segment(s), {} bytes, {} io error(s)",
+            a.spooled, a.kept, a.dropped_ring, a.dropped_spool, a.segments, a.bytes, a.io_errors,
+        );
+    }
     Ok(())
 }
 
@@ -242,7 +304,14 @@ fn run_sim(
     let alloc_shards = flags.get("shards", 1usize).map_err(anyhow::Error::msg)?;
     let checkpoint_every = flags.get("checkpoint-every", 0u64).map_err(anyhow::Error::msg)?;
     let chaos = flags.get("chaos", 0u64).map_err(anyhow::Error::msg)?;
-    let sim_cfg = SimConfig { coordinators, alloc_shards, obs_events, ..SimConfig::default() };
+    let sim_cfg = SimConfig {
+        coordinators,
+        alloc_shards,
+        obs_events,
+        archive: archive_cfg(flags),
+        heatmap_bins: heatmap_bins(flags),
+        ..SimConfig::default()
+    };
     if coordinators > 1 {
         let mut cluster = CoordinatorCluster::with_coordinators(coordinators, kind, trace, cfg);
         if checkpoint_every > 0 || chaos > 0 {
@@ -295,6 +364,8 @@ fn run_sim_streaming(
         coordinators,
         alloc_shards,
         obs_events: obs_ring(flags),
+        archive: archive_cfg(flags),
+        heatmap_bins: heatmap_bins(flags),
         ..SimConfig::default()
     };
     let loaded;
@@ -353,16 +424,24 @@ fn main() -> anyhow::Result<()> {
         eprintln!("{USAGE}");
         std::process::exit(2);
     };
-    // `explain` takes its coflow id as a positional argument before the
-    // flags; everything else is pure `--flag` pairs
+    // `explain` takes its coflow id (absent for `--all`) and `obs` its
+    // archive directory as a positional argument before the flags;
+    // everything else is pure `--flag` pairs
     let mut flag_args = &args[1..];
     let mut explain_cid: Option<u64> = None;
+    let mut obs_dir: Option<String> = None;
     if cmd == "explain" {
-        let raw = args
-            .get(1)
-            .ok_or_else(|| anyhow::anyhow!("explain requires a coflow id: philae explain <cid>"))?;
-        explain_cid =
-            Some(raw.parse().map_err(|e| anyhow::anyhow!("explain <cid>: {e}"))?);
+        if let Some(raw) = args.get(1).filter(|a| !a.starts_with("--")) {
+            explain_cid =
+                Some(raw.parse().map_err(|e| anyhow::anyhow!("explain <cid>: {e}"))?);
+            flag_args = &args[2..];
+        }
+    }
+    if cmd == "obs" {
+        let raw = args.get(1).filter(|a| !a.starts_with("--")).ok_or_else(|| {
+            anyhow::anyhow!("obs requires an archive directory: philae obs <dir>")
+        })?;
+        obs_dir = Some(raw.clone());
         flag_args = &args[2..];
     }
     let flags = Flags::parse(flag_args).map_err(|e| {
@@ -418,28 +497,100 @@ fn main() -> anyhow::Result<()> {
             write_obs_outputs(res.obs.as_ref(), &flags)?;
         }
         "explain" => {
-            let cid = explain_cid.expect("parsed before the flags");
-            let kind: SchedulerKind = flags
-                .get("scheduler", SchedulerKind::Philae)
-                .map_err(anyhow::Error::msg)?;
-            let t = build_trace(&flags)?;
+            let all = flags.has("all");
             anyhow::ensure!(
-                (cid as usize) < t.coflows.len(),
-                "coflow {cid} out of range: trace has {} coflows",
-                t.coflows.len()
+                explain_cid.is_some() || all,
+                "explain needs a coflow id or --all: philae explain <cid> | philae explain --all"
             );
-            let res = run_sim(&t, kind, &cfg, &flags, obs_ring(&flags).max(OBS_RING_DEFAULT))?;
-            let snap = res.obs.as_ref().expect("explain runs with the recorder on");
-            match snap.explain(cid) {
-                Some(tl) => print!("{}", tl.render()),
-                None => anyhow::bail!(
-                    "coflow {cid} has no surviving events (ring dropped {}); \
-                     the flight recorder keeps the newest {} events per shard",
-                    snap.dropped,
-                    OBS_RING_DEFAULT,
-                ),
+            // --from <archive-dir> replays a durable archive instead of
+            // re-running the simulation
+            let snap: philae::obs::ObsSnapshot = match flags.get_opt("from") {
+                Some(dir) => philae::obs::ArchiveReader::snapshot(std::path::Path::new(dir))?,
+                None => {
+                    let kind: SchedulerKind = flags
+                        .get("scheduler", SchedulerKind::Philae)
+                        .map_err(anyhow::Error::msg)?;
+                    let t = build_trace(&flags)?;
+                    if let Some(cid) = explain_cid {
+                        anyhow::ensure!(
+                            (cid as usize) < t.coflows.len(),
+                            "coflow {cid} out of range: trace has {} coflows",
+                            t.coflows.len()
+                        );
+                    }
+                    let res =
+                        run_sim(&t, kind, &cfg, &flags, obs_ring(&flags).max(OBS_RING_DEFAULT))?;
+                    res.obs.expect("explain runs with the recorder on")
+                }
+            };
+            if all {
+                let csv = snap.explain_all_csv();
+                match flags.get_opt("csv-out") {
+                    Some(path) => {
+                        std::fs::write(path, &csv)?;
+                        println!(
+                            "wrote CCT decomposition for {} coflows to {path}",
+                            csv.lines().count().saturating_sub(1),
+                        );
+                    }
+                    None => print!("{csv}"),
+                }
+            } else {
+                let cid = explain_cid.expect("checked above");
+                match snap.explain(cid) {
+                    Some(tl) => print!("{}", tl.render()),
+                    None => anyhow::bail!(
+                        "coflow {cid} has no surviving events (ring dropped {}); \
+                         the flight recorder keeps the newest {} events per shard — \
+                         run with --archive-dir and query the archive via --from \
+                         for a complete log",
+                        snap.dropped,
+                        OBS_RING_DEFAULT,
+                    ),
+                }
             }
-            write_obs_outputs(res.obs.as_ref(), &flags)?;
+            write_obs_outputs(Some(&snap), &flags)?;
+        }
+        "obs" => {
+            let dir = obs_dir.expect("parsed before the flags");
+            let out = philae::obs::ArchiveReader::read_dir(std::path::Path::new(&dir))?;
+            print!("{}", out.summary());
+            let stats = out.stats;
+            let mut events = out.events;
+            // filters narrow the log for the exports below
+            if let Some(k) = flags.get_opt("kind") {
+                let kind = philae::obs::EventKind::parse(k)
+                    .ok_or_else(|| anyhow::anyhow!("--kind: unknown event kind {k:?}"))?;
+                events.retain(|e| e.kind == kind);
+            }
+            if let Some(c) = flags.get_opt("coflow") {
+                let cid: u64 = c.parse().map_err(|e| anyhow::anyhow!("--coflow: {e}"))?;
+                events.retain(|e| e.coflow == cid);
+            }
+            if let Some(s) = flags.get_opt("shard") {
+                let sh: u32 = s.parse().map_err(|e| anyhow::anyhow!("--shard: {e}"))?;
+                events.retain(|e| e.shard == sh);
+            }
+            if flags.has("kind") || flags.has("coflow") || flags.has("shard") {
+                println!("filtered: {} event(s) match", events.len());
+            }
+            let recorded = events.len() as u64;
+            let snap = philae::obs::ObsSnapshot {
+                registry: Default::default(),
+                events,
+                dropped: 0,
+                recorded,
+                archive: stats,
+                heatmap: None,
+            };
+            if let Some(path) = flags.get_opt("csv-out") {
+                std::fs::write(path, snap.to_csv())?;
+                println!("  wrote event CSV to {path}");
+            }
+            if let Some(path) = flags.get_opt("trace-out") {
+                std::fs::write(path, snap.chrome_trace_json())?;
+                println!("  wrote Chrome trace to {path}");
+            }
         }
         "compare" => {
             let t = build_trace(&flags)?;
@@ -501,6 +652,16 @@ fn main() -> anyhow::Result<()> {
                 },
                 agent_miss_auto: flags.get_opt("agent-miss") == Some("auto"),
                 obs_events: obs_ring(&flags),
+                archive: archive_cfg(&flags),
+                tick_max: match flags.get_opt("tick-max") {
+                    None => None,
+                    Some(v) => {
+                        let ms: u64 =
+                            v.parse().map_err(|e| anyhow::anyhow!("--tick-max: {e}"))?;
+                        anyhow::ensure!(ms > 0, "--tick-max must be a positive ms count");
+                        Some(Duration::from_millis(ms))
+                    }
+                },
             };
             let report = run_service(&t, &svc)?;
             println!(
@@ -538,6 +699,12 @@ fn main() -> anyhow::Result<()> {
                 report.realloc_p999 * 1e3,
                 report.sched_bufs_reused,
             );
+            if report.tick_adjusts > 0 {
+                println!(
+                    "  adaptive δ: {} tick retargets (gauge svc.tick_period_s holds the final period)",
+                    report.tick_adjusts,
+                );
+            }
             write_obs_outputs(report.obs.as_ref(), &flags)?;
             if report.checkpoints_written > 0
                 || report.crashes_injected > 0

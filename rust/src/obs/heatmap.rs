@@ -1,0 +1,266 @@
+//! Per-port utilization heatmap time-series.
+//!
+//! The paper's per-port evidence (skewed load, stragglers, the "did
+//! sampling starve a port?" question) needs a port×time utilization
+//! matrix, not end-of-run scalars. This is a *downsampled* one: time is
+//! split into a fixed number of bins and each port accumulates the bytes
+//! it moved (up = egress at the sender, down = ingress at the receiver)
+//! per bin. Memory is `2 × ports × bins × 8` bytes regardless of run
+//! length — when the run outgrows the current horizon, the bin width
+//! doubles and adjacent bins fold together (pairwise sums), the same
+//! trick streaming percentile sketches use: cheap, exact in total bytes,
+//! and bounded forever.
+//!
+//! The engine feeds it from the analytic advance step (`advance_to`
+//! knows every running flow's rate and the interval length, so
+//! `rate × dt` bytes attribute to `[t0, t1)` with no extra bookkeeping),
+//! which means bins are exact byte counts, not samples. Port capacities
+//! are copied from the fabric at construction so utilization
+//! (`bytes / (capacity × bin_width)`) exports without re-threading the
+//! fabric through every reporting path.
+
+use crate::util::JsonValue;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Default number of time bins (`SimConfig::heatmap_bins` overrides).
+pub const DEFAULT_BINS: usize = 64;
+
+/// Downsampled port×time byte matrix with fold-on-overflow binning.
+#[derive(Debug, Clone)]
+pub struct Heatmap {
+    ports: usize,
+    bins: usize,
+    /// Seconds per bin; doubles when the horizon is outgrown.
+    bin_w: f64,
+    /// Bytes sent upward (egress) per `[port][bin]`, flattened.
+    up: Vec<f64>,
+    /// Bytes received downward (ingress) per `[port][bin]`, flattened.
+    down: Vec<f64>,
+    /// Per-port capacities (bytes/sec), copied from the fabric.
+    up_cap: Vec<f64>,
+    down_cap: Vec<f64>,
+    /// Number of fold-in-half compactions performed.
+    folds: u32,
+}
+
+impl Heatmap {
+    /// `bins` time bins starting `initial_bin_w` seconds wide; capacities
+    /// are the fabric's per-port rates (bytes/sec).
+    pub fn new(bins: usize, initial_bin_w: f64, up_cap: Vec<f64>, down_cap: Vec<f64>) -> Self {
+        let ports = up_cap.len().max(down_cap.len());
+        let bins = bins.max(2);
+        Heatmap {
+            ports,
+            bins,
+            bin_w: if initial_bin_w > 0.0 { initial_bin_w } else { 1.0 },
+            up: vec![0.0; ports * bins],
+            down: vec![0.0; ports * bins],
+            up_cap,
+            down_cap,
+            folds: 0,
+        }
+    }
+
+    pub fn ports(&self) -> usize {
+        self.ports
+    }
+
+    pub fn bins(&self) -> usize {
+        self.bins
+    }
+
+    /// Current bin width in seconds.
+    pub fn bin_width(&self) -> f64 {
+        self.bin_w
+    }
+
+    /// How many times the horizon doubled.
+    pub fn folds(&self) -> u32 {
+        self.folds
+    }
+
+    /// Double the bin width: bins (2i, 2i+1) fold into bin i, the upper
+    /// half zeroes out.
+    fn fold(&mut self) {
+        for m in [&mut self.up, &mut self.down] {
+            for p in 0..self.ports {
+                let row = p * self.bins;
+                for i in 0..self.bins / 2 {
+                    m[row + i] = m[row + 2 * i] + m[row + 2 * i + 1];
+                }
+                for i in self.bins / 2..self.bins {
+                    m[row + i] = 0.0;
+                }
+            }
+        }
+        self.bin_w *= 2.0;
+        self.folds += 1;
+    }
+
+    /// Attribute `bytes` moved from `src` (up) to `dst` (down) over
+    /// `[t0, t1)`, spread proportionally across the bins the interval
+    /// overlaps. Grows the horizon (by folding) until `t1` fits.
+    pub fn add(&mut self, src: usize, dst: usize, t0: f64, t1: f64, bytes: f64) {
+        if bytes <= 0.0 || t1 <= t0 || src >= self.ports || dst >= self.ports {
+            return;
+        }
+        while t1 >= self.bin_w * self.bins as f64 {
+            self.fold();
+        }
+        let span = t1 - t0;
+        let first = (t0 / self.bin_w).floor() as usize;
+        let last = ((t1 / self.bin_w).ceil() as usize).min(self.bins).max(first + 1);
+        for b in first..last {
+            let lo = (b as f64 * self.bin_w).max(t0);
+            let hi = ((b + 1) as f64 * self.bin_w).min(t1);
+            if hi <= lo {
+                continue;
+            }
+            let share = bytes * (hi - lo) / span;
+            self.up[src * self.bins + b] += share;
+            self.down[dst * self.bins + b] += share;
+        }
+    }
+
+    fn cap(&self, port: usize, up: bool) -> f64 {
+        let v = if up { &self.up_cap } else { &self.down_cap };
+        v.get(port).copied().unwrap_or(0.0)
+    }
+
+    /// Utilization of one cell: bytes / (capacity × bin width); 0 when
+    /// the capacity is unknown.
+    fn util(&self, port: usize, bin: usize, up: bool) -> f64 {
+        let cap = self.cap(port, up);
+        if cap <= 0.0 {
+            return 0.0;
+        }
+        let m = if up { &self.up } else { &self.down };
+        m[port * self.bins + bin] / (cap * self.bin_w)
+    }
+
+    /// CSV export: `port,dir,bin,t_start,t_end,bytes,utilization`, one
+    /// row per non-empty cell (zero cells omitted — sparse runs stay
+    /// small).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("port,dir,bin,t_start,t_end,bytes,utilization\n");
+        for p in 0..self.ports {
+            for (dir, up) in [("up", true), ("down", false)] {
+                let m = if up { &self.up } else { &self.down };
+                for b in 0..self.bins {
+                    let bytes = m[p * self.bins + b];
+                    if bytes <= 0.0 {
+                        continue;
+                    }
+                    let _ = writeln!(
+                        out,
+                        "{},{},{},{},{},{},{}",
+                        p,
+                        dir,
+                        b,
+                        b as f64 * self.bin_w,
+                        (b + 1) as f64 * self.bin_w,
+                        bytes,
+                        self.util(p, b, up),
+                    );
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON export (`philae.obs.heatmap.v1`): bin geometry, per-port
+    /// capacities, and the dense up/down byte matrices (row per port).
+    pub fn to_json(&self) -> JsonValue {
+        let matrix = |m: &Vec<f64>| {
+            JsonValue::Array(
+                (0..self.ports)
+                    .map(|p| {
+                        JsonValue::Array(
+                            m[p * self.bins..(p + 1) * self.bins]
+                                .iter()
+                                .map(|&v| JsonValue::Number(v))
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            )
+        };
+        let caps = |v: &Vec<f64>| {
+            JsonValue::Array(v.iter().map(|&c| JsonValue::Number(c)).collect())
+        };
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), JsonValue::String("philae.obs.heatmap.v1".into()));
+        root.insert("ports".into(), JsonValue::Number(self.ports as f64));
+        root.insert("bins".into(), JsonValue::Number(self.bins as f64));
+        root.insert("bin_width_s".into(), JsonValue::Number(self.bin_w));
+        root.insert("folds".into(), JsonValue::Number(self.folds as f64));
+        root.insert("up_capacity".into(), caps(&self.up_cap));
+        root.insert("down_capacity".into(), caps(&self.down_cap));
+        root.insert("up_bytes".into(), matrix(&self.up));
+        root.insert("down_bytes".into(), matrix(&self.down));
+        JsonValue::Object(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn total(m: &Heatmap) -> (f64, f64) {
+        (m.up.iter().sum(), m.down.iter().sum())
+    }
+
+    #[test]
+    fn bytes_split_proportionally_across_bins() {
+        let mut h = Heatmap::new(4, 1.0, vec![100.0; 2], vec![100.0; 2]);
+        // 100 bytes over [0.5, 2.5): 25% in bin 0, 50% in bin 1, 25% in bin 2
+        h.add(0, 1, 0.5, 2.5, 100.0);
+        assert!((h.up[0] - 25.0).abs() < 1e-9);
+        assert!((h.up[1] - 50.0).abs() < 1e-9);
+        assert!((h.up[2] - 25.0).abs() < 1e-9);
+        // dst mirrors into its down row (port 1, bin 1)
+        assert!((h.down[h.bins + 1] - 50.0).abs() < 1e-9);
+        let (u, d) = total(&h);
+        assert!((u - 100.0).abs() < 1e-9 && (d - 100.0).abs() < 1e-9);
+        // bin 1 at 50 B/s against 100 B/s capacity: 50% utilization
+        assert!((h.util(0, 1, true) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fold_preserves_totals_and_extends_horizon() {
+        let mut h = Heatmap::new(4, 1.0, vec![10.0], vec![10.0]);
+        h.add(0, 0, 0.0, 4.0, 40.0); // fills the initial 4 s horizon
+        assert_eq!(h.folds(), 1, "t1 == horizon forces one fold");
+        h.add(0, 0, 6.5, 7.5, 8.0); // fits the doubled 8 s horizon
+        assert_eq!(h.bin_width(), 2.0);
+        let (u, _) = total(&h);
+        assert!((u - 48.0).abs() < 1e-9, "folding never loses bytes");
+        // the late transfer landed past the folded-down prefix
+        assert!(h.up[3] > 0.0);
+    }
+
+    #[test]
+    fn exports_are_well_formed() {
+        let mut h = Heatmap::new(8, 0.5, vec![1e9; 3], vec![1e9; 3]);
+        h.add(2, 0, 0.0, 1.0, 5e8);
+        let csv = h.to_csv();
+        assert!(csv.starts_with("port,dir,bin,t_start,t_end,bytes,utilization\n"));
+        // 2 bins × (one up row for port 2 + one down row for port 0)
+        assert_eq!(csv.lines().count(), 5);
+        let json = h.to_json().to_string();
+        let v = JsonValue::parse(&json).expect("self-produced JSON parses");
+        assert_eq!(v.get("schema").and_then(|s| s.as_str()), Some("philae.obs.heatmap.v1"));
+        assert_eq!(v.get("ports").and_then(|n| n.as_f64()), Some(3.0));
+    }
+
+    #[test]
+    fn out_of_range_ports_and_empty_intervals_are_ignored() {
+        let mut h = Heatmap::new(4, 1.0, vec![1.0], vec![1.0]);
+        h.add(5, 0, 0.0, 1.0, 10.0); // src out of range
+        h.add(0, 0, 2.0, 2.0, 10.0); // zero-length interval
+        h.add(0, 0, 0.0, 1.0, 0.0); // zero bytes
+        let (u, d) = total(&h);
+        assert_eq!((u, d), (0.0, 0.0));
+    }
+}

@@ -31,6 +31,12 @@
 //! exist: `tests/zero_alloc.rs` pins `LogHistogram::record` and
 //! `Recorder::push` at zero heap allocations.
 
+pub mod archive;
+pub mod heatmap;
+
+pub use archive::{ArchiveConfig, ArchiveReader, ArchiveSpool, ArchiveStats};
+pub use heatmap::Heatmap;
+
 use crate::util::JsonValue;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -391,6 +397,9 @@ pub enum EventKind {
     AdmissionVerdict,
     /// Admission certificates expired. `a` = expired delta.
     AdmissionExpiry,
+    /// The live service retargeted its δ tick (adaptive cadence).
+    /// `a` = new period ns, `b` = previous period ns.
+    TickAdjust,
 }
 
 impl EventKind {
@@ -414,7 +423,71 @@ impl EventKind {
             EventKind::AgentReturn => "agent_return",
             EventKind::AdmissionVerdict => "admission_verdict",
             EventKind::AdmissionExpiry => "admission_expiry",
+            EventKind::TickAdjust => "tick_adjust",
         }
+    }
+
+    /// Every kind, in wire-code order (summaries, CLI filters).
+    pub fn all() -> &'static [EventKind] {
+        &[
+            EventKind::Arrival,
+            EventKind::PilotStart,
+            EventKind::Estimate,
+            EventKind::Phase,
+            EventKind::QueueChange,
+            EventKind::Scheduled,
+            EventKind::Starved,
+            EventKind::FlowComplete,
+            EventKind::CoflowComplete,
+            EventKind::Retire,
+            EventKind::Migration,
+            EventKind::LeaseReconcile,
+            EventKind::Checkpoint,
+            EventKind::Restore,
+            EventKind::AgentAgeOut,
+            EventKind::AgentReturn,
+            EventKind::AdmissionVerdict,
+            EventKind::AdmissionExpiry,
+            EventKind::TickAdjust,
+        ]
+    }
+
+    /// Stable on-disk code (`obs/archive.rs` segment records). Codes are
+    /// append-only: a new kind takes the next free value, existing codes
+    /// never change, so old archives stay readable.
+    pub fn code(&self) -> u8 {
+        match self {
+            EventKind::Arrival => 0,
+            EventKind::PilotStart => 1,
+            EventKind::Estimate => 2,
+            EventKind::Phase => 3,
+            EventKind::QueueChange => 4,
+            EventKind::Scheduled => 5,
+            EventKind::Starved => 6,
+            EventKind::FlowComplete => 7,
+            EventKind::CoflowComplete => 8,
+            EventKind::Retire => 9,
+            EventKind::Migration => 10,
+            EventKind::LeaseReconcile => 11,
+            EventKind::Checkpoint => 12,
+            EventKind::Restore => 13,
+            EventKind::AgentAgeOut => 14,
+            EventKind::AgentReturn => 15,
+            EventKind::AdmissionVerdict => 16,
+            EventKind::AdmissionExpiry => 17,
+            EventKind::TickAdjust => 18,
+        }
+    }
+
+    /// Inverse of [`EventKind::code`]; `None` for unknown codes (an
+    /// archive written by a newer build).
+    pub fn from_code(c: u8) -> Option<EventKind> {
+        Self::all().get(c as usize).copied()
+    }
+
+    /// Parse the `as_str` spelling (CLI `--kind` filters).
+    pub fn parse(s: &str) -> Option<EventKind> {
+        Self::all().iter().copied().find(|k| k.as_str() == s)
     }
 }
 
@@ -483,10 +556,31 @@ impl Recorder {
         self.dropped
     }
 
+    /// Total events ever pushed (retained + evicted) — the archive
+    /// spool's per-ring drain cursor.
+    pub fn pushed(&self) -> u64 {
+        self.buf.len() as u64 + self.dropped
+    }
+
     /// Append the retained events, oldest first.
     pub fn extend_into(&self, out: &mut Vec<Event>) {
         out.extend_from_slice(&self.buf[self.head..]);
         out.extend_from_slice(&self.buf[..self.head]);
+    }
+
+    /// Append the **newest** `n` retained events, oldest-first. The
+    /// archive spool copies exactly the ring tail it has not spooled yet,
+    /// so a drain is O(new events) regardless of ring size.
+    pub fn extend_tail_into(&self, n: usize, out: &mut Vec<Event>) {
+        let n = n.min(self.buf.len());
+        // logical order is buf[head..] ++ buf[..head]; take its last n
+        if n <= self.head {
+            out.extend_from_slice(&self.buf[self.head - n..self.head]);
+        } else {
+            let from_first = n - self.head;
+            out.extend_from_slice(&self.buf[self.buf.len() - from_first..]);
+            out.extend_from_slice(&self.buf[..self.head]);
+        }
     }
 }
 
@@ -574,6 +668,12 @@ impl ObsPlane {
         self.seq
     }
 
+    /// Read-only view of the per-shard rings — the archive spool's drain
+    /// source (`obs/archive.rs`).
+    pub fn rings(&self) -> &[Recorder] {
+        &self.rings
+    }
+
     /// Merge the shard rings into one time-ordered snapshot.
     pub fn snapshot(self) -> ObsSnapshot {
         let mut events: Vec<Event> = Vec::new();
@@ -583,7 +683,14 @@ impl ObsPlane {
             dropped += r.dropped();
         }
         events.sort_by(|x, y| x.t.total_cmp(&y.t).then(x.seq.cmp(&y.seq)));
-        ObsSnapshot { registry: self.reg, events, dropped, recorded: self.seq }
+        ObsSnapshot {
+            registry: self.reg,
+            events,
+            dropped,
+            recorded: self.seq,
+            archive: None,
+            heatmap: None,
+        }
     }
 }
 
@@ -697,6 +804,11 @@ pub struct ObsSnapshot {
     pub dropped: u64,
     /// Events ever recorded (`events.len() + dropped`).
     pub recorded: u64,
+    /// Durable-archive accounting when the spool was armed
+    /// (`obs/archive.rs`); `None` on ring-only runs.
+    pub archive: Option<ArchiveStats>,
+    /// Per-port utilization heatmap when armed (`obs/heatmap.rs`).
+    pub heatmap: Option<Heatmap>,
 }
 
 impl ObsSnapshot {
@@ -710,6 +822,9 @@ impl ObsSnapshot {
         meta.insert("kept".into(), JsonValue::Number(self.events.len() as f64));
         meta.insert("dropped".into(), JsonValue::Number(self.dropped as f64));
         root.insert("events".into(), JsonValue::Object(meta));
+        if let Some(a) = &self.archive {
+            root.insert("archive".into(), a.to_json());
+        }
         let log: Vec<JsonValue> = self
             .events
             .iter()
@@ -759,80 +874,69 @@ impl ObsSnapshot {
 
     /// Per-coflow timelines for every coflow with events in the log.
     pub fn timelines(&self) -> Vec<CoflowTimeline> {
-        let mut ids: Vec<u64> = self
-            .events
-            .iter()
-            .filter(|e| e.coflow != NO_COFLOW)
-            .map(|e| e.coflow)
-            .collect();
-        ids.sort_unstable();
-        ids.dedup();
-        ids.into_iter().filter_map(|cid| self.explain(cid)).collect()
+        self.explain_all()
+    }
+
+    /// Fleet-wide CCT decomposition — every coflow's timeline in one
+    /// pass, ordered by coflow id. The events are stably re-sorted by
+    /// coflow (preserving the `(t, seq)` order within each) and the
+    /// segment state machine runs once per contiguous chunk: O(n log n)
+    /// total, where the per-coflow `explain` rescan would be
+    /// O(n × coflows) — prohibitive on million-coflow archives.
+    pub fn explain_all(&self) -> Vec<CoflowTimeline> {
+        let mut by_coflow: Vec<&Event> =
+            self.events.iter().filter(|e| e.coflow != NO_COFLOW).collect();
+        by_coflow.sort_by(|a, b| a.coflow.cmp(&b.coflow)); // stable sort
+        let last_t = self.events.last().map(|e| e.t).unwrap_or(0.0);
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < by_coflow.len() {
+            let cid = by_coflow[i].coflow;
+            let mut j = i;
+            while j < by_coflow.len() && by_coflow[j].coflow == cid {
+                j += 1;
+            }
+            if let Some(tl) = explain_events(cid, by_coflow[i..j].iter().copied(), last_t) {
+                out.push(tl);
+            }
+            i = j;
+        }
+        out
+    }
+
+    /// `philae explain --all` CSV: one row per coflow with the CCT and
+    /// its waiting / sampling / scheduled / starved totals (seconds).
+    /// `finished`/`cct` are empty for coflows still open in the log.
+    pub fn explain_all_csv(&self) -> String {
+        let mut out =
+            String::from("coflow,arrival,finished,cct,waiting,sampling,scheduled,starved\n");
+        for tl in self.explain_all() {
+            let (fin, cct) = match tl.finished {
+                Some(f) => (f.to_string(), (f - tl.arrival).to_string()),
+                None => (String::new(), String::new()),
+            };
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{},{},{},{}",
+                tl.coflow,
+                tl.arrival,
+                fin,
+                cct,
+                tl.total(SegmentKind::Waiting),
+                tl.total(SegmentKind::Sampling),
+                tl.total(SegmentKind::Scheduled),
+                tl.total(SegmentKind::Starved),
+            );
+        }
+        out
     }
 
     /// The `philae explain <cid>` query: replay the coflow's events into
     /// waiting / sampling / scheduled / starved segments. `None` when the
     /// log holds no events for `cid` (e.g. evicted by ring wraparound).
     pub fn explain(&self, cid: u64) -> Option<CoflowTimeline> {
-        let mut sampling = false;
-        // None until the first Scheduled/Starved verdict lands.
-        let mut rate: Option<bool> = None;
-        let label = |sampling: bool, rate: Option<bool>| -> SegmentKind {
-            match (rate, sampling) {
-                (Some(true), _) => SegmentKind::Scheduled,
-                (_, true) => SegmentKind::Sampling,
-                (Some(false), _) => SegmentKind::Starved,
-                _ => SegmentKind::Waiting,
-            }
-        };
-        let mut tl: Option<CoflowTimeline> = None;
-        let mut seg_start = 0.0f64;
-        let mut cur = SegmentKind::Waiting;
-        for e in self.events.iter().filter(|e| e.coflow == cid) {
-            if tl.is_none() {
-                // the first event opens the timeline (normally Arrival)
-                tl = Some(CoflowTimeline {
-                    coflow: cid,
-                    arrival: e.t,
-                    finished: None,
-                    segments: Vec::new(),
-                });
-                seg_start = e.t;
-            }
-            match e.kind {
-                EventKind::PilotStart => sampling = true,
-                EventKind::Estimate => sampling = false,
-                EventKind::Phase => sampling = e.a == 0,
-                EventKind::Scheduled => rate = Some(true),
-                EventKind::Starved => rate = Some(false),
-                EventKind::CoflowComplete => {
-                    let tl = tl.as_mut().expect("timeline opened above");
-                    if e.t > seg_start {
-                        tl.segments.push(Segment { kind: cur, start: seg_start, end: e.t });
-                    }
-                    tl.finished = Some(e.t);
-                    return Some(tl.clone());
-                }
-                _ => {}
-            }
-            let next = label(sampling, rate);
-            if next != cur {
-                let tl = tl.as_mut().expect("timeline opened above");
-                if e.t > seg_start {
-                    tl.segments.push(Segment { kind: cur, start: seg_start, end: e.t });
-                }
-                seg_start = e.t;
-                cur = next;
-            }
-        }
-        // unfinished coflow: close the open segment at the last event time
-        let mut tl = tl?;
-        if let Some(last) = self.events.iter().rev().find(|e| e.coflow != NO_COFLOW || true) {
-            if last.t > seg_start {
-                tl.segments.push(Segment { kind: cur, start: seg_start, end: last.t });
-            }
-        }
-        Some(tl)
+        let last_t = self.events.last().map(|e| e.t).unwrap_or(0.0);
+        explain_events(cid, self.events.iter().filter(|e| e.coflow == cid), last_t)
     }
 
     /// Chrome trace-event JSON (load in Perfetto or `chrome://tracing`):
@@ -879,6 +983,7 @@ impl ObsSnapshot {
                     | EventKind::AgentReturn
                     | EventKind::AdmissionVerdict
                     | EventKind::AdmissionExpiry
+                    | EventKind::TickAdjust
             );
             if span {
                 // wall duration (b, ns) when measured; 1 µs floor so the
@@ -916,6 +1021,74 @@ impl ObsSnapshot {
         out.push_str("]}");
         out
     }
+}
+
+/// The segment state machine shared by [`ObsSnapshot::explain`] and
+/// [`ObsSnapshot::explain_all`]: replay one coflow's events (in `(t, seq)`
+/// order) into contiguous waiting / sampling / scheduled / starved
+/// segments. `last_t` closes the open segment of an unfinished coflow at
+/// the log's final event time.
+fn explain_events<'a, I>(cid: u64, events: I, last_t: f64) -> Option<CoflowTimeline>
+where
+    I: IntoIterator<Item = &'a Event>,
+{
+    let mut sampling = false;
+    // None until the first Scheduled/Starved verdict lands.
+    let mut rate: Option<bool> = None;
+    let label = |sampling: bool, rate: Option<bool>| -> SegmentKind {
+        match (rate, sampling) {
+            (Some(true), _) => SegmentKind::Scheduled,
+            (_, true) => SegmentKind::Sampling,
+            (Some(false), _) => SegmentKind::Starved,
+            _ => SegmentKind::Waiting,
+        }
+    };
+    let mut tl: Option<CoflowTimeline> = None;
+    let mut seg_start = 0.0f64;
+    let mut cur = SegmentKind::Waiting;
+    for e in events {
+        if tl.is_none() {
+            // the first event opens the timeline (normally Arrival)
+            tl = Some(CoflowTimeline {
+                coflow: cid,
+                arrival: e.t,
+                finished: None,
+                segments: Vec::new(),
+            });
+            seg_start = e.t;
+        }
+        match e.kind {
+            EventKind::PilotStart => sampling = true,
+            EventKind::Estimate => sampling = false,
+            EventKind::Phase => sampling = e.a == 0,
+            EventKind::Scheduled => rate = Some(true),
+            EventKind::Starved => rate = Some(false),
+            EventKind::CoflowComplete => {
+                let tl = tl.as_mut().expect("timeline opened above");
+                if e.t > seg_start {
+                    tl.segments.push(Segment { kind: cur, start: seg_start, end: e.t });
+                }
+                tl.finished = Some(e.t);
+                return Some(tl.clone());
+            }
+            _ => {}
+        }
+        let next = label(sampling, rate);
+        if next != cur {
+            let tl = tl.as_mut().expect("timeline opened above");
+            if e.t > seg_start {
+                tl.segments.push(Segment { kind: cur, start: seg_start, end: e.t });
+            }
+            seg_start = e.t;
+            cur = next;
+        }
+    }
+    // unfinished coflow: close the open segment at the last event time
+    let mut tl = tl?;
+    if last_t > seg_start {
+        tl.segments.push(Segment { kind: cur, start: seg_start, end: last_t });
+    }
+    Some(tl)
 }
 
 #[cfg(test)]
@@ -1095,7 +1268,14 @@ mod tests {
         for (i, e) in events.iter_mut().enumerate() {
             e.seq = i as u64;
         }
-        let snap = ObsSnapshot { registry: Registry::default(), events, dropped: 0, recorded: 8 };
+        let snap = ObsSnapshot {
+            registry: Registry::default(),
+            events,
+            dropped: 0,
+            recorded: 8,
+            archive: None,
+            heatmap: None,
+        };
         let tl = snap.explain(5).expect("coflow 5 has events");
         assert_eq!(tl.arrival, 1.0);
         assert_eq!(tl.finished, Some(5.0));

@@ -98,6 +98,21 @@ impl<T> EventLoop<T> {
         }
     }
 
+    /// Current tick period.
+    pub fn period(&self) -> Duration {
+        self.period
+    }
+
+    /// Retarget the tick cadence (the live service's adaptive δ). The
+    /// next deadline is re-anchored one new period from **now**: a
+    /// stretch takes effect immediately instead of letting an
+    /// already-late deadline fire a burst of catch-up ticks at the old
+    /// cadence, and a shrink cannot schedule a deadline in the past.
+    pub fn set_period(&mut self, period: Duration) {
+        self.period = period;
+        self.next_tick = Instant::now() + period;
+    }
+
     /// Events delivered so far (via `poll` and `try_next`).
     pub fn events(&self) -> u64 {
         self.events
@@ -259,6 +274,19 @@ mod tests {
         assert!(lp.events() > 0);
         drop(lp);
         feeder.join().unwrap();
+    }
+
+    #[test]
+    fn set_period_retargets_tick() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        let mut lp = EventLoop::new(rx, Duration::from_secs(60));
+        assert_eq!(lp.period(), Duration::from_secs(60));
+        // shrinking re-anchors the deadline from now: the next poll ticks
+        // within milliseconds instead of a minute out
+        lp.set_period(Duration::from_millis(2));
+        assert!(matches!(lp.poll(), Wake::Tick));
+        assert_eq!(lp.period(), Duration::from_millis(2));
+        drop(tx);
     }
 
     #[test]

@@ -203,6 +203,18 @@ pub struct ServiceConfig {
     /// observability plane entirely — the report's `obs` stays `None` and
     /// no event payloads are built). See `obs::ObsPlane`.
     pub obs_events: usize,
+    /// Durable streaming archive for the flight recorder (needs
+    /// `obs_events` > 0): a background spooler drains the rings into
+    /// checksummed segment files under the configured directory, once per
+    /// δ interval (see `obs/archive.rs`).
+    pub archive: Option<obs::ArchiveConfig>,
+    /// Adaptive δ ceiling (`--tick-max`): when set, the live tick period
+    /// stretches in ×1.5 steps while measured interval pressure (realloc
+    /// p99 or last interval's busy time) crowds the current period, never
+    /// past this bound, and relaxes back toward `delta_wall` when
+    /// pressure subsides. Every retarget is recorded as a
+    /// [`EventKind::TickAdjust`] event. `None` = fixed cadence.
+    pub tick_max: Option<Duration>,
 }
 
 impl Default for ServiceConfig {
@@ -222,6 +234,8 @@ impl Default for ServiceConfig {
             agent_miss_intervals: 0,
             agent_miss_auto: false,
             obs_events: 0,
+            archive: None,
+            tick_max: None,
         }
     }
 }
@@ -286,6 +300,9 @@ pub struct ServiceReport {
     /// always 0 for [`run_service`], whose replayer registers at trace
     /// cadence where allocation is off the hot path).
     pub register_bufs_reused: u64,
+    /// Adaptive-δ retargets performed ([`ServiceConfig::tick_max`]);
+    /// 0 on fixed-cadence runs.
+    pub tick_adjusts: u64,
     /// Metrics + flight-recorder snapshot when
     /// [`ServiceConfig::obs_events`] > 0.
     pub obs: Option<ObsSnapshot>,
@@ -478,9 +495,26 @@ struct SvcObs {
     g_lease_util: Vec<obs::GaugeId>,
     c_migrations: obs::CounterId,
     c_reconciliations: obs::CounterId,
+    /// Adaptive-δ retargets ([`ServiceConfig::tick_max`]).
+    c_tick_adjusts: obs::CounterId,
+    /// Current tick period (seconds) after adaptive retargeting.
+    g_tick_period: obs::GaugeId,
     /// Mirror of the always-on realloc latency histogram, exported in the
     /// snapshot registry as `svc.realloc_ns`.
     h_realloc: obs::HistId,
+    /// Durable segment spool ([`ServiceConfig::archive`]); drained once
+    /// per δ interval, finalized into [`ObsSnapshot::archive`].
+    archive: Option<obs::ArchiveSpool>,
+}
+
+impl SvcObs {
+    /// Copy every ring tail pushed since the last call into the archive
+    /// spool (no-op when the archive is off).
+    fn drain_archive(&mut self) {
+        if let Some(spool) = self.archive.as_mut() {
+            spool.drain(&self.plane);
+        }
+    }
 }
 
 /// One live coordinator shard: its scheduler instance, owned coflows,
@@ -586,6 +620,12 @@ struct Coordinator {
     obs: Option<SvcObs>,
     /// Wall instant of the previous δ tick (tick-lag gauge).
     last_tick: Instant,
+    /// Adaptive-δ retargets performed ([`ServiceConfig::tick_max`]).
+    tick_adjusts: u64,
+    /// Coordinator busy seconds (calc + send + recv) over the interval
+    /// that just closed — the adaptive δ's second pressure signal beside
+    /// the realloc p99.
+    last_interval_busy: f64,
     // measured accounting
     stats: IntervalStats,
     rate_calc: RunningStat,
@@ -621,9 +661,13 @@ impl Coordinator {
         };
         let is_philae = matches!(cfg.kind, SchedulerKind::Philae);
         let k = cfg.coordinators.max(1);
-        let obs = (cfg.obs_events > 0).then(|| {
+        let obs = if cfg.obs_events > 0 {
             let mut plane = ObsPlane::new(cfg.obs_events);
-            SvcObs {
+            let archive = match cfg.archive.clone() {
+                Some(a) => Some(obs::ArchiveSpool::new(a)?),
+                None => None,
+            };
+            Some(SvcObs {
                 g_tick_lag: plane.reg.gauge("svc.tick_lag_s"),
                 g_queue_depth: plane.reg.gauge("svc.input_queue_depth"),
                 g_lease_util: (0..k)
@@ -631,10 +675,15 @@ impl Coordinator {
                     .collect(),
                 c_migrations: plane.reg.counter("svc.migrations"),
                 c_reconciliations: plane.reg.counter("svc.reconciliations"),
+                c_tick_adjusts: plane.reg.counter("svc.tick_adjusts"),
+                g_tick_period: plane.reg.gauge("svc.tick_period_s"),
                 h_realloc: plane.reg.hist("svc.realloc_ns"),
+                archive,
                 plane,
-            }
-        });
+            })
+        } else {
+            None
+        };
         let shards: Vec<SvcShard> = (0..k)
             .map(|_| SvcShard {
                 philae: is_philae.then(|| PhilaeCore::new(cfg.sched.clone())),
@@ -713,6 +762,8 @@ impl Coordinator {
             calc_hist: obs::LogHistogram::new(),
             obs,
             last_tick: Instant::now(),
+            tick_adjusts: 0,
+            last_interval_busy: 0.0,
             stats: IntervalStats::default(),
             rate_calc: RunningStat::default(),
             rate_send: RunningStat::default(),
@@ -923,12 +974,19 @@ impl Coordinator {
                 // saturated queue cannot starve interval work
                 Wake::Tick => {
                     if let Some(o) = self.obs.as_mut() {
-                        let lag = self.last_tick.elapsed().as_secs_f64()
-                            - self.cfg.delta_wall.as_secs_f64();
+                        // lag vs the *live* cadence: after an adaptive
+                        // stretch, lateness is measured against the
+                        // stretched period, not the configured floor
+                        let lag =
+                            self.last_tick.elapsed().as_secs_f64() - lp.period().as_secs_f64();
                         o.plane.reg.set_gauge(o.g_tick_lag, lag.max(0.0));
                     }
                     self.last_tick = Instant::now();
                     self.on_interval();
+                    self.adapt_tick(&mut lp);
+                    if let Some(o) = self.obs.as_mut() {
+                        o.drain_archive();
+                    }
                 }
                 Wake::Closed => break,
             }
@@ -965,7 +1023,15 @@ impl Coordinator {
                 deadline.expired = adm.expired;
             }
         }
-        let obs_snapshot = self.obs.take().map(|o| o.plane.snapshot());
+        let obs_snapshot = self.obs.take().map(|mut o| {
+            // final drain catches events emitted since the last tick,
+            // then the spool flushes, joins its writer, and reports
+            o.drain_archive();
+            let archive = o.archive.take().map(|spool| spool.finalize());
+            let mut snap = o.plane.snapshot();
+            snap.archive = archive;
+            snap
+        });
         Ok(ServiceReport {
             scheduler: if self.shards[0].philae.is_some() {
                 "philae".into()
@@ -1004,6 +1070,7 @@ impl Coordinator {
             realloc_p999: self.calc_hist.percentile_secs(0.999),
             sched_bufs_reused: self.sched_bufs.reused(),
             register_bufs_reused: 0, // patched by `run_soak` post-join
+            tick_adjusts: self.tick_adjusts,
             obs: obs_snapshot,
         })
     }
@@ -1136,12 +1203,54 @@ impl Coordinator {
                 self.iv_rate_calcs,
             );
         }
+        self.last_interval_busy = self.iv_calc + self.iv_send + self.iv_recv;
         self.iv_calc = 0.0;
         self.iv_send = 0.0;
         self.iv_recv = 0.0;
         self.iv_updates = 0;
         self.iv_rate_msgs = 0;
         self.iv_rate_calcs = 0;
+    }
+
+    /// Adaptive δ ([`ServiceConfig::tick_max`]; ROADMAP items 1a and 6d):
+    /// compare measured coordinator pressure — the larger of the realloc
+    /// p99 and the closed interval's busy seconds — against the *live*
+    /// tick period. Pressure crowding the period (> 70%) stretches it
+    /// ×1.5 (capped at `tick_max`); comfortable slack (< 20%) relaxes it
+    /// ÷1.5 (floored at the configured `delta_wall`). Each retarget
+    /// re-anchors the deadline ([`EventLoop::set_period`]) and is
+    /// recorded as a [`EventKind::TickAdjust`] event (`a` = new period
+    /// ns, `b` = previous), so post-hoc analysis can line δ changes up
+    /// with the lag and latency series.
+    fn adapt_tick(&mut self, lp: &mut EventLoop<Input>) {
+        let Some(tick_max) = self.cfg.tick_max else { return };
+        let period = lp.period().as_secs_f64();
+        let floor = self.cfg.delta_wall.as_secs_f64();
+        let ceil = tick_max.as_secs_f64().max(floor);
+        let pressure = self.calc_hist.percentile_secs(0.99).max(self.last_interval_busy);
+        let new = if pressure > 0.7 * period {
+            (period * 1.5).min(ceil)
+        } else if pressure < 0.2 * period {
+            (period / 1.5).max(floor)
+        } else {
+            return;
+        };
+        if (new - period).abs() < 1e-9 {
+            return; // already pinned at the floor or ceiling
+        }
+        lp.set_period(Duration::from_secs_f64(new));
+        self.tick_adjusts += 1;
+        if let Some(o) = self.obs.as_mut() {
+            o.plane.reg.inc(o.c_tick_adjusts, 1);
+            o.plane.reg.set_gauge(o.g_tick_period, new);
+        }
+        self.obs_emit(
+            0,
+            EventKind::TickAdjust,
+            obs::NO_COFLOW,
+            (new * 1e9).round() as u64,
+            (period * 1e9).round() as u64,
+        );
     }
 
     fn sim_now(&self) -> Time {

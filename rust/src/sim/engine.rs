@@ -153,6 +153,16 @@ pub struct SimConfig {
     /// decisions are never read from obs state, so CCTs are bit-identical
     /// either way (pinned in `tests/cct_equivalence.rs`).
     pub obs_events: usize,
+    /// Durable streaming archive (`obs/archive.rs`): when set (and
+    /// `obs_events` > 0), a background spooler drains the rings into
+    /// checksummed segment files under the configured directory, so the
+    /// full event log survives runs far larger than any ring cap. Same
+    /// bit-identity guarantee as the rings — the spool only reads.
+    pub archive: Option<obs::ArchiveConfig>,
+    /// Per-port utilization heatmap time bins (`0` = off; needs
+    /// `obs_events` > 0). [`SimResult::obs`] then carries the
+    /// [`crate::obs::Heatmap`] port×time byte matrix.
+    pub heatmap_bins: usize,
 }
 
 impl Default for SimConfig {
@@ -170,6 +180,8 @@ impl Default for SimConfig {
             coordinators: 1,
             fabric: None,
             obs_events: 0,
+            archive: None,
+            heatmap_bins: 0,
         }
     }
 }
@@ -866,6 +878,22 @@ struct EngineObs {
     adm_expired: u64,
     /// Registry handle for the full-fidelity realloc latency histogram.
     calc_hist: obs::HistId,
+    /// Durable segment spool ([`SimConfig::archive`]); drained once per
+    /// engine instant, finalized into [`ObsSnapshot::archive`].
+    archive: Option<obs::ArchiveSpool>,
+    /// Per-port utilization matrix ([`SimConfig::heatmap_bins`]), fed
+    /// `rate × dt` bytes from the analytic advance step.
+    heatmap: Option<obs::Heatmap>,
+}
+
+impl EngineObs {
+    /// Copy every ring tail pushed since the last call into the archive
+    /// spool (no-op when the archive is off).
+    fn drain_archive(&mut self) {
+        if let Some(spool) = self.archive.as_mut() {
+            spool.drain(&self.plane);
+        }
+    }
 }
 
 #[derive(Default)]
@@ -926,6 +954,12 @@ impl Engine {
         let nf = world.flows.len();
         let nc = world.coflows.len();
         let np = world.fabric.num_ports;
+        // captured before `world` moves into the struct literal below
+        let (fab_up_cap, fab_down_cap) = if sim_cfg.obs_events > 0 && sim_cfg.heatmap_bins > 0 {
+            (world.fabric.up_capacity.clone(), world.fabric.down_capacity.clone())
+        } else {
+            (Vec::new(), Vec::new())
+        };
         Engine {
             world,
             arrivals,
@@ -973,6 +1007,14 @@ impl Engine {
             obs: if sim_cfg.obs_events > 0 {
                 let mut plane = ObsPlane::new(sim_cfg.obs_events);
                 let calc_hist = plane.reg.hist("sim.calc_ns");
+                let archive = sim_cfg.archive.clone().map(|a| {
+                    obs::ArchiveSpool::new(a).expect("create obs archive directory")
+                });
+                let heatmap = (sim_cfg.heatmap_bins > 0).then(|| {
+                    // 0.25 s initial bins resolve short runs; long runs
+                    // fold the width upward as the horizon grows
+                    obs::Heatmap::new(sim_cfg.heatmap_bins, 0.25, fab_up_cap, fab_down_cap)
+                });
                 Some(Box::new(EngineObs {
                     plane,
                     phase_seen: vec![u8::MAX; nc],
@@ -984,6 +1026,8 @@ impl Engine {
                     adm_rejected: 0,
                     adm_expired: 0,
                     calc_hist,
+                    archive,
+                    heatmap,
                 }))
             } else {
                 None
@@ -1242,7 +1286,16 @@ impl Engine {
             o.plane.reg.inc(id, self.totals.rate_msgs);
             let id = o.plane.reg.counter("sim.update_msgs");
             o.plane.reg.inc(id, self.totals.update_msgs);
-            o.plane.snapshot()
+            // last drain catches events emitted after the final instant's
+            // scan (none today, but the ordering is load-bearing), then
+            // the spool flushes, joins its writer, and reports accounting
+            o.drain_archive();
+            let archive = o.archive.take().map(|spool| spool.finalize());
+            let heatmap = o.heatmap.take();
+            let mut snap = o.plane.snapshot();
+            snap.archive = archive;
+            snap.heatmap = heatmap;
+            snap
         });
         SimResult {
             scheduler: front.name(),
@@ -1362,6 +1415,9 @@ impl Engine {
                 o.sched_seen[cid] = verdict;
             }
         }
+        // spool this instant's ring tails to the durable archive (after
+        // every emit above, so a drain never splits an instant)
+        o.drain_archive();
     }
 
     /// Integrate flow progress up to `t`.
@@ -1373,6 +1429,20 @@ impl Engine {
             }
             for &cid in &self.world.active {
                 self.world.coflows[cid].bytes_sent += self.rate_sum[cid] * dt;
+            }
+            // per-port heatmap: the analytic step knows every running
+            // flow's rate over [now, t), so rate × dt bytes attribute to
+            // src (up) and dst (down) exactly — no sampling involved
+            if let Some(o) = self.obs.as_mut() {
+                if let Some(hm) = o.heatmap.as_mut() {
+                    let t0 = self.world.now;
+                    for &f in &self.running {
+                        let fl = &self.world.flows[f];
+                        if fl.rate > 0.0 {
+                            hm.add(fl.src, fl.dst, t0, t, fl.rate * dt);
+                        }
+                    }
+                }
             }
         }
         self.world.now = t;

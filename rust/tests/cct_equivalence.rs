@@ -420,3 +420,43 @@ fn obs_plane_is_invisible_to_scheduling() {
     assert_same_history(&off, &on, "cluster K=1 obs off vs on");
     assert!(on.obs.is_some(), "cluster obs-on run must carry a snapshot");
 }
+
+/// The durable archive spool is a pure observer too: draining the rings to
+/// disk on a background thread (`SimConfig::archive`) must leave every
+/// scheduler's event history bit-identical to the archive-off run. This is
+/// the pin that licenses arming `--archive-dir` on production-shaped runs.
+#[test]
+fn archive_spool_is_invisible_to_scheduling() {
+    let trace = TraceSpec::fb_like(50, 60).seed(5).generate();
+    let cfg = SchedulerConfig::default();
+    let base = SimConfig { account_delta: Some(1e18), obs_events: 1 << 16, ..SimConfig::default() };
+    let dir = std::env::temp_dir()
+        .join(format!("philae_cct_arc_{}", std::process::id()));
+
+    for &kind in SchedulerKind::all() {
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut off_sched = kind.build(&trace, &cfg);
+        let off = Simulation::run_with(&trace, off_sched.as_mut(), &cfg, &base);
+
+        let armed_cfg = SimConfig {
+            archive: Some(philae::obs::ArchiveConfig::new(&dir)),
+            ..base.clone()
+        };
+        let mut on_sched = kind.build(&trace, &cfg);
+        let on = Simulation::run_with(&trace, on_sched.as_mut(), &cfg, &armed_cfg);
+        assert_same_history(&off, &on, &format!("{kind:?} archive off vs on"));
+
+        let stats = on
+            .obs
+            .as_ref()
+            .and_then(|s| s.archive)
+            .expect("archive-armed run must carry spool stats");
+        assert_eq!(
+            stats.spooled,
+            stats.kept + stats.dropped_ring + stats.dropped_spool,
+            "{kind:?}: archive accounting identity broken"
+        );
+        assert_eq!(stats.io_errors, 0, "{kind:?}: archive spool hit io errors");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

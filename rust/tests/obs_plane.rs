@@ -10,13 +10,24 @@
 //!   parser under the pinned `philae.obs.v1` schema, and the CSV /
 //!   Chrome-trace exports are well-formed;
 //! - `explain` decomposes a completed coflow's lifetime into
-//!   contiguous segments that cover arrival → completion.
+//!   contiguous segments that cover arrival → completion;
+//! - the durable archive spool keeps a byte-exact copy of a drop-free
+//!   run's ring log, replayable (and `explain --all`-queryable) from
+//!   disk alone;
+//! - the per-port heatmap rides the engine and conserves bytes.
 
 use philae::coordinator::{SchedulerConfig, SchedulerKind};
-use philae::obs::{EventKind, SegmentKind};
+use philae::obs::{ArchiveConfig, ArchiveReader, Event, EventKind, SegmentKind};
 use philae::sim::{SimConfig, SimResult, Simulation};
 use philae::trace::TraceSpec;
 use philae::util::JsonValue;
+use std::path::PathBuf;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("philae_obsit_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
 
 fn run_obs(ports: usize, coflows: usize, kind: SchedulerKind, ring: usize) -> SimResult {
     let trace = TraceSpec::fb_like(ports, coflows).seed(5).generate();
@@ -169,4 +180,89 @@ fn explain_covers_arrival_to_completion() {
 
     // (not NO_COFLOW — that sentinel tags plane-wide events, not a coflow)
     assert!(snap.explain(1 << 60).is_none(), "unknown coflow yields no timeline");
+}
+
+#[test]
+fn archived_run_replays_bit_identically_to_the_ring() {
+    let dir = tmp_dir("parity");
+    let trace = TraceSpec::fb_like(50, 60).seed(5).generate();
+    let cfg = SchedulerConfig::default();
+    let sim_cfg = SimConfig {
+        account_delta: Some(1e18),
+        obs_events: 1 << 16,
+        archive: Some(ArchiveConfig::new(&dir)),
+        ..SimConfig::default()
+    };
+    let mut sched = SchedulerKind::Philae.build(&trace, &cfg);
+    let res = Simulation::run_with(&trace, sched.as_mut(), &cfg, &sim_cfg);
+    let snap = res.obs.as_ref().expect("obs snapshot");
+    assert_eq!(snap.dropped, 0, "ring sized for the whole run");
+
+    // backpressure accounting: spooled = kept + dropped_ring + dropped_spool,
+    // and a drop-free run keeps everything the plane recorded
+    let stats = snap.archive.expect("archive stats ride the snapshot");
+    assert_eq!(stats.spooled, stats.kept + stats.dropped_ring + stats.dropped_spool);
+    assert_eq!(stats.dropped_ring + stats.dropped_spool, 0, "drop-free run");
+    assert_eq!(stats.kept, snap.recorded, "spool kept every recorded event");
+    assert_eq!(stats.io_errors, 0);
+
+    // the on-disk segments replay to the exact ring log
+    let replay = ArchiveReader::read_dir(&dir).expect("replay archive");
+    let key = |events: &[Event]| -> Vec<(u64, u64, u32, &'static str, u64, u64, u64)> {
+        events
+            .iter()
+            .map(|e| (e.t.to_bits(), e.seq, e.shard, e.kind.as_str(), e.coflow, e.a, e.b))
+            .collect()
+    };
+    assert_eq!(key(&replay.events), key(&snap.events), "archive replay diverged from the ring");
+    assert_eq!(replay.truncated, 0, "clean shutdown leaves no torn tail");
+    assert_eq!(replay.stats.map(|s| s.kept), Some(stats.kept), "archive.json stats round-trip");
+
+    // the fleet-wide CCT decomposition works from disk alone
+    let offline = ArchiveReader::snapshot(&dir).expect("offline snapshot");
+    assert_eq!(
+        offline.explain_all_csv(),
+        snap.explain_all_csv(),
+        "explain --all from the archive must match the live snapshot"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn heatmap_rides_the_engine_and_conserves_bytes() {
+    let trace = TraceSpec::fb_like(50, 60).seed(5).generate();
+    let cfg = SchedulerConfig::default();
+    let sim_cfg = SimConfig { obs_events: 1 << 16, heatmap_bins: 16, ..SimConfig::default() };
+    let mut sched = SchedulerKind::Philae.build(&trace, &cfg);
+    let res = Simulation::run_with(&trace, sched.as_mut(), &cfg, &sim_cfg);
+    let snap = res.obs.as_ref().expect("obs snapshot");
+    let hm = snap.heatmap.as_ref().expect("heatmap armed via heatmap_bins");
+    assert_eq!(hm.bins(), 16);
+    assert_eq!(hm.ports(), 50);
+
+    let csv = hm.to_csv();
+    assert!(csv.starts_with("port,dir,bin,t_start,t_end,bytes,utilization\n"));
+    assert!(csv.lines().count() > 1, "a real run moves bytes into some bin");
+
+    let json = JsonValue::parse(&hm.to_json().to_string()).expect("heatmap JSON parses");
+    assert_eq!(
+        json.get("schema").and_then(|v| v.as_str()),
+        Some("philae.obs.heatmap.v1"),
+        "schema tag"
+    );
+    let sum = |key: &str| -> f64 {
+        json.get(key)
+            .and_then(|v| v.as_array())
+            .expect("byte matrix")
+            .iter()
+            .flat_map(|row| row.as_array().expect("matrix row").iter())
+            .map(|v| v.as_f64().expect("matrix cell"))
+            .sum()
+    };
+    let (up, down) = (sum("up_bytes"), sum("down_bytes"));
+    assert!(up > 0.0, "the run moved bytes");
+    assert!(
+        (up - down).abs() <= 1e-6 * up,
+        "every byte leaves a sender and enters a receiver: up {up} vs down {down}"
+    );
 }
